@@ -1,0 +1,66 @@
+//! Heterogeneous-fleet comparison (the Fig 5 scenario in miniature):
+//! trains SplitCNN-8 under HASFL and the paper's four benchmarks on the
+//! same heterogeneous fleet and reports accuracy-vs-simulated-time plus
+//! converged time, demonstrating the straggler mitigation the paper's
+//! intro motivates.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example heterogeneous_fleet -- [rounds]
+//! ```
+
+use hasfl::config::{Config, Partition, StrategyKind};
+use hasfl::coordinator::Trainer;
+
+fn main() -> hasfl::Result<()> {
+    let rounds: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+
+    let strategies = [
+        StrategyKind::Hasfl,
+        StrategyKind::RbsHams,
+        StrategyKind::HabsRms,
+        StrategyKind::RbsRms,
+        StrategyKind::RbsRhams,
+    ];
+
+    println!("HASFL vs benchmarks ({} rounds each, N=4, non-IID)\n", rounds);
+    let mut summary = Vec::new();
+    for kind in strategies {
+        let mut cfg = Config::small();
+        cfg.fleet.n_devices = 4;
+        cfg.train.rounds = rounds;
+        cfg.partition = Partition::NonIidShards;
+        cfg.strategy = kind;
+        let mut trainer = Trainer::new(cfg, std::path::Path::new("artifacts"))?;
+        trainer.run()?;
+        let (_, time, acc) = trainer
+            .history
+            .converged_or_last()
+            .expect("eval points exist");
+        let best = trainer.history.best_acc().unwrap_or(acc);
+        println!(
+            "{:<12} sim_time {:>9.2}s  best acc {:>6.2}%  final decisions b={:?} cut={:?}",
+            kind.as_str(),
+            time,
+            best * 100.0,
+            trainer.dec.batch,
+            trainer.dec.cut
+        );
+        summary.push((kind, time, best));
+        trainer.engine.shutdown();
+    }
+
+    let hasfl = summary.iter().find(|(k, _, _)| *k == StrategyKind::Hasfl).unwrap();
+    let worst = summary
+        .iter()
+        .filter(|(k, _, _)| *k != StrategyKind::Hasfl)
+        .map(|&(_, t, _)| t)
+        .fold(0.0f64, f64::max);
+    println!(
+        "\nHASFL simulated convergence speedup vs slowest benchmark: {:.1}x",
+        worst / hasfl.1.max(1e-9)
+    );
+    Ok(())
+}

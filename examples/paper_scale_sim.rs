@@ -1,0 +1,72 @@
+//! Paper-scale simulation walkthrough: N=20 Table-I devices, VGG-16 and
+//! ResNet-18 analytic profiles. Shows what HASFL's optimizer actually
+//! decides at the paper's operating point — the per-device batch/cut
+//! table, the latency breakdown, and the predicted round budget R(ε) —
+//! and contrasts it with uniform configurations.
+//!
+//! ```bash
+//! cargo run --release --example paper_scale_sim
+//! ```
+
+use hasfl::config::Config;
+use hasfl::convergence::{rounds_to_epsilon, BoundParams};
+use hasfl::latency::{round_latency, total_latency, Decisions};
+use hasfl::model::ModelProfile;
+use hasfl::optimizer::{solve_joint, OptContext};
+use hasfl::rng::Pcg32;
+
+fn main() -> hasfl::Result<()> {
+    for profile in [ModelProfile::vgg16(), ModelProfile::resnet18()] {
+        let cfg = Config::table1();
+        let bound = BoundParams::default_for(&profile, cfg.train.lr);
+        let devices = cfg.sample_fleet();
+        let ctx = OptContext {
+            profile: &profile,
+            devices: &devices,
+            server: &cfg.server,
+            bound: &bound,
+            interval: cfg.train.agg_interval,
+            epsilon: cfg.train.epsilon,
+            batch_cap: cfg.train.batch_cap,
+        };
+        let mut rng = Pcg32::seeded(cfg.seed);
+        let sol = solve_joint(&ctx, &mut rng, 8, 1e-6);
+
+        println!("=== {} (L = {} layers) ===", profile.name, profile.n_layers());
+        println!("HASFL decisions (Algorithm 2):");
+        println!("  batches: {:?}", sol.decisions.batch);
+        println!("  cuts:    {:?}", sol.decisions.cut);
+        let lat = round_latency(&profile, &devices, &cfg.server, &sol.decisions);
+        let r = rounds_to_epsilon(
+            &bound,
+            &sol.decisions.batch,
+            sol.decisions.l_c(),
+            cfg.train.agg_interval,
+            cfg.train.epsilon,
+        )
+        .unwrap();
+        println!(
+            "  T_S {:.3}s  T_A {:.3}s  R(eps) {:.0} rounds  est. total {:.2}h",
+            lat.t_split,
+            lat.t_agg,
+            r,
+            total_latency(&lat, r as usize, cfg.train.agg_interval) / 3600.0
+        );
+
+        println!("uniform baselines:");
+        for (b, cut) in [(16u32, 4usize), (16, 8), (64, 8)] {
+            let dec = Decisions::uniform(devices.len(), b, cut);
+            match ctx.objective(&dec) {
+                Some(v) => println!("  b={b:<3} cut={cut:<3} -> est. {:.2}h", v / 3600.0),
+                None => println!("  b={b:<3} cut={cut:<3} -> infeasible"),
+            }
+        }
+        println!(
+            "HASFL predicted speedup vs uniform(16,8): {:.2}x\n",
+            ctx.objective(&Decisions::uniform(devices.len(), 16, 8))
+                .map(|v| v / sol.theta)
+                .unwrap_or(f64::NAN)
+        );
+    }
+    Ok(())
+}

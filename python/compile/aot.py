@@ -1,0 +1,249 @@
+"""AOT exporter: lower the L2 split model to HLO **text** artifacts.
+
+Python runs once, at build time (``make artifacts``); the Rust coordinator
+loads these artifacts via the ``xla`` crate's PJRT CPU client and never
+touches Python on the training path.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts are shape-specialised, so we export one executable per
+(function, cut layer, batch bucket).  Buckets are powers of two; the Rust
+runtime pads real batches up to the bucket with zero-weighted rows, which
+keeps numerics exactly equal to the true batch (weighted reductions in the
+model).  A ``manifest.json`` describes every artifact's argument/output
+layout plus the per-block cost tables consumed by the latency model.
+
+Usage:
+    cd python && python -m compile.aot --out-dir ../artifacts \
+        [--cuts 1,2,...,7] [--buckets 1,2,4,8,16,32,64] [--classes 10]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+F32 = "f32"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape: Tuple[int, ...]) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _arg_entry(name: str, shape: Sequence[int]) -> dict:
+    return {"name": name, "shape": list(shape), "dtype": F32}
+
+
+def _param_arg_entries(
+    prefix: str, shapes: List[Tuple[Tuple[int, ...], Tuple[int, ...]]], blocks: range
+) -> List[dict]:
+    out = []
+    for bi in blocks:
+        w, b = shapes[bi]
+        out.append(_arg_entry(f"{prefix}.block{bi + 1}.w", w))
+        out.append(_arg_entry(f"{prefix}.block{bi + 1}.b", b))
+    return out
+
+
+def build_exports(cuts: Sequence[int], buckets: Sequence[int], num_classes: int):
+    """Yield (name, lowered_fn, arg_entries, out_entries, meta) tuples."""
+    shapes = M.param_shapes(num_classes)
+    L = M.NUM_BLOCKS
+
+    for bsz in buckets:
+        x_spec = _spec((bsz, M.IMG, M.IMG, M.IN_CH))
+        y_spec = _spec((bsz, num_classes))
+        w_spec = _spec((bsz,))
+
+        for cut in cuts:
+            a_shape = M.activation_shape(cut, bsz, num_classes)
+            a_spec = _spec(a_shape)
+            cp_specs = [_spec(s) for pair in shapes[:cut] for s in pair]
+            sp_specs = [_spec(s) for pair in shapes[cut:] for s in pair]
+
+            # -- client_fwd --------------------------------------------------
+            def cf(x, *cp, _cut=cut):
+                return M.client_fwd(x, cp, _cut, num_classes)
+
+            yield (
+                f"client_fwd_c{cut}_b{bsz}",
+                jax.jit(cf).lower(x_spec, *cp_specs),
+                [_arg_entry("x", x_spec.shape)]
+                + _param_arg_entries("client", shapes, range(0, cut)),
+                [_arg_entry("a", a_shape)],
+                {"fn": "client_fwd", "cut": cut, "bucket": bsz},
+            )
+
+            # -- server_step -------------------------------------------------
+            def ss(a, y, w, *sp, _cut=cut):
+                return M.server_step(a, y, w, sp, _cut, num_classes)
+
+            out_entries = [
+                _arg_entry("loss", ()),
+                _arg_entry("correct", ()),
+                _arg_entry("grad_a", a_shape),
+            ]
+            for bi in range(cut, L):
+                wsh, bsh = shapes[bi]
+                out_entries.append(_arg_entry(f"grad.block{bi + 1}.w", wsh))
+                out_entries.append(_arg_entry(f"grad.block{bi + 1}.b", bsh))
+            yield (
+                f"server_step_c{cut}_b{bsz}",
+                jax.jit(ss).lower(a_spec, y_spec, w_spec, *sp_specs),
+                [
+                    _arg_entry("a", a_shape),
+                    _arg_entry("onehot", y_spec.shape),
+                    _arg_entry("weights", w_spec.shape),
+                ]
+                + _param_arg_entries("server", shapes, range(cut, L)),
+                out_entries,
+                {"fn": "server_step", "cut": cut, "bucket": bsz},
+            )
+
+            # -- client_bwd --------------------------------------------------
+            def cb(x, ga, *cp, _cut=cut):
+                return M.client_bwd(x, cp, ga, _cut, num_classes)
+
+            out_entries = []
+            for bi in range(0, cut):
+                wsh, bsh = shapes[bi]
+                out_entries.append(_arg_entry(f"grad.block{bi + 1}.w", wsh))
+                out_entries.append(_arg_entry(f"grad.block{bi + 1}.b", bsh))
+            yield (
+                f"client_bwd_c{cut}_b{bsz}",
+                jax.jit(cb).lower(x_spec, a_spec, *cp_specs),
+                [_arg_entry("x", x_spec.shape), _arg_entry("grad_a", a_shape)]
+                + _param_arg_entries("client", shapes, range(0, cut)),
+                out_entries,
+                {"fn": "client_bwd", "cut": cut, "bucket": bsz},
+            )
+
+        # -- monolithic oracle + eval (per bucket, no cut) --------------------
+        p_specs = [_spec(s) for pair in shapes for s in pair]
+
+        def fs(x, y, w, *ps):
+            return M.full_step(x, y, w, ps, num_classes)
+
+        out_entries = [_arg_entry("loss", ()), _arg_entry("correct", ())]
+        for bi in range(L):
+            wsh, bsh = shapes[bi]
+            out_entries.append(_arg_entry(f"grad.block{bi + 1}.w", wsh))
+            out_entries.append(_arg_entry(f"grad.block{bi + 1}.b", bsh))
+        yield (
+            f"full_step_b{bsz}",
+            jax.jit(fs).lower(x_spec, y_spec, w_spec, *p_specs),
+            [
+                _arg_entry("x", x_spec.shape),
+                _arg_entry("onehot", y_spec.shape),
+                _arg_entry("weights", w_spec.shape),
+            ]
+            + _param_arg_entries("model", shapes, range(L)),
+            out_entries,
+            {"fn": "full_step", "cut": 0, "bucket": bsz},
+        )
+
+        def ff(x, *ps):
+            return M.full_fwd(x, ps, num_classes)
+
+        yield (
+            f"full_fwd_b{bsz}",
+            jax.jit(ff).lower(x_spec, *p_specs),
+            [_arg_entry("x", x_spec.shape)]
+            + _param_arg_entries("model", shapes, range(L)),
+            [_arg_entry("logits", (bsz, num_classes))],
+            {"fn": "full_fwd", "cut": 0, "bucket": bsz},
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file smoke path")
+    ap.add_argument("--cuts", default=",".join(str(c) for c in M.VALID_CUTS))
+    ap.add_argument("--buckets", default="1,2,4,8,16,32,64")
+    ap.add_argument("--classes", type=int, default=10)
+    args = ap.parse_args()
+
+    cuts = [int(c) for c in args.cuts.split(",") if c]
+    buckets = sorted({int(b) for b in args.buckets.split(",") if b})
+    for c in cuts:
+        assert c in M.VALID_CUTS, f"cut {c} outside {M.VALID_CUTS}"
+
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {
+        "model": "splitcnn8",
+        "num_classes": args.classes,
+        "img": M.IMG,
+        "in_ch": M.IN_CH,
+        "num_blocks": M.NUM_BLOCKS,
+        "valid_cuts": list(M.VALID_CUTS),
+        "buckets": buckets,
+        "param_shapes": [
+            {"w": list(w), "b": list(b)} for (w, b) in M.param_shapes(args.classes)
+        ],
+        "block_table": M.block_table(args.classes),
+        "artifacts": [],
+    }
+
+    t0 = time.time()
+    n = 0
+    for name, lowered, arg_entries, out_entries, meta in build_exports(
+        cuts, buckets, args.classes
+    ):
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "path": f"{name}.hlo.txt",
+                "args": arg_entries,
+                "outputs": out_entries,
+                "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+                **meta,
+            }
+        )
+        n += 1
+        if n % 20 == 0:
+            print(f"  [{n}] {name} ({time.time() - t0:.1f}s)", flush=True)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(
+        f"wrote {n} artifacts + manifest.json to {out_dir} "
+        f"in {time.time() - t0:.1f}s"
+    )
+
+    # Legacy smoke path used by the original scaffold Makefile.
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("see manifest.json")
+
+
+if __name__ == "__main__":
+    main()

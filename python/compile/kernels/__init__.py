@@ -1,0 +1,12 @@
+"""L1: Pallas kernels for HASFL's compute hot spots.
+
+- ``matmul.matmul_bias_act`` — tiled GEMM with fused bias + ReLU epilogue
+  (drives dense layers and im2col convolutions).
+- ``softmax_xent.softmax_xent`` — fused softmax cross-entropy per-row loss.
+- ``ref`` — pure-jnp oracles used by the pytest/hypothesis suite.
+"""
+
+from compile.kernels.matmul import matmul_bias_act
+from compile.kernels.softmax_xent import softmax_xent
+
+__all__ = ["matmul_bias_act", "softmax_xent"]

@@ -1,0 +1,171 @@
+"""L1 Pallas kernel: tiled matmul with fused bias + activation epilogue.
+
+This is the compute hot spot of HASFL's split CNN: every convolution is
+lowered to im2col + this GEMM, and every dense layer calls it directly.
+
+Hardware-adaptation notes (see DESIGN.md §Hardware-Adaptation): the paper's
+edge-GPU hot spot is cuDNN conv/GEMM; on the TPU-shaped Pallas abstraction we
+tile the GEMM into (bm, bk, bn) blocks sized for VMEM, accumulate in f32 over
+the k-grid, and fuse bias+ReLU into the epilogue so the output tile makes a
+single HBM round trip. ``interpret=True`` is mandatory here: the CPU PJRT
+plugin cannot execute Mosaic custom-calls, and interpret-mode lowers the
+kernel body to plain HLO ops that any backend runs natively.
+
+The kernel is wrapped in ``jax.custom_vjp`` because JAX cannot autodiff
+through ``pallas_call``; the backward pass is expressed with the same kernel
+(two transposed GEMMs), so the hot path is Pallas in both directions.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shapes.  For the CPU/interpret build each grid step lowers
+# to an HLO loop iteration, and the loop overhead dominates wallclock
+# (measured in EXPERIMENTS.md §Perf: grid=1 is ~6x faster than bm=2048 on
+# the im2col GEMMs), so the CPU defaults are large enough that every GEMM
+# in SplitCNN-8 at bucket<=64 is a single tile.  These would blow the
+# 16 MiB VMEM budget on a real TPU — the TPU-shaped tiling is (512, 512,
+# 128); see python/compile/perf_analysis.py for the footprint/MXU table.
+DEFAULT_BM = 65536
+DEFAULT_BK = 2048
+DEFAULT_BN = 512
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pick_blocks(m: int, k: int, n: int, bm: int, bk: int, bn: int):
+    """Clamp requested block sizes to the (padded) problem size."""
+    bm = min(bm, _ceil_to(m, 8))
+    bk = min(bk, _ceil_to(k, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    return bm, bk, bn
+
+
+def _mm_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, activation: Optional[str]):
+    """One (bm, bn) output tile; accumulates over the k-grid into o_ref.
+
+    o_ref is revisited across the k dimension (its index_map ignores the k
+    grid axis), which is the standard Pallas accumulation idiom: initialise
+    at k==0, add partial products, run the fused epilogue at k==nk-1.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        acc = o_ref[...]
+        acc = acc + b_ref[...]
+        if activation == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc
+
+
+def _matmul_raw(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    activation: Optional[str],
+    bm: int,
+    bk: int,
+    bn: int,
+) -> jax.Array:
+    """Padded, tiled pallas GEMM: relu(x @ w + b) with f32 accumulation."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {w.shape}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+
+    bm, bk, bn = _pick_blocks(m, k, n, bm, bk, bn)
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else x
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else w
+    bp = jnp.pad(b, (0, np_ - n)) if np_ != n else b
+    bp = bp.reshape(1, np_)
+
+    nk = kp // bk
+    grid = (mp // bm, np_ // bn, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, nk=nk, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(xp, wp, bp)
+
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def matmul_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    activation: Optional[str] = None,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+) -> jax.Array:
+    """``act(x @ w + b)`` as a Pallas kernel with a custom VJP.
+
+    Args:
+      x: ``[m, k]`` activations.
+      w: ``[k, n]`` weights.
+      b: ``[n]`` bias.
+      activation: ``None`` or ``"relu"`` — fused into the kernel epilogue.
+      bm/bk/bn: tile shape; clamped to the problem size.
+
+    Returns:
+      ``[m, n]`` float32 output.
+    """
+    return _matmul_raw(x, w, b, activation, bm, bk, bn)
+
+
+def _mba_fwd(x, w, b, activation, bm, bk, bn):
+    out = _matmul_raw(x, w, b, activation, bm, bk, bn)
+    # For relu, post-activation output > 0 iff pre-activation > 0, so `out`
+    # doubles as the mask residual and we never materialise the pre-act.
+    return out, (x, w, out)
+
+
+def _mba_bwd(activation, bm, bk, bn, res, g):
+    x, w, out = res
+    if activation == "relu":
+        g = g * (out > 0.0).astype(g.dtype)
+    n = w.shape[1]
+    k = w.shape[0]
+    m = x.shape[0]
+    zk = jnp.zeros((k,), jnp.float32)
+    zn = jnp.zeros((n,), jnp.float32)
+    # dx = g @ w.T ; dw = x.T @ g — both through the same Pallas kernel so
+    # the backward pass is tiled identically to the forward pass.
+    dx = _matmul_raw(g, w.T, zk, None, bm, bk, bn)
+    dw = _matmul_raw(x.T, g, zn, None, bm, bk, bn)
+    db = jnp.sum(g, axis=0)
+    del m
+    return dx, dw, db
+
+
+matmul_bias_act.defvjp(_mba_fwd, _mba_bwd)

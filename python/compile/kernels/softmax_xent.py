@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: fused softmax cross-entropy (loss + logits-gradient).
+
+Fuses max / exp / sum / log and the gradient ``p - y`` so the logits tile is
+read from HBM exactly once.  Returns the *per-row* loss vector; the caller
+applies the per-row weights (used for batch-bucket padding — padded rows get
+weight 0, making the bucketed gradient exactly equal to the true-batch
+gradient, see DESIGN.md §2).
+
+Wrapped in ``jax.custom_vjp`` (pallas_call is not autodiff-able); the
+residual is the softmax ``p`` computed in the forward kernel, so the backward
+pass is a cheap elementwise kernel-free expression.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BR = 1024  # row-block; clamped to the batch.
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _xent_kernel(logits_ref, onehot_ref, loss_ref, p_ref):
+    z = logits_ref[...]
+    y = onehot_ref[...]
+    zmax = jnp.max(z, axis=-1, keepdims=True)
+    ez = jnp.exp(z - zmax)
+    denom = jnp.sum(ez, axis=-1, keepdims=True)
+    p = ez / denom
+    # loss_r = logsumexp(z) - z[y] = log(denom) + zmax - sum(z * y)
+    lse = jnp.log(denom) + zmax
+    loss = lse[:, 0] - jnp.sum(z * y, axis=-1)
+    loss_ref[...] = loss
+    p_ref[...] = p
+
+
+def _xent_raw(logits: jax.Array, onehot: jax.Array, br: int):
+    m, c = logits.shape
+    assert onehot.shape == (m, c)
+    br = min(br, _ceil_to(m, 8))
+    mp = _ceil_to(m, br)
+    zp = jnp.pad(logits, ((0, mp - m), (0, 0))) if mp != m else logits
+    yp = jnp.pad(onehot, ((0, mp - m), (0, 0))) if mp != m else onehot
+
+    loss, p = pl.pallas_call(
+        _xent_kernel,
+        grid=(mp // br,),
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br,), lambda i: (i,)),
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp,), jnp.float32),
+            jax.ShapeDtypeStruct((mp, c), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(zp, yp)
+    if mp != m:
+        loss, p = loss[:m], p[:m]
+    return loss, p
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def softmax_xent(logits: jax.Array, onehot: jax.Array, br: int = DEFAULT_BR):
+    """Per-row softmax cross-entropy loss.
+
+    Args:
+      logits: ``[b, c]`` raw scores.
+      onehot: ``[b, c]`` one-hot labels (float32).
+      br: row-block size.
+
+    Returns:
+      ``[b]`` per-row loss vector (reduce with weights outside).
+    """
+    loss, _ = _xent_raw(logits, onehot, br)
+    return loss
+
+
+def _sx_fwd(logits, onehot, br):
+    loss, p = _xent_raw(logits, onehot, br)
+    return loss, (p, onehot)
+
+
+def _sx_bwd(br, res, g):
+    p, onehot = res
+    # d loss_r / d logits = p - y ; cotangent g is per-row.
+    dlogits = (p - onehot) * g[:, None]
+    return dlogits, None
+
+
+softmax_xent.defvjp(_sx_fwd, _sx_bwd)

@@ -1,0 +1,338 @@
+"""L2: HASFL's split CNN as pure JAX, built on the L1 Pallas kernels.
+
+The executable model is **SplitCNN-8**, a VGG-style 8-block CNN for 32x32x3
+inputs (the paper trains VGG-16/ResNet-18 on CIFAR; the analytic layer
+profiles of those live in ``rust/src/model/profiles.rs`` and drive the
+paper-scale latency simulations, while this model is the one actually
+trained end-to-end through PJRT — see DESIGN.md §4).
+
+Split semantics (paper §III): a cut at ``c`` puts blocks ``1..c`` on the
+device (client-side sub-model ``w_c``) and blocks ``c+1..L`` on the edge
+server (``w_s``).  The exported functions are exactly the five HASFL steps:
+
+- ``client_fwd``  — step a1: mini-batch -> activations at the cut.
+- ``server_step`` — step a3: activations + labels -> loss, accuracy,
+  server-side grads, and the activations' gradient (sent back in a4).
+- ``client_bwd``  — step a5: recompute-based VJP of the client sub-model.
+- ``full_step``   — monolithic oracle used to prove split == centralized.
+- ``full_fwd``    — inference path for test-set evaluation.
+
+Every GEMM (conv via explicit im2col, dense) goes through the Pallas
+``matmul_bias_act`` kernel and the loss through the Pallas ``softmax_xent``
+kernel, so the L1 hot spot is on the path in both directions.
+
+Per-row weights: batch buckets are power-of-two (HLO is shape-specialised),
+so real batches are padded and padded rows carry weight 0.  All reductions
+here are weighted sums, which makes bucketed numerics *exactly* equal to
+true-batch numerics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import matmul_bias_act, softmax_xent
+
+# ---------------------------------------------------------------------------
+# Architecture definition
+# ---------------------------------------------------------------------------
+
+IMG = 32
+IN_CH = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    """One cuttable block of SplitCNN-8."""
+
+    name: str
+    kind: str  # "conv" (3x3 SAME, relu, optional 2x2 maxpool) or "dense"
+    cin: int
+    cout: int
+    pool: bool = False  # conv only
+    relu: bool = True
+    # spatial size of the *output* feature map (1 for dense blocks)
+    out_hw: int = 0
+
+
+def _build_arch(num_classes: int) -> List[Block]:
+    return [
+        Block("conv1", "conv", IN_CH, 16, pool=False, out_hw=32),
+        Block("conv2", "conv", 16, 16, pool=True, out_hw=16),
+        Block("conv3", "conv", 16, 32, pool=False, out_hw=16),
+        Block("conv4", "conv", 32, 32, pool=True, out_hw=8),
+        Block("conv5", "conv", 32, 64, pool=True, out_hw=4),
+        Block("fc1", "dense", 4 * 4 * 64, 128, out_hw=1),
+        Block("fc2", "dense", 128, 64, out_hw=1),
+        Block("fc3", "dense", 64, num_classes, relu=False, out_hw=1),
+    ]
+
+
+ARCH10 = _build_arch(10)
+ARCH100 = _build_arch(100)
+NUM_BLOCKS = len(ARCH10)  # L = 8
+# Valid cut layers: 1..7 (cut=c keeps blocks 1..c on the device).
+VALID_CUTS = tuple(range(1, NUM_BLOCKS))
+
+
+def arch(num_classes: int = 10) -> List[Block]:
+    if num_classes == 10:
+        return ARCH10
+    if num_classes == 100:
+        return ARCH100
+    return _build_arch(num_classes)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def param_shapes(num_classes: int = 10) -> List[Tuple[Tuple[int, ...], Tuple[int, ...]]]:
+    """Per-block (weight_shape, bias_shape)."""
+    shapes = []
+    for blk in arch(num_classes):
+        if blk.kind == "conv":
+            shapes.append(((3, 3, blk.cin, blk.cout), (blk.cout,)))
+        else:
+            shapes.append(((blk.cin, blk.cout), (blk.cout,)))
+    return shapes
+
+
+def init_params(rng: jax.Array, num_classes: int = 10) -> List[jax.Array]:
+    """He-init, returned as a flat list [w1, b1, w2, b2, ...]."""
+    params: List[jax.Array] = []
+    for (wshape, bshape) in param_shapes(num_classes):
+        rng, sub = jax.random.split(rng)
+        fan_in = 1
+        for d in wshape[:-1]:
+            fan_in *= d
+        w = jax.random.normal(sub, wshape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+        params.append(w)
+        params.append(jnp.zeros(bshape, jnp.float32))
+    return params
+
+
+def params_per_block() -> int:
+    return 2  # (w, b)
+
+
+def split_params(
+    params: Sequence[jax.Array], cut: int
+) -> Tuple[List[jax.Array], List[jax.Array]]:
+    """client params (blocks 1..cut), server params (blocks cut+1..L)."""
+    k = cut * params_per_block()
+    return list(params[:k]), list(params[k:])
+
+
+# ---------------------------------------------------------------------------
+# Forward building blocks (all GEMMs via the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+def _im2col(x: jax.Array, kh: int = 3, kw: int = 3) -> jax.Array:
+    """SAME-padded im2col with explicit (i, j, c) feature order.
+
+    Kept deliberately explicit (slice + concat, all differentiable) so the
+    weight reshape ``[kh,kw,cin,cout] -> [kh*kw*cin, cout]`` matches the
+    column order by construction.
+    """
+    b, h, w, c = x.shape
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    cols = [
+        xp[:, i : i + h, j : j + w, :] for i in range(kh) for j in range(kw)
+    ]
+    return jnp.concatenate(cols, axis=-1)
+
+
+def _conv_block(x: jax.Array, w: jax.Array, b: jax.Array, blk: Block) -> jax.Array:
+    bsz, h, wd, _ = x.shape
+    kh, kw, cin, cout = w.shape
+    cols = _im2col(x, kh, kw).reshape(bsz * h * wd, kh * kw * cin)
+    act = "relu" if blk.relu else None
+    out = matmul_bias_act(cols, w.reshape(kh * kw * cin, cout), b, act)
+    out = out.reshape(bsz, h, wd, cout)
+    if blk.pool:
+        out = out.reshape(bsz, h // 2, 2, wd // 2, 2, cout).max(axis=(2, 4))
+    return out
+
+
+def _dense_block(x: jax.Array, w: jax.Array, b: jax.Array, blk: Block) -> jax.Array:
+    if x.ndim > 2:
+        x = x.reshape(x.shape[0], -1)
+    act = "relu" if blk.relu else None
+    return matmul_bias_act(x, w, b, act)
+
+
+def _apply_blocks(
+    x: jax.Array,
+    params: Sequence[jax.Array],
+    blocks: Sequence[Block],
+) -> jax.Array:
+    h = x
+    for i, blk in enumerate(blocks):
+        w, b = params[2 * i], params[2 * i + 1]
+        if blk.kind == "conv":
+            h = _conv_block(h, w, b, blk)
+        else:
+            h = _dense_block(h, w, b, blk)
+    return h
+
+
+def _loss_from_logits(
+    logits: jax.Array, onehot: jax.Array, weights: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Weighted mean loss and weighted correct-count (both scalars).
+
+    ``weights`` are per-row; padded rows carry 0.  The caller normalises by
+    sum(weights) (== true batch size when weights are 1/0 indicators).
+    """
+    per_row = softmax_xent(logits, onehot)
+    loss = jnp.sum(per_row * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+    pred = jnp.argmax(logits, axis=-1)
+    truth = jnp.argmax(onehot, axis=-1)
+    correct = jnp.sum((pred == truth).astype(jnp.float32) * weights)
+    return loss, correct
+
+
+# ---------------------------------------------------------------------------
+# The five exported HASFL step functions
+# ---------------------------------------------------------------------------
+
+
+def client_fwd(
+    x: jax.Array, client_params: Sequence[jax.Array], cut: int, num_classes: int = 10
+) -> Tuple[jax.Array]:
+    """Step a1: client-side forward propagation -> activations at the cut."""
+    blocks = arch(num_classes)[:cut]
+    return (_apply_blocks(x, client_params, blocks),)
+
+
+def _server_obj(a, server_params, onehot, weights, blocks):
+    logits = _apply_blocks(a, server_params, blocks)
+    loss, correct = _loss_from_logits(logits, onehot, weights)
+    return loss, correct
+
+
+def server_step(
+    a: jax.Array,
+    onehot: jax.Array,
+    weights: jax.Array,
+    server_params: Sequence[jax.Array],
+    cut: int,
+    num_classes: int = 10,
+):
+    """Step a3: server-side FP + BP.
+
+    Returns ``(loss, correct, grad_a, *grads_server)``; the Rust coordinator
+    splits ``grads_server`` into common (blocks > L_c) and non-common parts
+    per Eqns (4)-(5) and sends ``grad_a`` back to the device (step a4).
+    """
+    blocks = arch(num_classes)[cut:]
+    grad_fn = jax.value_and_grad(
+        lambda a_, ps: _server_obj(a_, ps, onehot, weights, blocks),
+        argnums=(0, 1),
+        has_aux=True,
+    )
+    (loss, correct), (ga, gps) = grad_fn(a, list(server_params))
+    return (loss, correct, ga, *gps)
+
+
+def client_bwd(
+    x: jax.Array,
+    client_params: Sequence[jax.Array],
+    ga: jax.Array,
+    cut: int,
+    num_classes: int = 10,
+):
+    """Step a5: recompute-based VJP of the client sub-model.
+
+    The client re-runs its forward (cheap: shallow sub-model) and pulls the
+    received activations' gradient through it.  Stateless — no residual has
+    to survive between the a1 and a5 executions, which keeps the PJRT
+    artifacts independent.
+    """
+    blocks = arch(num_classes)[:cut]
+
+    def fwd(ps):
+        return _apply_blocks(x, ps, blocks)
+
+    _, vjp = jax.vjp(fwd, list(client_params))
+    (gps,) = vjp(ga)
+    return tuple(gps)
+
+
+def full_step(
+    x: jax.Array,
+    onehot: jax.Array,
+    weights: jax.Array,
+    params: Sequence[jax.Array],
+    num_classes: int = 10,
+):
+    """Monolithic training step — the centralized-equivalence oracle."""
+    blocks = arch(num_classes)
+    grad_fn = jax.value_and_grad(
+        lambda ps: _server_obj(x, ps, onehot, weights, blocks),
+        has_aux=True,
+    )
+    (loss, correct), gps = grad_fn(list(params))
+    return (loss, correct, *gps)
+
+
+def full_fwd(x: jax.Array, params: Sequence[jax.Array], num_classes: int = 10):
+    """Inference: logits for test-set evaluation."""
+    return (_apply_blocks(x, params, arch(num_classes)),)
+
+
+# ---------------------------------------------------------------------------
+# Analytic per-block cost tables (exported into the artifact manifest and
+# consumed by rust/src/model + rust/src/latency).
+# ---------------------------------------------------------------------------
+
+
+def block_table(num_classes: int = 10) -> List[dict]:
+    """Per-block profile: FLOPs, activation bytes, param bytes.
+
+    - ``fwd_flops`` (rho_j increments) — 2*K*M MACs-as-FLOPs per sample.
+    - ``bwd_flops`` (varpi_j increments) — 2x fwd (dx + dw GEMMs).
+    - ``act_bytes`` (psi_j == chi_j) — f32 activation size at the block
+      output *per sample* (what crosses the network if the cut is here).
+    - ``param_bytes`` (delta_j increments) — f32 parameter size.
+    """
+    rows = []
+    for blk in arch(num_classes):
+        if blk.kind == "conv":
+            # out spatial before pooling equals input spatial
+            in_hw = blk.out_hw * 2 if blk.pool else blk.out_hw
+            macs = 9 * blk.cin * blk.cout * in_hw * in_hw
+            act_elems = blk.out_hw * blk.out_hw * blk.cout
+            nparams = 9 * blk.cin * blk.cout + blk.cout
+        else:
+            macs = blk.cin * blk.cout
+            act_elems = blk.cout
+            nparams = blk.cin * blk.cout + blk.cout
+        rows.append(
+            dict(
+                name=blk.name,
+                kind=blk.kind,
+                fwd_flops=2.0 * macs,
+                bwd_flops=4.0 * macs,
+                act_bytes=4 * act_elems,
+                param_bytes=4 * nparams,
+                n_params=nparams,
+            )
+        )
+    return rows
+
+
+def activation_shape(cut: int, batch: int, num_classes: int = 10) -> Tuple[int, ...]:
+    """Shape of the smashed data at cut ``cut`` for batch ``batch``."""
+    blk = arch(num_classes)[cut - 1]
+    if blk.kind == "conv":
+        return (batch, blk.out_hw, blk.out_hw, blk.cout)
+    return (batch, blk.cout)

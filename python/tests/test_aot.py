@@ -1,0 +1,86 @@
+"""AOT exporter smoke tests: HLO text round-trips and manifest consistency."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_to_hlo_text_roundtrip():
+    """Lowered HLO text must be parseable (non-empty, ENTRY present)."""
+
+    def f(x):
+        return (x * 2.0 + 1.0,)
+
+    low = jax.jit(f).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(low)
+    assert "ENTRY" in text and "HloModule" in text
+
+
+def test_build_exports_structure():
+    exports = list(aot.build_exports(cuts=[2], buckets=[4], num_classes=10))
+    names = [e[0] for e in exports]
+    assert names == [
+        "client_fwd_c2_b4",
+        "server_step_c2_b4",
+        "client_bwd_c2_b4",
+        "full_step_b4",
+        "full_fwd_b4",
+    ]
+    for name, lowered, args, outs, meta in exports:
+        assert meta["bucket"] == 4
+        # Arg/output entries carry explicit shapes for the Rust loader.
+        for ent in args + outs:
+            assert "shape" in ent and "dtype" in ent
+
+
+def test_export_one_artifact(tmp_path):
+    """Full exporter run on a minimal (1 cut x 1 bucket) grid."""
+    cmd = [
+        sys.executable,
+        "-m",
+        "compile.aot",
+        "--out-dir",
+        str(tmp_path),
+        "--cuts",
+        "3",
+        "--buckets",
+        "2",
+    ]
+    env = dict(os.environ)
+    subprocess.run(cmd, check=True, cwd=os.path.dirname(os.path.dirname(__file__)), env=env)
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["model"] == "splitcnn8"
+    assert len(manifest["artifacts"]) == 5
+    for art in manifest["artifacts"]:
+        p = tmp_path / art["path"]
+        assert p.exists() and p.stat().st_size > 100
+        text = p.read_text()
+        assert "ENTRY" in text
+
+
+def test_server_step_arg_count_matches_model():
+    exports = list(aot.build_exports(cuts=[5], buckets=[1], num_classes=10))
+    ss = [e for e in exports if e[0].startswith("server_step")][0]
+    _, _, args, outs, _ = ss
+    # a, onehot, weights + 2*(L-cut) params
+    assert len(args) == 3 + 2 * (M.NUM_BLOCKS - 5)
+    # loss, correct, grad_a + 2*(L-cut) grads
+    assert len(outs) == 3 + 2 * (M.NUM_BLOCKS - 5)
+
+
+def test_manifest_block_table_matches_model():
+    assert M.block_table(10) == M.block_table(10)
+    t10 = M.block_table(10)
+    t100 = M.block_table(100)
+    # Only the classifier head differs between CIFAR-10/100 variants.
+    assert t10[:-1] == t100[:-1]
+    assert t100[-1]["n_params"] > t10[-1]["n_params"]

@@ -1,0 +1,198 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and block configurations; every check is an
+``assert_allclose`` against the oracle, for values AND gradients (the
+custom VJPs must agree with autodiff through the oracle).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul_bias_act, softmax_xent
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+RTOL = 2e-4
+ATOL = 2e-5
+
+
+def _rand(rng, shape):
+    return jax.random.normal(rng, shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul_bias_act
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 33),
+    k=st.integers(1, 40),
+    n=st.integers(1, 24),
+    act=st.sampled_from([None, "relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_value_matches_ref(m, k, n, act, seed):
+    rng = jax.random.PRNGKey(seed)
+    r1, r2, r3 = jax.random.split(rng, 3)
+    x, w, b = _rand(r1, (m, k)), _rand(r2, (k, n)), _rand(r3, (n,))
+    got = matmul_bias_act(x, w, b, act)
+    want = ref.matmul_bias_act_ref(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(2, 17),
+    k=st.integers(2, 19),
+    n=st.integers(2, 13),
+    act=st.sampled_from([None, "relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_grads_match_ref(m, k, n, act, seed):
+    rng = jax.random.PRNGKey(seed)
+    r1, r2, r3, r4 = jax.random.split(rng, 4)
+    x, w, b = _rand(r1, (m, k)), _rand(r2, (k, n)), _rand(r3, (n,))
+    ct = _rand(r4, (m, n))  # random cotangent, not all-ones
+
+    def f_kernel(x_, w_, b_):
+        return jnp.sum(matmul_bias_act(x_, w_, b_, act) * ct)
+
+    def f_ref(x_, w_, b_):
+        return jnp.sum(ref.matmul_bias_act_ref(x_, w_, b_, act) * ct)
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a_, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a_, b_, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("bm,bk,bn", [(8, 8, 8), (16, 32, 8), (64, 64, 64), (2048, 2048, 512)])
+def test_matmul_block_shape_invariance(bm, bk, bn):
+    """Tiling must not change the numbers (block-shape sweep for §Perf)."""
+    rng = jax.random.PRNGKey(7)
+    r1, r2, r3 = jax.random.split(rng, 3)
+    x, w, b = _rand(r1, (37, 45)), _rand(r2, (45, 21)), _rand(r3, (21,))
+    got = matmul_bias_act(x, w, b, "relu", bm, bk, bn)
+    want = ref.matmul_bias_act_ref(x, w, b, "relu")
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_matmul_batch_one():
+    rng = jax.random.PRNGKey(3)
+    x, w, b = _rand(rng, (1, 5)), _rand(rng, (5, 4)), _rand(rng, (4,))
+    np.testing.assert_allclose(
+        matmul_bias_act(x, w, b, None),
+        ref.matmul_bias_act_ref(x, w, b, None),
+        rtol=RTOL,
+        atol=ATOL,
+    )
+
+
+def test_matmul_relu_clamps_negative():
+    x = jnp.array([[-1.0, 2.0]])
+    w = jnp.eye(2, dtype=jnp.float32)
+    b = jnp.zeros((2,), jnp.float32)
+    out = matmul_bias_act(x, w, b, "relu")
+    assert float(out[0, 0]) == 0.0 and float(out[0, 1]) == 2.0
+
+
+def test_matmul_rejects_bad_shapes():
+    x = jnp.zeros((2, 3))
+    w = jnp.zeros((4, 5))
+    b = jnp.zeros((5,))
+    with pytest.raises(AssertionError):
+        matmul_bias_act(x, w, b, None)
+
+
+# ---------------------------------------------------------------------------
+# softmax_xent
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 40),
+    c=st.integers(2, 100),
+    scale=st.floats(0.1, 30.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_xent_value_matches_ref(b, c, scale, seed):
+    rng = jax.random.PRNGKey(seed)
+    r1, r2 = jax.random.split(rng)
+    logits = _rand(r1, (b, c)) * scale  # scale stresses the max-shift path
+    labels = jax.random.randint(r2, (b,), 0, c)
+    onehot = jax.nn.one_hot(labels, c, dtype=jnp.float32)
+    got = softmax_xent(logits, onehot)
+    want = ref.softmax_xent_ref(logits, onehot)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 24), c=st.integers(2, 32), seed=st.integers(0, 2**31 - 1))
+def test_xent_grads_match_ref(b, c, seed):
+    rng = jax.random.PRNGKey(seed)
+    r1, r2, r3 = jax.random.split(rng, 3)
+    logits = _rand(r1, (b, c))
+    labels = jax.random.randint(r2, (b,), 0, c)
+    onehot = jax.nn.one_hot(labels, c, dtype=jnp.float32)
+    wvec = jax.nn.softplus(_rand(r3, (b,)))  # positive per-row weights
+
+    def f_kernel(z):
+        return jnp.sum(softmax_xent(z, onehot) * wvec)
+
+    def f_ref(z):
+        return jnp.sum(ref.softmax_xent_ref(z, onehot) * wvec)
+
+    np.testing.assert_allclose(
+        jax.grad(f_kernel)(logits), jax.grad(f_ref)(logits), rtol=RTOL, atol=1e-5
+    )
+
+
+def test_xent_extreme_logits_stable():
+    """Large logits must not overflow (max-shift inside the kernel)."""
+    logits = jnp.array([[1000.0, 0.0], [-1000.0, 0.0]], jnp.float32)
+    onehot = jnp.array([[1.0, 0.0], [0.0, 1.0]], jnp.float32)
+    loss = softmax_xent(logits, onehot)
+    assert bool(jnp.all(jnp.isfinite(loss)))
+    np.testing.assert_allclose(loss[0], 0.0, atol=1e-5)
+
+
+def test_xent_uniform_logits():
+    c = 10
+    logits = jnp.zeros((4, c), jnp.float32)
+    onehot = jax.nn.one_hot(jnp.arange(4) % c, c, dtype=jnp.float32)
+    loss = softmax_xent(logits, onehot)
+    np.testing.assert_allclose(loss, jnp.full((4,), jnp.log(c)), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# im2col helper (feature ordering is load-bearing for the conv lowering)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    hw=st.sampled_from([4, 8]),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_im2col_conv_matches_lax_conv(b, hw, cin, cout, seed):
+    from compile.model import _im2col
+
+    rng = jax.random.PRNGKey(seed)
+    r1, r2, r3 = jax.random.split(rng, 3)
+    x = _rand(r1, (b, hw, hw, cin))
+    w = _rand(r2, (3, 3, cin, cout))
+    bias = _rand(r3, (cout,))
+    cols = _im2col(x).reshape(b * hw * hw, 9 * cin)
+    got = (cols @ w.reshape(9 * cin, cout) + bias).reshape(b, hw, hw, cout)
+    want = ref.conv2d_ref(x, w, bias)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)

@@ -1,0 +1,136 @@
+"""L2 split-model correctness.
+
+The core invariant of split federated learning: running the five-step split
+pipeline (client_fwd -> server_step -> client_bwd) must produce EXACTLY the
+same loss and gradients as the monolithic full_step, for every cut layer.
+Also checks the padding/weighting contract the batch-bucket runtime relies
+on, and that a few SGD steps actually reduce the loss.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+RTOL = 3e-4
+ATOL = 3e-6
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = jax.random.PRNGKey(42)
+    params = M.init_params(rng)
+    r1, r2 = jax.random.split(rng)
+    x = jax.random.normal(r1, (8, 32, 32, 3), jnp.float32)
+    labels = jax.random.randint(r2, (8,), 0, 10)
+    onehot = jax.nn.one_hot(labels, 10, dtype=jnp.float32)
+    weights = jnp.ones((8,), jnp.float32)
+    full = M.full_step(x, onehot, weights, params)
+    return params, x, onehot, weights, full
+
+
+@pytest.mark.parametrize("cut", list(M.VALID_CUTS))
+def test_split_equals_full(setup, cut):
+    params, x, onehot, weights, full = setup
+    cp, sp = M.split_params(params, cut)
+    (a,) = M.client_fwd(x, cp, cut)
+    res = M.server_step(a, onehot, weights, sp, cut)
+    loss_s, corr_s, ga = res[0], res[1], res[2]
+    gc = M.client_bwd(x, cp, ga, cut)
+
+    np.testing.assert_allclose(float(loss_s), float(full[0]), rtol=1e-5)
+    np.testing.assert_allclose(float(corr_s), float(full[1]), rtol=1e-6)
+    split_grads = list(gc) + list(res[3:])
+    full_grads = list(full[2:])
+    assert len(split_grads) == len(full_grads) == 2 * M.NUM_BLOCKS
+    for g1, g2 in zip(split_grads, full_grads):
+        np.testing.assert_allclose(
+            np.asarray(g1), np.asarray(g2), rtol=RTOL, atol=ATOL
+        )
+
+
+def test_activation_shape_matches_client_fwd(setup):
+    params, x, *_ = setup
+    for cut in M.VALID_CUTS:
+        cp, _ = M.split_params(params, cut)
+        (a,) = M.client_fwd(x, cp, cut)
+        assert tuple(a.shape) == M.activation_shape(cut, x.shape[0])
+
+
+def test_padding_weights_exactness(setup):
+    """Bucket padding with zero weights must be numerically exact.
+
+    A true batch of 5 padded to bucket 8 (rows 5..7 weight 0) must give the
+    same loss and the same gradients as the unpadded batch of 5.
+    """
+    params, x, onehot, _, _ = setup
+    xt, yt = x[:5], onehot[:5]
+    wt = jnp.ones((5,), jnp.float32)
+    true = M.full_step(xt, yt, wt, params)
+
+    xp = jnp.concatenate([xt, jnp.zeros((3, 32, 32, 3), jnp.float32)])
+    yp = jnp.concatenate([yt, jnp.zeros((3, 10), jnp.float32)])
+    # NB: padded onehot rows are all-zero; weights kill their contribution.
+    yp = yp.at[5:, 0].set(1.0)  # give them a valid one-hot anyway
+    wp = jnp.concatenate([wt, jnp.zeros((3,), jnp.float32)])
+    padded = M.full_step(xp, yp, wp, params)
+
+    np.testing.assert_allclose(float(padded[0]), float(true[0]), rtol=1e-5)
+    np.testing.assert_allclose(float(padded[1]), float(true[1]), rtol=1e-6)
+    for g1, g2 in zip(padded[2:], true[2:]):
+        np.testing.assert_allclose(
+            np.asarray(g1), np.asarray(g2), rtol=RTOL, atol=ATOL
+        )
+
+
+def test_sgd_reduces_loss():
+    rng = jax.random.PRNGKey(0)
+    params = M.init_params(rng)
+    r1, r2 = jax.random.split(rng)
+    x = jax.random.normal(r1, (16, 32, 32, 3), jnp.float32)
+    labels = jax.random.randint(r2, (16,), 0, 10)
+    onehot = jax.nn.one_hot(labels, 10, dtype=jnp.float32)
+    w = jnp.ones((16,), jnp.float32)
+    step = jax.jit(lambda *a: M.full_step(*a[:3], a[3:], 10))
+    losses = []
+    lr = 0.05
+    for _ in range(6):
+        out = step(x, onehot, w, *params)
+        losses.append(float(out[0]))
+        params = [p - lr * g for p, g in zip(params, out[2:])]
+    assert losses[-1] < losses[0], losses
+
+
+def test_full_fwd_logits_shape(setup):
+    params, x, *_ = setup
+    (logits,) = M.full_fwd(x, params)
+    assert logits.shape == (8, 10)
+
+
+def test_block_table_consistency():
+    table = M.block_table(10)
+    assert len(table) == M.NUM_BLOCKS
+    shapes = M.param_shapes(10)
+    for row, (wsh, bsh) in zip(table, shapes):
+        n = int(np.prod(wsh)) + int(np.prod(bsh))
+        assert row["n_params"] == n
+        assert row["param_bytes"] == 4 * n
+        assert row["fwd_flops"] > 0 and row["bwd_flops"] == 2 * row["fwd_flops"]
+
+
+def test_block_table_act_bytes_match_shapes():
+    for cut in M.VALID_CUTS:
+        shp = M.activation_shape(cut, 1)
+        elems = int(np.prod(shp))
+        assert M.block_table(10)[cut - 1]["act_bytes"] == 4 * elems
+
+
+def test_cifar100_head():
+    params = M.init_params(jax.random.PRNGKey(1), num_classes=100)
+    x = jnp.zeros((2, 32, 32, 3), jnp.float32)
+    (logits,) = M.full_fwd(x, params, num_classes=100)
+    assert logits.shape == (2, 100)

@@ -1,0 +1,40 @@
+//! End-to-end round throughput: a full split-training round (all devices,
+//! steps a1–a5 + aggregation) in sequential vs concurrent-actor mode, plus
+//! evaluation cost. The headline L3 number for EXPERIMENTS.md §Perf.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use hasfl::config::{Config, StrategyKind};
+use hasfl::coordinator::Trainer;
+
+fn main() {
+    let Some(dir) = common::artifacts_dir() else { return };
+
+    let mut cfg = Config::small();
+    cfg.fleet.n_devices = 4;
+    cfg.train.rounds = 1;
+    cfg.strategy = StrategyKind::Fixed;
+    cfg.fixed_batch = 16;
+    cfg.fixed_cut = 4;
+    cfg.train.train_samples = 1024;
+    cfg.train.test_samples = 256;
+
+    let mut trainer = Trainer::new(cfg.clone(), &dir).expect("trainer");
+    common::bench("round_sequential_n4_b16", 2, 15, || {
+        std::hint::black_box(trainer.run_round().unwrap());
+    });
+    common::bench("round_concurrent_n4_b16", 2, 15, || {
+        std::hint::black_box(trainer.run_round_concurrent().unwrap());
+    });
+    common::bench("evaluate_testset_256", 1, 5, || {
+        std::hint::black_box(trainer.evaluate().unwrap());
+    });
+
+    let stats = trainer.engine.stats_blocking().unwrap();
+    println!(
+        "engine: {} execs, exec {:.2}s, marshal {:.2}s, {} compiles {:.1}s",
+        stats.executions, stats.exec_secs, stats.marshal_secs, stats.compiles, stats.compile_secs
+    );
+    trainer.engine.shutdown();
+}

@@ -1,0 +1,44 @@
+//! Bench + table for Fig 2(b): per-round training latency versus batch
+//! size at Table I scale (VGG-16, N=20, L_c = 8).
+//!
+//! Reports (i) the paper's fig2b rows (simulated latency per batch size)
+//! and (ii) the wall-clock cost of evaluating the latency model itself —
+//! it sits inside the optimizer's inner loop, so it must stay cheap.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use hasfl::config::Config;
+use hasfl::latency::{round_latency, Decisions};
+use hasfl::model::ModelProfile;
+
+fn main() {
+    let cfg = Config::table1();
+    let profile = ModelProfile::vgg16();
+    let devices = cfg.sample_fleet();
+
+    println!("--- Fig 2(b): per-round latency vs batch size (VGG-16, N=20, cut=8) ---");
+    println!("{:>6} {:>12} {:>12} {:>12}", "batch", "T_S (s)", "T_A (s)", "T_total/round");
+    for b in [4u32, 8, 16, 32, 64] {
+        let dec = Decisions::uniform(devices.len(), b, 8);
+        let lat = round_latency(&profile, &devices, &cfg.server, &dec);
+        println!(
+            "{:>6} {:>12.4} {:>12.4} {:>12.4}",
+            b,
+            lat.t_split,
+            lat.t_agg,
+            lat.t_split + lat.t_agg / cfg.train.agg_interval as f64
+        );
+    }
+
+    println!("--- latency-model evaluation cost ---");
+    for &n in &[5usize, 20, 100] {
+        let mut c = Config::table1();
+        c.fleet.n_devices = n;
+        let devs = c.sample_fleet();
+        let dec = Decisions::uniform(n, 16, 8);
+        common::bench(&format!("round_latency_n{n}"), 100, 2000, || {
+            std::hint::black_box(round_latency(&profile, &devs, &c.server, &dec));
+        });
+    }
+}

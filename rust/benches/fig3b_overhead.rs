@@ -1,0 +1,37 @@
+//! Bench + table for Fig 3(b): computing and communication overhead of SFL
+//! at different model split points (VGG-16, b=16).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use hasfl::latency::{round_client_flops, round_comm_bytes};
+use hasfl::model::ModelProfile;
+
+fn main() {
+    println!("--- Fig 3(b): overhead vs model split point (VGG-16, b=16) ---");
+    println!(
+        "{:>4} {:>18} {:>18} {:>14}",
+        "cut", "client GFLOPs", "comm MB/round", "act KB/sample"
+    );
+    for profile in [ModelProfile::vgg16(), ModelProfile::resnet18()] {
+        println!("model: {}", profile.name);
+        for cut in 1..profile.n_layers() {
+            println!(
+                "{:>4} {:>18.3} {:>18.3} {:>14.1}",
+                cut,
+                round_client_flops(&profile, 16, cut) / 1e9,
+                round_comm_bytes(&profile, 16, cut) / 1e6,
+                profile.psi(cut) / 1024.0
+            );
+        }
+    }
+
+    // Profile-table construction cost (manifest parse happens once per
+    // process; analytic profiles are built per figure sweep).
+    common::bench("vgg16_profile_build", 10, 1000, || {
+        std::hint::black_box(ModelProfile::vgg16());
+    });
+    common::bench("resnet18_profile_build", 10, 1000, || {
+        std::hint::black_box(ModelProfile::resnet18());
+    });
+}

@@ -1,0 +1,56 @@
+//! Optimizer benches: Algorithm 2 (joint BS+MS), the BS Newton–Jacobi
+//! solver, and the MS BCD/Dinkelbach solvers across fleet sizes. The paper
+//! re-optimizes every I rounds, so solve time must be negligible next to a
+//! training round (~seconds at paper scale).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use hasfl::config::Config;
+use hasfl::convergence::BoundParams;
+use hasfl::latency::Decisions;
+use hasfl::optimizer::{bs::BsSubproblem, ms, solve_joint, OptContext};
+use hasfl::model::ModelProfile;
+use hasfl::rng::Pcg32;
+
+fn main() {
+    let profile = ModelProfile::vgg16();
+    let bound = BoundParams::default_for(&profile, 5e-4);
+
+    for &n in &[5usize, 10, 20, 40] {
+        let mut cfg = Config::table1();
+        cfg.fleet.n_devices = n;
+        let devices = cfg.sample_fleet();
+        let ctx = OptContext {
+            profile: &profile,
+            devices: &devices,
+            server: &cfg.server,
+            bound: &bound,
+            interval: cfg.train.agg_interval,
+            epsilon: cfg.train.epsilon,
+            batch_cap: cfg.train.batch_cap,
+        };
+
+        let incumbent = Decisions::uniform(n, 16, 4);
+        common::bench(&format!("bs_newton_jacobi_n{n}"), 3, 50, || {
+            let sp = BsSubproblem::from_context(&ctx, &incumbent);
+            std::hint::black_box(sp.solve());
+        });
+
+        let batch = vec![16u32; n];
+        common::bench(&format!("ms_bcd_n{n}"), 1, 10, || {
+            let mut rng = Pcg32::seeded(7);
+            std::hint::black_box(ms::solve_bcd(&ctx, &batch, &mut rng, 4));
+        });
+
+        common::bench(&format!("ms_dinkelbach_n{n}"), 1, 10, || {
+            let mut rng = Pcg32::seeded(7);
+            std::hint::black_box(ms::solve_dinkelbach(&ctx, &batch, &mut rng));
+        });
+
+        common::bench(&format!("joint_alg2_n{n}"), 1, 5, || {
+            let mut rng = Pcg32::seeded(7);
+            std::hint::black_box(solve_joint(&ctx, &mut rng, 8, 1e-6));
+        });
+    }
+}

@@ -1,0 +1,86 @@
+//! PJRT runtime hot path: executable-cache hit cost, literal marshalling,
+//! and the three split-step executions at several (cut, bucket) points.
+//! This is the L3 perf target: the engine boundary must not dominate the
+//! actual XLA compute.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use hasfl::model::{Manifest, Params};
+use hasfl::runtime::{tensor_to_host, EngineHandle, HostTensor, StepArtifacts};
+use hasfl::rng::Pcg32;
+
+fn main() {
+    let Some(dir) = common::artifacts_dir() else { return };
+    let engine = EngineHandle::spawn(dir.clone()).expect("engine");
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let params = Params::init(&manifest, 1);
+    let classes = manifest.num_classes;
+    let mut rng = Pcg32::seeded(5);
+    let px = 32 * 32 * 3;
+
+    for &(cut, bucket) in &[(2usize, 8u32), (4, 16), (6, 32)] {
+        let b = bucket as usize;
+        let x = HostTensor {
+            shape: vec![b, 32, 32, 3],
+            data: (0..b * px).map(|_| rng.normal() as f32 * 0.5).collect(),
+        };
+        let mut onehot = vec![0.0f32; b * classes];
+        for r in 0..b {
+            onehot[r * classes + r % classes] = 1.0;
+        }
+        let y = HostTensor { shape: vec![b, classes], data: onehot };
+        let w = HostTensor { shape: vec![b], data: vec![1.0; b] };
+        let sa = StepArtifacts::resolve(&manifest, cut, bucket).unwrap();
+
+        // client_fwd
+        let mut cf_in = vec![x.clone()];
+        cf_in.extend(params.client_slice(cut).iter().map(tensor_to_host));
+        common::bench(&format!("client_fwd_c{cut}_b{bucket}"), 3, 30, || {
+            std::hint::black_box(
+                engine.execute_blocking(&sa.client_fwd, cf_in.clone()).unwrap(),
+            );
+        });
+
+        // server_step
+        let a = engine.execute_blocking(&sa.client_fwd, cf_in.clone()).unwrap().remove(0);
+        let mut ss_in = vec![a.clone(), y.clone(), w.clone()];
+        ss_in.extend(params.server_slice(cut).iter().map(tensor_to_host));
+        common::bench(&format!("server_step_c{cut}_b{bucket}"), 3, 30, || {
+            std::hint::black_box(
+                engine.execute_blocking(&sa.server_step, ss_in.clone()).unwrap(),
+            );
+        });
+
+        // client_bwd
+        let mut cb_in = vec![x.clone(), a.clone()];
+        cb_in.extend(params.client_slice(cut).iter().map(tensor_to_host));
+        common::bench(&format!("client_bwd_c{cut}_b{bucket}"), 3, 30, || {
+            std::hint::black_box(
+                engine.execute_blocking(&sa.client_bwd, cb_in.clone()).unwrap(),
+            );
+        });
+    }
+
+    // Marshalling overhead proxy: tiny executable, large inputs.
+    let name = Manifest::full_name("full_fwd", 64);
+    let x = HostTensor {
+        shape: vec![64, 32, 32, 3],
+        data: (0..64 * px).map(|_| rng.normal() as f32 * 0.5).collect(),
+    };
+    let mut inputs = vec![x];
+    inputs.extend(params.tensors.iter().map(tensor_to_host));
+    common::bench("full_fwd_b64 (eval path)", 3, 30, || {
+        std::hint::black_box(engine.execute_blocking(&name, inputs.clone()).unwrap());
+    });
+
+    let stats = engine.stats_blocking().unwrap();
+    println!(
+        "engine stats: {} execs, exec {:.3}s, marshal {:.3}s ({:.1}% of exec)",
+        stats.executions,
+        stats.exec_secs,
+        stats.marshal_secs,
+        100.0 * stats.marshal_secs / stats.exec_secs.max(1e-9)
+    );
+    engine.shutdown();
+}

@@ -1,0 +1,132 @@
+//! Model aggregation: the two synchronisation mechanisms of HASFL.
+//!
+//! 1. **Server-side common sub-model** (Eqn 4): the layers beyond the
+//!    deepest cut `L_c` live on the edge server for *every* device and are
+//!    averaged every round (zero communication cost — they are co-located).
+//! 2. **Forged client-specific models** (Eqn 7, steps b1–b3): layers
+//!    `1..=L_c` — each device's client-side sub-model concatenated with its
+//!    server-side *non-common* part — are averaged on the fed server every
+//!    `I` rounds.
+
+use crate::latency::Decisions;
+use crate::model::{average_in_place, Params};
+
+/// Average the server-side common sub-model across devices (every round).
+///
+/// Common region: blocks `L_c..L` (0-based blocks, i.e. tensor indices
+/// `2*L_c..2*L`). Because the paper's Eqn 4 averages *updated* sub-models
+/// and all devices start each round synchronized, averaging parameters is
+/// identical to averaging gradients.
+pub fn aggregate_common(params: &mut [Params], dec: &Decisions) {
+    if params.is_empty() {
+        return;
+    }
+    let l = params[0].n_blocks;
+    let l_c = dec.l_c().min(l);
+    average_in_place(params, Params::block_range(l_c, l));
+}
+
+/// Average the forged client-specific models across devices (every I
+/// rounds): blocks `0..L_c`. Combined with the per-round common
+/// aggregation, the post-aggregation state has every device holding the
+/// same global model.
+pub fn aggregate_forged(params: &mut [Params], dec: &Decisions) {
+    if params.is_empty() {
+        return;
+    }
+    let l = params[0].n_blocks;
+    let l_c = dec.l_c().min(l);
+    average_in_place(params, Params::block_range(0, l_c));
+}
+
+/// Global model = average of every device's full model (used for
+/// evaluation; matches the paper's analysis object w^t = mean_i w_i^t).
+pub fn global_average(params: &[Params]) -> Params {
+    assert!(!params.is_empty());
+    let mut out = params[0].zeros_like();
+    let n = params.len() as f32;
+    for p in params {
+        for (o, t) in out.tensors.iter_mut().zip(&p.tensors) {
+            for (ov, &tv) in o.data.iter_mut().zip(&t.data) {
+                *ov += tv / n;
+            }
+        }
+    }
+    out
+}
+
+/// Max absolute divergence between two parameter sets over a block range
+/// (test/diagnostic helper).
+pub fn divergence(a: &Params, b: &Params, range: std::ops::Range<usize>) -> f32 {
+    let mut worst = 0.0f32;
+    for ti in range {
+        for (&x, &y) in a.tensors[ti].data.iter().zip(&b.tensors[ti].data) {
+            worst = worst.max((x - y).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Tensor;
+
+    fn params_with(v: f32, n_blocks: usize) -> Params {
+        Params {
+            tensors: (0..2 * n_blocks)
+                .map(|_| Tensor { shape: vec![2], data: vec![v, v] })
+                .collect(),
+            n_blocks,
+        }
+    }
+
+    #[test]
+    fn common_aggregation_touches_only_deep_blocks() {
+        let mut params = vec![params_with(0.0, 4), params_with(2.0, 4)];
+        let dec = Decisions { batch: vec![8, 8], cut: vec![2, 2] };
+        aggregate_common(&mut params, &dec);
+        // blocks 2..4 averaged to 1.0
+        assert_eq!(params[0].tensors[4].data, vec![1.0, 1.0]);
+        assert_eq!(params[1].tensors[7].data, vec![1.0, 1.0]);
+        // blocks 0..2 untouched
+        assert_eq!(params[0].tensors[0].data, vec![0.0, 0.0]);
+        assert_eq!(params[1].tensors[3].data, vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn forged_aggregation_touches_only_shallow_blocks() {
+        let mut params = vec![params_with(0.0, 4), params_with(2.0, 4)];
+        let dec = Decisions { batch: vec![8, 8], cut: vec![1, 3] }; // L_c = 3
+        aggregate_forged(&mut params, &dec);
+        assert_eq!(params[0].tensors[0].data, vec![1.0, 1.0]);
+        assert_eq!(params[0].tensors[5].data, vec![1.0, 1.0]);
+        // block 3 (common) untouched
+        assert_eq!(params[0].tensors[6].data, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn common_plus_forged_fully_synchronises() {
+        let mut params = vec![params_with(0.0, 4), params_with(2.0, 4)];
+        let dec = Decisions { batch: vec![8, 8], cut: vec![2, 3] };
+        aggregate_common(&mut params, &dec);
+        aggregate_forged(&mut params, &dec);
+        assert_eq!(divergence(&params[0], &params[1], 0..8), 0.0);
+    }
+
+    #[test]
+    fn global_average_is_mean() {
+        let params = vec![params_with(1.0, 2), params_with(3.0, 2)];
+        let g = global_average(&params);
+        for t in &g.tensors {
+            assert_eq!(t.data, vec![2.0, 2.0]);
+        }
+    }
+
+    #[test]
+    fn heterogeneous_cuts_use_max_depth() {
+        // L_c = max cut: forged region must cover the deepest client part.
+        let dec = Decisions { batch: vec![1, 1, 1], cut: vec![1, 5, 3] };
+        assert_eq!(dec.l_c(), 5);
+    }
+}

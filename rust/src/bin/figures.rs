@@ -1,0 +1,69 @@
+//! `hasfl-figures` — regenerate every table and figure of the paper's
+//! evaluation section (see DESIGN.md §6 and EXPERIMENTS.md).
+//!
+//! ```text
+//! hasfl-figures <table1|fig2|fig3|fig5|fig7|fig8|fig9|fig10|fig11|analytic|all>
+//!               [--out-dir results] [--artifacts artifacts]
+//!               [--rounds N] [--devices N] [--seed S]
+//! ```
+
+use std::path::PathBuf;
+
+use hasfl::figures::{self, FigureOpts};
+use hasfl::util::Args;
+
+fn main() -> hasfl::Result<()> {
+    let args = Args::from_env()?;
+    let opts = FigureOpts {
+        out_dir: PathBuf::from(args.get("out-dir").unwrap_or("results")),
+        artifacts: PathBuf::from(args.get("artifacts").unwrap_or("artifacts")),
+        rounds: args.get_opt::<usize>("rounds")?,
+        devices: args.get_opt::<usize>("devices")?,
+        seed: args.get_or("seed", 2025u64)?,
+    };
+    std::fs::create_dir_all(&opts.out_dir)?;
+
+    let run = |name: &str, f: &dyn Fn(&FigureOpts) -> hasfl::Result<()>| -> hasfl::Result<()> {
+        let t0 = std::time::Instant::now();
+        eprintln!("[figures] {name} ...");
+        f(&opts)?;
+        eprintln!("[figures] {name} done in {:.1}s", t0.elapsed().as_secs_f64());
+        Ok(())
+    };
+
+    match args.subcommand.as_deref() {
+        Some("table1") => run("table1", &figures::table1)?,
+        Some("fig2") => run("fig2", &figures::fig2)?,
+        Some("fig3") => run("fig3", &figures::fig3)?,
+        Some("fig5") | Some("fig6") => run("fig5+6", &figures::fig56)?,
+        Some("fig7") => run("fig7", &figures::fig7)?,
+        Some("fig8") => run("fig8", &figures::fig8)?,
+        Some("fig9") => run("fig9", &figures::fig9)?,
+        Some("fig10") => run("fig10", &figures::fig10)?,
+        Some("fig11") => run("fig11", &figures::fig11)?,
+        Some("analytic") => {
+            run("table1", &figures::table1)?;
+            run("fig7", &figures::fig7)?;
+            run("fig8", &figures::fig8)?;
+            run("fig9", &figures::fig9)?;
+        }
+        Some("all") => {
+            run("table1", &figures::table1)?;
+            run("fig2", &figures::fig2)?;
+            run("fig3", &figures::fig3)?;
+            run("fig5+6", &figures::fig56)?;
+            run("fig7", &figures::fig7)?;
+            run("fig8", &figures::fig8)?;
+            run("fig9", &figures::fig9)?;
+            run("fig10", &figures::fig10)?;
+            run("fig11", &figures::fig11)?;
+        }
+        other => {
+            eprintln!(
+                "usage: hasfl-figures <table1|fig2|fig3|fig5|fig7|fig8|fig9|fig10|fig11|analytic|all> (got {other:?})"
+            );
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,433 @@
+//! Configuration system: typed config with JSON files, presets mirroring
+//! the paper's Table I, and deterministic fleet sampling.
+//!
+//! (De)serialization goes through the in-repo JSON substrate
+//! [`crate::util::json`] — the build environment has no crates.io access,
+//! so serde is not available; the hand-written codec is round-trip tested.
+
+mod presets;
+
+
+use crate::rng::Pcg32;
+use crate::util::Json;
+
+/// A closed interval used for uniform sampling of heterogeneous resources.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Range {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Range {
+    pub fn new(lo: f64, hi: f64) -> Self {
+        assert!(hi >= lo, "bad range [{lo}, {hi}]");
+        Range { lo, hi }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg32) -> f64 {
+        rng.uniform(self.lo, self.hi)
+    }
+
+    pub fn scale(&self, k: f64) -> Range {
+        Range::new(self.lo * k, self.hi * k)
+    }
+
+    pub fn mid(&self) -> f64 {
+        0.5 * (self.lo + self.hi)
+    }
+
+    fn to_json(self) -> Json {
+        Json::from_f64s(&[self.lo, self.hi])
+    }
+
+    fn from_json(j: &Json) -> crate::Result<Range> {
+        let v = j.f64_vec()?;
+        anyhow::ensure!(v.len() == 2, "range needs [lo, hi]");
+        Ok(Range::new(v[0], v[1]))
+    }
+}
+
+/// Per-device resources (one simulated edge device).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Device {
+    /// Computing capability `f_i` in FLOPS.
+    pub flops: f64,
+    /// Uplink rate to the edge server `r_i^U` in bit/s.
+    pub up_bps: f64,
+    /// Downlink rate from the edge server `r_i^D` in bit/s.
+    pub down_bps: f64,
+    /// Uplink rate to the fed server `r_{i,f}^U` in bit/s.
+    pub fed_up_bps: f64,
+    /// Downlink rate from the fed server `r_{i,f}^D` in bit/s.
+    pub fed_down_bps: f64,
+    /// Memory limit `v_{c,i}` in bytes (constraint C4).
+    pub mem_bytes: f64,
+}
+
+/// Edge/fed server resources.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Server {
+    /// Edge-server computing capability `f_s` in FLOPS.
+    pub flops: f64,
+    /// Edge-server -> fed-server uplink `r_{s,f}` in bit/s.
+    pub to_fed_bps: f64,
+    /// Fed-server -> edge-server downlink `r_{f,s}` in bit/s.
+    pub from_fed_bps: f64,
+}
+
+/// Fleet sampling configuration (Table I ranges by default).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetConfig {
+    pub n_devices: usize,
+    /// Device compute range in FLOPS.
+    pub flops: Range,
+    /// Device->edge uplink range in bit/s.
+    pub up_bps: Range,
+    /// Edge->device downlink range in bit/s.
+    pub down_bps: Range,
+    /// Device<->fed-server rates (paper: same distribution as device<->edge).
+    pub fed_up_bps: Range,
+    pub fed_down_bps: Range,
+    /// Per-device memory limit in bytes.
+    pub mem_bytes: f64,
+}
+
+impl FleetConfig {
+    /// Sample a heterogeneous fleet deterministically.
+    pub fn sample(&self, rng: &mut Pcg32) -> Vec<Device> {
+        (0..self.n_devices)
+            .map(|_| Device {
+                flops: self.flops.sample(rng),
+                up_bps: self.up_bps.sample(rng),
+                down_bps: self.down_bps.sample(rng),
+                fed_up_bps: self.fed_up_bps.sample(rng),
+                fed_down_bps: self.fed_down_bps.sample(rng),
+                mem_bytes: self.mem_bytes,
+            })
+            .collect()
+    }
+}
+
+/// Which model drives the experiment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    /// The executable SplitCNN-8 (trained for real through PJRT).
+    Splitcnn8,
+    /// Analytic VGG-16 profile (paper-scale latency simulation only).
+    Vgg16,
+    /// Analytic ResNet-18 profile (paper-scale latency simulation only).
+    Resnet18,
+}
+
+impl ModelKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModelKind::Splitcnn8 => "splitcnn8",
+            ModelKind::Vgg16 => "vgg16",
+            ModelKind::Resnet18 => "resnet18",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<ModelKind> {
+        Ok(match s {
+            "splitcnn8" => ModelKind::Splitcnn8,
+            "vgg16" => ModelKind::Vgg16,
+            "resnet18" => ModelKind::Resnet18,
+            _ => anyhow::bail!("unknown model '{s}'"),
+        })
+    }
+}
+
+/// Data distribution across devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Partition {
+    Iid,
+    /// Paper non-IID: sort by label, split into `2N` shards, deal 2 random
+    /// shards to each device (paper: 40 shards across 20 devices).
+    NonIidShards,
+}
+
+impl Partition {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Partition::Iid => "iid",
+            Partition::NonIidShards => "non_iid_shards",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<Partition> {
+        Ok(match s {
+            "iid" => Partition::Iid,
+            "non_iid_shards" | "noniid" | "non-iid" => Partition::NonIidShards,
+            _ => anyhow::bail!("unknown partition '{s}'"),
+        })
+    }
+}
+
+/// Training hyper-parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    /// Learning rate gamma (paper: 5e-4 for VGG-16; our ~0.2M-param model
+    /// uses a larger default).
+    pub lr: f64,
+    /// Client-side aggregation interval I (paper: 15).
+    pub agg_interval: usize,
+    /// Total training rounds R for a run.
+    pub rounds: usize,
+    /// Evaluate test accuracy every this many rounds.
+    pub eval_every: usize,
+    /// Maximum batch size B (paper benchmarks draw from 1..=64).
+    pub batch_cap: u32,
+    /// Target convergence accuracy epsilon used by the optimizer.
+    pub epsilon: f64,
+    /// Number of classes (10 = CIFAR-10-like, 100 = CIFAR-100-like).
+    pub classes: usize,
+    /// Synthetic dataset size (train / test).
+    pub train_samples: usize,
+    pub test_samples: usize,
+}
+
+/// The BS/MS control strategy (HASFL + the paper's four benchmarks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StrategyKind {
+    /// Heterogeneity-aware BS + MS (the paper's proposal, Algorithm 2).
+    Hasfl,
+    /// Random BS + heterogeneity-aware MS.
+    RbsHams,
+    /// Heterogeneity-aware BS + random MS.
+    HabsRms,
+    /// Random BS + random MS.
+    RbsRms,
+    /// Random BS + resource-heterogeneity-aware MS heuristic [55].
+    RbsRhams,
+    /// Fixed uniform BS + fixed cut (ablation baselines, Figs 10-11).
+    Fixed,
+    /// Heterogeneity-aware BS at a fixed uniform cut (Fig 10 HABS arm).
+    HabsFixedCut,
+    /// Heterogeneity-aware MS at a fixed uniform BS (Fig 11 HAMS arm).
+    HamsFixedBatch,
+}
+
+impl StrategyKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StrategyKind::Hasfl => "hasfl",
+            StrategyKind::RbsHams => "rbs_hams",
+            StrategyKind::HabsRms => "habs_rms",
+            StrategyKind::RbsRms => "rbs_rms",
+            StrategyKind::RbsRhams => "rbs_rhams",
+            StrategyKind::Fixed => "fixed",
+            StrategyKind::HabsFixedCut => "habs_fixed_cut",
+            StrategyKind::HamsFixedBatch => "hams_fixed_batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<StrategyKind> {
+        Ok(match s {
+            "hasfl" => StrategyKind::Hasfl,
+            "rbs_hams" | "rbs-hams" => StrategyKind::RbsHams,
+            "habs_rms" | "habs-rms" => StrategyKind::HabsRms,
+            "rbs_rms" | "rbs-rms" => StrategyKind::RbsRms,
+            "rbs_rhams" | "rbs-rhams" => StrategyKind::RbsRhams,
+            "fixed" => StrategyKind::Fixed,
+            "habs_fixed_cut" => StrategyKind::HabsFixedCut,
+            "hams_fixed_batch" => StrategyKind::HamsFixedBatch,
+            _ => anyhow::bail!("unknown strategy '{s}'"),
+        })
+    }
+}
+
+/// Top-level experiment configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    pub seed: u64,
+    pub fleet: FleetConfig,
+    pub server: Server,
+    pub train: TrainConfig,
+    pub model: ModelKind,
+    pub partition: Partition,
+    pub strategy: StrategyKind,
+    /// Fixed decisions used when `strategy` is one of the fixed variants.
+    pub fixed_batch: u32,
+    pub fixed_cut: usize,
+}
+
+impl Config {
+    pub fn to_json(&self) -> Json {
+        let mut fleet = Json::obj();
+        fleet
+            .set("n_devices", Json::Num(self.fleet.n_devices as f64))
+            .set("flops", self.fleet.flops.to_json())
+            .set("up_bps", self.fleet.up_bps.to_json())
+            .set("down_bps", self.fleet.down_bps.to_json())
+            .set("fed_up_bps", self.fleet.fed_up_bps.to_json())
+            .set("fed_down_bps", self.fleet.fed_down_bps.to_json())
+            .set("mem_bytes", Json::Num(self.fleet.mem_bytes));
+        let mut server = Json::obj();
+        server
+            .set("flops", Json::Num(self.server.flops))
+            .set("to_fed_bps", Json::Num(self.server.to_fed_bps))
+            .set("from_fed_bps", Json::Num(self.server.from_fed_bps));
+        let mut train = Json::obj();
+        train
+            .set("lr", Json::Num(self.train.lr))
+            .set("agg_interval", Json::Num(self.train.agg_interval as f64))
+            .set("rounds", Json::Num(self.train.rounds as f64))
+            .set("eval_every", Json::Num(self.train.eval_every as f64))
+            .set("batch_cap", Json::Num(self.train.batch_cap as f64))
+            .set("epsilon", Json::Num(self.train.epsilon))
+            .set("classes", Json::Num(self.train.classes as f64))
+            .set("train_samples", Json::Num(self.train.train_samples as f64))
+            .set("test_samples", Json::Num(self.train.test_samples as f64));
+        let mut root = Json::obj();
+        // u64 seeds exceed f64's 53-bit mantissa: serialize as string.
+        root.set("seed", Json::Str(self.seed.to_string()))
+            .set("fleet", fleet)
+            .set("server", server)
+            .set("train", train)
+            .set("model", Json::Str(self.model.as_str().into()))
+            .set("partition", Json::Str(self.partition.as_str().into()))
+            .set("strategy", Json::Str(self.strategy.as_str().into()))
+            .set("fixed_batch", Json::Num(self.fixed_batch as f64))
+            .set("fixed_cut", Json::Num(self.fixed_cut as f64));
+        root
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Config> {
+        let f = j.req("fleet")?;
+        let s = j.req("server")?;
+        let t = j.req("train")?;
+        let seed = match j.req("seed")? {
+            Json::Str(s) => s.parse::<u64>()?,
+            other => other.as_u64()?,
+        };
+        Ok(Config {
+            seed,
+            fleet: FleetConfig {
+                n_devices: f.req("n_devices")?.as_usize()?,
+                flops: Range::from_json(f.req("flops")?)?,
+                up_bps: Range::from_json(f.req("up_bps")?)?,
+                down_bps: Range::from_json(f.req("down_bps")?)?,
+                fed_up_bps: Range::from_json(f.req("fed_up_bps")?)?,
+                fed_down_bps: Range::from_json(f.req("fed_down_bps")?)?,
+                mem_bytes: f.req("mem_bytes")?.as_f64()?,
+            },
+            server: Server {
+                flops: s.req("flops")?.as_f64()?,
+                to_fed_bps: s.req("to_fed_bps")?.as_f64()?,
+                from_fed_bps: s.req("from_fed_bps")?.as_f64()?,
+            },
+            train: TrainConfig {
+                lr: t.req("lr")?.as_f64()?,
+                agg_interval: t.req("agg_interval")?.as_usize()?,
+                rounds: t.req("rounds")?.as_usize()?,
+                eval_every: t.req("eval_every")?.as_usize()?,
+                batch_cap: t.req("batch_cap")?.as_u32()?,
+                epsilon: t.req("epsilon")?.as_f64()?,
+                classes: t.req("classes")?.as_usize()?,
+                train_samples: t.req("train_samples")?.as_usize()?,
+                test_samples: t.req("test_samples")?.as_usize()?,
+            },
+            model: ModelKind::parse(j.req("model")?.as_str()?)?,
+            partition: Partition::parse(j.req("partition")?.as_str()?)?,
+            strategy: StrategyKind::parse(j.req("strategy")?.as_str()?)?,
+            fixed_batch: j.req("fixed_batch")?.as_u32()?,
+            fixed_cut: j.req("fixed_cut")?.as_usize()?,
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> crate::Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        Config::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_json().dump())?;
+        Ok(())
+    }
+
+    /// Sample the device fleet for this config.
+    pub fn sample_fleet(&self) -> Vec<Device> {
+        let mut rng = Pcg32::new(self.seed, 0xF1EE7);
+        self.fleet.sample(&mut rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_roundtrips_through_json() {
+        let cfg = Config::table1();
+        let text = cfg.to_json().dump();
+        let back = Config::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn fleet_sampling_matches_table1_ranges() {
+        let cfg = Config::table1();
+        let fleet = cfg.sample_fleet();
+        assert_eq!(fleet.len(), 20);
+        for d in &fleet {
+            assert!(d.flops >= 1e12 && d.flops <= 2e12);
+            assert!(d.up_bps >= 75e6 && d.up_bps <= 80e6);
+            assert!(d.down_bps >= 360e6 && d.down_bps <= 380e6);
+        }
+    }
+
+    #[test]
+    fn fleet_sampling_is_deterministic() {
+        let cfg = Config::table1();
+        assert_eq!(cfg.sample_fleet(), cfg.sample_fleet());
+    }
+
+    #[test]
+    fn fleet_is_heterogeneous() {
+        let fleet = Config::table1().sample_fleet();
+        let f0 = fleet[0].flops;
+        assert!(fleet.iter().any(|d| (d.flops - f0).abs() > 1e9));
+    }
+
+    #[test]
+    fn range_sample_within_bounds() {
+        let mut rng = Pcg32::seeded(4);
+        let r = Range::new(3.0, 7.0);
+        for _ in 0..100 {
+            let v = r.sample(&mut rng);
+            assert!((3.0..7.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn enum_parse_roundtrip() {
+        for k in [
+            StrategyKind::Hasfl,
+            StrategyKind::RbsHams,
+            StrategyKind::HabsRms,
+            StrategyKind::RbsRms,
+            StrategyKind::RbsRhams,
+            StrategyKind::Fixed,
+            StrategyKind::HabsFixedCut,
+            StrategyKind::HamsFixedBatch,
+        ] {
+            assert_eq!(StrategyKind::parse(k.as_str()).unwrap(), k);
+        }
+        for m in [ModelKind::Splitcnn8, ModelKind::Vgg16, ModelKind::Resnet18] {
+            assert_eq!(ModelKind::parse(m.as_str()).unwrap(), m);
+        }
+        for p in [Partition::Iid, Partition::NonIidShards] {
+            assert_eq!(Partition::parse(p.as_str()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn config_save_load_roundtrip() {
+        let cfg = Config::small();
+        let path = std::env::temp_dir().join("hasfl_cfg_test.json");
+        cfg.save(&path).unwrap();
+        let back = Config::load(&path).unwrap();
+        assert_eq!(cfg, back);
+    }
+}

@@ -1,0 +1,100 @@
+//! Presets mirroring the paper's experimental setup (Table I) plus smaller
+//! presets used by the executable end-to-end runs on this CPU testbed.
+
+use super::*;
+
+impl Config {
+    /// The paper's Table I setup: N=20 devices, f_i ~ U[1,2] TFLOPS,
+    /// f_s = 20 TFLOPS, uplinks U[75,80] Mbps, downlinks U[360,380] Mbps,
+    /// inter-server U[360,380] Mbps, gamma = 5e-4, I = 15.
+    pub fn table1() -> Config {
+        Config {
+            seed: 2025,
+            fleet: FleetConfig {
+                n_devices: 20,
+                flops: Range::new(1e12, 2e12),
+                up_bps: Range::new(75e6, 80e6),
+                down_bps: Range::new(360e6, 380e6),
+                fed_up_bps: Range::new(75e6, 80e6),
+                fed_down_bps: Range::new(360e6, 380e6),
+                // 4 GiB edge device (Jetson-class); C4 is only binding for
+                // very deep cuts at large batch on VGG-16.
+                mem_bytes: 4.0 * 1024.0 * 1024.0 * 1024.0,
+            },
+            server: Server {
+                flops: 20e12,
+                to_fed_bps: 370e6,
+                from_fed_bps: 370e6,
+            },
+            train: TrainConfig {
+                lr: 5e-4,
+                agg_interval: 15,
+                rounds: 3000,
+                eval_every: 15,
+                batch_cap: 64,
+                epsilon: 0.35,
+                classes: 10,
+                train_samples: 50_000,
+                test_samples: 10_000,
+            },
+            model: ModelKind::Vgg16,
+            partition: Partition::Iid,
+            strategy: StrategyKind::Hasfl,
+            fixed_batch: 16,
+            fixed_cut: 4,
+        }
+    }
+
+    /// CPU-testbed preset for *executable* end-to-end training of SplitCNN-8
+    /// through the PJRT runtime: fewer devices / rounds and a learning rate
+    /// suited to the ~0.2M-parameter model, but the same Table I resource
+    /// heterogeneity (so straggler structure is preserved).
+    pub fn small() -> Config {
+        let mut cfg = Config::table1();
+        cfg.fleet.n_devices = 4;
+        cfg.model = ModelKind::Splitcnn8;
+        cfg.train.lr = 0.02;
+        cfg.train.rounds = 200;
+        cfg.train.agg_interval = 5;
+        cfg.train.eval_every = 5;
+        cfg.train.batch_cap = 32;
+        cfg.train.epsilon = 0.5;
+        cfg.train.train_samples = 2_048;
+        cfg.train.test_samples = 512;
+        cfg
+    }
+
+    /// Mid-size preset used by the figure harness's "small scale" runs:
+    /// real training, N=8, enough rounds for the convergence ordering of
+    /// the five strategies to emerge.
+    pub fn figure_small() -> Config {
+        let mut cfg = Config::small();
+        cfg.fleet.n_devices = 8;
+        cfg.train.rounds = 150;
+        cfg.train.train_samples = 4_096;
+        cfg.train.test_samples = 1_024;
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper_constants() {
+        let c = Config::table1();
+        assert_eq!(c.fleet.n_devices, 20);
+        assert_eq!(c.server.flops, 20e12);
+        assert_eq!(c.train.agg_interval, 15);
+        assert!((c.train.lr - 5e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn small_preset_is_executable_scale() {
+        let c = Config::small();
+        assert_eq!(c.model, ModelKind::Splitcnn8);
+        assert!(c.fleet.n_devices <= 8);
+        assert!(c.train.train_samples <= 10_000);
+    }
+}

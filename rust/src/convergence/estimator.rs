@@ -1,0 +1,222 @@
+//! Online estimation of the Assumption-2 constants from observed gradients,
+//! following the profiling approach of Wang et al. [24] (the paper states
+//! "the key parameters required for executing the algorithm (e.g. beta,
+//! G_j^2 and sigma_j^2) are estimated following the approach in [24]").
+//!
+//! Per round, for every model block j we observe the per-device gradients
+//! g_{i,j}. We estimate:
+//!   G_j^2   ≈ EMA over rounds of mean_i ||g_{i,j}||^2
+//!   sigma_j^2 ≈ EMA of b_bar * mean_i ||g_{i,j} - mean_i g_{i,j}||^2
+//! (the mini-batch variance scales as sigma^2 / b, so multiplying the
+//! observed cross-device variance by the mean batch recovers sigma^2), and
+//!   beta ≈ EMA of ||grad f(w_t) - grad f(w_{t-1})|| / ||w_t - w_{t-1}||.
+
+use crate::model::Tensor;
+
+/// Exponential-moving-average estimator of per-layer bound constants.
+#[derive(Debug, Clone)]
+pub struct GradStatsEstimator {
+    n_blocks: usize,
+    alpha: f64,
+    gsq: Vec<f64>,
+    sigma_sq: Vec<f64>,
+    beta: f64,
+    rounds_seen: usize,
+    // State for the beta (smoothness) secant estimate.
+    prev_flat_grad: Option<Vec<f64>>,
+    prev_flat_param: Option<Vec<f64>>,
+}
+
+impl GradStatsEstimator {
+    pub fn new(n_blocks: usize) -> Self {
+        GradStatsEstimator {
+            n_blocks,
+            alpha: 0.2,
+            gsq: vec![0.0; n_blocks],
+            sigma_sq: vec![0.0; n_blocks],
+            beta: 0.0,
+            rounds_seen: 0,
+            prev_flat_grad: None,
+            prev_flat_param: None,
+        }
+    }
+
+    fn ema(old: f64, new: f64, alpha: f64, first: bool) -> f64 {
+        if first {
+            new
+        } else {
+            (1.0 - alpha) * old + alpha * new
+        }
+    }
+
+    /// Feed one round of observations.
+    ///
+    /// `per_device_grads[i]` holds device i's full-model gradient as
+    /// 2 tensors per block `[w, b, w, b, ...]` (aligned across devices);
+    /// `batch[i]` is device i's batch size this round.
+    pub fn observe_round(&mut self, per_device_grads: &[Vec<Tensor>], batch: &[u32]) {
+        let n_dev = per_device_grads.len();
+        if n_dev == 0 {
+            return;
+        }
+        let first = self.rounds_seen == 0;
+        let b_bar = batch.iter().map(|&b| b as f64).sum::<f64>() / batch.len() as f64;
+
+        for j in 0..self.n_blocks {
+            let (wi, bi) = (2 * j, 2 * j + 1);
+            // mean_i ||g_{i,j}||^2
+            let mean_sq: f64 = per_device_grads
+                .iter()
+                .map(|g| g[wi].l2_sq() + g[bi].l2_sq())
+                .sum::<f64>()
+                / n_dev as f64;
+            // cross-device variance: mean_i ||g_{i,j} - g_bar_j||^2
+            let var = if n_dev > 1 {
+                let mut acc = 0.0;
+                for t in [wi, bi] {
+                    let len = per_device_grads[0][t].data.len();
+                    for e in 0..len {
+                        let mean: f64 = per_device_grads
+                            .iter()
+                            .map(|g| g[t].data[e] as f64)
+                            .sum::<f64>()
+                            / n_dev as f64;
+                        acc += per_device_grads
+                            .iter()
+                            .map(|g| {
+                                let d = g[t].data[e] as f64 - mean;
+                                d * d
+                            })
+                            .sum::<f64>()
+                            / n_dev as f64;
+                    }
+                }
+                acc
+            } else {
+                // Single device: fall back to a fraction of the second moment.
+                0.5 * mean_sq
+            };
+            self.gsq[j] = Self::ema(self.gsq[j], mean_sq, self.alpha, first);
+            self.sigma_sq[j] = Self::ema(self.sigma_sq[j], b_bar * var, self.alpha, first);
+        }
+        self.rounds_seen += 1;
+    }
+
+    /// Feed the aggregate gradient + parameter snapshot for the secant
+    /// estimate of the smoothness beta.
+    pub fn observe_smoothness(&mut self, flat_grad: Vec<f64>, flat_param: Vec<f64>) {
+        if let (Some(pg), Some(pp)) = (&self.prev_flat_grad, &self.prev_flat_param) {
+            let dg: f64 = flat_grad
+                .iter()
+                .zip(pg)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            let dw: f64 = flat_param
+                .iter()
+                .zip(pp)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            if dw > 1e-12 {
+                let est = dg / dw;
+                let first = self.beta == 0.0;
+                self.beta = Self::ema(self.beta, est, self.alpha, first);
+            }
+        }
+        self.prev_flat_grad = Some(flat_grad);
+        self.prev_flat_param = Some(flat_param);
+    }
+
+    pub fn gsq(&self) -> &[f64] {
+        &self.gsq
+    }
+
+    pub fn sigma_sq(&self) -> &[f64] {
+        &self.sigma_sq
+    }
+
+    /// Estimated smoothness; falls back to `fallback` before enough data.
+    pub fn beta_or(&self, fallback: f64) -> f64 {
+        if self.beta > 0.0 {
+            self.beta
+        } else {
+            fallback
+        }
+    }
+
+    pub fn rounds_seen(&self) -> usize {
+        self.rounds_seen
+    }
+
+    /// Produce BoundParams using current estimates (gamma/theta0 given).
+    pub fn to_bound_params(&self, gamma: f64, theta0: f64) -> super::BoundParams {
+        super::BoundParams {
+            beta: self.beta_or(1.0 / gamma),
+            gamma,
+            theta0,
+            sigma_sq: self.sigma_sq.clone(),
+            gsq: self.gsq.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensor(v: &[f32]) -> Tensor {
+        Tensor { shape: vec![v.len()], data: v.to_vec() }
+    }
+
+    #[test]
+    fn gsq_tracks_mean_square_norm() {
+        let mut est = GradStatsEstimator::new(1);
+        let g1 = vec![tensor(&[3.0, 0.0]), tensor(&[4.0])];
+        let g2 = vec![tensor(&[0.0, 3.0]), tensor(&[4.0])];
+        est.observe_round(&[g1, g2], &[8, 8]);
+        assert!((est.gsq()[0] - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn identical_grads_have_zero_variance() {
+        let mut est = GradStatsEstimator::new(1);
+        let g = vec![tensor(&[1.0, 2.0]), tensor(&[3.0])];
+        est.observe_round(&[g.clone(), g], &[8, 8]);
+        assert!(est.sigma_sq()[0].abs() < 1e-9);
+    }
+
+    #[test]
+    fn divergent_grads_have_positive_variance() {
+        let mut est = GradStatsEstimator::new(1);
+        let g1 = vec![tensor(&[1.0, 0.0]), tensor(&[0.0])];
+        let g2 = vec![tensor(&[-1.0, 0.0]), tensor(&[0.0])];
+        est.observe_round(&[g1, g2], &[4, 4]);
+        assert!(est.sigma_sq()[0] > 0.0);
+    }
+
+    #[test]
+    fn beta_secant_estimate() {
+        let mut est = GradStatsEstimator::new(1);
+        // grad = 2*w (so f is 1-smooth with beta=2)
+        est.observe_smoothness(vec![2.0], vec![1.0]);
+        est.observe_smoothness(vec![4.0], vec![2.0]);
+        assert!((est.beta_or(0.0) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn to_bound_params_carries_estimates() {
+        let mut est = GradStatsEstimator::new(2);
+        let g = vec![
+            tensor(&[1.0]),
+            tensor(&[0.0]),
+            tensor(&[2.0]),
+            tensor(&[0.0]),
+        ];
+        est.observe_round(&[g.clone(), g], &[8, 8]);
+        let bp = est.to_bound_params(0.01, 2.0);
+        assert_eq!(bp.gsq.len(), 2);
+        assert!((bp.gamma - 0.01).abs() < 1e-12);
+        assert!(bp.beta > 0.0);
+    }
+}

@@ -1,0 +1,267 @@
+//! Convergence-bound engine: Theorem 1, Corollary 1, and the Θ′ objective
+//! (Eqn 45) that drives the joint BS+MS optimization, plus the online
+//! estimator for the Assumption-2 constants (per-layer σ_j², G_j²) in the
+//! style of Wang et al. [24].
+
+mod estimator;
+
+pub use estimator::GradStatsEstimator;
+
+use crate::latency::{round_latency, Decisions};
+use crate::model::ModelProfile;
+use crate::config::{Device, Server};
+
+/// Constants of the convergence bound (Assumptions 1–2 + problem scale).
+#[derive(Debug, Clone)]
+pub struct BoundParams {
+    /// Smoothness beta of the local loss functions (Assumption 1).
+    pub beta: f64,
+    /// Learning rate gamma (must satisfy 0 < gamma <= 1/beta).
+    pub gamma: f64,
+    /// vartheta = f(w^0) - f* — initial optimality gap.
+    pub theta0: f64,
+    /// Per-layer gradient-variance constants sigma_j^2 (variance = sigma_j^2 / b).
+    pub sigma_sq: Vec<f64>,
+    /// Per-layer second-moment bounds G_j^2.
+    pub gsq: Vec<f64>,
+}
+
+impl BoundParams {
+    /// Principled defaults for paper-scale simulation: per-layer constants
+    /// proportional to layer parameter mass (gradient energy concentrates
+    /// where the parameters are), normalised so that sum_j sigma_j^2 = s_tot
+    /// and sum_j G_j^2 = g_tot. The executable path replaces these with
+    /// estimates from real gradients (see `GradStatsEstimator`).
+    pub fn default_for(profile: &ModelProfile, gamma: f64) -> BoundParams {
+        let total: f64 = profile.layers.iter().map(|l| l.n_params as f64).sum();
+        // Calibration: with beta = 1/gamma the drift multiplier is
+        // 4 (beta*gamma)^2 I^2 = 4 I^2 (= 900 at the paper's I = 15), so
+        // g_tot must sit well below epsilon/900 for shallow cuts to be
+        // feasible while deep cuts price in a real convergence penalty
+        // (Insight 2). s_tot is set so the variance floor at b = 1
+        // approaches epsilon (Insight 1: tiny batches are priced out).
+        let (s_tot, g_tot) = (8.0, 8e-4);
+        let sigma_sq = profile
+            .layers
+            .iter()
+            .map(|l| s_tot * l.n_params as f64 / total)
+            .collect();
+        let gsq = profile
+            .layers
+            .iter()
+            .map(|l| g_tot * l.n_params as f64 / total)
+            .collect();
+        BoundParams { beta: 1.0 / gamma, gamma, theta0: 2.3, sigma_sq, gsq }
+    }
+
+    /// sum_{j=1}^{L} sigma_j^2.
+    pub fn sigma_sum(&self) -> f64 {
+        self.sigma_sq.iter().sum()
+    }
+
+    /// G~_j^2 = sum_{k<=j} G_k^2 (cumulative second moments).
+    pub fn gsq_cum(&self, j: usize) -> f64 {
+        self.gsq[..j].iter().sum()
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.sigma_sq.len()
+    }
+}
+
+/// The variance term of Theorem 1:
+/// beta*gamma * sum_i sum_j sigma_j^2 / b_i / N^2.
+pub fn variance_term(bp: &BoundParams, batch: &[u32]) -> f64 {
+    let n = batch.len() as f64;
+    let s = bp.sigma_sum();
+    let inv_b: f64 = batch.iter().map(|&b| 1.0 / b.max(1) as f64).sum();
+    bp.beta * bp.gamma * s * inv_b / (n * n)
+}
+
+/// The client-drift term of Theorem 1:
+/// 1{I>1} * 4 beta^2 gamma^2 I^2 * G~_{L_c}^2.
+pub fn drift_term(bp: &BoundParams, l_c: usize, interval: usize) -> f64 {
+    if interval <= 1 {
+        return 0.0;
+    }
+    let i = interval as f64;
+    4.0 * bp.beta * bp.beta * bp.gamma * bp.gamma * i * i * bp.gsq_cum(l_c)
+}
+
+/// Theorem 1 (Eqn 16): the bound on (1/R) sum_t E||grad f(w^{t-1})||^2.
+pub fn theorem1_bound(
+    bp: &BoundParams,
+    batch: &[u32],
+    l_c: usize,
+    interval: usize,
+    rounds: usize,
+) -> f64 {
+    2.0 * bp.theta0 / (bp.gamma * rounds.max(1) as f64)
+        + variance_term(bp, batch)
+        + drift_term(bp, l_c, interval)
+}
+
+/// Corollary 1 (Eqn 27): rounds needed to reach target accuracy epsilon.
+/// Returns `None` when epsilon is unreachable (denominator <= 0): the
+/// variance/drift floor exceeds the target.
+pub fn rounds_to_epsilon(
+    bp: &BoundParams,
+    batch: &[u32],
+    l_c: usize,
+    interval: usize,
+    epsilon: f64,
+) -> Option<f64> {
+    let den = epsilon - variance_term(bp, batch) - drift_term(bp, l_c, interval);
+    if den <= 0.0 {
+        return None;
+    }
+    Some(2.0 * bp.theta0 / (bp.gamma * den))
+}
+
+/// Θ(b, μ) — Eqn 43: estimated total training time to epsilon-convergence,
+/// the objective of problem P′. `None` when infeasible.
+pub fn theta_objective(
+    profile: &ModelProfile,
+    devices: &[Device],
+    server: &Server,
+    bp: &BoundParams,
+    dec: &Decisions,
+    interval: usize,
+    epsilon: f64,
+) -> Option<f64> {
+    let r = rounds_to_epsilon(bp, &dec.batch, dec.l_c(), interval, epsilon)?;
+    let lat = round_latency(profile, devices, server, dec);
+    Some(r * (lat.t_split + lat.t_agg / interval.max(1) as f64))
+}
+
+/// Relaxed evaluation metric for cross-strategy comparison: time until the
+/// decision reaches its *own* achievable accuracy plateau.
+///
+/// The paper measures converged time empirically (accuracy stagnation), so
+/// benchmarks that cannot reach the target epsilon still get a finite
+/// number — they converge to a worse accuracy. We mirror that: if the
+/// decision's variance+drift floor exceeds the target, it is charged the
+/// time to reach `1.25 x floor` (and would also report a worse converged
+/// accuracy, as in Fig 6). Returns `None` only on memory infeasibility.
+pub fn time_to_own_convergence(
+    profile: &ModelProfile,
+    devices: &[Device],
+    server: &Server,
+    bp: &BoundParams,
+    dec: &Decisions,
+    interval: usize,
+    epsilon: f64,
+) -> Option<f64> {
+    if !memory_feasible(profile, devices, dec) {
+        return None;
+    }
+    let floor = variance_term(bp, &dec.batch) + drift_term(bp, dec.l_c(), interval);
+    let eps_eff = epsilon.max(1.25 * floor);
+    let den = eps_eff - floor;
+    if den <= 0.0 {
+        return None;
+    }
+    let r = 2.0 * bp.theta0 / (bp.gamma * den);
+    let lat = round_latency(profile, devices, server, dec);
+    Some(r * (lat.t_split + lat.t_agg / interval.max(1) as f64))
+}
+
+/// Feasibility of the memory constraint C4 for every device.
+pub fn memory_feasible(profile: &ModelProfile, devices: &[Device], dec: &Decisions) -> bool {
+    devices
+        .iter()
+        .zip(dec.batch.iter().zip(&dec.cut))
+        .all(|(d, (&b, &c))| profile.client_mem_bytes(c, b) < d.mem_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn setup() -> (ModelProfile, Vec<Device>, Server, BoundParams) {
+        let cfg = Config::table1();
+        let p = ModelProfile::vgg16();
+        let bp = BoundParams::default_for(&p, cfg.train.lr);
+        (p, cfg.sample_fleet(), cfg.server, bp)
+    }
+
+    #[test]
+    fn variance_term_decreases_with_batch() {
+        let (_, _, _, bp) = setup();
+        let small = variance_term(&bp, &vec![4; 20]);
+        let large = variance_term(&bp, &vec![32; 20]);
+        assert!(small > large);
+        assert!((small / large - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_compensation_insight1() {
+        // Insight 1: BSs compensate — {16,16} and a spread {8,?} can give
+        // the same variance term when 1/b sums match: 1/8 + 1/x = 2/16.
+        let (_, _, _, bp) = setup();
+        let uniform = variance_term(&bp, &[16, 16]);
+        // 1/8 + 1/b = 1/8 => only b -> inf; instead check ordering:
+        let spread = variance_term(&bp, &[8, 64]);
+        // 1/8 + 1/64 = 0.1406 > 2/16 = 0.125: spread is slightly worse.
+        assert!(spread > uniform);
+        let spread2 = variance_term(&bp, &[32, 32]);
+        assert!(spread2 < uniform);
+    }
+
+    #[test]
+    fn drift_term_zero_when_i_is_1() {
+        let (_, _, _, bp) = setup();
+        assert_eq!(drift_term(&bp, 8, 1), 0.0);
+        assert!(drift_term(&bp, 8, 15) > 0.0);
+    }
+
+    #[test]
+    fn drift_term_grows_with_cut_depth_insight2() {
+        let (_, _, _, bp) = setup();
+        assert!(drift_term(&bp, 10, 15) > drift_term(&bp, 2, 15));
+    }
+
+    #[test]
+    fn theorem1_bound_decreases_with_rounds() {
+        let (_, _, _, bp) = setup();
+        let b = vec![16; 20];
+        assert!(theorem1_bound(&bp, &b, 4, 15, 100) > theorem1_bound(&bp, &b, 4, 15, 1000));
+    }
+
+    #[test]
+    fn rounds_to_epsilon_infeasible_when_floor_exceeds_target() {
+        let (_, _, _, bp) = setup();
+        // Tiny batches push the variance floor above a tight epsilon.
+        let tight = 1e-9;
+        assert!(rounds_to_epsilon(&bp, &vec![1; 20], 14, 15, tight).is_none());
+    }
+
+    #[test]
+    fn rounds_decrease_with_larger_batch() {
+        let (_, _, _, bp) = setup();
+        let r8 = rounds_to_epsilon(&bp, &vec![8; 20], 4, 15, 0.5).unwrap();
+        let r32 = rounds_to_epsilon(&bp, &vec![32; 20], 4, 15, 0.5).unwrap();
+        assert!(r32 < r8);
+    }
+
+    #[test]
+    fn theta_objective_feasible_on_table1() {
+        let (p, devs, s, bp) = setup();
+        let dec = Decisions::uniform(devs.len(), 16, 4);
+        let t = theta_objective(&p, &devs, &s, &bp, &dec, 15, 0.5);
+        assert!(t.is_some());
+        assert!(t.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn memory_constraint_detects_violation() {
+        let (p, mut devs, _, _) = setup();
+        let dec = Decisions::uniform(devs.len(), 64, 13);
+        assert!(memory_feasible(&p, &devs, &dec));
+        for d in devs.iter_mut() {
+            d.mem_bytes = 1024.0; // 1 KiB device
+        }
+        assert!(!memory_feasible(&p, &devs, &dec));
+    }
+}

@@ -1,0 +1,177 @@
+//! One split-training round (Algorithm 1, steps a1–a5) over the PJRT
+//! runtime, in sequential and concurrent-actor forms.
+
+use super::Trainer;
+use crate::model::Tensor;
+use crate::runtime::{host_to_tensor, tensor_to_host, HostTensor, StepArtifacts};
+
+/// Aggregate result of one round.
+#[derive(Debug, Clone)]
+pub struct RoundOutcome {
+    /// Mean training loss across devices.
+    pub mean_loss: f64,
+    /// Weighted training accuracy across devices this round.
+    pub train_acc: f64,
+}
+
+/// Everything one device needs for its round, detached from the trainer so
+/// async tasks can own it.
+struct DeviceWork {
+    idx: usize,
+    #[allow(dead_code)] // kept for tracing/debug parity with the paper notation
+    cut: usize,
+    artifacts: StepArtifacts,
+    x: HostTensor,
+    onehot: HostTensor,
+    weights: HostTensor,
+    client_params: Vec<HostTensor>,
+    server_params: Vec<HostTensor>,
+    true_batch: u32,
+}
+
+/// Result of one device's round: full-model gradient + stats.
+struct DeviceResult {
+    idx: usize,
+    grads: Vec<Tensor>,
+    loss: f64,
+    correct: f64,
+    true_batch: u32,
+}
+
+impl Trainer {
+    fn prepare_device(&mut self, i: usize) -> crate::Result<DeviceWork> {
+        let cut = self.dec.cut[i];
+        let b = self.dec.batch[i];
+        let artifacts = StepArtifacts::resolve(&self.manifest, cut, b)?;
+        let bucket = artifacts.bucket;
+        let classes = self.cfg.train.classes;
+
+        // Step a1 precondition: sample the mini-batch B_i^t ⊆ D_i.
+        // (disjoint field borrows: samplers mutably, train_set immutably)
+        let batch = self.samplers[i].sample(&self.train_set, b, bucket);
+
+        let params = &self.params[i];
+        Ok(DeviceWork {
+            idx: i,
+            cut,
+            artifacts,
+            x: HostTensor { shape: vec![bucket as usize, 32, 32, 3], data: batch.x },
+            onehot: HostTensor { shape: vec![bucket as usize, classes], data: batch.onehot },
+            weights: HostTensor { shape: vec![bucket as usize], data: batch.weights },
+            client_params: params.client_slice(cut).iter().map(tensor_to_host).collect(),
+            server_params: params.server_slice(cut).iter().map(tensor_to_host).collect(),
+            true_batch: batch.true_batch,
+        })
+    }
+
+    /// Execute steps a1–a5 for one device through the engine (blocking).
+    fn exec_device_blocking(
+        engine: &crate::runtime::EngineHandle,
+        work: DeviceWork,
+    ) -> crate::Result<DeviceResult> {
+        // a1) client-side forward propagation.
+        let mut cf_in = Vec::with_capacity(1 + work.client_params.len());
+        cf_in.push(work.x.clone());
+        cf_in.extend(work.client_params.iter().cloned());
+        let mut cf_out = engine.execute_blocking(&work.artifacts.client_fwd, cf_in)?;
+        let activations = cf_out.remove(0);
+
+        // a2) activations + labels to the edge server (message passing is
+        // simulated by the latency model; data moves via this call).
+        // a3) server-side FP + BP.
+        let mut ss_in = Vec::with_capacity(3 + work.server_params.len());
+        ss_in.push(activations);
+        ss_in.push(work.onehot.clone());
+        ss_in.push(work.weights.clone());
+        ss_in.extend(work.server_params.iter().cloned());
+        let mut ss_out = engine.execute_blocking(&work.artifacts.server_step, ss_in)?;
+        let loss = ss_out.remove(0).data[0] as f64;
+        let correct = ss_out.remove(0).data[0] as f64;
+        let grad_a = ss_out.remove(0);
+        let server_grads: Vec<Tensor> = ss_out.into_iter().map(host_to_tensor).collect();
+
+        // a4) activations' gradients back to the device.
+        // a5) client-side backward pass (recompute-based VJP).
+        let mut cb_in = Vec::with_capacity(2 + work.client_params.len());
+        cb_in.push(work.x);
+        cb_in.push(grad_a);
+        cb_in.extend(work.client_params);
+        let cb_out = engine.execute_blocking(&work.artifacts.client_bwd, cb_in)?;
+        let mut grads: Vec<Tensor> = cb_out.into_iter().map(host_to_tensor).collect();
+        grads.extend(server_grads);
+
+        Ok(DeviceResult { idx: work.idx, grads, loss, correct, true_batch: work.true_batch })
+    }
+
+    fn apply_results(&mut self, results: Vec<DeviceResult>) -> RoundOutcome {
+        let n = results.len().max(1);
+        let lr = self.cfg.train.lr;
+        let mut loss_sum = 0.0;
+        let mut correct_sum = 0.0;
+        let mut batch_sum = 0u32;
+
+        let mut per_device_grads: Vec<Vec<Tensor>> = Vec::with_capacity(n);
+        let mut batches: Vec<u32> = Vec::with_capacity(n);
+        let mut sorted = results;
+        sorted.sort_by_key(|r| r.idx);
+
+        for r in sorted {
+            loss_sum += r.loss;
+            correct_sum += r.correct;
+            batch_sum += r.true_batch;
+            let nt = self.params[r.idx].tensors.len();
+            debug_assert_eq!(r.grads.len(), nt);
+            self.params[r.idx].sgd_update_range(0..nt, &r.grads, lr);
+            batches.push(r.true_batch);
+            per_device_grads.push(r.grads);
+        }
+        // Feed the Assumption-2 constants estimator (approach of [24]).
+        self.estimator.observe_round(&per_device_grads, &batches);
+
+        RoundOutcome {
+            mean_loss: loss_sum / n as f64,
+            train_acc: correct_sum / batch_sum.max(1) as f64,
+        }
+    }
+
+    /// Sequential round: steps a1–a5 for every device, then SGD updates.
+    pub fn run_round(&mut self) -> crate::Result<RoundOutcome> {
+        let n = self.n_devices();
+        let mut results = Vec::with_capacity(n);
+        for i in 0..n {
+            let work = self.prepare_device(i)?;
+            results.push(Self::exec_device_blocking(&self.engine, work)?);
+        }
+        Ok(self.apply_results(results))
+    }
+
+    /// Actor round: one OS thread per device, true message-passing
+    /// concurrency (the CPU engine serializes compute, so numerics match
+    /// the sequential mode exactly — verified by integration tests).
+    pub fn run_round_concurrent(&mut self) -> crate::Result<RoundOutcome> {
+        let n = self.n_devices();
+        let mut works = Vec::with_capacity(n);
+        for i in 0..n {
+            works.push(self.prepare_device(i)?);
+        }
+        let engine = self.engine.clone();
+        let results: Vec<crate::Result<DeviceResult>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = works
+                .into_iter()
+                .map(|work| {
+                    let engine = engine.clone();
+                    scope.spawn(move || Self::exec_device_blocking(&engine, work))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .map_err(|_| anyhow::anyhow!("device thread panicked"))?
+                })
+                .collect()
+        });
+        let results = results.into_iter().collect::<crate::Result<Vec<_>>>()?;
+        Ok(self.apply_results(results))
+    }
+}

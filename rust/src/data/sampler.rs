@@ -1,0 +1,141 @@
+//! Mini-batch sampling from a device's local partition (step a1 of the
+//! split-training stage: "each edge device i randomly samples a mini-batch
+//! B_i^t ⊆ D_i containing b_i data samples").
+
+use super::{Dataset, PIXELS};
+use crate::rng::Pcg32;
+
+/// Per-device batch sampler with its own deterministic stream.
+#[derive(Debug, Clone)]
+pub struct BatchSampler {
+    indices: Vec<usize>,
+    rng: Pcg32,
+}
+
+/// A host mini-batch ready for the runtime: images `[b,32,32,3]`, one-hot
+/// labels `[b,C]`, per-row weights `[b]` (1/0 after bucket padding).
+#[derive(Debug, Clone)]
+pub struct HostBatch {
+    pub x: Vec<f32>,
+    pub onehot: Vec<f32>,
+    pub weights: Vec<f32>,
+    /// True (unpadded) batch size.
+    pub true_batch: u32,
+    /// Padded (bucket) batch size — the artifact's shape.
+    pub padded_batch: u32,
+}
+
+impl BatchSampler {
+    pub fn new(indices: Vec<usize>, rng: Pcg32) -> BatchSampler {
+        assert!(!indices.is_empty(), "device has an empty partition");
+        BatchSampler { indices, rng }
+    }
+
+    pub fn partition_len(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Sample a batch of `b` samples (with replacement when b exceeds the
+    /// partition) and pad it to `bucket` rows with zero-weighted rows.
+    pub fn sample(&mut self, dataset: &Dataset, b: u32, bucket: u32) -> HostBatch {
+        assert!(bucket >= b, "bucket {bucket} < batch {b}");
+        let c = dataset.n_classes;
+        let (bu, bb) = (b as usize, bucket as usize);
+        let mut x = vec![0.0f32; bb * PIXELS];
+        let mut onehot = vec![0.0f32; bb * c];
+        let mut weights = vec![0.0f32; bb];
+
+        let picks: Vec<usize> = if bu <= self.indices.len() {
+            self.rng
+                .sample_indices(self.indices.len(), bu)
+                .into_iter()
+                .map(|k| self.indices[k])
+                .collect()
+        } else {
+            (0..bu)
+                .map(|_| self.indices[self.rng.below(self.indices.len() as u32) as usize])
+                .collect()
+        };
+
+        for (row, &i) in picks.iter().enumerate() {
+            x[row * PIXELS..(row + 1) * PIXELS].copy_from_slice(dataset.image(i));
+            onehot[row * c + dataset.labels[i] as usize] = 1.0;
+            weights[row] = 1.0;
+        }
+        // Padded rows keep weight 0 but need a valid one-hot so argmax
+        // comparisons in the artifact are well-defined.
+        for row in bu..bb {
+            onehot[row * c] = 1.0;
+        }
+
+        HostBatch { x, onehot, weights, true_batch: b, padded_batch: bucket }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Dataset, BatchSampler) {
+        let d = Dataset::synthetic(64, 10, 11);
+        let s = BatchSampler::new((0..64).collect(), Pcg32::seeded(12));
+        (d, s)
+    }
+
+    #[test]
+    fn batch_shapes_match_bucket() {
+        let (d, mut s) = setup();
+        let b = s.sample(&d, 5, 8);
+        assert_eq!(b.x.len(), 8 * PIXELS);
+        assert_eq!(b.onehot.len(), 8 * 10);
+        assert_eq!(b.weights.len(), 8);
+    }
+
+    #[test]
+    fn weights_mark_real_rows() {
+        let (d, mut s) = setup();
+        let b = s.sample(&d, 5, 8);
+        assert_eq!(b.weights[..5], [1.0; 5]);
+        assert_eq!(b.weights[5..], [0.0; 3]);
+    }
+
+    #[test]
+    fn every_row_has_valid_onehot() {
+        let (d, mut s) = setup();
+        let b = s.sample(&d, 3, 4);
+        for row in 0..4 {
+            let sum: f32 = b.onehot[row * 10..(row + 1) * 10].iter().sum();
+            assert_eq!(sum, 1.0, "row {row}");
+        }
+    }
+
+    #[test]
+    fn sampling_without_replacement_within_partition() {
+        let (d, mut s) = setup();
+        let b = s.sample(&d, 64, 64);
+        // all 64 distinct images used
+        let mut rows: Vec<&[f32]> = (0..64).map(|r| &b.x[r * PIXELS..r * PIXELS + 8]).collect();
+        rows.sort_by(|a, z| a.partial_cmp(z).unwrap());
+        rows.dedup();
+        assert_eq!(rows.len(), 64);
+    }
+
+    #[test]
+    fn oversampling_with_replacement_when_batch_exceeds_partition() {
+        let d = Dataset::synthetic(4, 2, 13);
+        let mut s = BatchSampler::new((0..4).collect(), Pcg32::seeded(14));
+        let b = s.sample(&d, 8, 8);
+        assert_eq!(b.true_batch, 8);
+        assert_eq!(b.weights, vec![1.0; 8]);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let d = Dataset::synthetic(64, 10, 15);
+        let mut s1 = BatchSampler::new((0..64).collect(), Pcg32::seeded(16));
+        let mut s2 = BatchSampler::new((0..64).collect(), Pcg32::seeded(16));
+        let b1 = s1.sample(&d, 8, 8);
+        let b2 = s2.sample(&d, 8, 8);
+        assert_eq!(b1.x, b2.x);
+    }
+}

@@ -1,0 +1,492 @@
+//! Figure/table regeneration harness — one generator per paper exhibit
+//! (Table I, Figs 2–11). See DESIGN.md §6 for the experiment index.
+//!
+//! Two data paths:
+//! - **Executable runs** (Figs 2a, 3a, 5, 6, 10, 11): real SplitCNN-8
+//!   training through the PJRT runtime on the synthetic corpus, with
+//!   simulated wall-clock from the latency model.
+//! - **Analytic paper-scale runs** (Figs 2b, 3b, 7, 8, 9): the exact
+//!   latency model + convergence bound on the VGG-16 profile with Table I
+//!   resources — no model execution needed, so these run at N=20+ scale.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::{Config, Partition, StrategyKind};
+use crate::convergence::BoundParams;
+use crate::coordinator::Trainer;
+use crate::latency::{round_latency, Decisions};
+use crate::metrics::{CsvTable, History};
+use crate::model::ModelProfile;
+use crate::optimizer::{decide, OptContext, StrategyInputs};
+use crate::rng::Pcg32;
+
+/// Options shared by all generators.
+#[derive(Debug, Clone)]
+pub struct FigureOpts {
+    pub out_dir: PathBuf,
+    pub artifacts: PathBuf,
+    /// Override the real-training round budget (None = preset default).
+    pub rounds: Option<usize>,
+    /// Override the fleet size for real-training figures.
+    pub devices: Option<usize>,
+    pub seed: u64,
+}
+
+impl Default for FigureOpts {
+    fn default() -> Self {
+        FigureOpts {
+            out_dir: PathBuf::from("results"),
+            artifacts: PathBuf::from("artifacts"),
+            rounds: None,
+            devices: None,
+            seed: 2025,
+        }
+    }
+}
+
+fn training_config(opts: &FigureOpts, partition: Partition, strategy: StrategyKind) -> Config {
+    let mut cfg = Config::figure_small();
+    cfg.seed = opts.seed;
+    cfg.partition = partition;
+    cfg.strategy = strategy;
+    if let Some(r) = opts.rounds {
+        cfg.train.rounds = r;
+    }
+    if let Some(n) = opts.devices {
+        cfg.fleet.n_devices = n;
+    }
+    cfg
+}
+
+fn run_training(cfg: Config, artifacts: &Path) -> crate::Result<History> {
+    let mut t = Trainer::new(cfg, artifacts)?;
+    t.run()?;
+    let h = t.history.clone();
+    t.engine.shutdown();
+    Ok(h)
+}
+
+fn strategy_tag(kind: StrategyKind) -> &'static str {
+    kind.as_str()
+}
+
+pub const BENCHMARKS: [StrategyKind; 5] = [
+    StrategyKind::Hasfl,
+    StrategyKind::RbsHams,
+    StrategyKind::HabsRms,
+    StrategyKind::RbsRms,
+    StrategyKind::RbsRhams,
+];
+
+// ---------------------------------------------------------------------------
+// Table I
+// ---------------------------------------------------------------------------
+
+/// Emit the Table I parameter set actually used by the harness.
+pub fn table1(opts: &FigureOpts) -> crate::Result<()> {
+    let cfg = Config::table1();
+    let mut t = CsvTable::new(&["parameter", "value"]);
+    let rows: Vec<(&str, String)> = vec![
+        ("f_s (FLOPS)", format!("{:.0}", cfg.server.flops)),
+        ("N", cfg.fleet.n_devices.to_string()),
+        ("f_i (FLOPS)", format!("[{:.0}, {:.0}]", cfg.fleet.flops.lo, cfg.fleet.flops.hi)),
+        ("r_i^U (bps)", format!("[{:.0}, {:.0}]", cfg.fleet.up_bps.lo, cfg.fleet.up_bps.hi)),
+        ("r_i^D (bps)", format!("[{:.0}, {:.0}]", cfg.fleet.down_bps.lo, cfg.fleet.down_bps.hi)),
+        ("r_s (bps)", format!("{:.0}", cfg.server.to_fed_bps)),
+        ("gamma", format!("{}", cfg.train.lr)),
+        ("I", cfg.train.agg_interval.to_string()),
+    ];
+    for (k, v) in rows {
+        t.row(&[k.to_string(), v]);
+    }
+    t.write(&opts.out_dir.join("table1.csv"))
+}
+
+// ---------------------------------------------------------------------------
+// Fig 2 — impact of batch size
+// ---------------------------------------------------------------------------
+
+/// Fig 2(a): test accuracy vs round for fixed uniform BS (real training,
+/// non-IID, fixed cut). Fig 2(b): per-round latency vs BS (analytic VGG-16
+/// at Table I scale).
+pub fn fig2(opts: &FigureOpts) -> crate::Result<()> {
+    // (a) executable sweep.
+    let mut curves = CsvTable::new(&["batch", "round", "sim_time", "test_acc"]);
+    for b in [8u32, 16, 32] {
+        let mut cfg = training_config(opts, Partition::NonIidShards, StrategyKind::Fixed);
+        cfg.fixed_batch = b;
+        cfg.fixed_cut = 4;
+        let h = run_training(cfg, &opts.artifacts)?;
+        for (round, st, acc) in h.eval_points() {
+            curves.rowf(&[b as f64, round as f64, st, acc]);
+        }
+    }
+    curves.write(&opts.out_dir.join("fig2a_acc_vs_round.csv"))?;
+
+    // (b) analytic per-round latency at paper scale.
+    let cfg = Config::table1();
+    let profile = ModelProfile::vgg16();
+    let devices = cfg.sample_fleet();
+    let mut t = CsvTable::new(&["batch", "t_split", "t_client", "t_comm", "t_server"]);
+    for b in [4u32, 8, 16, 32, 64] {
+        let dec = Decisions::uniform(devices.len(), b, 8); // paper: L_c = 8
+        let lat = round_latency(&profile, &devices, &cfg.server, &dec);
+        let t_client = lat
+            .per_device
+            .iter()
+            .map(|l| l.client_fwd + l.client_bwd)
+            .fold(0.0, f64::max);
+        let t_comm = lat
+            .per_device
+            .iter()
+            .map(|l| l.act_up + l.grad_down)
+            .fold(0.0, f64::max);
+        t.rowf(&[b as f64, lat.t_split, t_client, t_comm, lat.server_fwd + lat.server_bwd]);
+    }
+    t.write(&opts.out_dir.join("fig2b_latency_vs_batch.csv"))
+}
+
+// ---------------------------------------------------------------------------
+// Fig 3 — impact of model splitting
+// ---------------------------------------------------------------------------
+
+/// Fig 3(a): accuracy vs round for fixed cuts (real training, non-IID,
+/// b=16). Fig 3(b): computing + communication overhead per cut (analytic).
+pub fn fig3(opts: &FigureOpts) -> crate::Result<()> {
+    let mut curves = CsvTable::new(&["cut", "round", "sim_time", "test_acc"]);
+    for cut in [1usize, 3, 5, 7] {
+        let mut cfg = training_config(opts, Partition::NonIidShards, StrategyKind::Fixed);
+        cfg.fixed_batch = 16;
+        cfg.fixed_cut = cut;
+        let h = run_training(cfg, &opts.artifacts)?;
+        for (round, st, acc) in h.eval_points() {
+            curves.rowf(&[cut as f64, round as f64, st, acc]);
+        }
+    }
+    curves.write(&opts.out_dir.join("fig3a_acc_vs_round.csv"))?;
+
+    let profile = ModelProfile::vgg16();
+    let mut t = CsvTable::new(&["cut", "client_gflops", "comm_mbytes"]);
+    for cut in 1..profile.n_layers() {
+        t.rowf(&[
+            cut as f64,
+            crate::latency::round_client_flops(&profile, 16, cut) / 1e9,
+            crate::latency::round_comm_bytes(&profile, 16, cut) / 1e6,
+        ]);
+    }
+    t.write(&opts.out_dir.join("fig3b_overhead_vs_cut.csv"))
+}
+
+// ---------------------------------------------------------------------------
+// Figs 5 + 6 — HASFL vs benchmarks (training curves + converged bars)
+// ---------------------------------------------------------------------------
+
+/// Run the five-strategy comparison for one data setting; emits the Fig 5
+/// curves and returns per-strategy converged (accuracy, time) for Fig 6.
+pub fn fig5_setting(
+    opts: &FigureOpts,
+    partition: Partition,
+    label: &str,
+) -> crate::Result<Vec<(StrategyKind, f64, f64)>> {
+    let mut curves = CsvTable::new(&["strategy", "round", "sim_time", "test_acc"]);
+    let mut converged = Vec::new();
+    // The paper compares accuracy at equal *wall-clock*, not equal rounds:
+    // a strategy with cheap rounds (HASFL often picks small batches) gets
+    // proportionally more of them. Budget = what the reference uniform
+    // configuration (b=16, cut=4) spends on `opts.rounds` rounds.
+    let budget_secs = {
+        let cfg = training_config(opts, partition, StrategyKind::Fixed);
+        let profile = crate::model::ModelProfile::from_manifest(
+            &crate::model::Manifest::load(&opts.artifacts)?,
+        );
+        let devices = cfg.sample_fleet();
+        let dec = Decisions::uniform(devices.len(), 16, 4);
+        let lat = round_latency(&profile, &devices, &cfg.server, &dec);
+        lat.t_split * cfg.train.rounds as f64
+    };
+    for kind in BENCHMARKS {
+        let mut cfg = training_config(opts, partition, kind);
+        // Probe the strategy's round cost to convert the time budget into
+        // a round budget (clamped to keep runtime sane).
+        let probe = {
+            let t = Trainer::new(cfg.clone(), &opts.artifacts)?;
+            let lat = round_latency(&t.profile, &t.devices, &t.cfg.server, &t.dec);
+            t.engine.shutdown();
+            lat.t_split.max(1e-9)
+        };
+        let rounds = ((budget_secs / probe).ceil() as usize)
+            .clamp(cfg.train.rounds, cfg.train.rounds * 25);
+        cfg.train.rounds = rounds;
+        cfg.train.eval_every = (rounds / 25).max(5);
+        let h = run_training(cfg, &opts.artifacts)?;
+        for (round, st, acc) in h.eval_points() {
+            curves.row(&[
+                strategy_tag(kind).to_string(),
+                round.to_string(),
+                format!("{st:.4}"),
+                format!("{acc:.6}"),
+            ]);
+        }
+        let (_, time, acc) = h
+            .converged_or_last()
+            .ok_or_else(|| anyhow::anyhow!("no eval points"))?;
+        let best = h.best_acc().unwrap_or(acc);
+        converged.push((kind, best, time));
+    }
+    curves.write(&opts.out_dir.join(format!("fig5_{label}.csv")))?;
+    Ok(converged)
+}
+
+/// Figs 5(a,b) + 6(a,b): CIFAR-10-like, IID and non-IID. (The c/d panels
+/// need 100-class artifacts: build with `make artifacts100` and pass that
+/// directory; the harness then emits fig5_cifar100_*.)
+pub fn fig56(opts: &FigureOpts) -> crate::Result<()> {
+    let mut bars = CsvTable::new(&["setting", "strategy", "converged_acc", "converged_time"]);
+    for (partition, label) in [
+        (Partition::Iid, "cifar10_iid"),
+        (Partition::NonIidShards, "cifar10_noniid"),
+    ] {
+        let rows = fig5_setting(opts, partition, label)?;
+        for (kind, acc, time) in rows {
+            bars.row(&[
+                label.to_string(),
+                strategy_tag(kind).to_string(),
+                format!("{acc:.6}"),
+                format!("{time:.4}"),
+            ]);
+        }
+    }
+    bars.write(&opts.out_dir.join("fig6_converged.csv"))
+}
+
+// ---------------------------------------------------------------------------
+// Figs 7 / 8 / 9 — converged time vs resources / fleet size (analytic)
+// ---------------------------------------------------------------------------
+
+/// Estimated converged time (seconds) of a strategy at paper scale:
+/// Θ′ = R(ε)·(T_S + T_A/I) evaluated at the strategy's decisions on the
+/// VGG-16 profile; random strategies are averaged over `draws` draws.
+pub fn analytic_converged_time(
+    cfg: &Config,
+    kind: StrategyKind,
+    sigma_mult: f64,
+    draws: usize,
+) -> Option<f64> {
+    let profile = ModelProfile::vgg16();
+    let mut bound = BoundParams::default_for(&profile, cfg.train.lr);
+    for s in bound.sigma_sq.iter_mut() {
+        *s *= sigma_mult; // non-IID: higher effective gradient variance
+    }
+    let devices = cfg.sample_fleet();
+    let ctx = OptContext {
+        profile: &profile,
+        devices: &devices,
+        server: &cfg.server,
+        bound: &bound,
+        interval: cfg.train.agg_interval,
+        epsilon: cfg.train.epsilon,
+        batch_cap: cfg.train.batch_cap,
+    };
+    let is_random = matches!(
+        kind,
+        StrategyKind::RbsHams | StrategyKind::HabsRms | StrategyKind::RbsRms | StrategyKind::RbsRhams
+    );
+    let n_draws = if is_random { draws } else { 1 };
+    let mut sum = 0.0;
+    let mut cnt = 0usize;
+    for d in 0..n_draws {
+        let mut rng = Pcg32::new(cfg.seed + d as u64, 0xF19);
+        let dec = decide(kind, &ctx, &mut rng, StrategyInputs::default());
+        // Relaxed metric: decisions that cannot reach the target epsilon
+        // are charged the time to their own plateau (see convergence::
+        // time_to_own_convergence) — the paper's converged-time analogue.
+        if let Some(v) = ctx.eval_time(&dec) {
+            sum += v;
+            cnt += 1;
+        }
+    }
+    if cnt == 0 {
+        None
+    } else {
+        Some(sum / cnt as f64)
+    }
+}
+
+/// Fig 7: converged time vs (a) device compute scale, (b) server compute.
+pub fn fig7(opts: &FigureOpts) -> crate::Result<()> {
+    let mut t = CsvTable::new(&["axis", "value", "strategy", "converged_time"]);
+    for scale in [0.5f64, 0.75, 1.0, 1.5, 2.0] {
+        let mut cfg = Config::table1();
+        cfg.seed = opts.seed;
+        cfg.fleet.flops = cfg.fleet.flops.scale(scale);
+        for kind in BENCHMARKS {
+            if let Some(v) = analytic_converged_time(&cfg, kind, 1.0, 8) {
+                t.row(&[
+                    "device_flops_scale".into(),
+                    format!("{scale}"),
+                    strategy_tag(kind).into(),
+                    format!("{v:.2}"),
+                ]);
+            }
+        }
+    }
+    for fs in [10e12f64, 15e12, 20e12, 30e12, 40e12] {
+        let mut cfg = Config::table1();
+        cfg.seed = opts.seed;
+        cfg.server.flops = fs;
+        for kind in BENCHMARKS {
+            if let Some(v) = analytic_converged_time(&cfg, kind, 1.0, 8) {
+                t.row(&[
+                    "server_flops".into(),
+                    format!("{fs:.0}"),
+                    strategy_tag(kind).into(),
+                    format!("{v:.2}"),
+                ]);
+            }
+        }
+    }
+    t.write(&opts.out_dir.join("fig7_compute_resources.csv"))
+}
+
+/// Fig 8: converged time vs (a) device uplink, (b) inter-server rate.
+pub fn fig8(opts: &FigureOpts) -> crate::Result<()> {
+    let mut t = CsvTable::new(&["axis", "value", "strategy", "converged_time"]);
+    for scale in [0.25f64, 0.5, 1.0, 1.5, 2.0] {
+        let mut cfg = Config::table1();
+        cfg.seed = opts.seed;
+        cfg.fleet.up_bps = cfg.fleet.up_bps.scale(scale);
+        for kind in BENCHMARKS {
+            if let Some(v) = analytic_converged_time(&cfg, kind, 1.0, 8) {
+                t.row(&[
+                    "uplink_scale".into(),
+                    format!("{scale}"),
+                    strategy_tag(kind).into(),
+                    format!("{v:.2}"),
+                ]);
+            }
+        }
+    }
+    for scale in [0.25f64, 0.5, 1.0, 2.0] {
+        let mut cfg = Config::table1();
+        cfg.seed = opts.seed;
+        cfg.server.to_fed_bps *= scale;
+        cfg.server.from_fed_bps *= scale;
+        for kind in BENCHMARKS {
+            if let Some(v) = analytic_converged_time(&cfg, kind, 1.0, 8) {
+                t.row(&[
+                    "interserver_scale".into(),
+                    format!("{scale}"),
+                    strategy_tag(kind).into(),
+                    format!("{v:.2}"),
+                ]);
+            }
+        }
+    }
+    t.write(&opts.out_dir.join("fig8_comm_resources.csv"))
+}
+
+/// Fig 9: converged time vs number of devices, IID + non-IID.
+pub fn fig9(opts: &FigureOpts) -> crate::Result<()> {
+    let mut t = CsvTable::new(&["setting", "n_devices", "strategy", "converged_time"]);
+    for (sigma_mult, label) in [(1.0f64, "iid"), (2.0, "noniid")] {
+        for n in [5usize, 10, 20, 30, 40] {
+            let mut cfg = Config::table1();
+            cfg.seed = opts.seed;
+            cfg.fleet.n_devices = n;
+            for kind in BENCHMARKS {
+                if let Some(v) = analytic_converged_time(&cfg, kind, sigma_mult, 8) {
+                    t.row(&[
+                        label.into(),
+                        n.to_string(),
+                        strategy_tag(kind).into(),
+                        format!("{v:.2}"),
+                    ]);
+                }
+            }
+        }
+    }
+    t.write(&opts.out_dir.join("fig9_num_devices.csv"))
+}
+
+// ---------------------------------------------------------------------------
+// Figs 10 / 11 — ablations (HABS and HAMS in isolation)
+// ---------------------------------------------------------------------------
+
+/// Fig 10: HABS vs fixed uniform BS (IID + non-IID, fixed cut).
+pub fn fig10(opts: &FigureOpts) -> crate::Result<()> {
+    let mut curves = CsvTable::new(&["setting", "arm", "round", "sim_time", "test_acc"]);
+    for (partition, plabel) in [
+        (Partition::Iid, "iid"),
+        (Partition::NonIidShards, "noniid"),
+    ] {
+        // Fixed-BS arms.
+        for b in [8u32, 16, 32] {
+            let mut cfg = training_config(opts, partition, StrategyKind::Fixed);
+            cfg.fixed_batch = b;
+            cfg.fixed_cut = 4;
+            let h = run_training(cfg, &opts.artifacts)?;
+            for (round, st, acc) in h.eval_points() {
+                curves.row(&[
+                    plabel.into(),
+                    format!("b{b}"),
+                    round.to_string(),
+                    format!("{st:.4}"),
+                    format!("{acc:.6}"),
+                ]);
+            }
+        }
+        // HABS arm: heterogeneity-aware BS at the same fixed cut. Uses a
+        // config whose strategy recomputes BS each window via the solver.
+        let mut cfg = training_config(opts, partition, StrategyKind::HabsFixedCut);
+        cfg.fixed_cut = 4;
+        let h = run_training(cfg, &opts.artifacts)?;
+        for (round, st, acc) in h.eval_points() {
+            curves.row(&[
+                plabel.into(),
+                "habs".into(),
+                round.to_string(),
+                format!("{st:.4}"),
+                format!("{acc:.6}"),
+            ]);
+        }
+    }
+    curves.write(&opts.out_dir.join("fig10_habs_ablation.csv"))
+}
+
+/// Fig 11: HAMS vs fixed cuts (IID + non-IID, b = 16).
+pub fn fig11(opts: &FigureOpts) -> crate::Result<()> {
+    let mut curves = CsvTable::new(&["setting", "arm", "round", "sim_time", "test_acc"]);
+    for (partition, plabel) in [
+        (Partition::Iid, "iid"),
+        (Partition::NonIidShards, "noniid"),
+    ] {
+        for cut in [2usize, 4, 6] {
+            let mut cfg = training_config(opts, partition, StrategyKind::Fixed);
+            cfg.fixed_batch = 16;
+            cfg.fixed_cut = cut;
+            let h = run_training(cfg, &opts.artifacts)?;
+            for (round, st, acc) in h.eval_points() {
+                curves.row(&[
+                    plabel.into(),
+                    format!("cut{cut}"),
+                    round.to_string(),
+                    format!("{st:.4}"),
+                    format!("{acc:.6}"),
+                ]);
+            }
+        }
+        let mut cfg = training_config(opts, partition, StrategyKind::HamsFixedBatch);
+        cfg.fixed_batch = 16;
+        let h = run_training(cfg, &opts.artifacts)?;
+        for (round, st, acc) in h.eval_points() {
+            curves.row(&[
+                plabel.into(),
+                "hams".into(),
+                round.to_string(),
+                format!("{st:.4}"),
+                format!("{acc:.6}"),
+            ]);
+        }
+    }
+    curves.write(&opts.out_dir.join("fig11_hams_ablation.csv"))
+}

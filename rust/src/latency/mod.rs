@@ -1,0 +1,294 @@
+//! The HASFL latency model — a faithful implementation of §V-A
+//! (Eqns 28–40) of the paper.
+//!
+//! All quantities are per *training round* (split training, Eqn 38) or per
+//! *aggregation event* (client-side model aggregation, Eqn 39). Rates are
+//! bits/s, sizes bytes (converted with x8), compute FLOPS.
+
+use crate::config::{Device, Server};
+use crate::model::ModelProfile;
+
+/// Per-device decisions for one round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Decisions {
+    /// Batch size b_i per device.
+    pub batch: Vec<u32>,
+    /// Cut layer c_i per device (1-based; client keeps layers 1..=c_i).
+    pub cut: Vec<usize>,
+}
+
+impl Decisions {
+    pub fn uniform(n: usize, batch: u32, cut: usize) -> Decisions {
+        Decisions { batch: vec![batch; n], cut: vec![cut; n] }
+    }
+
+    pub fn n(&self) -> usize {
+        debug_assert_eq!(self.batch.len(), self.cut.len());
+        self.batch.len()
+    }
+
+    /// L_c — the maximum client-specific depth across devices (§IV).
+    pub fn l_c(&self) -> usize {
+        self.cut.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Per-device latency breakdown for one split-training round.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceLatency {
+    /// T_i^F — client-side forward propagation (Eqn 28).
+    pub client_fwd: f64,
+    /// T_{a,i}^U — activation uploading (Eqn 29).
+    pub act_up: f64,
+    /// T_{g,i}^D — activations'-gradient downloading (Eqn 32).
+    pub grad_down: f64,
+    /// T_i^B — client-side backward pass (Eqn 33).
+    pub client_bwd: f64,
+}
+
+/// Full latency breakdown of one round (+ aggregation stage).
+#[derive(Debug, Clone)]
+pub struct RoundLatency {
+    pub per_device: Vec<DeviceLatency>,
+    /// T_s^F — server-side forward (Eqn 30).
+    pub server_fwd: f64,
+    /// T_s^B — server-side backward (Eqn 31).
+    pub server_bwd: f64,
+    /// T_S — split-training round latency (Eqn 38).
+    pub t_split: f64,
+    /// T_A — client-side model aggregation latency (Eqn 39).
+    pub t_agg: f64,
+}
+
+/// Bits in a byte payload.
+#[inline]
+fn bits(bytes: f64) -> f64 {
+    8.0 * bytes
+}
+
+/// Eqn 28: T_i^F = b_i * rho_{c_i} / f_i.
+pub fn client_fwd_latency(p: &ModelProfile, d: &Device, b: u32, cut: usize) -> f64 {
+    b as f64 * p.rho(cut) / d.flops
+}
+
+/// Eqn 29: T_{a,i}^U = b_i * psi_{c_i} / r_i^U.
+pub fn act_upload_latency(p: &ModelProfile, d: &Device, b: u32, cut: usize) -> f64 {
+    b as f64 * bits(p.psi(cut)) / d.up_bps
+}
+
+/// Eqn 30: T_s^F = sum_i b_i (rho_L - rho_{c_i}) / f_s.
+pub fn server_fwd_latency(p: &ModelProfile, s: &Server, dec: &Decisions) -> f64 {
+    let flops: f64 = dec
+        .batch
+        .iter()
+        .zip(&dec.cut)
+        .map(|(&b, &c)| b as f64 * (p.rho_total() - p.rho(c)))
+        .sum();
+    flops / s.flops
+}
+
+/// Eqn 31: T_s^B = sum_i b_i (varpi_L - varpi_{c_i}) / f_s.
+pub fn server_bwd_latency(p: &ModelProfile, s: &Server, dec: &Decisions) -> f64 {
+    let flops: f64 = dec
+        .batch
+        .iter()
+        .zip(&dec.cut)
+        .map(|(&b, &c)| b as f64 * (p.varpi_total() - p.varpi(c)))
+        .sum();
+    flops / s.flops
+}
+
+/// Eqn 32: T_{g,i}^D = b_i * chi_{c_i} / r_i^D.
+pub fn grad_download_latency(p: &ModelProfile, d: &Device, b: u32, cut: usize) -> f64 {
+    b as f64 * bits(p.chi(cut)) / d.down_bps
+}
+
+/// Eqn 33: T_i^B = b_i * varpi_{c_i} / f_i.
+pub fn client_bwd_latency(p: &ModelProfile, d: &Device, b: u32, cut: usize) -> f64 {
+    b as f64 * p.varpi(cut) / d.flops
+}
+
+/// Eqn 34: T_{c,i}^U = delta_{c_i} / r_{i,f}^U.
+pub fn submodel_upload_latency(p: &ModelProfile, d: &Device, cut: usize) -> f64 {
+    bits(p.delta(cut)) / d.fed_up_bps
+}
+
+/// Lambda_s (in bytes): N * max_i delta_{c_i} - sum_i delta_{c_i} — the
+/// server-side non-common sub-models exchanged with the fed server.
+pub fn noncommon_bytes(p: &ModelProfile, dec: &Decisions) -> f64 {
+    let max_delta = dec.cut.iter().map(|&c| p.delta(c)).fold(0.0, f64::max);
+    let sum_delta: f64 = dec.cut.iter().map(|&c| p.delta(c)).sum();
+    dec.n() as f64 * max_delta - sum_delta
+}
+
+/// Eqn 35: T_s^U = Lambda_s / r_{s,f}.
+pub fn server_upload_latency(p: &ModelProfile, s: &Server, dec: &Decisions) -> f64 {
+    bits(noncommon_bytes(p, dec)) / s.to_fed_bps
+}
+
+/// Eqn 36: T_{c,i}^D = delta_{c_i} / r_{i,f}^D.
+pub fn submodel_download_latency(p: &ModelProfile, d: &Device, cut: usize) -> f64 {
+    bits(p.delta(cut)) / d.fed_down_bps
+}
+
+/// Eqn 37: T_s^D = Lambda_s / r_{f,s}.
+pub fn server_download_latency(p: &ModelProfile, s: &Server, dec: &Decisions) -> f64 {
+    bits(noncommon_bytes(p, dec)) / s.from_fed_bps
+}
+
+/// Compute the full round latency breakdown (Eqns 38–39).
+pub fn round_latency(
+    p: &ModelProfile,
+    devices: &[Device],
+    server: &Server,
+    dec: &Decisions,
+) -> RoundLatency {
+    assert_eq!(devices.len(), dec.n());
+    let per_device: Vec<DeviceLatency> = devices
+        .iter()
+        .zip(dec.batch.iter().zip(&dec.cut))
+        .map(|(d, (&b, &c))| DeviceLatency {
+            client_fwd: client_fwd_latency(p, d, b, c),
+            act_up: act_upload_latency(p, d, b, c),
+            grad_down: grad_download_latency(p, d, b, c),
+            client_bwd: client_bwd_latency(p, d, b, c),
+        })
+        .collect();
+    let server_fwd = server_fwd_latency(p, server, dec);
+    let server_bwd = server_bwd_latency(p, server, dec);
+
+    // Eqn 38: T_S = max_i{T_i^F + T_{a,i}^U} + T_s^F + T_s^B
+    //             + max_i{T_{g,i}^D + T_i^B}.
+    let up_phase = per_device
+        .iter()
+        .map(|l| l.client_fwd + l.act_up)
+        .fold(0.0, f64::max);
+    let down_phase = per_device
+        .iter()
+        .map(|l| l.grad_down + l.client_bwd)
+        .fold(0.0, f64::max);
+    let t_split = up_phase + server_fwd + server_bwd + down_phase;
+
+    // Eqn 39: T_A = max{max_i T_{c,i}^U, T_s^U} + max{max_i T_{c,i}^D, T_s^D}.
+    let up_agg = devices
+        .iter()
+        .zip(&dec.cut)
+        .map(|(d, &c)| submodel_upload_latency(p, d, c))
+        .fold(server_upload_latency(p, server, dec), f64::max);
+    let down_agg = devices
+        .iter()
+        .zip(&dec.cut)
+        .map(|(d, &c)| submodel_download_latency(p, d, c))
+        .fold(server_download_latency(p, server, dec), f64::max);
+    let t_agg = up_agg + down_agg;
+
+    RoundLatency { per_device, server_fwd, server_bwd, t_split, t_agg }
+}
+
+/// Eqn 40: total latency for R rounds with aggregation interval I:
+/// T = R * T_S + floor(R / I) * T_A.
+pub fn total_latency(round: &RoundLatency, rounds: usize, interval: usize) -> f64 {
+    rounds as f64 * round.t_split + (rounds / interval.max(1)) as f64 * round.t_agg
+}
+
+/// Communication bytes of one round for one device (Fig 3b's comm axis):
+/// activations up + activation-gradients down.
+pub fn round_comm_bytes(p: &ModelProfile, b: u32, cut: usize) -> f64 {
+    b as f64 * (p.psi(cut) + p.chi(cut))
+}
+
+/// Client-side compute FLOPs of one round for one device (Fig 3b's compute
+/// axis): forward + backward of the client sub-model.
+pub fn round_client_flops(p: &ModelProfile, b: u32, cut: usize) -> f64 {
+    b as f64 * (p.rho(cut) + p.varpi(cut))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn setup() -> (ModelProfile, Vec<Device>, Server) {
+        let cfg = Config::table1();
+        (ModelProfile::vgg16(), cfg.sample_fleet(), cfg.server)
+    }
+
+    #[test]
+    fn split_latency_scales_with_batch() {
+        let (p, devs, s) = setup();
+        let slow = round_latency(&p, &devs, &s, &Decisions::uniform(devs.len(), 32, 4));
+        let fast = round_latency(&p, &devs, &s, &Decisions::uniform(devs.len(), 8, 4));
+        assert!(slow.t_split > fast.t_split * 3.0);
+    }
+
+    #[test]
+    fn deeper_cut_moves_compute_to_client() {
+        let (p, devs, s) = setup();
+        let shallow = round_latency(&p, &devs, &s, &Decisions::uniform(devs.len(), 16, 2));
+        let deep = round_latency(&p, &devs, &s, &Decisions::uniform(devs.len(), 16, 12));
+        assert!(deep.per_device[0].client_fwd > shallow.per_device[0].client_fwd);
+        assert!(deep.server_fwd < shallow.server_fwd);
+    }
+
+    #[test]
+    fn uniform_cut_has_zero_noncommon_traffic() {
+        let (p, devs, s) = setup();
+        let dec = Decisions::uniform(devs.len(), 16, 5);
+        assert_eq!(noncommon_bytes(&p, &dec), 0.0);
+        assert_eq!(server_upload_latency(&p, &s, &dec), 0.0);
+    }
+
+    #[test]
+    fn heterogeneous_cuts_have_noncommon_traffic() {
+        let (p, _, _) = setup();
+        let mut dec = Decisions::uniform(4, 16, 3);
+        dec.cut[0] = 6;
+        // Lambda_s = N*max(delta) - sum(delta) > 0 when cuts differ.
+        assert!(noncommon_bytes(&p, &dec) > 0.0);
+    }
+
+    #[test]
+    fn round_is_sum_of_phases() {
+        let (p, devs, s) = setup();
+        let dec = Decisions::uniform(devs.len(), 16, 4);
+        let r = round_latency(&p, &devs, &s, &dec);
+        let up = r
+            .per_device
+            .iter()
+            .map(|l| l.client_fwd + l.act_up)
+            .fold(0.0, f64::max);
+        let down = r
+            .per_device
+            .iter()
+            .map(|l| l.grad_down + l.client_bwd)
+            .fold(0.0, f64::max);
+        assert!((r.t_split - (up + r.server_fwd + r.server_bwd + down)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn straggler_dominates_round() {
+        // Slowing one device's uplink must slow the whole round (the
+        // straggler effect the paper attacks).
+        let (p, mut devs, s) = setup();
+        let dec = Decisions::uniform(devs.len(), 16, 2);
+        let base = round_latency(&p, &devs, &s, &dec).t_split;
+        devs[7].up_bps /= 20.0;
+        let slow = round_latency(&p, &devs, &s, &dec).t_split;
+        assert!(slow > base * 1.5, "{slow} vs {base}");
+    }
+
+    #[test]
+    fn total_latency_counts_aggregations() {
+        let (p, devs, s) = setup();
+        let r = round_latency(&p, &devs, &s, &Decisions::uniform(devs.len(), 16, 4));
+        let t = total_latency(&r, 30, 15);
+        assert!((t - (30.0 * r.t_split + 2.0 * r.t_agg)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shallow_cut_costs_more_comm() {
+        let (p, _, _) = setup();
+        assert!(round_comm_bytes(&p, 16, 1) > round_comm_bytes(&p, 16, 13));
+        assert!(round_client_flops(&p, 16, 13) > round_client_flops(&p, 16, 1));
+    }
+}

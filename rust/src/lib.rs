@@ -1,0 +1,40 @@
+//! # HASFL — Heterogeneity-aware Split Federated Learning
+//!
+//! Production-quality reproduction of *"HASFL: Heterogeneity-aware Split
+//! Federated Learning over Edge Computing Systems"* (Lin et al., 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the coordinator: split-training round
+//!   orchestration across simulated heterogeneous edge devices, the
+//!   convergence-bound engine (Theorem 1 / Corollary 1), the latency model
+//!   (Eqns 28–40), and the joint batch-size + model-splitting optimizer
+//!   (Algorithm 2: Newton–Jacobi BS solver + Dinkelbach/BCD MS solver).
+//! - **L2 (python/compile/model.py)** — the split CNN fwd/bwd in JAX,
+//!   AOT-lowered to HLO text artifacts at build time.
+//! - **L1 (python/compile/kernels/)** — Pallas GEMM + softmax-xent kernels
+//!   on the hot path of every layer.
+//!
+//! Python never runs at training time: [`runtime`] loads the AOT artifacts
+//! through the PJRT C API (`xla` crate) and executes them from Rust.
+//!
+//! See DESIGN.md for the paper-to-module map and EXPERIMENTS.md for the
+//! reproduction of every figure/table.
+
+pub mod aggregation;
+pub mod config;
+pub mod convergence;
+pub mod coordinator;
+pub mod data;
+pub mod figures;
+pub mod latency;
+pub mod metrics;
+pub mod model;
+pub mod optimizer;
+pub mod rng;
+pub mod runtime;
+pub mod util;
+
+pub use config::Config;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

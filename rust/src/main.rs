@@ -1,0 +1,215 @@
+//! `hasfl` — the HASFL leader CLI.
+//!
+//! ```text
+//! hasfl train    [--preset small|figure|table1] [--config cfg.json]
+//!                [--strategy hasfl|rbs_hams|habs_rms|rbs_rms|rbs_rhams|fixed]
+//!                [--rounds N] [--devices N] [--seed S] [--non-iid]
+//!                [--artifacts DIR] [--out history.csv] [--concurrent]
+//! hasfl optimize [--devices N] [--model vgg16|resnet18|splitcnn8] [--seed S]
+//! hasfl latency  [--batch B] [--cut C] [--model ...] [--devices N]
+//! hasfl info     [--artifacts DIR]
+//! ```
+
+use std::path::PathBuf;
+
+use hasfl::config::{Config, ModelKind, Partition, StrategyKind};
+use hasfl::convergence::BoundParams;
+use hasfl::coordinator::Trainer;
+use hasfl::latency::{round_latency, Decisions};
+use hasfl::model::{Manifest, ModelProfile};
+use hasfl::optimizer::{solve_joint, OptContext};
+use hasfl::rng::Pcg32;
+use hasfl::util::Args;
+
+const USAGE: &str = "usage: hasfl <train|optimize|latency|info|config> [options]";
+
+fn profile_arg(name: &str, artifacts: &std::path::Path) -> hasfl::Result<ModelProfile> {
+    Ok(match name {
+        "vgg16" => ModelProfile::vgg16(),
+        "resnet18" => ModelProfile::resnet18(),
+        "splitcnn8" => {
+            let manifest = Manifest::load(artifacts)?;
+            ModelProfile::from_manifest(&manifest)
+        }
+        _ => anyhow::bail!("unknown model '{name}'"),
+    })
+}
+
+fn cmd_train(args: &Args) -> hasfl::Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?,
+        None => match args.get("preset").unwrap_or("small") {
+            "small" => Config::small(),
+            "figure" => Config::figure_small(),
+            "table1" => {
+                let mut c = Config::table1();
+                c.model = ModelKind::Splitcnn8;
+                c
+            }
+            p => anyhow::bail!("unknown preset '{p}'"),
+        },
+    };
+    if let Some(s) = args.get("strategy") {
+        cfg.strategy = StrategyKind::parse(s)?;
+    }
+    if let Some(r) = args.get_opt::<usize>("rounds")? {
+        cfg.train.rounds = r;
+    }
+    if let Some(n) = args.get_opt::<usize>("devices")? {
+        cfg.fleet.n_devices = n;
+    }
+    if let Some(s) = args.get_opt::<u64>("seed")? {
+        cfg.seed = s;
+    }
+    if args.flag("non-iid") {
+        cfg.partition = Partition::NonIidShards;
+    }
+    let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+
+    eprintln!(
+        "training: N={} rounds={} strategy={} partition={}",
+        cfg.fleet.n_devices,
+        cfg.train.rounds,
+        cfg.strategy.as_str(),
+        cfg.partition.as_str()
+    );
+    let mut trainer = Trainer::new(cfg, &artifacts)?;
+    if args.flag("concurrent") {
+        trainer.run_concurrent()?;
+    } else {
+        trainer.run()?;
+    }
+
+    if let Some(&(round, time, acc)) = trainer.history.eval_points().last() {
+        eprintln!(
+            "done: round {round} sim_time {time:.1}s test_acc {:.2}% loss {:.4}",
+            acc * 100.0,
+            trainer.history.last_loss().unwrap_or(f64::NAN)
+        );
+    }
+    if let Some((round, time, acc)) = trainer.history.converged(0.0002, 5) {
+        eprintln!("converged @ round {round}: {:.2}% after {time:.1}s", acc * 100.0);
+    }
+    if let Some(path) = args.get("out") {
+        let path = PathBuf::from(path);
+        trainer.history.write_csv(&path)?;
+        eprintln!("history -> {}", path.display());
+    }
+    let stats = trainer.engine.stats_blocking()?;
+    eprintln!(
+        "engine: {} execs ({:.2}s exec, {:.2}s marshal), {} compiles ({:.1}s)",
+        stats.executions, stats.exec_secs, stats.marshal_secs, stats.compiles, stats.compile_secs
+    );
+    trainer.engine.shutdown();
+    Ok(())
+}
+
+fn cmd_optimize(args: &Args) -> hasfl::Result<()> {
+    let devices = args.get_or("devices", 20usize)?;
+    let seed = args.get_or("seed", 2025u64)?;
+    let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let profile = profile_arg(args.get("model").unwrap_or("vgg16"), &artifacts)?;
+
+    let mut cfg = Config::table1();
+    cfg.fleet.n_devices = devices;
+    cfg.seed = seed;
+    let bound = BoundParams::default_for(&profile, cfg.train.lr);
+    let fleet = cfg.sample_fleet();
+    let ctx = OptContext {
+        profile: &profile,
+        devices: &fleet,
+        server: &cfg.server,
+        bound: &bound,
+        interval: cfg.train.agg_interval,
+        epsilon: cfg.train.epsilon,
+        batch_cap: cfg.train.batch_cap,
+    };
+    let mut rng = Pcg32::new(seed, 0x0CD);
+    let sol = solve_joint(&ctx, &mut rng, 8, 1e-6);
+    println!("model: {}", profile.name);
+    println!("theta (est. seconds to eps-convergence): {:.2}", sol.theta);
+    println!("iterations: {}", sol.iterations);
+    println!("device  flops(T)  up(Mbps)  batch  cut");
+    for (i, d) in fleet.iter().enumerate() {
+        println!(
+            "{:>6}  {:>8.2}  {:>8.1}  {:>5}  {:>3}",
+            i,
+            d.flops / 1e12,
+            d.up_bps / 1e6,
+            sol.decisions.batch[i],
+            sol.decisions.cut[i]
+        );
+    }
+    Ok(())
+}
+
+fn cmd_latency(args: &Args) -> hasfl::Result<()> {
+    let batch = args.get_or("batch", 16u32)?;
+    let cut = args.get_or("cut", 8usize)?;
+    let devices = args.get_or("devices", 20usize)?;
+    let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let profile = profile_arg(args.get("model").unwrap_or("vgg16"), &artifacts)?;
+
+    let mut cfg = Config::table1();
+    cfg.fleet.n_devices = devices;
+    let fleet = cfg.sample_fleet();
+    let dec = Decisions::uniform(devices, batch, cut);
+    let lat = round_latency(&profile, &fleet, &cfg.server, &dec);
+    println!("model: {} batch: {batch} cut: {cut}", profile.name);
+    println!("T_S (split round): {:.4}s", lat.t_split);
+    println!("  server fwd+bwd : {:.4}s", lat.server_fwd + lat.server_bwd);
+    println!("T_A (aggregation): {:.4}s", lat.t_agg);
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> hasfl::Result<()> {
+    let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let m = Manifest::load(&artifacts)?;
+    println!("model: {} ({} classes)", m.model, m.num_classes);
+    println!(
+        "blocks: {} | cuts: {:?} | buckets: {:?}",
+        m.num_blocks, m.valid_cuts, m.buckets
+    );
+    println!("artifacts: {}", m.artifacts.len());
+    let total_bytes: u64 = m
+        .artifacts
+        .iter()
+        .filter_map(|a| std::fs::metadata(m.dir.join(&a.path)).ok())
+        .map(|md| md.len())
+        .sum();
+    println!("total HLO text: {:.1} MiB", total_bytes as f64 / (1024.0 * 1024.0));
+    Ok(())
+}
+
+fn cmd_config(args: &Args) -> hasfl::Result<()> {
+    let cfg = match args.get("preset").unwrap_or("table1") {
+        "small" => Config::small(),
+        "figure" => Config::figure_small(),
+        "table1" => Config::table1(),
+        p => anyhow::bail!("unknown preset '{p}'"),
+    };
+    match args.get("out") {
+        Some(path) => {
+            let path = PathBuf::from(path);
+            cfg.save(&path)?;
+            eprintln!("config -> {}", path.display());
+        }
+        None => println!("{}", cfg.to_json().dump()),
+    }
+    Ok(())
+}
+
+fn main() -> hasfl::Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("optimize") => cmd_optimize(&args),
+        Some("latency") => cmd_latency(&args),
+        Some("info") => cmd_info(&args),
+        Some("config") => cmd_config(&args),
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Training metrics: round records, the paper's converged-time detector,
+//! and CSV emitters for the figure harness.
+
+use std::io::Write;
+
+/// One training-round record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Record {
+    pub round: usize,
+    /// Simulated wall-clock (seconds) accumulated from the latency model.
+    pub sim_time: f64,
+    /// Mean training loss across devices this round.
+    pub loss: f64,
+    /// Test accuracy, present on evaluation rounds.
+    pub test_acc: Option<f64>,
+}
+
+/// Run history + derived statistics.
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    pub records: Vec<Record>,
+}
+
+impl History {
+    pub fn push(&mut self, rec: Record) {
+        self.records.push(rec);
+    }
+
+    pub fn last_loss(&self) -> Option<f64> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    /// Evaluation points (round, sim_time, accuracy).
+    pub fn eval_points(&self) -> Vec<(usize, f64, f64)> {
+        self.records
+            .iter()
+            .filter_map(|r| r.test_acc.map(|a| (r.round, r.sim_time, a)))
+            .collect()
+    }
+
+    pub fn best_acc(&self) -> Option<f64> {
+        self.eval_points()
+            .iter()
+            .map(|&(_, _, a)| a)
+            .fold(None, |acc, a| Some(acc.map_or(a, |m: f64| m.max(a))))
+    }
+
+    /// The paper's convergence rule: "the test accuracy increases by less
+    /// than `threshold` (0.02%) across `window` (five) consecutive
+    /// [evaluation] rounds". Returns (round, sim_time, accuracy) of the
+    /// convergence point, if reached.
+    pub fn converged(&self, threshold: f64, window: usize) -> Option<(usize, f64, f64)> {
+        let evals = self.eval_points();
+        if evals.len() <= window {
+            return None;
+        }
+        let mut running_max = evals[0].2;
+        let mut stagnant = 0usize;
+        for k in 1..evals.len() {
+            let improvement = (evals[k].2 - running_max).max(0.0);
+            if improvement < threshold {
+                stagnant += 1;
+                if stagnant >= window {
+                    return Some(evals[k]);
+                }
+            } else {
+                stagnant = 0;
+            }
+            running_max = running_max.max(evals[k].2);
+        }
+        None
+    }
+
+    /// Converged time with the paper's defaults, falling back to the last
+    /// evaluation when the run ended before stagnation.
+    pub fn converged_or_last(&self) -> Option<(usize, f64, f64)> {
+        self.converged(0.0002, 5)
+            .or_else(|| self.eval_points().last().copied())
+    }
+
+    /// Write `round,sim_time,loss,test_acc` CSV.
+    pub fn write_csv(&self, path: &std::path::Path) -> crate::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "round,sim_time,loss,test_acc")?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "{},{:.6},{:.6},{}",
+                r.round,
+                r.sim_time,
+                r.loss,
+                r.test_acc.map_or(String::new(), |a| format!("{a:.6}"))
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Generic CSV table writer for figure data.
+pub struct CsvTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new(header: &[&str]) -> CsvTable {
+        CsvTable { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[f64]) {
+        self.row(&cells.iter().map(|v| format!("{v:.6}")).collect::<Vec<_>>());
+    }
+
+    pub fn write(&self, path: &std::path::Path) -> crate::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{}", self.header.join(","))?;
+        for r in &self.rows {
+            writeln!(f, "{}", r.join(","))?;
+        }
+        Ok(())
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn history_with_accs(accs: &[f64]) -> History {
+        let mut h = History::default();
+        for (i, &a) in accs.iter().enumerate() {
+            h.push(Record { round: i, sim_time: i as f64, loss: 1.0, test_acc: Some(a) });
+        }
+        h
+    }
+
+    #[test]
+    fn converged_detects_stagnation() {
+        let h = history_with_accs(&[0.1, 0.3, 0.5, 0.6, 0.6, 0.6, 0.6, 0.6, 0.6]);
+        let (round, _, acc) = h.converged(0.0002, 5).unwrap();
+        assert_eq!(round, 8);
+        assert!((acc - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn improvement_resets_the_window() {
+        let h = history_with_accs(&[0.1, 0.1, 0.1, 0.1, 0.5, 0.5, 0.5, 0.5]);
+        // only 4 stagnant evals after the jump: not converged yet
+        assert!(h.converged(0.0002, 5).is_none());
+    }
+
+    #[test]
+    fn converged_none_when_still_improving() {
+        let h = history_with_accs(&[0.1, 0.2, 0.3, 0.4, 0.5, 0.6]);
+        assert!(h.converged(0.0002, 5).is_none());
+        assert!(h.converged_or_last().is_some());
+    }
+
+    #[test]
+    fn best_acc_is_max() {
+        let h = history_with_accs(&[0.1, 0.7, 0.5]);
+        assert_eq!(h.best_acc(), Some(0.7));
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let h = history_with_accs(&[0.1, 0.2]);
+        let dir = std::env::temp_dir().join("hasfl_metrics_test");
+        let path = dir.join("h.csv");
+        h.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("round,sim_time,loss,test_acc"));
+    }
+
+    #[test]
+    fn csv_table_enforces_width() {
+        let mut t = CsvTable::new(&["a", "b"]);
+        t.rowf(&[1.0, 2.0]);
+        assert_eq!(t.n_rows(), 1);
+    }
+}

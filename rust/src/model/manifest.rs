@@ -1,0 +1,314 @@
+//! Artifact manifest: the contract between the Python AOT exporter and the
+//! Rust runtime. Parses `python/compile/aot.py`'s `manifest.json` through
+//! the in-repo JSON substrate.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::Json;
+
+/// Tensor argument/output spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> crate::Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.req("name")?.as_str()?.to_string(),
+            shape: j.req("shape")?.usize_vec()?,
+            dtype: j.req("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One AOT artifact (a shape-specialised HLO module).
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub path: String,
+    pub args: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub sha256: String,
+    /// Which model function this artifact implements (e.g. "client_fwd").
+    pub func: String,
+    pub cut: usize,
+    pub bucket: u32,
+}
+
+impl ArtifactEntry {
+    fn from_json(j: &Json) -> crate::Result<ArtifactEntry> {
+        Ok(ArtifactEntry {
+            name: j.req("name")?.as_str()?.to_string(),
+            path: j.req("path")?.as_str()?.to_string(),
+            args: j
+                .req("args")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<crate::Result<_>>()?,
+            outputs: j
+                .req("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<crate::Result<_>>()?,
+            sha256: j.req("sha256")?.as_str()?.to_string(),
+            func: j.req("fn")?.as_str()?.to_string(),
+            cut: j.req("cut")?.as_usize()?,
+            bucket: j.req("bucket")?.as_u32()?,
+        })
+    }
+}
+
+/// Per-block cost row (exported by `model.block_table`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockRow {
+    pub name: String,
+    pub kind: String,
+    /// Forward FLOPs per sample added by this block (rho_j increment).
+    pub fwd_flops: f64,
+    /// Backward FLOPs per sample added by this block (varpi_j increment).
+    pub bwd_flops: f64,
+    /// Activation bytes per sample at this block's output (psi_j == chi_j).
+    pub act_bytes: f64,
+    /// Parameter bytes of this block (delta_j increment).
+    pub param_bytes: f64,
+    pub n_params: usize,
+}
+
+impl BlockRow {
+    fn from_json(j: &Json) -> crate::Result<BlockRow> {
+        Ok(BlockRow {
+            name: j.req("name")?.as_str()?.to_string(),
+            kind: j.req("kind")?.as_str()?.to_string(),
+            fwd_flops: j.req("fwd_flops")?.as_f64()?,
+            bwd_flops: j.req("bwd_flops")?.as_f64()?,
+            act_bytes: j.req("act_bytes")?.as_f64()?,
+            param_bytes: j.req("param_bytes")?.as_f64()?,
+            n_params: j.req("n_params")?.as_usize()?,
+        })
+    }
+}
+
+/// Parameter tensor shapes for one block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamShape {
+    pub w: Vec<usize>,
+    pub b: Vec<usize>,
+}
+
+/// The full manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: String,
+    pub num_classes: usize,
+    pub img: usize,
+    pub in_ch: usize,
+    pub num_blocks: usize,
+    pub valid_cuts: Vec<usize>,
+    pub buckets: Vec<u32>,
+    pub param_shapes: Vec<ParamShape>,
+    pub block_table: Vec<BlockRow>,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub dir: PathBuf,
+    pub(crate) index: HashMap<String, usize>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> crate::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            anyhow::anyhow!(
+                "reading {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            )
+        })?;
+        let j = Json::parse(&text)?;
+        let mut m = Manifest {
+            model: j.req("model")?.as_str()?.to_string(),
+            num_classes: j.req("num_classes")?.as_usize()?,
+            img: j.req("img")?.as_usize()?,
+            in_ch: j.req("in_ch")?.as_usize()?,
+            num_blocks: j.req("num_blocks")?.as_usize()?,
+            valid_cuts: j.req("valid_cuts")?.usize_vec()?,
+            buckets: j.req("buckets")?.u32_vec()?,
+            param_shapes: j
+                .req("param_shapes")?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    Ok(ParamShape {
+                        w: p.req("w")?.usize_vec()?,
+                        b: p.req("b")?.usize_vec()?,
+                    })
+                })
+                .collect::<crate::Result<_>>()?,
+            block_table: j
+                .req("block_table")?
+                .as_arr()?
+                .iter()
+                .map(BlockRow::from_json)
+                .collect::<crate::Result<_>>()?,
+            artifacts: j
+                .req("artifacts")?
+                .as_arr()?
+                .iter()
+                .map(ArtifactEntry::from_json)
+                .collect::<crate::Result<_>>()?,
+            dir: dir.to_path_buf(),
+            index: HashMap::new(),
+        };
+        m.reindex();
+        Ok(m)
+    }
+
+    pub fn reindex(&mut self) {
+        self.index = self
+            .artifacts
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (a.name.clone(), i))
+            .collect();
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.index.get(name).map(|&i| &self.artifacts[i])
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Option<PathBuf> {
+        self.get(name).map(|a| self.dir.join(&a.path))
+    }
+
+    /// Canonical artifact name for a split function.
+    pub fn split_name(func: &str, cut: usize, bucket: u32) -> String {
+        format!("{func}_c{cut}_b{bucket}")
+    }
+
+    /// Canonical artifact name for a monolithic function.
+    pub fn full_name(func: &str, bucket: u32) -> String {
+        format!("{func}_b{bucket}")
+    }
+
+    /// Smallest exported bucket that fits `batch`, if any.
+    pub fn bucket_for(&self, batch: u32) -> Option<u32> {
+        self.buckets.iter().copied().filter(|&b| b >= batch).min()
+    }
+
+    /// Largest exported bucket.
+    pub fn max_bucket(&self) -> u32 {
+        self.buckets.iter().copied().max().unwrap_or(1)
+    }
+
+    /// Total parameter tensors (2 per block: w, b).
+    pub fn n_param_tensors(&self) -> usize {
+        2 * self.num_blocks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_manifest() -> Manifest {
+        let mut m = Manifest {
+            model: "splitcnn8".into(),
+            num_classes: 10,
+            img: 32,
+            in_ch: 3,
+            num_blocks: 8,
+            valid_cuts: (1..8).collect(),
+            buckets: vec![1, 2, 4, 8, 16, 32, 64],
+            param_shapes: vec![],
+            block_table: vec![],
+            artifacts: vec![ArtifactEntry {
+                name: "client_fwd_c3_b8".into(),
+                path: "client_fwd_c3_b8.hlo.txt".into(),
+                args: vec![TensorSpec {
+                    name: "x".into(),
+                    shape: vec![8, 32, 32, 3],
+                    dtype: "f32".into(),
+                }],
+                outputs: vec![],
+                sha256: "0".into(),
+                func: "client_fwd".into(),
+                cut: 3,
+                bucket: 8,
+            }],
+            dir: PathBuf::new(),
+            index: HashMap::new(),
+        };
+        m.reindex();
+        m
+    }
+
+    #[test]
+    fn bucket_for_rounds_up() {
+        let m = toy_manifest();
+        assert_eq!(m.bucket_for(1), Some(1));
+        assert_eq!(m.bucket_for(3), Some(4));
+        assert_eq!(m.bucket_for(33), Some(64));
+        assert_eq!(m.bucket_for(64), Some(64));
+        assert_eq!(m.bucket_for(65), None);
+    }
+
+    #[test]
+    fn name_helpers() {
+        assert_eq!(Manifest::split_name("client_fwd", 3, 8), "client_fwd_c3_b8");
+        assert_eq!(Manifest::full_name("full_step", 16), "full_step_b16");
+    }
+
+    #[test]
+    fn index_lookup() {
+        let m = toy_manifest();
+        assert!(m.get("client_fwd_c3_b8").is_some());
+        assert!(m.get("nope").is_none());
+        assert_eq!(m.get("client_fwd_c3_b8").unwrap().bucket, 8);
+    }
+
+    #[test]
+    fn tensor_spec_numel() {
+        let t = TensorSpec { name: "x".into(), shape: vec![2, 3, 4], dtype: "f32".into() };
+        assert_eq!(t.numel(), 24);
+        let s = TensorSpec { name: "loss".into(), shape: vec![], dtype: "f32".into() };
+        assert_eq!(s.numel(), 1);
+    }
+
+    #[test]
+    fn parse_manifest_json_fragment() {
+        let text = r#"{
+            "model": "splitcnn8", "num_classes": 10, "img": 32, "in_ch": 3,
+            "num_blocks": 2, "valid_cuts": [1], "buckets": [4],
+            "param_shapes": [{"w": [3, 4], "b": [4]}, {"w": [4, 2], "b": [2]}],
+            "block_table": [
+                {"name": "a", "kind": "dense", "fwd_flops": 24.0,
+                 "bwd_flops": 48.0, "act_bytes": 16, "param_bytes": 64,
+                 "n_params": 16},
+                {"name": "b", "kind": "dense", "fwd_flops": 16.0,
+                 "bwd_flops": 32.0, "act_bytes": 8, "param_bytes": 40,
+                 "n_params": 10}
+            ],
+            "artifacts": [
+                {"name": "full_fwd_b4", "path": "full_fwd_b4.hlo.txt",
+                 "args": [{"name": "x", "shape": [4, 3], "dtype": "f32"}],
+                 "outputs": [{"name": "y", "shape": [4, 2], "dtype": "f32"}],
+                 "sha256": "abc", "fn": "full_fwd", "cut": 0, "bucket": 4}
+            ]
+        }"#;
+        let dir = std::env::temp_dir().join("hasfl_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.num_blocks, 2);
+        assert_eq!(m.param_shapes[0].w, vec![3, 4]);
+        assert_eq!(m.block_table[1].n_params, 10);
+        assert_eq!(m.get("full_fwd_b4").unwrap().func, "full_fwd");
+    }
+}

@@ -1,0 +1,24 @@
+//! Model substrate: artifact manifest, parameter store, and analytic
+//! per-layer cost profiles (SplitCNN-8 / VGG-16 / ResNet-18).
+
+pub mod manifest;
+pub mod params;
+pub mod profiles;
+
+pub use manifest::{ArtifactEntry, BlockRow, Manifest, ParamShape, TensorSpec};
+pub use params::{average_in_place, Params, Tensor};
+pub use profiles::{LayerCost, ModelProfile};
+
+use crate::config::ModelKind;
+
+/// Resolve the profile for a configured model kind. `manifest` is required
+/// for the executable SplitCNN-8 (its table is exported by the AOT step).
+pub fn profile_for(kind: ModelKind, manifest: Option<&Manifest>) -> ModelProfile {
+    match kind {
+        ModelKind::Splitcnn8 => ModelProfile::from_manifest(
+            manifest.expect("SplitCNN-8 profile requires the artifact manifest"),
+        ),
+        ModelKind::Vgg16 => ModelProfile::vgg16(),
+        ModelKind::Resnet18 => ModelProfile::resnet18(),
+    }
+}

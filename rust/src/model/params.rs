@@ -1,0 +1,213 @@
+//! Parameter store: host-side model parameters, SGD updates, and the
+//! split/forge/aggregate plumbing the HASFL protocol needs.
+
+use super::manifest::Manifest;
+use crate::rng::Pcg32;
+
+/// A host tensor (f32, row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product::<usize>().max(1);
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// He-normal init (matches the Python initializer's distribution).
+    pub fn he_init(shape: &[usize], rng: &mut Pcg32) -> Tensor {
+        let n = shape.iter().product::<usize>().max(1);
+        let fan_in: usize = if shape.len() > 1 {
+            shape[..shape.len() - 1].iter().product()
+        } else {
+            1
+        };
+        let std = (2.0 / fan_in as f64).sqrt();
+        let data = (0..n).map(|_| (rng.normal() * std) as f32).collect();
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn l2_sq(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+}
+
+/// Full model parameters: 2 tensors per block `[w1, b1, w2, b2, ...]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Params {
+    pub tensors: Vec<Tensor>,
+    /// Blocks in the model (tensors.len() == 2 * n_blocks).
+    pub n_blocks: usize,
+}
+
+impl Params {
+    /// Initialize from the manifest's parameter shapes.
+    pub fn init(manifest: &Manifest, seed: u64) -> Params {
+        let mut rng = Pcg32::new(seed, 0x9A7A);
+        let mut tensors = Vec::with_capacity(manifest.param_shapes.len() * 2);
+        for ps in &manifest.param_shapes {
+            tensors.push(Tensor::he_init(&ps.w, &mut rng));
+            tensors.push(Tensor::zeros(&ps.b));
+        }
+        Params { tensors, n_blocks: manifest.param_shapes.len() }
+    }
+
+    pub fn zeros_like(&self) -> Params {
+        Params {
+            tensors: self.tensors.iter().map(|t| Tensor::zeros(&t.shape)).collect(),
+            n_blocks: self.n_blocks,
+        }
+    }
+
+    /// Tensor index range `[lo, hi)` covering blocks `[from_block, to_block)`
+    /// (0-based blocks).
+    pub fn block_range(from_block: usize, to_block: usize) -> std::ops::Range<usize> {
+        2 * from_block..2 * to_block
+    }
+
+    /// Client-side tensors for a cut (blocks 1..=cut -> indices 0..2*cut).
+    pub fn client_slice(&self, cut: usize) -> &[Tensor] {
+        &self.tensors[..2 * cut]
+    }
+
+    /// Server-side tensors for a cut (blocks cut+1..=L).
+    pub fn server_slice(&self, cut: usize) -> &[Tensor] {
+        &self.tensors[2 * cut..]
+    }
+
+    /// SGD update on a tensor index range: `w[i] -= lr * g[i]`.
+    pub fn sgd_update_range(
+        &mut self,
+        range: std::ops::Range<usize>,
+        grads: &[Tensor],
+        lr: f64,
+    ) {
+        assert_eq!(range.len(), grads.len());
+        for (t, g) in self.tensors[range].iter_mut().zip(grads) {
+            debug_assert_eq!(t.shape, g.shape);
+            for (w, &gv) in t.data.iter_mut().zip(&g.data) {
+                *w -= (lr * gv as f64) as f32;
+            }
+        }
+    }
+
+    /// Per-block squared L2 norms of a gradient list aligned to the model's
+    /// blocks `[from_block..)` — used by the Assumption-2 estimator.
+    pub fn block_sq_norms(grads: &[Tensor], from_block: usize) -> Vec<(usize, f64)> {
+        grads
+            .chunks(2)
+            .enumerate()
+            .map(|(i, pair)| (from_block + i, pair.iter().map(|t| t.l2_sq()).sum()))
+            .collect()
+    }
+
+    pub fn total_numel(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+}
+
+/// Average tensors element-wise over tensor index range `range` across many
+/// parameter sets, writing the mean back into every set (synchronisation).
+pub fn average_in_place(sets: &mut [Params], range: std::ops::Range<usize>) {
+    if sets.is_empty() {
+        return;
+    }
+    let n = sets.len() as f32;
+    for ti in range {
+        let len = sets[0].tensors[ti].data.len();
+        let mut mean = vec![0.0f32; len];
+        for s in sets.iter() {
+            for (m, &v) in mean.iter_mut().zip(&s.tensors[ti].data) {
+                *m += v;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n;
+        }
+        for s in sets.iter_mut() {
+            s.tensors[ti].data.copy_from_slice(&mean);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_params() -> Params {
+        Params {
+            tensors: vec![
+                Tensor { shape: vec![2], data: vec![1.0, 2.0] },
+                Tensor { shape: vec![1], data: vec![0.5] },
+                Tensor { shape: vec![2], data: vec![3.0, 4.0] },
+                Tensor { shape: vec![1], data: vec![1.5] },
+            ],
+            n_blocks: 2,
+        }
+    }
+
+    #[test]
+    fn split_slices_cover_everything() {
+        let p = toy_params();
+        assert_eq!(p.client_slice(1).len(), 2);
+        assert_eq!(p.server_slice(1).len(), 2);
+        assert_eq!(p.client_slice(1).len() + p.server_slice(1).len(), p.tensors.len());
+    }
+
+    #[test]
+    fn sgd_update_applies_lr() {
+        let mut p = toy_params();
+        let g = vec![
+            Tensor { shape: vec![2], data: vec![1.0, 1.0] },
+            Tensor { shape: vec![1], data: vec![2.0] },
+        ];
+        p.sgd_update_range(0..2, &g, 0.1);
+        assert!((p.tensors[0].data[0] - 0.9).abs() < 1e-6);
+        assert!((p.tensors[1].data[0] - 0.3).abs() < 1e-6);
+        // untouched range
+        assert_eq!(p.tensors[2].data, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn average_in_place_synchronises() {
+        let mut a = toy_params();
+        let mut b = toy_params();
+        b.tensors[0].data = vec![3.0, 4.0];
+        let mut sets = vec![a.clone(), b.clone()];
+        average_in_place(&mut sets, 0..2);
+        assert_eq!(sets[0].tensors[0].data, vec![2.0, 3.0]);
+        assert_eq!(sets[1].tensors[0].data, vec![2.0, 3.0]);
+        // range end untouched
+        assert_eq!(sets[1].tensors[2].data, vec![3.0, 4.0]);
+        a.tensors[0].data = vec![0.0; 2];
+        b.tensors[0].data = vec![0.0; 2];
+    }
+
+    #[test]
+    fn he_init_scale_tracks_fan_in() {
+        let mut rng = Pcg32::seeded(1);
+        let t = Tensor::he_init(&[1000, 4], &mut rng);
+        let var = t.l2_sq() / t.numel() as f64;
+        let want = 2.0 / 1000.0;
+        assert!((var - want).abs() / want < 0.25, "var {var} want {want}");
+    }
+
+    #[test]
+    fn block_sq_norms_pairs_tensors() {
+        let g = vec![
+            Tensor { shape: vec![2], data: vec![3.0, 4.0] },
+            Tensor { shape: vec![1], data: vec![0.0] },
+            Tensor { shape: vec![1], data: vec![2.0] },
+            Tensor { shape: vec![1], data: vec![1.0] },
+        ];
+        let norms = Params::block_sq_norms(&g, 3);
+        assert_eq!(norms, vec![(3, 25.0), (4, 5.0)]);
+    }
+}

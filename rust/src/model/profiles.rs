@@ -1,0 +1,325 @@
+//! Analytic per-layer cost profiles.
+//!
+//! The latency model (Eqns 28–40) and the memory constraint C4 only need
+//! per-layer tables: forward/backward FLOPs (rho_j / varpi_j), activation
+//! bytes at each potential cut (psi_j, chi_j), and parameter bytes
+//! (delta_j). The executable SplitCNN-8 profile comes from the artifact
+//! manifest; VGG-16 and ResNet-18 profiles are exact analytic counts for the
+//! paper's CIFAR-scale architectures and drive the paper-scale simulations
+//! (Figs 5–11) without executing those models.
+
+use super::manifest::Manifest;
+
+/// Cost of one cuttable layer (per data sample where applicable).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerCost {
+    pub name: String,
+    /// Forward FLOPs per sample added by this layer.
+    pub fwd_flops: f64,
+    /// Backward FLOPs per sample added by this layer (~2x forward).
+    pub bwd_flops: f64,
+    /// Activation bytes per sample at this layer's output (psi_j = chi_j;
+    /// activations and their gradients have identical f32 size).
+    pub act_bytes: f64,
+    /// Parameter bytes of this layer.
+    pub param_bytes: f64,
+    pub n_params: usize,
+}
+
+/// A model as seen by the latency/convergence machinery.
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub name: String,
+    pub layers: Vec<LayerCost>,
+    /// Cut layers the system may choose (1-based; cut c => client keeps 1..=c).
+    pub valid_cuts: Vec<usize>,
+    // Precomputed cumulative tables (index 0 => 0.0, index j => sum 1..=j).
+    rho_cum: Vec<f64>,
+    varpi_cum: Vec<f64>,
+    delta_cum: Vec<f64>,
+    psi_cum: Vec<f64>,
+}
+
+impl ModelProfile {
+    pub fn new(name: &str, layers: Vec<LayerCost>, valid_cuts: Vec<usize>) -> Self {
+        let l = layers.len();
+        assert!(!layers.is_empty());
+        for &c in &valid_cuts {
+            assert!(c >= 1 && c < l, "cut {c} out of range 1..{l}");
+        }
+        let mut rho_cum = vec![0.0; l + 1];
+        let mut varpi_cum = vec![0.0; l + 1];
+        let mut delta_cum = vec![0.0; l + 1];
+        let mut psi_cum = vec![0.0; l + 1];
+        for (j, layer) in layers.iter().enumerate() {
+            rho_cum[j + 1] = rho_cum[j] + layer.fwd_flops;
+            varpi_cum[j + 1] = varpi_cum[j] + layer.bwd_flops;
+            delta_cum[j + 1] = delta_cum[j] + layer.param_bytes;
+            psi_cum[j + 1] = psi_cum[j] + layer.act_bytes;
+        }
+        ModelProfile { name: name.into(), layers, valid_cuts, rho_cum, varpi_cum, delta_cum, psi_cum }
+    }
+
+    /// Number of layers L.
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// rho_j — cumulative forward FLOPs per sample of layers 1..=j.
+    pub fn rho(&self, j: usize) -> f64 {
+        self.rho_cum[j]
+    }
+
+    /// rho_L — full forward cost per sample.
+    pub fn rho_total(&self) -> f64 {
+        *self.rho_cum.last().unwrap()
+    }
+
+    /// varpi_j — cumulative backward FLOPs per sample of layers 1..=j.
+    pub fn varpi(&self, j: usize) -> f64 {
+        self.varpi_cum[j]
+    }
+
+    pub fn varpi_total(&self) -> f64 {
+        *self.varpi_cum.last().unwrap()
+    }
+
+    /// psi_j — activation bytes per sample at cut j.
+    pub fn psi(&self, j: usize) -> f64 {
+        assert!(j >= 1);
+        self.layers[j - 1].act_bytes
+    }
+
+    /// chi_j — activation-gradient bytes per sample at cut j (== psi_j, f32).
+    pub fn chi(&self, j: usize) -> f64 {
+        self.psi(j)
+    }
+
+    /// delta_j — client-side sub-model bytes with cut j (cumulative params).
+    pub fn delta(&self, j: usize) -> f64 {
+        self.delta_cum[j]
+    }
+
+    pub fn delta_total(&self) -> f64 {
+        *self.delta_cum.last().unwrap()
+    }
+
+    /// psi~_j — cumulative activation bytes of layers 1..=j (memory C4).
+    pub fn psi_tilde(&self, j: usize) -> f64 {
+        self.psi_cum[j]
+    }
+
+    /// Total parameter count.
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(|l| l.n_params).sum()
+    }
+
+    /// Client-side memory demand of (cut, batch) per constraint C4:
+    /// b*(psi~_j + chi~_j) + theta~_j + delta_j, with SGD optimizer state
+    /// theta~_j = 0.
+    pub fn client_mem_bytes(&self, cut: usize, batch: u32) -> f64 {
+        let b = batch as f64;
+        b * (self.psi_tilde(cut) + self.psi_tilde(cut)) + self.delta(cut)
+    }
+
+    /// Build the SplitCNN-8 profile from the artifact manifest.
+    pub fn from_manifest(m: &Manifest) -> Self {
+        let layers = m
+            .block_table
+            .iter()
+            .map(|r| LayerCost {
+                name: r.name.clone(),
+                fwd_flops: r.fwd_flops,
+                bwd_flops: r.bwd_flops,
+                act_bytes: r.act_bytes,
+                param_bytes: r.param_bytes,
+                n_params: r.n_params,
+            })
+            .collect();
+        ModelProfile::new(&m.model, layers, m.valid_cuts.clone())
+    }
+
+    /// VGG-16 at 32x32 input (CIFAR variant: 13 convs + 3 FCs, 5 maxpools).
+    pub fn vgg16() -> Self {
+        let mut layers = Vec::new();
+        // (cin, cout, spatial_in, pool_after)
+        let convs: [(usize, usize, usize, bool); 13] = [
+            (3, 64, 32, false),
+            (64, 64, 32, true),
+            (64, 128, 16, false),
+            (128, 128, 16, true),
+            (128, 256, 8, false),
+            (256, 256, 8, false),
+            (256, 256, 8, true),
+            (256, 512, 4, false),
+            (512, 512, 4, false),
+            (512, 512, 4, true),
+            (512, 512, 2, false),
+            (512, 512, 2, false),
+            (512, 512, 2, true),
+        ];
+        for (i, &(cin, cout, hw, pool)) in convs.iter().enumerate() {
+            let macs = 9.0 * cin as f64 * cout as f64 * (hw * hw) as f64;
+            let out_hw = if pool { hw / 2 } else { hw };
+            let n = 9 * cin * cout + cout;
+            layers.push(LayerCost {
+                name: format!("conv{}", i + 1),
+                fwd_flops: 2.0 * macs,
+                bwd_flops: 4.0 * macs,
+                act_bytes: 4.0 * (out_hw * out_hw * cout) as f64,
+                param_bytes: 4.0 * n as f64,
+                n_params: n,
+            });
+        }
+        for (i, &(cin, cout)) in [(512usize, 512usize), (512, 512), (512, 10)].iter().enumerate() {
+            let macs = (cin * cout) as f64;
+            let n = cin * cout + cout;
+            layers.push(LayerCost {
+                name: format!("fc{}", i + 1),
+                fwd_flops: 2.0 * macs,
+                bwd_flops: 4.0 * macs,
+                act_bytes: 4.0 * cout as f64,
+                param_bytes: 4.0 * n as f64,
+                n_params: n,
+            });
+        }
+        let l = layers.len();
+        ModelProfile::new("vgg16", layers, (1..l).collect())
+    }
+
+    /// ResNet-18 at 32x32 input (CIFAR variant: 3x3 stem, 8 basic blocks of
+    /// 2 convs each, FC head — 17 convs + 1 FC). Stride-2 blocks fold their
+    /// 1x1 downsample projection into the first conv unit of the block.
+    pub fn resnet18() -> Self {
+        let mut layers = Vec::new();
+        let push_conv = |layers: &mut Vec<LayerCost>,
+                         name: String,
+                         cin: usize,
+                         cout: usize,
+                         hw_out: usize,
+                         extra_macs: f64| {
+            let macs = 9.0 * cin as f64 * cout as f64 * (hw_out * hw_out) as f64 + extra_macs;
+            let n = 9 * cin * cout + cout;
+            layers.push(LayerCost {
+                name,
+                fwd_flops: 2.0 * macs,
+                bwd_flops: 4.0 * macs,
+                act_bytes: 4.0 * (hw_out * hw_out * cout) as f64,
+                param_bytes: 4.0 * n as f64,
+                n_params: n,
+            });
+        };
+        // Stem.
+        push_conv(&mut layers, "conv1".into(), 3, 64, 32, 0.0);
+        // (stage channels, spatial out, first-block-downsamples)
+        let stages: [(usize, usize, bool); 4] =
+            [(64, 32, false), (128, 16, true), (256, 8, true), (512, 4, true)];
+        let mut cin = 64;
+        let mut k = 1;
+        for &(cout, hw, down) in &stages {
+            for blk in 0..2 {
+                let first_down = down && blk == 0;
+                // Downsample 1x1 projection MACs folded into the first conv.
+                let ds_macs = if first_down {
+                    (cin * cout * hw * hw) as f64
+                } else {
+                    0.0
+                };
+                k += 1;
+                push_conv(
+                    &mut layers,
+                    format!("conv{k}"),
+                    if blk == 0 { cin } else { cout },
+                    cout,
+                    hw,
+                    ds_macs,
+                );
+                k += 1;
+                push_conv(&mut layers, format!("conv{k}"), cout, cout, hw, 0.0);
+            }
+            cin = cout;
+        }
+        // Global average pool folded into the FC unit.
+        let (fin, fout) = (512usize, 10usize);
+        let macs = (fin * fout) as f64;
+        let n = fin * fout + fout;
+        layers.push(LayerCost {
+            name: "fc".into(),
+            fwd_flops: 2.0 * macs,
+            bwd_flops: 4.0 * macs,
+            act_bytes: 4.0 * fout as f64,
+            param_bytes: 4.0 * n as f64,
+            n_params: n,
+        });
+        let l = layers.len();
+        ModelProfile::new("resnet18", layers, (1..l).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_has_16_layers_and_plausible_size() {
+        let p = ModelProfile::vgg16();
+        assert_eq!(p.n_layers(), 16);
+        // CIFAR VGG-16 is ~15M params (14.98M with 512-512-10 head).
+        let n = p.n_params();
+        assert!((14_000_000..16_000_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn resnet18_has_18_layers_and_plausible_size() {
+        let p = ModelProfile::resnet18();
+        assert_eq!(p.n_layers(), 18);
+        let n = p.n_params();
+        // CIFAR ResNet-18 is ~11.2M params.
+        assert!((10_500_000..12_000_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn cumulative_tables_are_monotone() {
+        for p in [ModelProfile::vgg16(), ModelProfile::resnet18()] {
+            for j in 1..=p.n_layers() {
+                assert!(p.rho(j) > p.rho(j - 1));
+                assert!(p.varpi(j) > p.varpi(j - 1));
+                assert!(p.delta(j) > p.delta(j - 1));
+                assert!(p.psi_tilde(j) > p.psi_tilde(j - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn shallow_cuts_have_larger_activations_than_deep_cuts() {
+        // The paper's key communication trade-off: early conv layers emit
+        // larger activations than the bottleneck layers.
+        let p = ModelProfile::vgg16();
+        assert!(p.psi(1) > p.psi(13));
+        assert!(p.psi(2) > p.psi(10));
+    }
+
+    #[test]
+    fn bwd_is_twice_fwd() {
+        let p = ModelProfile::vgg16();
+        for j in 1..=p.n_layers() {
+            let l = &p.layers[j - 1];
+            assert!((l.bwd_flops - 2.0 * l.fwd_flops).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn client_mem_grows_with_batch_and_cut() {
+        let p = ModelProfile::vgg16();
+        assert!(p.client_mem_bytes(3, 16) > p.client_mem_bytes(3, 8));
+        assert!(p.client_mem_bytes(5, 16) > p.client_mem_bytes(3, 16));
+    }
+
+    #[test]
+    fn vgg16_full_forward_flops_order_of_magnitude() {
+        // ~0.31 GFLOPs MAC*2 = ~0.63 GFLOPs fwd for CIFAR VGG-16.
+        let p = ModelProfile::vgg16();
+        let f = p.rho_total();
+        assert!((4e8..9e8).contains(&f), "{f}");
+    }
+}

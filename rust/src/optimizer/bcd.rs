@@ -1,0 +1,170 @@
+//! Algorithm 2: the outer block-coordinate descent alternating the BS and
+//! MS sub-problems until the Θ′ objective stabilises.
+
+use super::bs::BsSubproblem;
+use super::{ms, OptContext};
+use crate::latency::Decisions;
+use crate::rng::Pcg32;
+
+/// Result of the joint optimization.
+#[derive(Debug, Clone)]
+pub struct JointSolution {
+    pub decisions: Decisions,
+    /// Final Θ′ value (estimated seconds to epsilon-convergence).
+    pub theta: f64,
+    /// Outer BCD iterations used.
+    pub iterations: usize,
+}
+
+/// Solve the joint BS+MS problem (Algorithm 2).
+///
+/// Alternates: (1) BS sub-problem via Newton–Jacobi + Proposition-1
+/// discretization at the incumbent cuts, (2) MS sub-problem via multi-start
+/// BCD (with a Dinkelbach polish) at the incumbent batches. Terminates when
+/// |Θ′ improvement| <= `tol` (relative) or `max_iters` outer iterations.
+pub fn solve_joint(ctx: &OptContext, rng: &mut Pcg32, max_iters: usize, tol: f64) -> JointSolution {
+    let n = ctx.n();
+    // Initial point: the best *uniform* (b, cut) grid point. Cheap
+    // (|buckets| x L objective evaluations) and guarantees HASFL never
+    // loses to a uniform configuration — the alternation only improves
+    // from here.
+    let mut dec = Decisions {
+        batch: vec![16.min(ctx.batch_cap); n],
+        cut: vec![ctx.profile.valid_cuts[0]; n],
+    };
+    let mut theta = ctx.objective(&dec).unwrap_or(f64::INFINITY);
+    let mut b = 1u32;
+    while b <= ctx.batch_cap {
+        for &c in &ctx.profile.valid_cuts {
+            let trial = Decisions::uniform(n, b, c);
+            if let Some(v) = ctx.objective(&trial) {
+                if v < theta {
+                    theta = v;
+                    dec = trial;
+                }
+            }
+        }
+        b *= 2;
+    }
+    let mut iterations = 0;
+
+    for it in 0..max_iters {
+        iterations = it + 1;
+
+        // --- BS sub-problem (P1) at incumbent cuts ----------------------
+        let sp = BsSubproblem::from_context(ctx, &dec);
+        let batch = sp.solve();
+        let trial = Decisions { batch: batch.clone(), cut: dec.cut.clone() };
+        if let Some(v) = ctx.objective(&trial) {
+            if v < theta {
+                dec = trial;
+                theta = v;
+            }
+        }
+
+        // --- MS sub-problem (P2) at incumbent batches -------------------
+        let cuts = ms::solve_bcd(ctx, &dec.batch, rng, 4);
+        let trial = Decisions { batch: dec.batch.clone(), cut: cuts };
+        let mut improved = false;
+        if let Some(v) = ctx.objective(&trial) {
+            if v < theta {
+                dec = trial;
+                theta = v;
+                improved = true;
+            }
+        }
+        // Dinkelbach polish on the MS block.
+        let cuts = ms::solve_dinkelbach(ctx, &dec.batch, rng);
+        let trial = Decisions { batch: dec.batch.clone(), cut: cuts };
+        if let Some(v) = ctx.objective(&trial) {
+            if v < theta * (1.0 - 1e-12) {
+                dec = trial;
+                theta = v;
+                improved = true;
+            }
+        }
+
+        // Convergence check on the outer loop.
+        if !improved && it > 0 {
+            break;
+        }
+        let prev = theta;
+        if it > 0 && (prev - theta).abs() <= tol * prev.abs().max(1e-12) && !improved {
+            break;
+        }
+    }
+
+    JointSolution { decisions: dec, theta, iterations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::testutil::Fixture;
+
+    #[test]
+    fn joint_solution_is_feasible_and_finite() {
+        let fx = Fixture::table1(8);
+        let ctx = fx.ctx();
+        let mut rng = Pcg32::seeded(11);
+        let sol = solve_joint(&ctx, &mut rng, 8, 1e-6);
+        assert!(sol.theta.is_finite());
+        assert_eq!(sol.decisions.n(), 8);
+        assert!(ctx.objective(&sol.decisions).is_some());
+        for &b in &sol.decisions.batch {
+            assert!((1..=ctx.batch_cap).contains(&b));
+        }
+    }
+
+    #[test]
+    fn joint_beats_uniform_baselines() {
+        let fx = Fixture::table1(10);
+        let ctx = fx.ctx();
+        let mut rng = Pcg32::seeded(3);
+        let sol = solve_joint(&ctx, &mut rng, 8, 1e-6);
+        // HASFL must beat every uniform (b, cut) grid point — this is the
+        // paper's core claim in miniature.
+        for b in [4u32, 16, 64] {
+            for &c in &[2usize, 6, 10] {
+                let dec = Decisions::uniform(10, b, c);
+                if let Some(v) = ctx.objective(&dec) {
+                    assert!(
+                        sol.theta <= v * 1.0001,
+                        "uniform b={b} cut={c} ({v}) beats HASFL ({})",
+                        sol.theta
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stragglers_get_smaller_batches() {
+        // Insight 1: a weaker client takes a smaller batch.
+        let mut fx = Fixture::table1(6);
+        fx.devices[0].flops = 1e11; // 10-20x weaker than the rest
+        fx.devices[0].up_bps = 10e6; // and a much slower uplink
+        let ctx = fx.ctx();
+        let mut rng = Pcg32::seeded(9);
+        let sol = solve_joint(&ctx, &mut rng, 8, 1e-6);
+        let b0 = sol.decisions.batch[0];
+        let others: f64 = sol.decisions.batch[1..]
+            .iter()
+            .map(|&b| b as f64)
+            .sum::<f64>()
+            / 5.0;
+        assert!(
+            (b0 as f64) <= others,
+            "straggler batch {b0} > mean of others {others}"
+        );
+    }
+
+    #[test]
+    fn terminates_within_max_iters() {
+        let fx = Fixture::table1(5);
+        let ctx = fx.ctx();
+        let mut rng = Pcg32::seeded(2);
+        let sol = solve_joint(&ctx, &mut rng, 5, 1e-9);
+        assert!(sol.iterations <= 5);
+    }
+}

@@ -1,0 +1,135 @@
+//! Joint batch-size (BS) + model-splitting (MS) optimization — §V–VI of the
+//! paper: problem P (Eqn 41) → P′ (Eqn 42) → P″ (Eqn 44), decomposed into
+//! the BS sub-problem P1 (Newton–Jacobi + Proposition 1) and the MS
+//! sub-problem P2 (Dinkelbach / BCD), alternated by the block-coordinate
+//! descent of Algorithm 2.
+
+pub mod bcd;
+pub mod bs;
+pub mod ms;
+pub mod strategies;
+
+pub use bcd::solve_joint;
+pub use strategies::{decide, StrategyInputs};
+
+use crate::config::{Device, Server};
+use crate::convergence::{memory_feasible, theta_objective, BoundParams};
+use crate::latency::Decisions;
+use crate::model::ModelProfile;
+
+/// Everything the optimizers need to evaluate the Θ′ objective exactly.
+pub struct OptContext<'a> {
+    pub profile: &'a ModelProfile,
+    pub devices: &'a [Device],
+    pub server: &'a Server,
+    pub bound: &'a BoundParams,
+    /// Client-side aggregation interval I.
+    pub interval: usize,
+    /// Target convergence accuracy epsilon (constraint C1).
+    pub epsilon: f64,
+    /// Maximum batch size B (constraint C5's practical cap).
+    pub batch_cap: u32,
+}
+
+impl<'a> OptContext<'a> {
+    pub fn n(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Exact Θ(b, μ) objective (Eqn 43): estimated wall-clock time to
+    /// epsilon-convergence. `None` = infeasible (convergence constraint C1
+    /// unreachable or memory constraint C4 violated).
+    pub fn objective(&self, dec: &Decisions) -> Option<f64> {
+        if !memory_feasible(self.profile, self.devices, dec) {
+            return None;
+        }
+        if dec.batch.iter().any(|&b| b == 0 || b > self.batch_cap) {
+            return None;
+        }
+        theta_objective(
+            self.profile,
+            self.devices,
+            self.server,
+            self.bound,
+            dec,
+            self.interval,
+            self.epsilon,
+        )
+    }
+
+    /// Relaxed comparison metric (see
+    /// [`crate::convergence::time_to_own_convergence`]): finite for any
+    /// memory-feasible decision; equals [`Self::objective`] whenever the
+    /// target epsilon is achievable.
+    pub fn eval_time(&self, dec: &Decisions) -> Option<f64> {
+        if dec.batch.iter().any(|&b| b == 0 || b > self.batch_cap) {
+            return None;
+        }
+        crate::convergence::time_to_own_convergence(
+            self.profile,
+            self.devices,
+            self.server,
+            self.bound,
+            dec,
+            self.interval,
+            self.epsilon,
+        )
+    }
+
+    /// Cuts that satisfy memory constraint C4 for device `i` at batch `b`.
+    pub fn feasible_cuts(&self, i: usize, b: u32) -> Vec<usize> {
+        self.profile
+            .valid_cuts
+            .iter()
+            .copied()
+            .filter(|&c| self.profile.client_mem_bytes(c, b) < self.devices[i].mem_bytes)
+            .collect()
+    }
+
+    /// Largest memory-feasible batch for device `i` at cut `c` (>= 1).
+    pub fn max_feasible_batch(&self, i: usize, c: usize) -> u32 {
+        let mut b = self.batch_cap;
+        while b > 1 && self.profile.client_mem_bytes(c, b) >= self.devices[i].mem_bytes {
+            b -= 1;
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::config::Config;
+
+    pub struct Fixture {
+        pub profile: ModelProfile,
+        pub devices: Vec<Device>,
+        pub server: Server,
+        pub bound: BoundParams,
+        pub cfg: Config,
+    }
+
+    impl Fixture {
+        pub fn table1(n_devices: usize) -> Fixture {
+            let mut cfg = Config::table1();
+            cfg.fleet.n_devices = n_devices;
+            let profile = ModelProfile::vgg16();
+            let bound = BoundParams::default_for(&profile, cfg.train.lr);
+            let devices = cfg.sample_fleet();
+            let server = cfg.server.clone();
+            Fixture { profile, devices, server, bound, cfg }
+        }
+
+        pub fn ctx(&self) -> OptContext<'_> {
+            OptContext {
+                profile: &self.profile,
+                devices: &self.devices,
+                server: &self.server,
+                bound: &self.bound,
+                interval: self.cfg.train.agg_interval,
+                epsilon: self.cfg.train.epsilon,
+                batch_cap: self.cfg.train.batch_cap,
+            }
+        }
+    }
+}

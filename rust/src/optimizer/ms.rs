@@ -1,0 +1,322 @@
+//! The MS sub-problem P2 (Eqn 53): choose per-device cut layers μ given
+//! fixed batch sizes.
+//!
+//! The paper solves P2 as a mixed-integer linear fractional program with the
+//! Dinkelbach algorithm. We provide three solvers over the *exact* Θ′
+//! objective (latency model + convergence bound evaluated directly, which
+//! subsumes the auxiliary T variables — they are tight at the optimum):
+//!
+//! - [`solve_exhaustive`]: full L^N enumeration, exact; used for small N and
+//!   as the test oracle that certifies the other two.
+//! - [`solve_bcd`]: multi-start block-coordinate descent over devices; each
+//!   device picks the argmin cut given the others. Scales to N=20+.
+//! - [`solve_dinkelbach`]: the paper's parametric-fractional iteration with
+//!   a BCD inner solver on F(q) = min_μ [Num(μ) − q·Den(μ)].
+
+use super::OptContext;
+use crate::latency::{round_latency, Decisions};
+use crate::rng::Pcg32;
+
+/// Exact exhaustive enumeration over all cut assignments (L^N). Panics if
+/// the search space exceeds `max_space` to protect callers.
+pub fn solve_exhaustive(ctx: &OptContext, batch: &[u32], max_space: u64) -> Option<Vec<usize>> {
+    let n = ctx.n();
+    let cuts = &ctx.profile.valid_cuts;
+    let space = (cuts.len() as u64).checked_pow(n as u32)?;
+    assert!(space <= max_space, "exhaustive MS space {space} > {max_space}");
+
+    let mut idx = vec![0usize; n];
+    let mut best: Option<(f64, Vec<usize>)> = None;
+    loop {
+        let assignment: Vec<usize> = idx.iter().map(|&k| cuts[k]).collect();
+        let dec = Decisions { batch: batch.to_vec(), cut: assignment.clone() };
+        if let Some(v) = ctx.objective(&dec) {
+            if best.as_ref().map_or(true, |(bv, _)| v < *bv) {
+                best = Some((v, assignment));
+            }
+        }
+        let mut carry = true;
+        for slot in idx.iter_mut() {
+            if carry {
+                *slot += 1;
+                if *slot == cuts.len() {
+                    *slot = 0;
+                } else {
+                    carry = false;
+                }
+            }
+        }
+        if carry {
+            break;
+        }
+    }
+    best.map(|(_, a)| a)
+}
+
+/// One BCD pass: every device greedily re-picks its cut. Returns whether
+/// anything changed.
+fn bcd_sweep(ctx: &OptContext, batch: &[u32], cut: &mut Vec<usize>) -> bool {
+    let mut changed = false;
+    for i in 0..ctx.n() {
+        let mut best_cut = cut[i];
+        let mut best_val = {
+            let dec = Decisions { batch: batch.to_vec(), cut: cut.clone() };
+            ctx.objective(&dec).unwrap_or(f64::INFINITY)
+        };
+        for &c in &ctx.profile.valid_cuts {
+            if c == cut[i] {
+                continue;
+            }
+            let mut trial = cut.clone();
+            trial[i] = c;
+            let dec = Decisions { batch: batch.to_vec(), cut: trial };
+            if let Some(v) = ctx.objective(&dec) {
+                if v < best_val {
+                    best_val = v;
+                    best_cut = c;
+                }
+            }
+        }
+        if best_cut != cut[i] {
+            cut[i] = best_cut;
+            changed = true;
+        }
+    }
+    changed
+}
+
+/// Multi-start BCD over the exact objective.
+///
+/// The objective couples devices through phase *maxima* (T3/T4 in P″) and
+/// through L_c = max_i c_i, so single-device moves from a uniform
+/// assignment often sit on a plateau (changing one device does not move
+/// the max). Multi-start handles this: every *uniform* cut assignment is
+/// used as a start (coordinated moves come for free), plus a
+/// latency-greedy start and `n_starts` random restarts.
+pub fn solve_bcd(
+    ctx: &OptContext,
+    batch: &[u32],
+    rng: &mut Pcg32,
+    n_starts: usize,
+) -> Vec<usize> {
+    let n = ctx.n();
+    let cuts = &ctx.profile.valid_cuts;
+    let mut global_best: Option<(f64, Vec<usize>)> = None;
+
+    let mut starts: Vec<Vec<usize>> = cuts.iter().map(|&c| vec![c; n]).collect();
+    starts.push((0..n).map(|i| greedy_latency_cut(ctx, i, batch[i])).collect());
+    for _ in 0..n_starts {
+        starts.push(
+            (0..n)
+                .map(|_| cuts[rng.below(cuts.len() as u32) as usize])
+                .collect(),
+        );
+    }
+
+    for mut cut in starts {
+        for _ in 0..64 {
+            if !bcd_sweep(ctx, batch, &mut cut) {
+                break;
+            }
+        }
+        let dec = Decisions { batch: batch.to_vec(), cut: cut.clone() };
+        if let Some(v) = ctx.objective(&dec) {
+            if global_best.as_ref().map_or(true, |(bv, _)| v < *bv) {
+                global_best = Some((v, cut));
+            }
+        }
+    }
+    global_best
+        .map(|(_, c)| c)
+        .unwrap_or_else(|| vec![ctx.profile.valid_cuts[0]; n])
+}
+
+/// Per-device latency-greedy cut (ignores convergence): minimizes
+/// b_i(rho_c/f_i + 8psi_c/r_up + 8chi_c/r_down + varpi_c/f_i). This is also
+/// the RBS+RHAMS benchmark's MS rule [55].
+pub fn greedy_latency_cut(ctx: &OptContext, i: usize, b: u32) -> usize {
+    let p = ctx.profile;
+    let d = &ctx.devices[i];
+    let feasible = ctx.feasible_cuts(i, b);
+    let candidates = if feasible.is_empty() { p.valid_cuts.clone() } else { feasible };
+    *candidates
+        .iter()
+        .min_by(|&&c1, &&c2| {
+            let cost = |c: usize| {
+                b as f64
+                    * (p.rho(c) / d.flops
+                        + 8.0 * p.psi(c) / d.up_bps
+                        + 8.0 * p.chi(c) / d.down_bps
+                        + p.varpi(c) / d.flops)
+            };
+            cost(c1).partial_cmp(&cost(c2)).unwrap()
+        })
+        .unwrap()
+}
+
+/// Numerator of the fractional objective: 2ϑ (T_S + T_A/I).
+fn numerator(ctx: &OptContext, dec: &Decisions) -> f64 {
+    let lat = round_latency(ctx.profile, ctx.devices, ctx.server, dec);
+    2.0 * ctx.bound.theta0 * (lat.t_split + lat.t_agg / ctx.interval.max(1) as f64)
+}
+
+/// Denominator: γ (ε − variance − drift). May be <= 0 (infeasible μ).
+fn denominator(ctx: &OptContext, dec: &Decisions) -> f64 {
+    ctx.bound.gamma
+        * (ctx.epsilon
+            - crate::convergence::variance_term(ctx.bound, &dec.batch)
+            - crate::convergence::drift_term(ctx.bound, dec.l_c(), ctx.interval))
+}
+
+/// Dinkelbach iteration: q_{k+1} = Num(μ_k)/Den(μ_k) where μ_k minimizes the
+/// parametric objective Num(μ) − q_k Den(μ) (inner solve: BCD). Converges
+/// when F(q) = min Num − q Den ≈ 0.
+pub fn solve_dinkelbach(ctx: &OptContext, batch: &[u32], rng: &mut Pcg32) -> Vec<usize> {
+    let n = ctx.n();
+    let cuts = &ctx.profile.valid_cuts;
+
+    let parametric = |dec: &Decisions, q: f64| -> f64 {
+        let den = denominator(ctx, dec);
+        if den <= 0.0 || !crate::convergence::memory_feasible(ctx.profile, ctx.devices, dec) {
+            return f64::INFINITY;
+        }
+        numerator(ctx, dec) - q * den
+    };
+
+    // Initial assignment: warm-start from a cheap BCD solve (the Dinkelbach
+    // iteration then certifies/raises it on the fractional structure).
+    let mut cut: Vec<usize> = solve_bcd(ctx, batch, rng, 2);
+    let init = Decisions { batch: batch.to_vec(), cut: cut.clone() };
+    let mut q = match ctx.objective(&init) {
+        Some(v) => v,
+        None => return cut,
+    };
+
+    for _ in 0..32 {
+        // Inner BCD on the parametric objective.
+        let mut changed = true;
+        let mut guard = 0;
+        while changed && guard < 64 {
+            changed = false;
+            guard += 1;
+            for i in 0..n {
+                let mut best_c = cut[i];
+                let mut best_v = parametric(
+                    &Decisions { batch: batch.to_vec(), cut: cut.clone() },
+                    q,
+                );
+                for &c in cuts {
+                    if c == cut[i] {
+                        continue;
+                    }
+                    let mut trial = cut.clone();
+                    trial[i] = c;
+                    let v = parametric(&Decisions { batch: batch.to_vec(), cut: trial }, q);
+                    if v < best_v {
+                        best_v = v;
+                        best_c = c;
+                    }
+                }
+                if best_c != cut[i] {
+                    cut[i] = best_c;
+                    changed = true;
+                }
+            }
+        }
+        let dec = Decisions { batch: batch.to_vec(), cut: cut.clone() };
+        let num = numerator(ctx, &dec);
+        let den = denominator(ctx, &dec);
+        if den <= 0.0 {
+            break;
+        }
+        let f_q = num - q * den;
+        let q_next = num / den;
+        if f_q.abs() < 1e-9 * num.abs().max(1.0) || (q_next - q).abs() < 1e-9 * q.abs() {
+            q = q_next;
+            break;
+        }
+        q = q_next;
+    }
+    let _ = q;
+    cut
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::testutil::Fixture;
+
+    #[test]
+    fn bcd_matches_exhaustive_on_small_instances() {
+        for seed in [1u64, 7, 23] {
+            let mut fx = Fixture::table1(3);
+            fx.cfg.seed = seed;
+            fx.devices = fx.cfg.sample_fleet();
+            let ctx = fx.ctx();
+            let batch = vec![16u32; 3];
+            let oracle = solve_exhaustive(&ctx, &batch, 100_000).unwrap();
+            let mut rng = Pcg32::seeded(seed);
+            let bcd = solve_bcd(&ctx, &batch, &mut rng, 6);
+            let vo = ctx
+                .objective(&Decisions { batch: batch.clone(), cut: oracle.clone() })
+                .unwrap();
+            let vb = ctx
+                .objective(&Decisions { batch: batch.clone(), cut: bcd.clone() })
+                .unwrap();
+            assert!(vb <= vo * 1.001, "seed {seed}: bcd {vb} oracle {vo}");
+        }
+    }
+
+    #[test]
+    fn dinkelbach_matches_exhaustive_on_small_instances() {
+        let fx = Fixture::table1(3);
+        let ctx = fx.ctx();
+        let batch = vec![16u32; 3];
+        let oracle = solve_exhaustive(&ctx, &batch, 100_000).unwrap();
+        let mut rng = Pcg32::seeded(5);
+        let dk = solve_dinkelbach(&ctx, &batch, &mut rng);
+        let vo = ctx
+            .objective(&Decisions { batch: batch.clone(), cut: oracle })
+            .unwrap();
+        let vd = ctx
+            .objective(&Decisions { batch: batch.clone(), cut: dk })
+            .unwrap();
+        assert!(vd <= vo * 1.02, "dinkelbach {vd} oracle {vo}");
+    }
+
+    #[test]
+    fn solved_cuts_prefer_shallow_on_slow_devices() {
+        // A very weak device should not be assigned a deep cut: its client
+        // compute would dominate the straggler max.
+        let mut fx = Fixture::table1(4);
+        fx.devices[2].flops = 1e10; // 100x weaker
+        let ctx = fx.ctx();
+        let batch = vec![16u32; 4];
+        let mut rng = Pcg32::seeded(3);
+        let cuts = solve_bcd(&ctx, &batch, &mut rng, 6);
+        assert!(
+            cuts[2] <= *cuts.iter().max().unwrap(),
+            "weak device got the deepest cut: {cuts:?}"
+        );
+    }
+
+    #[test]
+    fn greedy_latency_cut_is_feasible() {
+        let fx = Fixture::table1(4);
+        let ctx = fx.ctx();
+        for i in 0..4 {
+            let c = greedy_latency_cut(&ctx, i, 16);
+            assert!(ctx.profile.valid_cuts.contains(&c));
+        }
+    }
+
+    #[test]
+    fn exhaustive_none_when_all_infeasible() {
+        let mut fx = Fixture::table1(2);
+        for d in fx.devices.iter_mut() {
+            d.mem_bytes = 1.0; // nothing fits
+        }
+        let ctx = fx.ctx();
+        assert!(solve_exhaustive(&ctx, &[16, 16], 10_000).is_none());
+    }
+}

@@ -1,0 +1,244 @@
+//! The five BS/MS control strategies evaluated in §VII: HASFL plus the four
+//! benchmarks (RBS+HAMS, HABS+RMS, RBS+RMS, RBS+RHAMS) and the fixed
+//! ablation baselines of Figs 10–11.
+
+use super::bs::BsSubproblem;
+use super::{bcd, ms, OptContext};
+use crate::config::StrategyKind;
+use crate::latency::Decisions;
+use crate::rng::Pcg32;
+
+/// Extra inputs for strategies with fixed decisions.
+#[derive(Debug, Clone, Copy)]
+pub struct StrategyInputs {
+    pub fixed_batch: u32,
+    pub fixed_cut: usize,
+}
+
+impl Default for StrategyInputs {
+    fn default() -> Self {
+        StrategyInputs { fixed_batch: 16, fixed_cut: 4 }
+    }
+}
+
+fn random_batches(ctx: &OptContext, rng: &mut Pcg32) -> Vec<u32> {
+    // Paper: "randomly drawing BS from 1 to 64 during model training".
+    (0..ctx.n())
+        .map(|_| rng.int_range(1, ctx.batch_cap))
+        .collect()
+}
+
+/// Rejection-sample a random decision into the *realisable* region
+/// (memory constraint C4 + batch cap). Convergence constraint C1 is NOT
+/// enforced here: the paper's random baselines do run with convergence-
+/// hostile decisions — they simply converge slower / to worse accuracy,
+/// which the relaxed `eval_time` metric prices in. Falls back to a safe
+/// uniform/greedy configuration if `tries` redraws all fail.
+fn feasible_random<F>(ctx: &OptContext, rng: &mut Pcg32, tries: usize, mut draw: F) -> Decisions
+where
+    F: FnMut(&mut Pcg32) -> Decisions,
+{
+    for _ in 0..tries {
+        let mut dec = draw(rng);
+        clamp_feasible(ctx, &mut dec.batch, &dec.cut);
+        if ctx.eval_time(&dec).is_some() {
+            return dec;
+        }
+    }
+    // Safe fallback: moderate uniform batch + per-device greedy cuts.
+    let batch: Vec<u32> = (0..ctx.n()).map(|_| 16.min(ctx.batch_cap)).collect();
+    let cut: Vec<usize> = (0..ctx.n())
+        .map(|i| ms::greedy_latency_cut(ctx, i, batch[i]))
+        .collect();
+    let mut batch = batch;
+    clamp_feasible(ctx, &mut batch, &cut);
+    Decisions { batch, cut }
+}
+
+fn random_cuts(ctx: &OptContext, rng: &mut Pcg32, batch: &[u32]) -> Vec<usize> {
+    (0..ctx.n())
+        .map(|i| {
+            let feas = ctx.feasible_cuts(i, batch[i]);
+            let pool = if feas.is_empty() { ctx.profile.valid_cuts.clone() } else { feas };
+            pool[rng.below(pool.len() as u32) as usize]
+        })
+        .collect()
+}
+
+/// Clamp batches so the (batch, cut) pair is memory-feasible.
+fn clamp_feasible(ctx: &OptContext, batch: &mut [u32], cuts: &[usize]) {
+    for i in 0..ctx.n() {
+        let cap = ctx.max_feasible_batch(i, cuts[i]);
+        if batch[i] > cap {
+            batch[i] = cap;
+        }
+    }
+}
+
+/// Produce this round-window's decisions under the given strategy.
+pub fn decide(
+    kind: StrategyKind,
+    ctx: &OptContext,
+    rng: &mut Pcg32,
+    inputs: StrategyInputs,
+) -> Decisions {
+    match kind {
+        StrategyKind::Hasfl => bcd::solve_joint(ctx, rng, 8, 1e-6).decisions,
+
+        StrategyKind::RbsHams => feasible_random(ctx, rng, 40, |r| {
+            let batch = random_batches(ctx, r);
+            let cut = ms::solve_bcd(ctx, &batch, r, 2);
+            Decisions { batch, cut }
+        }),
+
+        StrategyKind::HabsRms => feasible_random(ctx, rng, 40, |r| {
+            // Random cuts first, then the heterogeneity-aware BS solver.
+            let probe = vec![inputs.fixed_batch.min(ctx.batch_cap); ctx.n()];
+            let cut = random_cuts(ctx, r, &probe);
+            let incumbent = Decisions { batch: probe, cut: cut.clone() };
+            let sp = BsSubproblem::from_context(ctx, &incumbent);
+            Decisions { batch: sp.solve(), cut }
+        }),
+
+        StrategyKind::RbsRms => feasible_random(ctx, rng, 40, |r| {
+            let batch = random_batches(ctx, r);
+            let cut = random_cuts(ctx, r, &batch);
+            Decisions { batch, cut }
+        }),
+
+        StrategyKind::RbsRhams => feasible_random(ctx, rng, 40, |r| {
+            // Random BS + resource-heterogeneity-aware MS heuristic [55]:
+            // per-device latency-greedy cut, no convergence modelling.
+            let batch = random_batches(ctx, r);
+            let cut: Vec<usize> = (0..ctx.n())
+                .map(|i| ms::greedy_latency_cut(ctx, i, batch[i]))
+                .collect();
+            Decisions { batch, cut }
+        }),
+
+        StrategyKind::Fixed => {
+            let n = ctx.n();
+            let cut = vec![inputs.fixed_cut; n];
+            let mut batch = vec![inputs.fixed_batch; n];
+            clamp_feasible(ctx, &mut batch, &cut);
+            Decisions { batch, cut }
+        }
+
+        StrategyKind::HabsFixedCut => {
+            // Fig 10 ablation arm: BS solver at a fixed uniform cut.
+            let n = ctx.n();
+            let cut = vec![inputs.fixed_cut; n];
+            let incumbent = Decisions {
+                batch: vec![inputs.fixed_batch.min(ctx.batch_cap); n],
+                cut: cut.clone(),
+            };
+            let sp = BsSubproblem::from_context(ctx, &incumbent);
+            let mut batch = sp.solve();
+            clamp_feasible(ctx, &mut batch, &cut);
+            Decisions { batch, cut }
+        }
+
+        StrategyKind::HamsFixedBatch => {
+            // Fig 11 ablation arm: MS solver at a fixed uniform batch.
+            let n = ctx.n();
+            let batch = vec![inputs.fixed_batch.min(ctx.batch_cap); n];
+            let cut = ms::solve_bcd(ctx, &batch, rng, 4);
+            let mut batch = batch;
+            clamp_feasible(ctx, &mut batch, &cut);
+            Decisions { batch, cut }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::testutil::Fixture;
+
+    fn all_kinds() -> Vec<StrategyKind> {
+        vec![
+            StrategyKind::Hasfl,
+            StrategyKind::RbsHams,
+            StrategyKind::HabsRms,
+            StrategyKind::RbsRms,
+            StrategyKind::RbsRhams,
+            StrategyKind::Fixed,
+        ]
+    }
+
+    #[test]
+    fn every_strategy_yields_valid_decisions() {
+        let fx = Fixture::table1(6);
+        let ctx = fx.ctx();
+        for kind in all_kinds() {
+            let mut rng = Pcg32::seeded(17);
+            let dec = decide(kind, &ctx, &mut rng, StrategyInputs::default());
+            assert_eq!(dec.n(), 6, "{kind:?}");
+            for (i, (&b, &c)) in dec.batch.iter().zip(&dec.cut).enumerate() {
+                assert!(b >= 1 && b <= ctx.batch_cap, "{kind:?} dev {i} b={b}");
+                assert!(ctx.profile.valid_cuts.contains(&c), "{kind:?} dev {i} c={c}");
+            }
+            assert!(
+                crate::convergence::memory_feasible(ctx.profile, ctx.devices, &dec),
+                "{kind:?} violates C4"
+            );
+        }
+    }
+
+    #[test]
+    fn hasfl_objective_dominates_benchmarks() {
+        let fx = Fixture::table1(8);
+        let ctx = fx.ctx();
+        let mut rng = Pcg32::seeded(23);
+        let hasfl = decide(StrategyKind::Hasfl, &ctx, &mut rng, StrategyInputs::default());
+        let hasfl_theta = ctx.eval_time(&hasfl).unwrap();
+        // Average benchmark eval-time over several random draws (random
+        // strategies are noisy; HASFL should beat their expectation). The
+        // relaxed metric charges infeasible-for-target decisions the time
+        // to their own plateau, mirroring the paper's measurements.
+        for kind in [StrategyKind::RbsRms, StrategyKind::RbsRhams, StrategyKind::HabsRms] {
+            let mut sum = 0.0;
+            let mut cnt = 0;
+            for seed in 0..5u64 {
+                let mut r = Pcg32::seeded(100 + seed);
+                let d = decide(kind, &ctx, &mut r, StrategyInputs::default());
+                if let Some(v) = ctx.eval_time(&d) {
+                    sum += v;
+                    cnt += 1;
+                }
+            }
+            assert!(cnt > 0, "{kind:?} always memory-infeasible");
+            let avg = sum / cnt as f64;
+            assert!(
+                hasfl_theta <= avg,
+                "{kind:?} avg {avg} beats HASFL {hasfl_theta}"
+            );
+        }
+    }
+
+    #[test]
+    fn fixed_strategy_honours_inputs() {
+        let fx = Fixture::table1(4);
+        let ctx = fx.ctx();
+        let mut rng = Pcg32::seeded(1);
+        let dec = decide(
+            StrategyKind::Fixed,
+            &ctx,
+            &mut rng,
+            StrategyInputs { fixed_batch: 8, fixed_cut: 5 },
+        );
+        assert_eq!(dec.batch, vec![8; 4]);
+        assert_eq!(dec.cut, vec![5; 4]);
+    }
+
+    #[test]
+    fn random_strategies_are_deterministic_per_seed() {
+        let fx = Fixture::table1(5);
+        let ctx = fx.ctx();
+        let mut r1 = Pcg32::seeded(42);
+        let mut r2 = Pcg32::seeded(42);
+        let d1 = decide(StrategyKind::RbsRms, &ctx, &mut r1, StrategyInputs::default());
+        let d2 = decide(StrategyKind::RbsRms, &ctx, &mut r2, StrategyInputs::default());
+        assert_eq!(d1, d2);
+    }
+}

@@ -1,0 +1,174 @@
+//! The single-threaded PJRT engine: compile-on-first-use executable cache
+//! over the AOT artifacts (pattern adapted from /opt/xla-example/load_hlo).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::model::Manifest;
+
+/// A host-side tensor (f32, row-major) crossing the engine boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn scalar(v: f32) -> HostTensor {
+        HostTensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Execution statistics for the §Perf pass.
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    pub executions: u64,
+    pub compiles: u64,
+    /// Seconds spent inside PJRT execute calls.
+    pub exec_secs: f64,
+    /// Seconds spent compiling artifacts.
+    pub compile_secs: f64,
+    /// Seconds spent packing/unpacking literals.
+    pub marshal_secs: f64,
+}
+
+/// PJRT CPU engine with an executable cache. Lives on one thread.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    stats: EngineStats,
+}
+
+impl Engine {
+    /// Create an engine over an artifacts directory (loads manifest.json).
+    pub fn load(artifacts_dir: &std::path::Path) -> crate::Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Engine { client, manifest, cache: HashMap::new(), stats: EngineStats::default() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+
+    /// Ensure an artifact is compiled; returns whether it was a cache miss.
+    pub fn warm(&mut self, name: &str) -> crate::Result<bool> {
+        if self.cache.contains_key(name) {
+            return Ok(false);
+        }
+        let path = self
+            .manifest
+            .artifact_path(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {name}"))?;
+        let t0 = Instant::now();
+        // HLO text interchange: jax >= 0.5 emits 64-bit-id protos that
+        // xla_extension 0.5.1 rejects; the text parser reassigns ids.
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parse {name}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        self.stats.compiles += 1;
+        self.stats.compile_secs += t0.elapsed().as_secs_f64();
+        self.cache.insert(name.to_string(), exe);
+        Ok(true)
+    }
+
+    /// Execute an artifact with the given inputs; returns all outputs.
+    ///
+    /// Inputs must match the manifest's arg specs (checked). Outputs are the
+    /// decomposed elements of the return tuple, in manifest order.
+    pub fn execute(&mut self, name: &str, inputs: &[HostTensor]) -> crate::Result<Vec<HostTensor>> {
+        self.warm(name)?;
+        let entry = self.manifest.get(name).expect("warmed artifact exists");
+        if inputs.len() != entry.args.len() {
+            anyhow::bail!(
+                "{name}: {} inputs given, {} expected",
+                inputs.len(),
+                entry.args.len()
+            );
+        }
+        for (inp, spec) in inputs.iter().zip(&entry.args) {
+            if inp.shape != spec.shape {
+                anyhow::bail!(
+                    "{name}: arg {} shape {:?} != spec {:?}",
+                    spec.name,
+                    inp.shape,
+                    spec.shape
+                );
+            }
+            if inp.data.len() != spec.numel() {
+                anyhow::bail!("{name}: arg {} data len mismatch", spec.name);
+            }
+        }
+
+        let t0 = Instant::now();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    &t.shape,
+                    bytes,
+                )
+                .map_err(|e| anyhow::anyhow!("literal {name}: {e:?}"))
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        self.stats.marshal_secs += t0.elapsed().as_secs_f64();
+
+        let exe = self.cache.get(name).expect("warmed");
+        let t1 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
+        self.stats.executions += 1;
+        self.stats.exec_secs += t1.elapsed().as_secs_f64();
+
+        let t2 = Instant::now();
+        // aot.py lowers with return_tuple=True: root is always a tuple.
+        let parts = root
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))?;
+        let entry = self.manifest.get(name).expect("exists");
+        if parts.len() != entry.outputs.len() {
+            anyhow::bail!(
+                "{name}: {} outputs, {} expected",
+                parts.len(),
+                entry.outputs.len()
+            );
+        }
+        let outputs = parts
+            .into_iter()
+            .zip(&entry.outputs)
+            .map(|(lit, spec)| {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("read {name}/{}: {e:?}", spec.name))?;
+                Ok(HostTensor { shape: spec.shape.clone(), data })
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        self.stats.marshal_secs += t2.elapsed().as_secs_f64();
+        Ok(outputs)
+    }
+
+    pub fn cached_len(&self) -> usize {
+        self.cache.len()
+    }
+}

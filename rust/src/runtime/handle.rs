@@ -1,0 +1,107 @@
+//! Thread-safe handle to a dedicated engine thread.
+//!
+//! PJRT wrapper types hold raw pointers and are not `Send`, so the engine
+//! lives on its own OS thread; coordinator actors (device threads) talk to
+//! it through an mpsc request channel with per-request reply channels. On a
+//! CPU PJRT client compute is serialized anyway, so a single engine thread
+//! is not a bottleneck (measured in rust/benches/runtime_hotpath.rs).
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+
+use super::engine::{Engine, EngineStats, HostTensor};
+
+enum Request {
+    Execute {
+        name: String,
+        inputs: Vec<HostTensor>,
+        resp: mpsc::Sender<crate::Result<Vec<HostTensor>>>,
+    },
+    Warm {
+        name: String,
+        resp: mpsc::Sender<crate::Result<bool>>,
+    },
+    Stats {
+        resp: mpsc::Sender<EngineStats>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to the engine thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl EngineHandle {
+    /// Spawn the engine thread over an artifacts directory.
+    pub fn spawn(artifacts_dir: PathBuf) -> crate::Result<EngineHandle> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<crate::Result<()>>();
+        std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                let mut engine = match Engine::load(&artifacts_dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Execute { name, inputs, resp } => {
+                            let _ = resp.send(engine.execute(&name, &inputs));
+                        }
+                        Request::Warm { name, resp } => {
+                            let _ = resp.send(engine.warm(&name));
+                        }
+                        Request::Stats { resp } => {
+                            let _ = resp.send(engine.stats().clone());
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawn engine thread");
+        ready_rx.recv().expect("engine thread alive")?;
+        Ok(EngineHandle { tx })
+    }
+
+    /// Execute an artifact (blocks the calling thread until done).
+    pub fn execute_blocking(
+        &self,
+        name: &str,
+        inputs: Vec<HostTensor>,
+    ) -> crate::Result<Vec<HostTensor>> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Execute { name: name.to_string(), inputs, resp })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine dropped reply"))?
+    }
+
+    /// Pre-compile an artifact (returns true on a cache miss).
+    pub fn warm_blocking(&self, name: &str) -> crate::Result<bool> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Warm { name: name.to_string(), resp })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine dropped reply"))?
+    }
+
+    pub fn stats_blocking(&self) -> crate::Result<EngineStats> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Stats { resp })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine dropped reply"))
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Request::Shutdown);
+    }
+}

@@ -1,0 +1,123 @@
+//! Minimal CLI argument substrate (no network access for `clap`):
+//! `binary <subcommand> [--key value | --flag]...`
+
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.opts.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                anyhow::bail!("unexpected positional argument '{arg}'");
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> anyhow::Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Typed option with default.
+    pub fn get_or<T: FromStr>(&self, key: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{key} '{s}': {e}")),
+        }
+    }
+
+    /// Typed optional option.
+    pub fn get_opt<T: FromStr>(&self, key: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{key} '{s}': {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["train", "--rounds", "100", "--seed=7", "--non-iid"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("rounds"), Some("100"));
+        assert_eq!(a.get("seed"), Some("7"));
+        assert!(a.flag("non-iid"));
+        assert!(!a.flag("async"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["x", "--n", "42"]);
+        assert_eq!(a.get_or("n", 0usize).unwrap(), 42);
+        assert_eq!(a.get_or("m", 7usize).unwrap(), 7);
+        assert_eq!(a.get_opt::<u64>("n").unwrap(), Some(42));
+        assert_eq!(a.get_opt::<u64>("m").unwrap(), None);
+        assert!(a.get_or("n", 0.0f64).is_ok());
+    }
+
+    #[test]
+    fn bad_typed_value_errors() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.get_or("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn rejects_extra_positional() {
+        assert!(Args::parse(["a".to_string(), "b".to_string()]).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--fast", "--out", "file.csv"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("out"), Some("file.csv"));
+    }
+}

@@ -1,0 +1,399 @@
+//! Minimal JSON substrate (parser + writer).
+//!
+//! The artifact manifest and the config files are JSON; with no network
+//! access to pull `serde_json`, we implement the subset we need ourselves:
+//! full JSON parsing (objects, arrays, strings with escapes, numbers,
+//! bools, null) and deterministic serialization. ~300 lines, fully tested.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    // ---- constructors -----------------------------------------------------
+
+    pub fn obj() -> Json {
+        Json::Obj(BTreeMap::new())
+    }
+
+    pub fn set(&mut self, key: &str, val: Json) -> &mut Json {
+        if let Json::Obj(m) = self {
+            m.insert(key.to_string(), val);
+        } else {
+            panic!("set on non-object");
+        }
+        self
+    }
+
+    pub fn from_f64s(vals: &[f64]) -> Json {
+        Json::Arr(vals.iter().map(|&v| Json::Num(v)).collect())
+    }
+
+    pub fn from_usizes(vals: &[usize]) -> Json {
+        Json::Arr(vals.iter().map(|&v| Json::Num(v as f64)).collect())
+    }
+
+    // ---- accessors --------------------------------------------------------
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// Panicking accessor for required fields (manifest/config are
+    /// machine-generated; a missing field is a build error, not user input).
+    pub fn req(&self, key: &str) -> anyhow::Result<&Json> {
+        self.get(key)
+            .ok_or_else(|| anyhow::anyhow!("missing JSON field '{key}'"))
+    }
+
+    pub fn as_f64(&self) -> anyhow::Result<f64> {
+        match self {
+            Json::Num(v) => Ok(*v),
+            _ => anyhow::bail!("not a number: {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> anyhow::Result<usize> {
+        Ok(self.as_f64()? as usize)
+    }
+
+    pub fn as_u32(&self) -> anyhow::Result<u32> {
+        Ok(self.as_f64()? as u32)
+    }
+
+    pub fn as_u64(&self) -> anyhow::Result<u64> {
+        Ok(self.as_f64()? as u64)
+    }
+
+    pub fn as_bool(&self) -> anyhow::Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => anyhow::bail!("not a bool: {self:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> anyhow::Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => anyhow::bail!("not a string: {self:?}"),
+        }
+    }
+
+    pub fn as_arr(&self) -> anyhow::Result<&[Json]> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            _ => anyhow::bail!("not an array: {self:?}"),
+        }
+    }
+
+    pub fn usize_vec(&self) -> anyhow::Result<Vec<usize>> {
+        self.as_arr()?.iter().map(|j| j.as_usize()).collect()
+    }
+
+    pub fn u32_vec(&self) -> anyhow::Result<Vec<u32>> {
+        self.as_arr()?.iter().map(|j| j.as_u32()).collect()
+    }
+
+    pub fn f64_vec(&self) -> anyhow::Result<Vec<f64>> {
+        self.as_arr()?.iter().map(|j| j.as_f64()).collect()
+    }
+
+    // ---- serialization ----------------------------------------------------
+
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => {
+                if v.fract() == 0.0 && v.abs() < 1e15 {
+                    let _ = write!(out, "{}", *v as i64);
+                } else {
+                    let _ = write!(out, "{v}");
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    // ---- parsing ----------------------------------------------------------
+
+    pub fn parse(text: &str) -> anyhow::Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let val = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        anyhow::ensure!(pos == bytes.len(), "trailing JSON at byte {pos}");
+        Ok(val)
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
+    skip_ws(b, pos);
+    anyhow::ensure!(*pos < b.len(), "unexpected end of JSON");
+    match b[*pos] {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(Json::Str(parse_string(b, pos)?)),
+        b't' => parse_lit(b, pos, "true", Json::Bool(true)),
+        b'f' => parse_lit(b, pos, "false", Json::Bool(false)),
+        b'n' => parse_lit(b, pos, "null", Json::Null),
+        _ => parse_num(b, pos),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, val: Json) -> anyhow::Result<Json> {
+    anyhow::ensure!(
+        b[*pos..].starts_with(lit.as_bytes()),
+        "bad literal at byte {pos}",
+        pos = *pos
+    );
+    *pos += lit.len();
+    Ok(val)
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let s = std::str::from_utf8(&b[start..*pos])?;
+    Ok(Json::Num(s.parse::<f64>().map_err(|e| {
+        anyhow::anyhow!("bad number '{s}' at byte {start}: {e}")
+    })?))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> anyhow::Result<String> {
+    anyhow::ensure!(b[*pos] == b'"', "expected string at byte {pos}", pos = *pos);
+    *pos += 1;
+    let mut out = String::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                anyhow::ensure!(*pos < b.len(), "dangling escape");
+                match b[*pos] {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'b' => out.push('\u{0008}'),
+                    b'f' => out.push('\u{000C}'),
+                    b'u' => {
+                        anyhow::ensure!(*pos + 4 < b.len(), "short \\u escape");
+                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])?;
+                        let code = u32::from_str_radix(hex, 16)?;
+                        out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        *pos += 4;
+                    }
+                    c => anyhow::bail!("bad escape \\{}", c as char),
+                }
+                *pos += 1;
+            }
+            _ => {
+                // copy a full UTF-8 sequence
+                let s = &b[*pos..];
+                let ch_len = utf8_len(s[0]);
+                let chunk = std::str::from_utf8(&s[..ch_len.min(s.len())])?;
+                out.push_str(chunk);
+                *pos += chunk.len();
+            }
+        }
+    }
+    anyhow::bail!("unterminated string")
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
+    *pos += 1; // [
+    let mut items = Vec::new();
+    loop {
+        skip_ws(b, pos);
+        anyhow::ensure!(*pos < b.len(), "unterminated array");
+        if b[*pos] == b']' {
+            *pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        if !items.is_empty() {
+            anyhow::ensure!(b[*pos] == b',', "expected ',' in array at byte {}", *pos);
+            *pos += 1;
+        }
+        items.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        if *pos < b.len() && b[*pos] == b',' {
+            continue;
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
+    *pos += 1; // {
+    let mut map = BTreeMap::new();
+    loop {
+        skip_ws(b, pos);
+        anyhow::ensure!(*pos < b.len(), "unterminated object");
+        if b[*pos] == b'}' {
+            *pos += 1;
+            return Ok(Json::Obj(map));
+        }
+        if !map.is_empty() {
+            anyhow::ensure!(b[*pos] == b',', "expected ',' in object at byte {}", *pos);
+            *pos += 1;
+            skip_ws(b, pos);
+        }
+        let key = parse_string(b, pos)?;
+        skip_ws(b, pos);
+        anyhow::ensure!(*pos < b.len() && b[*pos] == b':', "expected ':' at byte {}", *pos);
+        *pos += 1;
+        let val = parse_value(b, pos)?;
+        map.insert(key, val);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(Json::parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(Json::parse("-3.5e2").unwrap(), Json::Num(-350.0));
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("\"hi\"").unwrap(), Json::Str("hi".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let j = Json::parse(r#"{"a": [1, 2, {"b": "c"}], "d": null}"#).unwrap();
+        assert_eq!(j.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(
+            j.get("a").unwrap().as_arr().unwrap()[2].get("b").unwrap().as_str().unwrap(),
+            "c"
+        );
+    }
+
+    #[test]
+    fn escapes_roundtrip() {
+        let original = Json::Str("line\n\"quote\"\t\\back".into());
+        let text = original.dump();
+        assert_eq!(Json::parse(&text).unwrap(), original);
+    }
+
+    #[test]
+    fn unicode_passthrough() {
+        let j = Json::parse("\"héllo ☃\"").unwrap();
+        assert_eq!(j.as_str().unwrap(), "héllo ☃");
+    }
+
+    #[test]
+    fn dump_parse_roundtrip_object() {
+        let mut j = Json::obj();
+        j.set("x", Json::Num(1.5))
+            .set("name", Json::Str("hasfl".into()))
+            .set("flags", Json::Arr(vec![Json::Bool(true), Json::Null]));
+        let back = Json::parse(&j.dump()).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("nul").is_err());
+        assert!(Json::parse("1 2").is_err());
+    }
+
+    #[test]
+    fn integer_formatting_is_stable() {
+        assert_eq!(Json::Num(64.0).dump(), "64");
+        assert_eq!(Json::Num(0.5).dump(), "0.5");
+    }
+
+    #[test]
+    fn vec_helpers() {
+        let j = Json::parse("[1,2,3]").unwrap();
+        assert_eq!(j.usize_vec().unwrap(), vec![1, 2, 3]);
+        assert_eq!(j.u32_vec().unwrap(), vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Utility substrates built in-repo (the build environment has no network
+//! access to crates.io, so JSON/CLI layers are implemented here and tested
+//! like everything else).
+
+pub mod cli;
+pub mod json;
+
+pub use cli::Args;
+pub use json::Json;

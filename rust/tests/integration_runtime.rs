@@ -1,0 +1,193 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These tests REQUIRE `artifacts/manifest.json` (run `make artifacts`);
+//! they are skipped with a message otherwise so `cargo test` stays green in
+//! a fresh checkout.
+
+use std::path::PathBuf;
+
+use hasfl::model::{Manifest, Params};
+use hasfl::runtime::{tensor_to_host, EngineHandle, HostTensor, StepArtifacts};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+fn setup() -> Option<(EngineHandle, Manifest)> {
+    let dir = artifacts_dir()?;
+    let engine = EngineHandle::spawn(dir.clone()).expect("engine");
+    let manifest = Manifest::load(&dir).expect("manifest");
+    Some((engine, manifest))
+}
+
+/// Deterministic pseudo-batch for tests.
+fn fake_batch(bucket: usize, classes: usize, true_b: usize) -> (HostTensor, HostTensor, HostTensor) {
+    let mut rng = hasfl::rng::Pcg32::seeded(99);
+    let px = 32 * 32 * 3;
+    let x: Vec<f32> = (0..bucket * px).map(|_| rng.normal() as f32 * 0.5).collect();
+    let mut onehot = vec![0.0f32; bucket * classes];
+    let mut weights = vec![0.0f32; bucket];
+    for r in 0..bucket {
+        onehot[r * classes + (r % classes)] = 1.0;
+        if r < true_b {
+            weights[r] = 1.0;
+        }
+    }
+    (
+        HostTensor { shape: vec![bucket, 32, 32, 3], data: x },
+        HostTensor { shape: vec![bucket, classes], data: onehot },
+        HostTensor { shape: vec![bucket], data: weights },
+    )
+}
+
+#[test]
+fn full_fwd_produces_logits() {
+    let Some((engine, manifest)) = setup() else { return };
+    let params = Params::init(&manifest, 1);
+    let (x, _, _) = fake_batch(8, manifest.num_classes, 8);
+    let name = Manifest::full_name("full_fwd", 8);
+    let mut inputs = vec![x];
+    inputs.extend(params.tensors.iter().map(tensor_to_host));
+    let out = engine.execute_blocking(&name, inputs).expect("exec");
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape, vec![8, manifest.num_classes]);
+    assert!(out[0].data.iter().all(|v| v.is_finite()));
+    engine.shutdown();
+}
+
+#[test]
+fn full_step_loss_near_ln10_at_init() {
+    // Random init + balanced labels => loss ~ ln(10) ≈ 2.303.
+    let Some((engine, manifest)) = setup() else { return };
+    let params = Params::init(&manifest, 2);
+    let (x, y, w) = fake_batch(16, manifest.num_classes, 16);
+    let name = Manifest::full_name("full_step", 16);
+    let mut inputs = vec![x, y, w];
+    inputs.extend(params.tensors.iter().map(tensor_to_host));
+    let out = engine.execute_blocking(&name, inputs).expect("exec");
+    let loss = out[0].data[0];
+    assert!((1.5..4.0).contains(&loss), "init loss {loss}");
+    // gradients exist for every tensor and are finite
+    assert_eq!(out.len(), 2 + params.tensors.len());
+    for g in &out[2..] {
+        assert!(g.data.iter().all(|v| v.is_finite()));
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn split_equals_full_through_pjrt() {
+    // The core SFL invariant, across the PJRT boundary this time:
+    // client_fwd -> server_step -> client_bwd == full_step.
+    let Some((engine, manifest)) = setup() else { return };
+    let params = Params::init(&manifest, 3);
+    let classes = manifest.num_classes;
+    let (x, y, w) = fake_batch(8, classes, 8);
+
+    // Full step.
+    let name = Manifest::full_name("full_step", 8);
+    let mut inputs = vec![x.clone(), y.clone(), w.clone()];
+    inputs.extend(params.tensors.iter().map(tensor_to_host));
+    let full = engine.execute_blocking(&name, inputs).expect("full");
+
+    for cut in [2usize, 5] {
+        let sa = StepArtifacts::resolve(&manifest, cut, 8).unwrap();
+        // a1
+        let mut cf_in = vec![x.clone()];
+        cf_in.extend(params.client_slice(cut).iter().map(tensor_to_host));
+        let a = engine.execute_blocking(&sa.client_fwd, cf_in).expect("cf").remove(0);
+        // a3
+        let mut ss_in = vec![a, y.clone(), w.clone()];
+        ss_in.extend(params.server_slice(cut).iter().map(tensor_to_host));
+        let mut ss_out = engine.execute_blocking(&sa.server_step, ss_in).expect("ss");
+        let loss = ss_out.remove(0).data[0];
+        let _correct = ss_out.remove(0);
+        let ga = ss_out.remove(0);
+        // a5
+        let mut cb_in = vec![x.clone(), ga];
+        cb_in.extend(params.client_slice(cut).iter().map(tensor_to_host));
+        let cb_out = engine.execute_blocking(&sa.client_bwd, cb_in).expect("cb");
+
+        assert!((loss - full[0].data[0]).abs() < 1e-4, "cut {cut} loss");
+        let split_grads: Vec<&HostTensor> = cb_out.iter().chain(ss_out.iter()).collect();
+        assert_eq!(split_grads.len(), full.len() - 2);
+        for (k, (sg, fg)) in split_grads.iter().zip(&full[2..]).enumerate() {
+            for (a, b) in sg.data.iter().zip(&fg.data) {
+                assert!(
+                    (a - b).abs() < 3e-4 + 3e-3 * b.abs(),
+                    "cut {cut} grad tensor {k}: {a} vs {b}"
+                );
+            }
+        }
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn padded_bucket_matches_unpadded_batch() {
+    // Bucket padding with zero weights must be numerically exact: true
+    // batch 5 on bucket 8 == batch 5 run with weights all ones on bucket
+    // (well, compare loss+grads against an 8-batch where rows 5..8 have
+    // zero weight vs the same rows replaced by garbage — results equal).
+    let Some((engine, manifest)) = setup() else { return };
+    let params = Params::init(&manifest, 4);
+    let classes = manifest.num_classes;
+    let (x, y, w) = fake_batch(8, classes, 5);
+
+    let name = Manifest::full_name("full_step", 8);
+    let mut inputs = vec![x.clone(), y.clone(), w.clone()];
+    inputs.extend(params.tensors.iter().map(tensor_to_host));
+    let base = engine.execute_blocking(&name, inputs).expect("base");
+
+    // Scramble the padded rows' pixels; weights stay zero there.
+    let mut x2 = x.clone();
+    let px = 32 * 32 * 3;
+    for v in x2.data[5 * px..].iter_mut() {
+        *v = 123.456;
+    }
+    let mut inputs = vec![x2, y.clone(), w.clone()];
+    inputs.extend(params.tensors.iter().map(tensor_to_host));
+    let scrambled = engine.execute_blocking(&name, inputs).expect("scrambled");
+
+    assert!((base[0].data[0] - scrambled[0].data[0]).abs() < 1e-5, "loss differs");
+    for (a, b) in base[2..].iter().zip(&scrambled[2..]) {
+        for (x1, x2) in a.data.iter().zip(&b.data) {
+            assert!((x1 - x2).abs() < 1e-4, "padded rows leaked into grads");
+        }
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn engine_rejects_bad_shapes() {
+    let Some((engine, manifest)) = setup() else { return };
+    let name = Manifest::full_name("full_fwd", 8);
+    let bad = HostTensor { shape: vec![4, 32, 32, 3], data: vec![0.0; 4 * 32 * 32 * 3] };
+    let err = engine.execute_blocking(&name, vec![bad]);
+    assert!(err.is_err());
+    engine.shutdown();
+    let _ = manifest;
+}
+
+#[test]
+fn engine_stats_accumulate() {
+    let Some((engine, manifest)) = setup() else { return };
+    let params = Params::init(&manifest, 5);
+    let (x, _, _) = fake_batch(4, manifest.num_classes, 4);
+    let name = Manifest::full_name("full_fwd", 4);
+    let mut inputs = vec![x];
+    inputs.extend(params.tensors.iter().map(tensor_to_host));
+    engine.execute_blocking(&name, inputs.clone()).unwrap();
+    engine.execute_blocking(&name, inputs).unwrap();
+    let stats = engine.stats_blocking().unwrap();
+    assert_eq!(stats.executions, 2);
+    assert_eq!(stats.compiles, 1); // cache hit on the second call
+    assert!(stats.exec_secs > 0.0);
+    engine.shutdown();
+}

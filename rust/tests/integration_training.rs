@@ -1,0 +1,123 @@
+//! End-to-end integration over the full coordinator: real SFL training of
+//! SplitCNN-8 through the PJRT runtime (skipped without artifacts).
+
+use std::path::PathBuf;
+
+use hasfl::config::{Config, Partition, StrategyKind};
+use hasfl::coordinator::Trainer;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+fn tiny_config() -> Config {
+    let mut cfg = Config::small();
+    cfg.fleet.n_devices = 2;
+    cfg.train.rounds = 8;
+    cfg.train.agg_interval = 4;
+    cfg.train.eval_every = 4;
+    cfg.train.train_samples = 256;
+    cfg.train.test_samples = 64;
+    cfg.train.batch_cap = 16;
+    cfg.strategy = StrategyKind::Fixed;
+    cfg.fixed_batch = 8;
+    cfg.fixed_cut = 3;
+    cfg
+}
+
+#[test]
+fn training_reduces_loss() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = tiny_config();
+    cfg.train.rounds = 20;
+    let mut trainer = Trainer::new(cfg, &dir).expect("trainer");
+    trainer.run().expect("run");
+    let first: f64 = trainer.history.records[..4].iter().map(|r| r.loss).sum::<f64>() / 4.0;
+    let last: f64 = trainer.history.records[16..].iter().map(|r| r.loss).sum::<f64>() / 4.0;
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+    assert!(trainer.sim_time > 0.0);
+    trainer.engine.shutdown();
+}
+
+#[test]
+fn sequential_and_concurrent_rounds_agree() {
+    // Same seed => identical sampling; the engine serializes compute, so
+    // the concurrent actor topology must produce the same histories.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut a = Trainer::new(tiny_config(), &dir).expect("trainer a");
+    a.run().expect("run a");
+    let mut b = Trainer::new(tiny_config(), &dir).expect("trainer b");
+    b.run_concurrent().expect("run b");
+    assert_eq!(a.history.records.len(), b.history.records.len());
+    for (ra, rb) in a.history.records.iter().zip(&b.history.records) {
+        assert!((ra.loss - rb.loss).abs() < 1e-6, "round {}: {} vs {}", ra.round, ra.loss, rb.loss);
+        assert_eq!(ra.test_acc.is_some(), rb.test_acc.is_some());
+    }
+    a.engine.shutdown();
+    b.engine.shutdown();
+}
+
+#[test]
+fn hasfl_strategy_runs_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = tiny_config();
+    cfg.strategy = StrategyKind::Hasfl;
+    cfg.train.rounds = 6;
+    let mut trainer = Trainer::new(cfg, &dir).expect("trainer");
+    trainer.run().expect("run");
+    // HASFL decisions must be in range and memory-feasible.
+    for (&b, &c) in trainer.dec.batch.iter().zip(&trainer.dec.cut) {
+        assert!(b >= 1 && b <= 64);
+        assert!(trainer.manifest.valid_cuts.contains(&c));
+    }
+    trainer.engine.shutdown();
+}
+
+#[test]
+fn noniid_partition_trains() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = tiny_config();
+    cfg.partition = Partition::NonIidShards;
+    cfg.train.rounds = 6;
+    let mut trainer = Trainer::new(cfg, &dir).expect("trainer");
+    trainer.run().expect("run");
+    assert_eq!(trainer.history.records.len(), 6);
+    trainer.engine.shutdown();
+}
+
+#[test]
+fn evaluation_accuracy_improves_over_random_guess() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = tiny_config();
+    cfg.train.rounds = 60;
+    cfg.train.eval_every = 20;
+    cfg.fixed_batch = 16;
+    let mut trainer = Trainer::new(cfg, &dir).expect("trainer");
+    trainer.run().expect("run");
+    let accs = trainer.history.eval_points();
+    let best = accs.iter().map(|&(_, _, a)| a).fold(0.0f64, f64::max);
+    // Random guess = 10%; the synthetic classes are separable so even a
+    // short run should clear this comfortably.
+    assert!(best > 0.2, "best acc {best} after {} evals", accs.len());
+    trainer.engine.shutdown();
+}
+
+#[test]
+fn estimator_picks_up_real_gradient_stats() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = tiny_config();
+    cfg.train.rounds = 5;
+    let mut trainer = Trainer::new(cfg, &dir).expect("trainer");
+    trainer.run().expect("run");
+    assert_eq!(trainer.estimator.rounds_seen(), 5);
+    assert!(trainer.estimator.gsq().iter().any(|&g| g > 0.0));
+    let bp = trainer.bound_params();
+    assert!(bp.sigma_sq.iter().all(|&s| s >= 0.0));
+    trainer.engine.shutdown();
+}

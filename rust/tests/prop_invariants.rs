@@ -1,0 +1,273 @@
+//! Property-based tests over the coordinator invariants (routing/batching/
+//! state in the paper's terms: latency model, convergence bound, optimizer
+//! feasibility, partitioner, aggregation).
+//!
+//! crates.io is unreachable in this environment, so instead of `proptest`
+//! we drive the properties with the in-repo PCG32 generator: every property
+//! runs across `CASES` randomized instances and failures print the seed.
+
+use hasfl::config::{Config, Device, Partition, StrategyKind};
+use hasfl::convergence::{
+    drift_term, memory_feasible, rounds_to_epsilon, variance_term, BoundParams,
+};
+use hasfl::data::{partition, Dataset};
+use hasfl::latency::{round_latency, Decisions};
+use hasfl::model::ModelProfile;
+use hasfl::optimizer::{decide, ms, OptContext, StrategyInputs};
+use hasfl::rng::Pcg32;
+use hasfl::util::Json;
+
+const CASES: u64 = 24;
+
+fn random_fleet(rng: &mut Pcg32, n: usize) -> Vec<Device> {
+    (0..n)
+        .map(|_| Device {
+            flops: rng.uniform(0.2e12, 4e12),
+            up_bps: rng.uniform(10e6, 200e6),
+            down_bps: rng.uniform(50e6, 500e6),
+            fed_up_bps: rng.uniform(10e6, 200e6),
+            fed_down_bps: rng.uniform(50e6, 500e6),
+            mem_bytes: rng.uniform(0.5, 8.0) * 1024.0 * 1024.0 * 1024.0,
+        })
+        .collect()
+}
+
+#[test]
+fn prop_latency_monotone_in_batch() {
+    // For any fleet/cut, every latency component grows with batch size.
+    let profile = ModelProfile::vgg16();
+    let server = Config::table1().server;
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(seed);
+        let n = rng.int_range(2, 12) as usize;
+        let devices = random_fleet(&mut rng, n);
+        let cut = rng.int_range(1, 15) as usize;
+        let b1 = rng.int_range(1, 32);
+        let b2 = b1 + rng.int_range(1, 32);
+        let l1 = round_latency(&profile, &devices, &server, &Decisions::uniform(n, b1, cut));
+        let l2 = round_latency(&profile, &devices, &server, &Decisions::uniform(n, b2, cut));
+        assert!(l2.t_split > l1.t_split, "seed {seed}: T_S not monotone");
+        // Aggregation latency is batch-independent (sub-model sizes only).
+        assert!((l2.t_agg - l1.t_agg).abs() < 1e-12, "seed {seed}: T_A depends on b");
+    }
+}
+
+#[test]
+fn prop_straggler_never_faster() {
+    // Degrading any single device's resources can never speed up the round.
+    let profile = ModelProfile::vgg16();
+    let server = Config::table1().server;
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(1000 + seed);
+        let n = rng.int_range(2, 10) as usize;
+        let mut devices = random_fleet(&mut rng, n);
+        let dec = Decisions::uniform(n, rng.int_range(1, 64), rng.int_range(1, 15) as usize);
+        let base = round_latency(&profile, &devices, &server, &dec).t_split;
+        let victim = rng.below(n as u32) as usize;
+        devices[victim].flops /= rng.uniform(1.5, 20.0);
+        devices[victim].up_bps /= rng.uniform(1.5, 20.0);
+        let worse = round_latency(&profile, &devices, &server, &dec).t_split;
+        assert!(worse >= base - 1e-12, "seed {seed}: straggler sped up the round");
+    }
+}
+
+#[test]
+fn prop_bound_monotonicity() {
+    // Variance term: decreasing in every b_i. Drift term: nondecreasing in
+    // L_c and zero iff I <= 1.
+    let profile = ModelProfile::vgg16();
+    let bp = BoundParams::default_for(&profile, 5e-4);
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(2000 + seed);
+        let n = rng.int_range(2, 20) as usize;
+        let mut b: Vec<u32> = (0..n).map(|_| rng.int_range(1, 63)).collect();
+        let v1 = variance_term(&bp, &b);
+        let k = rng.below(n as u32) as usize;
+        b[k] += rng.int_range(1, 32);
+        let v2 = variance_term(&bp, &b);
+        assert!(v2 < v1, "seed {seed}: variance not decreasing in b");
+
+        let l1 = rng.int_range(1, 14) as usize;
+        let l2 = l1 + 1;
+        let i = rng.int_range(2, 30) as usize;
+        assert!(drift_term(&bp, l2, i) >= drift_term(&bp, l1, i), "seed {seed}");
+        assert_eq!(drift_term(&bp, l2, 1), 0.0);
+    }
+}
+
+#[test]
+fn prop_rounds_to_epsilon_consistency() {
+    // If R rounds suffice for eps, they suffice for any larger eps; and
+    // the returned R makes Theorem 1's bound <= eps.
+    let profile = ModelProfile::vgg16();
+    let bp = BoundParams::default_for(&profile, 5e-4);
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(3000 + seed);
+        let n = rng.int_range(2, 20) as usize;
+        let b: Vec<u32> = (0..n).map(|_| rng.int_range(4, 64)).collect();
+        let l_c = rng.int_range(1, 15) as usize;
+        let i = rng.int_range(1, 30) as usize;
+        let eps = rng.uniform(0.2, 1.5);
+        if let Some(r) = rounds_to_epsilon(&bp, &b, l_c, i, eps) {
+            let bound = hasfl::convergence::theorem1_bound(&bp, &b, l_c, i, r.ceil() as usize);
+            assert!(bound <= eps * 1.01, "seed {seed}: bound {bound} > eps {eps}");
+            let r2 = rounds_to_epsilon(&bp, &b, l_c, i, eps * 1.5).unwrap();
+            assert!(r2 <= r, "seed {seed}: looser eps needs more rounds");
+        }
+    }
+}
+
+#[test]
+fn prop_strategies_always_feasible() {
+    // Every strategy's decisions satisfy C2-C5 on random fleets.
+    let profile = ModelProfile::vgg16();
+    let server = Config::table1().server;
+    let bp = BoundParams::default_for(&profile, 5e-4);
+    let kinds = [
+        StrategyKind::Hasfl,
+        StrategyKind::RbsHams,
+        StrategyKind::HabsRms,
+        StrategyKind::RbsRms,
+        StrategyKind::RbsRhams,
+        StrategyKind::HabsFixedCut,
+        StrategyKind::HamsFixedBatch,
+    ];
+    for seed in 0..8u64 {
+        let mut rng = Pcg32::seeded(4000 + seed);
+        let n = rng.int_range(2, 8) as usize;
+        let devices = random_fleet(&mut rng, n);
+        let ctx = OptContext {
+            profile: &profile,
+            devices: &devices,
+            server: &server,
+            bound: &bp,
+            interval: 15,
+            epsilon: 0.5,
+            batch_cap: 64,
+        };
+        for kind in kinds {
+            let dec = decide(kind, &ctx, &mut rng, StrategyInputs::default());
+            assert_eq!(dec.n(), n);
+            for (&b, &c) in dec.batch.iter().zip(&dec.cut) {
+                assert!((1..=64).contains(&b), "{kind:?} seed {seed}: b={b}");
+                assert!(profile.valid_cuts.contains(&c), "{kind:?} seed {seed}: c={c}");
+            }
+            assert!(
+                memory_feasible(&profile, &devices, &dec),
+                "{kind:?} seed {seed}: C4 violated"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_ms_bcd_never_worse_than_greedy_or_uniform() {
+    let profile = ModelProfile::vgg16();
+    let server = Config::table1().server;
+    let bp = BoundParams::default_for(&profile, 5e-4);
+    for seed in 0..10u64 {
+        let mut rng = Pcg32::seeded(5000 + seed);
+        let n = rng.int_range(2, 6) as usize;
+        let devices = random_fleet(&mut rng, n);
+        let ctx = OptContext {
+            profile: &profile,
+            devices: &devices,
+            server: &server,
+            bound: &bp,
+            interval: 15,
+            epsilon: 0.5,
+            batch_cap: 64,
+        };
+        let batch: Vec<u32> = (0..n).map(|_| rng.int_range(4, 32)).collect();
+        let cuts = ms::solve_bcd(&ctx, &batch, &mut rng, 4);
+        let solved = ctx.objective(&Decisions { batch: batch.clone(), cut: cuts });
+        let Some(solved) = solved else { continue };
+        for c in [1usize, 4, 8] {
+            let uni = Decisions { batch: batch.clone(), cut: vec![c; n] };
+            if let Some(v) = ctx.objective(&uni) {
+                assert!(solved <= v * 1.0001, "seed {seed}: uniform cut {c} beats BCD");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_partitions_are_exact_covers() {
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(6000 + seed);
+        let classes = if rng.below(2) == 0 { 10 } else { 100 };
+        let n_dev = rng.int_range(2, 20) as usize;
+        let n = (n_dev * 2 * rng.int_range(5, 30) as usize).max(classes);
+        let d = Dataset::synthetic(n, classes, seed);
+        for scheme in [Partition::Iid, Partition::NonIidShards] {
+            let parts = partition(&d, scheme, n_dev, &mut rng);
+            assert_eq!(parts.len(), n_dev);
+            let mut all: Vec<usize> = parts.concat();
+            all.sort_unstable();
+            all.dedup();
+            assert_eq!(all.len(), n, "seed {seed} {scheme:?}: not a disjoint cover");
+            assert!(parts.iter().all(|p| !p.is_empty()), "seed {seed}: empty partition");
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_configs() {
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(7000 + seed);
+        let mut cfg = Config::table1();
+        cfg.seed = rng.next_u64();
+        cfg.fleet.n_devices = rng.int_range(1, 64) as usize;
+        cfg.fleet.flops = hasfl::config::Range::new(1e11, rng.uniform(2e11, 9e12));
+        cfg.train.lr = rng.uniform(1e-5, 0.5);
+        cfg.train.rounds = rng.int_range(1, 100_000) as usize;
+        cfg.strategy = if rng.below(2) == 0 {
+            StrategyKind::Hasfl
+        } else {
+            StrategyKind::RbsRhams
+        };
+        let text = cfg.to_json().dump();
+        let back = Config::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(cfg, back, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_aggregation_preserves_mean() {
+    // FedAvg invariance: the global average is unchanged by aggregation.
+    use hasfl::aggregation::{aggregate_common, aggregate_forged, global_average};
+    use hasfl::model::{Params, Tensor};
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(8000 + seed);
+        let n_dev = rng.int_range(2, 8) as usize;
+        let n_blocks = rng.int_range(2, 8) as usize;
+        let sets: Vec<Params> = (0..n_dev)
+            .map(|_| Params {
+                tensors: (0..2 * n_blocks)
+                    .map(|_| Tensor {
+                        shape: vec![3],
+                        data: (0..3).map(|_| rng.normal() as f32).collect(),
+                    })
+                    .collect(),
+                n_blocks,
+            })
+            .collect();
+        let before = global_average(&sets);
+        let mut after = sets.clone();
+        let dec = Decisions::uniform(n_dev, 8, rng.int_range(1, n_blocks as u32 - 1) as usize);
+        aggregate_common(&mut after, &dec);
+        aggregate_forged(&mut after, &dec);
+        let after_avg = global_average(&after);
+        for (a, b) in before.tensors.iter().zip(&after_avg.tensors) {
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert!((x - y).abs() < 1e-5, "seed {seed}: aggregation moved the mean");
+            }
+        }
+        // And all devices hold identical parameters afterwards.
+        for s in &after[1..] {
+            for (a, b) in s.tensors.iter().zip(&after[0].tensors) {
+                assert_eq!(a.data, b.data, "seed {seed}: devices diverge post-agg");
+            }
+        }
+    }
+}
