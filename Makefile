@@ -1,0 +1,17 @@
+# Top-level targets. `make check` is the tier-1 gate (see ROADMAP.md).
+
+.PHONY: check artifacts artifacts100 test
+
+check:
+	./ci.sh
+
+# AOT-lower the SplitCNN-8 fwd/bwd artifacts consumed by the PJRT runtime.
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../rust/artifacts
+
+# 100-class variant for the fig5 CIFAR-100-like panels.
+artifacts100:
+	cd python && python3 -m compile.aot --out-dir ../rust/artifacts100 --classes 100
+
+test:
+	cd rust && cargo test -q

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate (also available as `make check`).
+#
+# Runs the full local CI battery over the Rust workspace:
+#   1. release build        (binaries + examples + benches must compile)
+#   2. test suite           (engine-backed tests self-skip without artifacts)
+#   3. formatting           (cargo fmt --check)
+#   4. lints                (cargo clippy -D warnings)
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+echo "== cargo build --release =="
+cargo build --release --all-targets
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo clippy -- -D warnings =="
+cargo clippy --all-targets -- -D warnings
+
+echo "CI OK"

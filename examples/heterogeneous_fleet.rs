@@ -8,8 +8,8 @@
 //! make artifacts && cargo run --release --example heterogeneous_fleet -- [rounds]
 //! ```
 
-use hasfl::config::{Config, Partition, StrategyKind};
-use hasfl::coordinator::Trainer;
+use hasfl::config::StrategyKind;
+use hasfl::experiment::{Experiment, Preset};
 
 fn main() -> hasfl::Result<()> {
     let rounds: usize = std::env::args()
@@ -28,28 +28,30 @@ fn main() -> hasfl::Result<()> {
     println!("HASFL vs benchmarks ({} rounds each, N=4, non-IID)\n", rounds);
     let mut summary = Vec::new();
     for kind in strategies {
-        let mut cfg = Config::small();
-        cfg.fleet.n_devices = 4;
-        cfg.train.rounds = rounds;
-        cfg.partition = Partition::NonIidShards;
-        cfg.strategy = kind;
-        let mut trainer = Trainer::new(cfg, std::path::Path::new("artifacts"))?;
-        trainer.run()?;
-        let (_, time, acc) = trainer
-            .history
+        let mut session = Experiment::builder()
+            .preset(Preset::Small)
+            .devices(4)
+            .rounds(rounds)
+            .non_iid()
+            .strategy(kind)
+            .artifacts("artifacts")
+            .build()?;
+        session.run_to_completion()?;
+        let (_, time, acc) = session
+            .history()
             .converged_or_last()
             .expect("eval points exist");
-        let best = trainer.history.best_acc().unwrap_or(acc);
+        let best = session.history().best_acc().unwrap_or(acc);
         println!(
             "{:<12} sim_time {:>9.2}s  best acc {:>6.2}%  final decisions b={:?} cut={:?}",
             kind.as_str(),
             time,
             best * 100.0,
-            trainer.dec.batch,
-            trainer.dec.cut
+            session.decisions().batch,
+            session.decisions().cut
         );
         summary.push((kind, time, best));
-        trainer.engine.shutdown();
+        session.finish()?;
     }
 
     let hasfl = summary.iter().find(|(k, _, _)| *k == StrategyKind::Hasfl).unwrap();

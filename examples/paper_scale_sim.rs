@@ -10,6 +10,7 @@
 
 use hasfl::config::Config;
 use hasfl::convergence::{rounds_to_epsilon, BoundParams};
+use hasfl::experiment::Experiment;
 use hasfl::latency::{round_latency, total_latency, Decisions};
 use hasfl::model::ModelProfile;
 use hasfl::optimizer::{solve_joint, OptContext};
@@ -17,7 +18,8 @@ use hasfl::rng::Pcg32;
 
 fn main() -> hasfl::Result<()> {
     for profile in [ModelProfile::vgg16(), ModelProfile::resnet18()] {
-        let cfg = Config::table1();
+        // Validated analytic config: no artifacts or engine needed.
+        let cfg = Experiment::builder().config(Config::table1()).build_config()?;
         let bound = BoundParams::default_for(&profile, cfg.train.lr);
         let devices = cfg.sample_fleet();
         let ctx = OptContext {

@@ -3,19 +3,25 @@
 //! Trains SplitCNN-8 with the full HASFL stack — Pallas-kernel AOT
 //! artifacts through the PJRT runtime, heterogeneity-aware BS+MS
 //! re-optimized every I rounds, simulated Table-I edge network — on the
-//! synthetic CIFAR-like corpus, and logs the loss curve + test accuracy.
+//! synthetic CIFAR-like corpus, driving the step-by-step `Session` API and
+//! logging the loss curve + test accuracy.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use hasfl::config::{Config, StrategyKind};
-use hasfl::coordinator::Trainer;
+use hasfl::config::StrategyKind;
+use hasfl::experiment::{CsvHistory, Experiment, Preset};
 
 fn main() -> hasfl::Result<()> {
-    let mut cfg = Config::small(); // N=4 heterogeneous devices, 200 rounds
-    cfg.strategy = StrategyKind::Hasfl;
+    let mut session = Experiment::builder()
+        .preset(Preset::Small) // N=4 heterogeneous devices, 200 rounds
+        .strategy(StrategyKind::Hasfl)
+        .artifacts("artifacts")
+        .observe(CsvHistory::new("results/quickstart.csv"))
+        .build()?;
 
+    let cfg = session.config();
     println!("HASFL quickstart");
     println!(
         "  fleet: {} devices, {:.1}-{:.1} TFLOPS, uplink {:.0}-{:.0} Mbps",
@@ -29,61 +35,38 @@ fn main() -> hasfl::Result<()> {
         "  train: {} rounds, I={}, lr={}, eps={}",
         cfg.train.rounds, cfg.train.agg_interval, cfg.train.lr, cfg.train.epsilon
     );
-
-    let mut trainer = Trainer::new(cfg, std::path::Path::new("artifacts"))?;
     println!(
         "  initial decisions: b={:?} cut={:?}",
-        trainer.dec.batch, trainer.dec.cut
+        session.decisions().batch,
+        session.decisions().cut
     );
 
-    let rounds = trainer.cfg.train.rounds;
-    let eval_every = trainer.cfg.train.eval_every;
-    for t in 1..=rounds {
-        let outcome = trainer.run_round()?;
-        // post-round bookkeeping is inside run(); we inline it here so the
-        // example can print per-round lines.
-        let lat = hasfl::latency::round_latency(
-            &trainer.profile,
-            &trainer.devices,
-            &trainer.cfg.server,
-            &trainer.dec,
-        );
-        trainer.sim_time += lat.t_split;
-        hasfl::aggregation::aggregate_common(&mut trainer.params, &trainer.dec);
-        if t % trainer.cfg.train.agg_interval == 0 {
-            hasfl::aggregation::aggregate_forged(&mut trainer.params, &trainer.dec);
-            trainer.sim_time += lat.t_agg;
-            trainer.dec = trainer.next_decisions();
+    while !session.is_done() {
+        let report = session.step()?;
+        if report.reoptimized {
             println!(
-                "  [round {t:>4}] re-optimized: b={:?} cut={:?}",
-                trainer.dec.batch, trainer.dec.cut
+                "  [round {:>4}] re-optimized: b={:?} cut={:?}",
+                report.round, report.decisions.batch, report.decisions.cut
             );
         }
-        let test_acc = if t % eval_every == 0 { Some(trainer.evaluate()?) } else { None };
-        if let Some(acc) = test_acc {
+        if let Some(acc) = report.test_acc {
             println!(
-                "  [round {t:>4}] sim_time {:>8.2}s  loss {:.4}  test_acc {:.2}%",
-                trainer.sim_time,
-                outcome.mean_loss,
+                "  [round {:>4}] sim_time {:>8.2}s  loss {:.4}  test_acc {:.2}%",
+                report.round,
+                report.sim_time,
+                report.outcome.mean_loss,
                 acc * 100.0
             );
         }
-        trainer.history.push(hasfl::metrics::Record {
-            round: t,
-            sim_time: trainer.sim_time,
-            loss: outcome.mean_loss,
-            test_acc,
-        });
     }
 
-    if let Some((round, time, acc)) = trainer.history.converged_or_last() {
+    if let Some((round, time, acc)) = session.history().converged_or_last() {
         println!(
             "final: round {round}, simulated {time:.1}s, test accuracy {:.2}%",
             acc * 100.0
         );
     }
-    trainer.history.write_csv(std::path::Path::new("results/quickstart.csv"))?;
+    session.finish()?; // flushes results/quickstart.csv, stops the engine
     println!("loss curve -> results/quickstart.csv");
-    trainer.engine.shutdown();
     Ok(())
 }

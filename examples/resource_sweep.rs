@@ -9,9 +9,12 @@
 //! ```
 
 use hasfl::config::{Config, StrategyKind};
+use hasfl::experiment::Experiment;
 use hasfl::figures::analytic_converged_time;
 
 fn main() -> hasfl::Result<()> {
+    // Validated analytic base config (Table I, VGG-16 profile).
+    let base = Experiment::builder().config(Config::table1()).build_config()?;
     let strategies = [
         StrategyKind::Hasfl,
         StrategyKind::RbsHams,
@@ -29,7 +32,7 @@ fn main() -> hasfl::Result<()> {
     }
     println!();
     for scale in [0.5f64, 1.0, 2.0] {
-        let mut cfg = Config::table1();
+        let mut cfg = base.clone();
         cfg.fleet.flops = cfg.fleet.flops.scale(scale);
         print!("{scale:>8.1}");
         for k in strategies {
@@ -48,7 +51,7 @@ fn main() -> hasfl::Result<()> {
     }
     println!();
     for scale in [0.25f64, 0.5, 1.0, 2.0] {
-        let mut cfg = Config::table1();
+        let mut cfg = base.clone();
         cfg.fleet.up_bps = cfg.fleet.up_bps.scale(scale);
         print!("{scale:>8.2}");
         for k in strategies {

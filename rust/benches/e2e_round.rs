@@ -1,40 +1,50 @@
-//! End-to-end round throughput: a full split-training round (all devices,
-//! steps a1–a5 + aggregation) in sequential vs concurrent-actor mode, plus
-//! evaluation cost. The headline L3 number for EXPERIMENTS.md §Perf.
+//! End-to-end round throughput: a full split-training step (all devices,
+//! steps a1–a5 + post-round aggregation) in sequential vs concurrent-actor
+//! mode, plus evaluation cost. The headline L3 number for DESIGN.md §8.
 
 #[path = "common/mod.rs"]
 mod common;
 
-use hasfl::config::{Config, StrategyKind};
-use hasfl::coordinator::Trainer;
+use hasfl::config::StrategyKind;
+use hasfl::experiment::{Experiment, Preset};
 
 fn main() {
     let Some(dir) = common::artifacts_dir() else { return };
 
-    let mut cfg = Config::small();
-    cfg.fleet.n_devices = 4;
-    cfg.train.rounds = 1;
-    cfg.strategy = StrategyKind::Fixed;
-    cfg.fixed_batch = 16;
-    cfg.fixed_cut = 4;
-    cfg.train.train_samples = 1024;
-    cfg.train.test_samples = 256;
+    let mut session = Experiment::builder()
+        .preset(Preset::Small)
+        .devices(4)
+        .strategy(StrategyKind::Fixed)
+        .fixed_batch(16)
+        .fixed_cut(4)
+        // Big round budget, no scheduled evals, no aggregation windows:
+        // step() timing stays pure per-round work.
+        .rounds(1_000_000)
+        .eval_every(1_000_000)
+        .agg_interval(1_000_000)
+        .tune(|c| {
+            c.train.train_samples = 1024;
+            c.train.test_samples = 256;
+        })
+        .artifacts(&dir)
+        .build()
+        .expect("session");
 
-    let mut trainer = Trainer::new(cfg.clone(), &dir).expect("trainer");
-    common::bench("round_sequential_n4_b16", 2, 15, || {
-        std::hint::black_box(trainer.run_round().unwrap());
+    common::bench("step_sequential_n4_b16", 2, 15, || {
+        std::hint::black_box(session.step().unwrap());
     });
-    common::bench("round_concurrent_n4_b16", 2, 15, || {
-        std::hint::black_box(trainer.run_round_concurrent().unwrap());
+    session.set_concurrent(true);
+    common::bench("step_concurrent_n4_b16", 2, 15, || {
+        std::hint::black_box(session.step().unwrap());
     });
     common::bench("evaluate_testset_256", 1, 5, || {
-        std::hint::black_box(trainer.evaluate().unwrap());
+        std::hint::black_box(session.evaluate_now().unwrap());
     });
 
-    let stats = trainer.engine.stats_blocking().unwrap();
+    let stats = session.engine_stats().unwrap();
     println!(
         "engine: {} execs, exec {:.2}s, marshal {:.2}s, {} compiles {:.1}s",
         stats.executions, stats.exec_secs, stats.marshal_secs, stats.compiles, stats.compile_secs
     );
-    trainer.engine.shutdown();
+    session.finish().unwrap();
 }

@@ -1,5 +1,5 @@
 //! `hasfl-figures` — regenerate every table and figure of the paper's
-//! evaluation section (see DESIGN.md §6 and EXPERIMENTS.md).
+//! evaluation section (see DESIGN.md §6 for the experiment index).
 //!
 //! ```text
 //! hasfl-figures <table1|fig2|fig3|fig5|fig7|fig8|fig9|fig10|fig11|analytic|all>

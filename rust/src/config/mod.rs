@@ -430,4 +430,33 @@ mod tests {
         let back = Config::load(&path).unwrap();
         assert_eq!(cfg, back);
     }
+
+    #[test]
+    fn every_preset_roundtrips_through_json() {
+        // Covers the full hand-written codec in util/json.rs: every preset
+        // through the in-memory path (to_json/from_json) and the file path
+        // (save/load).
+        for (name, cfg) in [
+            ("small", Config::small()),
+            ("figure_small", Config::figure_small()),
+            ("table1", Config::table1()),
+        ] {
+            let back = Config::from_json(&Json::parse(&cfg.to_json().dump()).unwrap()).unwrap();
+            assert_eq!(cfg, back, "in-memory round-trip for preset '{name}'");
+
+            let path = std::env::temp_dir().join(format!("hasfl_cfg_rt_{name}.json"));
+            cfg.save(&path).unwrap();
+            assert_eq!(Config::load(&path).unwrap(), cfg, "file round-trip for preset '{name}'");
+        }
+    }
+
+    #[test]
+    fn large_seed_survives_json() {
+        // u64 seeds above 2^53 would be mangled by an f64 codec; the seed
+        // is serialized as a string to avoid that.
+        let mut cfg = Config::small();
+        cfg.seed = u64::MAX - 12345;
+        let back = Config::from_json(&Json::parse(&cfg.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.seed, cfg.seed);
+    }
 }

@@ -2,7 +2,9 @@
 //! runtime, with simulated-network timing from the latency model and
 //! periodic BS/MS re-optimization (Algorithm 2) every `I` rounds.
 //!
-//! Two execution modes with identical numerics:
+//! [`Trainer`] owns the per-round primitives; the driving loop lives in
+//! [`crate::experiment::Session`], which steps the trainer one round at a
+//! time. Two execution modes with identical numerics:
 //! - [`Trainer::run_round`] — sequential round (single caller thread).
 //! - [`Trainer::run_round_concurrent`] — actor round: one OS thread per edge
 //!   device runs steps a1/a5 and the server exchange; the PJRT engine
@@ -16,44 +18,57 @@ pub use round::RoundOutcome;
 use std::path::Path;
 
 use crate::aggregation::{aggregate_common, aggregate_forged, global_average};
-use crate::config::{Config, ModelKind};
+use crate::config::{Config, Device, ModelKind};
 use crate::convergence::{BoundParams, GradStatsEstimator};
 use crate::data::{partition, BatchSampler, Dataset};
-use crate::latency::{round_latency, Decisions};
+use crate::latency::{round_latency, Decisions, RoundLatency};
 use crate::metrics::{History, Record};
 use crate::model::{profile_for, Manifest, ModelProfile, Params};
 use crate::optimizer::{decide, OptContext, StrategyInputs};
 use crate::rng::Pcg32;
 use crate::runtime::EngineHandle;
 
+/// Post-round bookkeeping result (latency + aggregation events), consumed
+/// by [`crate::experiment::Session::step`] when assembling the round
+/// report.
+#[derive(Debug, Clone)]
+pub(crate) struct PostRound {
+    pub latency: RoundLatency,
+    pub aggregated: bool,
+    pub reoptimized: bool,
+}
+
 /// The full training system state.
+///
+/// Fields are crate-private; drivers go through
+/// [`crate::experiment::Session`] and the read accessors below.
 pub struct Trainer {
-    pub cfg: Config,
-    pub engine: EngineHandle,
-    pub manifest: Manifest,
-    pub profile: ModelProfile,
-    pub devices: Vec<crate::config::Device>,
-    pub train_set: Dataset,
-    pub test_set: Dataset,
+    pub(crate) cfg: Config,
+    pub(crate) engine: EngineHandle,
+    pub(crate) manifest: Manifest,
+    pub(crate) profile: ModelProfile,
+    pub(crate) devices: Vec<Device>,
+    pub(crate) train_set: Dataset,
+    pub(crate) test_set: Dataset,
     samplers: Vec<BatchSampler>,
     /// Per-device full-model parameters w_i (client part + server part).
-    pub params: Vec<Params>,
-    pub estimator: GradStatsEstimator,
+    pub(crate) params: Vec<Params>,
+    pub(crate) estimator: GradStatsEstimator,
     strategy_rng: Pcg32,
-    pub history: History,
-    pub sim_time: f64,
-    pub dec: Decisions,
+    pub(crate) history: History,
+    pub(crate) sim_time: f64,
+    pub(crate) dec: Decisions,
     strategy_inputs: StrategyInputs,
 }
 
 impl Trainer {
     /// Build a trainer from a config and an artifacts directory.
-    pub fn new(cfg: Config, artifacts_dir: &Path) -> crate::Result<Trainer> {
-        assert_eq!(
-            cfg.model,
-            ModelKind::Splitcnn8,
-            "only SplitCNN-8 is executable; VGG-16/ResNet-18 are analytic profiles"
-        );
+    ///
+    /// Callers go through [`crate::experiment::ExperimentBuilder::build`],
+    /// which validates the config (executable model kind, cut/bucket
+    /// bounds, artifact compatibility) before reaching here.
+    pub(crate) fn new(cfg: Config, artifacts_dir: &Path) -> crate::Result<Trainer> {
+        debug_assert_eq!(cfg.model, ModelKind::Splitcnn8, "builder admits only the executable model");
         let engine = EngineHandle::spawn(artifacts_dir.to_path_buf())?;
         let manifest = Manifest::load(artifacts_dir)?;
         anyhow::ensure!(
@@ -110,6 +125,64 @@ impl Trainer {
         Ok(t)
     }
 
+    /// The experiment configuration.
+    pub fn cfg(&self) -> &Config {
+        &self.cfg
+    }
+
+    /// Handle to the PJRT engine thread.
+    pub fn engine(&self) -> &EngineHandle {
+        &self.engine
+    }
+
+    /// The loaded artifact manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// The latency-model profile in use.
+    pub fn profile(&self) -> &ModelProfile {
+        &self.profile
+    }
+
+    /// The sampled heterogeneous fleet.
+    pub fn devices(&self) -> &[Device] {
+        &self.devices
+    }
+
+    /// Accumulated run history.
+    pub fn history(&self) -> &History {
+        &self.history
+    }
+
+    /// The decisions currently in force.
+    pub fn decisions(&self) -> &Decisions {
+        &self.dec
+    }
+
+    /// Simulated wall-clock so far (seconds).
+    pub fn sim_time(&self) -> f64 {
+        self.sim_time
+    }
+
+    /// The Assumption-2 gradient-statistics estimator.
+    pub fn estimator(&self) -> &GradStatsEstimator {
+        &self.estimator
+    }
+
+    pub(crate) fn push_record(&mut self, rec: Record) {
+        self.history.push(rec);
+    }
+
+    pub(crate) fn take_history(&mut self) -> History {
+        std::mem::take(&mut self.history)
+    }
+
+    /// Latency breakdown of one round under the current decisions.
+    pub fn current_round_latency(&self) -> RoundLatency {
+        round_latency(&self.profile, &self.devices, &self.cfg.server, &self.dec)
+    }
+
     /// Current bound parameters: estimated from real gradients once the
     /// estimator has seen data, otherwise the principled defaults.
     pub fn bound_params(&self) -> BoundParams {
@@ -129,7 +202,7 @@ impl Trainer {
     /// shallowest cut), making C1 infeasible for every decision. We follow
     /// the practical route and re-anchor epsilon just above that floor so
     /// the optimizer always compares decisions on a live trade-off.
-    pub fn next_decisions(&mut self) -> Decisions {
+    pub(crate) fn next_decisions(&mut self) -> Decisions {
         let bound = self.bound_params();
         let n = self.devices.len();
         let cap = self.cfg.train.batch_cap.min(self.manifest.max_bucket());
@@ -151,7 +224,7 @@ impl Trainer {
 
     /// Evaluate test accuracy of the averaged global model through the
     /// `full_fwd` artifact.
-    pub fn evaluate(&mut self) -> crate::Result<f64> {
+    pub(crate) fn evaluate(&mut self) -> crate::Result<f64> {
         let global = global_average(&self.params);
         let bucket = self.manifest.max_bucket();
         let classes = self.cfg.train.classes;
@@ -194,65 +267,23 @@ impl Trainer {
     }
 
     /// Advance the simulated clock for round `t` and perform the periodic
-    /// aggregation + re-optimization bookkeeping. Returns whether this was
-    /// an aggregation round.
-    fn post_round(&mut self, t: usize, outcome: &RoundOutcome) -> bool {
-        let lat = round_latency(&self.profile, &self.devices, &self.cfg.server, &self.dec);
-        self.sim_time += lat.t_split;
+    /// aggregation + re-optimization bookkeeping. Returns the latency and
+    /// aggregation events for the round report.
+    pub(crate) fn post_round(&mut self, t: usize) -> PostRound {
+        let latency = self.current_round_latency();
+        self.sim_time += latency.t_split;
 
         // Per-round server-side common aggregation (Eqn 4).
         aggregate_common(&mut self.params, &self.dec);
 
-        let agg_round = t % self.cfg.train.agg_interval == 0;
-        if agg_round {
+        let aggregated = t % self.cfg.train.agg_interval == 0;
+        if aggregated {
             // Steps b1-b3 (Eqn 7) + re-optimization (Alg 1 line 24).
             aggregate_forged(&mut self.params, &self.dec);
-            self.sim_time += lat.t_agg;
+            self.sim_time += latency.t_agg;
             self.dec = self.next_decisions();
         }
-        let _ = outcome;
-        agg_round
-    }
-
-    /// Run the full configured training (sequential rounds).
-    pub fn run(&mut self) -> crate::Result<()> {
-        for t in 1..=self.cfg.train.rounds {
-            let outcome = self.run_round()?;
-            self.post_round(t, &outcome);
-            let test_acc = if t % self.cfg.train.eval_every == 0 {
-                Some(self.evaluate()?)
-            } else {
-                None
-            };
-            self.history.push(Record {
-                round: t,
-                sim_time: self.sim_time,
-                loss: outcome.mean_loss,
-                test_acc,
-            });
-        }
-        Ok(())
-    }
-
-    /// Concurrent-actor variant of [`run`]; identical numerics, exercises
-    /// the message-passing topology (one thread per device).
-    pub fn run_concurrent(&mut self) -> crate::Result<()> {
-        for t in 1..=self.cfg.train.rounds {
-            let outcome = self.run_round_concurrent()?;
-            self.post_round(t, &outcome);
-            let test_acc = if t % self.cfg.train.eval_every == 0 {
-                Some(self.evaluate()?)
-            } else {
-                None
-            };
-            self.history.push(Record {
-                round: t,
-                sim_time: self.sim_time,
-                loss: outcome.mean_loss,
-                test_acc,
-            });
-        }
-        Ok(())
+        PostRound { latency, aggregated, reoptimized: aggregated }
     }
 
     pub fn n_devices(&self) -> usize {

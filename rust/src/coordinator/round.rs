@@ -135,7 +135,7 @@ impl Trainer {
     }
 
     /// Sequential round: steps a1–a5 for every device, then SGD updates.
-    pub fn run_round(&mut self) -> crate::Result<RoundOutcome> {
+    pub(crate) fn run_round(&mut self) -> crate::Result<RoundOutcome> {
         let n = self.n_devices();
         let mut results = Vec::with_capacity(n);
         for i in 0..n {
@@ -148,7 +148,7 @@ impl Trainer {
     /// Actor round: one OS thread per device, true message-passing
     /// concurrency (the CPU engine serializes compute, so numerics match
     /// the sequential mode exactly — verified by integration tests).
-    pub fn run_round_concurrent(&mut self) -> crate::Result<RoundOutcome> {
+    pub(crate) fn run_round_concurrent(&mut self) -> crate::Result<RoundOutcome> {
         let n = self.n_devices();
         let mut works = Vec::with_capacity(n);
         for i in 0..n {

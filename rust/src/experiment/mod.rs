@@ -1,0 +1,390 @@
+//! The public experiment API: one obvious way to drive HASFL.
+//!
+//! Every scenario — CLI runs, figure regeneration, the examples, the
+//! benches — goes through the same three pieces:
+//!
+//! - [`ExperimentBuilder`] (via [`Experiment::builder`]) assembles and
+//!   *validates* a configuration up front: preset selection, fleet size,
+//!   strategy, seed, artifact compatibility, cut/bucket bounds. No more
+//!   ad-hoc `Config` field pokes scattered across drivers.
+//! - [`Session`] is the step-driven training loop: [`Session::step`]
+//!   advances one round and returns a [`RoundReport`] (loss, latency
+//!   breakdown, current decisions, optional eval).
+//!   [`Session::run_to_completion`] / [`Session::run_concurrent`] are thin
+//!   drivers on top.
+//! - [`Observer`]s hook round/aggregation/re-optimization/eval events;
+//!   built-ins cover CSV history ([`CsvHistory`]), progress logging
+//!   ([`ProgressLogger`]), and early stop on convergence ([`EarlyStop`]).
+//!
+//! ```no_run
+//! use hasfl::experiment::{CsvHistory, Experiment, Preset};
+//! use hasfl::config::StrategyKind;
+//!
+//! let mut session = Experiment::builder()
+//!     .preset(Preset::Small)
+//!     .devices(4)
+//!     .strategy(StrategyKind::Hasfl)
+//!     .seed(7)
+//!     .artifacts("artifacts")
+//!     .observe(CsvHistory::new("results/run.csv"))
+//!     .build()?;
+//! while !session.is_done() {
+//!     let report = session.step()?;
+//!     if let Some(acc) = report.test_acc {
+//!         println!("round {}: {:.2}%", report.round, acc * 100.0);
+//!     }
+//! }
+//! session.finish()?; // flush observers, shut the engine down
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! The step-driven path is numerics-identical to the historical closed
+//! `Trainer::run()` loop: same RNG stream order, same history records
+//! (verified by `rust/tests/experiment_api.rs`).
+
+mod observer;
+mod session;
+
+pub use observer::{CsvHistory, EarlyStop, Observer, ProgressLogger};
+pub use session::{RoundReport, Session};
+
+use std::path::{Path, PathBuf};
+
+use crate::config::{Config, ModelKind, Partition, StrategyKind};
+use crate::coordinator::Trainer;
+use crate::model::Manifest;
+
+/// Named experiment presets (the validated entry points into [`Config`]).
+///
+/// Presets configure *executable* sessions: [`Preset::Table1`] applies the
+/// paper's Table I fleet/network but selects the executable SplitCNN-8
+/// model (the analytic VGG-16 variant of Table I remains available as
+/// [`Config::table1`] for latency-model studies via
+/// [`ExperimentBuilder::build_config`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Preset {
+    /// N=4 executable CPU-testbed preset ([`Config::small`]).
+    Small,
+    /// N=8 figure-harness preset ([`Config::figure_small`]).
+    Figure,
+    /// Table I fleet at N=20 with the executable model.
+    Table1,
+}
+
+impl Preset {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Preset::Small => "small",
+            Preset::Figure => "figure",
+            Preset::Table1 => "table1",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<Preset> {
+        Ok(match s {
+            "small" => Preset::Small,
+            "figure" | "figure_small" => Preset::Figure,
+            "table1" => Preset::Table1,
+            _ => anyhow::bail!("unknown preset '{s}' (expected small|figure|table1)"),
+        })
+    }
+
+    /// The preset's base configuration.
+    pub fn config(&self) -> Config {
+        match self {
+            Preset::Small => Config::small(),
+            Preset::Figure => Config::figure_small(),
+            Preset::Table1 => {
+                let mut cfg = Config::table1();
+                cfg.model = ModelKind::Splitcnn8;
+                cfg
+            }
+        }
+    }
+}
+
+/// Entry point to the experiment API. See the [module docs](self).
+pub struct Experiment;
+
+impl Experiment {
+    /// Start building an experiment (defaults to [`Preset::Small`]).
+    pub fn builder() -> ExperimentBuilder {
+        ExperimentBuilder {
+            cfg: Preset::Small.config(),
+            artifacts: PathBuf::from("artifacts"),
+            concurrent: false,
+            observers: Vec::new(),
+        }
+    }
+}
+
+/// Fluent builder for a training [`Session`].
+pub struct ExperimentBuilder {
+    cfg: Config,
+    artifacts: PathBuf,
+    concurrent: bool,
+    observers: Vec<Box<dyn Observer>>,
+}
+
+impl ExperimentBuilder {
+    /// Replace the whole configuration with a preset.
+    pub fn preset(mut self, preset: Preset) -> Self {
+        self.cfg = preset.config();
+        self
+    }
+
+    /// Replace the whole configuration with an explicit [`Config`]
+    /// (e.g. loaded from JSON).
+    pub fn config(mut self, cfg: Config) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Fleet size override.
+    pub fn devices(mut self, n: usize) -> Self {
+        self.cfg.fleet.n_devices = n;
+        self
+    }
+
+    /// Round-budget override.
+    pub fn rounds(mut self, rounds: usize) -> Self {
+        self.cfg.train.rounds = rounds;
+        self
+    }
+
+    /// RNG seed override (fleet sampling, partitioning, init, strategies).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// BS/MS control strategy.
+    pub fn strategy(mut self, strategy: StrategyKind) -> Self {
+        self.cfg.strategy = strategy;
+        self
+    }
+
+    /// Data partition across devices.
+    pub fn partition(mut self, partition: Partition) -> Self {
+        self.cfg.partition = partition;
+        self
+    }
+
+    /// Shorthand for the paper's non-IID shard partition.
+    pub fn non_iid(self) -> Self {
+        self.partition(Partition::NonIidShards)
+    }
+
+    /// Model kind (the default presets already pick the executable model).
+    pub fn model(mut self, model: ModelKind) -> Self {
+        self.cfg.model = model;
+        self
+    }
+
+    /// Fixed per-device batch size used by the fixed-BS strategies.
+    pub fn fixed_batch(mut self, batch: u32) -> Self {
+        self.cfg.fixed_batch = batch;
+        self
+    }
+
+    /// Fixed cut layer used by the fixed-MS strategies.
+    pub fn fixed_cut(mut self, cut: usize) -> Self {
+        self.cfg.fixed_cut = cut;
+        self
+    }
+
+    /// Evaluate test accuracy every `n` rounds.
+    pub fn eval_every(mut self, n: usize) -> Self {
+        self.cfg.train.eval_every = n;
+        self
+    }
+
+    /// Client-side aggregation interval I.
+    pub fn agg_interval(mut self, n: usize) -> Self {
+        self.cfg.train.agg_interval = n;
+        self
+    }
+
+    /// Escape hatch for config fields without a dedicated setter.
+    pub fn tune(mut self, f: impl FnOnce(&mut Config)) -> Self {
+        f(&mut self.cfg);
+        self
+    }
+
+    /// AOT-artifacts directory (default `artifacts`).
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts = dir.into();
+        self
+    }
+
+    /// Run rounds in concurrent-actor mode (one thread per device;
+    /// numerics identical to sequential mode).
+    pub fn concurrent(mut self, on: bool) -> Self {
+        self.concurrent = on;
+        self
+    }
+
+    /// Attach a boxed observer.
+    pub fn observer(mut self, obs: Box<dyn Observer>) -> Self {
+        self.observers.push(obs);
+        self
+    }
+
+    /// Attach an observer by value.
+    pub fn observe(self, obs: impl Observer + 'static) -> Self {
+        self.observer(Box::new(obs))
+    }
+
+    /// Pure configuration checks that need no filesystem access.
+    fn validate_config(cfg: &Config) -> crate::Result<()> {
+        anyhow::ensure!(cfg.fleet.n_devices >= 1, "fleet needs at least 1 device");
+        anyhow::ensure!(cfg.train.rounds >= 1, "round budget must be >= 1");
+        anyhow::ensure!(cfg.train.eval_every >= 1, "eval_every must be >= 1");
+        anyhow::ensure!(cfg.train.agg_interval >= 1, "agg_interval must be >= 1");
+        anyhow::ensure!(cfg.train.batch_cap >= 1, "batch_cap must be >= 1");
+        anyhow::ensure!(
+            cfg.train.lr.is_finite() && cfg.train.lr > 0.0,
+            "learning rate must be positive, got {}",
+            cfg.train.lr
+        );
+        anyhow::ensure!(
+            cfg.train.epsilon > 0.0,
+            "target epsilon must be positive, got {}",
+            cfg.train.epsilon
+        );
+        anyhow::ensure!(
+            cfg.train.train_samples >= cfg.fleet.n_devices,
+            "{} train samples cannot cover {} devices",
+            cfg.train.train_samples,
+            cfg.fleet.n_devices
+        );
+        anyhow::ensure!(cfg.fixed_cut >= 1, "fixed_cut must be >= 1 (1-based layer index)");
+        anyhow::ensure!(
+            cfg.fixed_batch >= 1 && cfg.fixed_batch <= cfg.train.batch_cap,
+            "fixed_batch {} outside 1..={}",
+            cfg.fixed_batch,
+            cfg.train.batch_cap
+        );
+        Ok(())
+    }
+
+    /// Validate the configuration and return it *without* building a
+    /// session. This is the entry point for analytic (latency-model /
+    /// convergence-bound) studies that never execute the model.
+    pub fn build_config(self) -> crate::Result<Config> {
+        Self::validate_config(&self.cfg)?;
+        Ok(self.cfg)
+    }
+
+    /// Checks against the AOT artifact manifest (artifact compatibility +
+    /// cut/bucket bounds).
+    fn validate_against_manifest(cfg: &Config, artifacts: &Path) -> crate::Result<Manifest> {
+        anyhow::ensure!(
+            artifacts.join("manifest.json").exists(),
+            "no AOT artifacts at '{}' (run `make artifacts`)",
+            artifacts.display()
+        );
+        let manifest = Manifest::load(artifacts)?;
+        anyhow::ensure!(
+            manifest.num_classes == cfg.train.classes,
+            "artifacts built for {} classes, config wants {}",
+            manifest.num_classes,
+            cfg.train.classes
+        );
+        anyhow::ensure!(
+            manifest.valid_cuts.contains(&cfg.fixed_cut),
+            "fixed_cut {} not an exported cut (valid: {:?})",
+            cfg.fixed_cut,
+            manifest.valid_cuts
+        );
+        anyhow::ensure!(
+            cfg.fixed_batch <= manifest.max_bucket(),
+            "fixed_batch {} exceeds max exported bucket {}",
+            cfg.fixed_batch,
+            manifest.max_bucket()
+        );
+        anyhow::ensure!(
+            cfg.train.batch_cap <= manifest.max_bucket(),
+            "batch_cap {} exceeds max exported bucket {}",
+            cfg.train.batch_cap,
+            manifest.max_bucket()
+        );
+        Ok(manifest)
+    }
+
+    /// Validate everything and build the training [`Session`].
+    pub fn build(self) -> crate::Result<Session> {
+        Self::validate_config(&self.cfg)?;
+        anyhow::ensure!(
+            self.cfg.model == ModelKind::Splitcnn8,
+            "model '{}' is analytic-only; executable sessions train splitcnn8 \
+             (use build_config() for latency-model studies)",
+            self.cfg.model.as_str()
+        );
+        Self::validate_against_manifest(&self.cfg, &self.artifacts)?;
+        let trainer = Trainer::new(self.cfg, &self.artifacts)?;
+        Ok(Session::new(trainer, self.observers, self.concurrent))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_parse_roundtrip() {
+        for p in [Preset::Small, Preset::Figure, Preset::Table1] {
+            assert_eq!(Preset::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(Preset::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn table1_preset_is_executable() {
+        assert_eq!(Preset::Table1.config().model, ModelKind::Splitcnn8);
+        assert_eq!(Preset::Table1.config().fleet.n_devices, 20);
+    }
+
+    #[test]
+    fn build_config_validates_without_artifacts() {
+        // Analytic config path: no artifacts needed, model kind free.
+        let cfg = Experiment::builder().config(Config::table1()).build_config().unwrap();
+        assert_eq!(cfg.model, ModelKind::Vgg16);
+
+        assert!(Experiment::builder().devices(0).build_config().is_err());
+        assert!(Experiment::builder().rounds(0).build_config().is_err());
+        assert!(Experiment::builder().fixed_batch(0).build_config().is_err());
+        assert!(Experiment::builder()
+            .tune(|c| c.train.lr = f64::NAN)
+            .build_config()
+            .is_err());
+    }
+
+    #[test]
+    fn builder_setters_compose() {
+        let cfg = Experiment::builder()
+            .preset(Preset::Table1)
+            .devices(6)
+            .rounds(42)
+            .seed(7)
+            .strategy(StrategyKind::RbsRms)
+            .non_iid()
+            .fixed_batch(8)
+            .fixed_cut(3)
+            .eval_every(2)
+            .agg_interval(3)
+            .tune(|c| c.train.epsilon = 0.4)
+            .build_config()
+            .unwrap();
+        assert_eq!(cfg.fleet.n_devices, 6);
+        assert_eq!(cfg.train.rounds, 42);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.strategy, StrategyKind::RbsRms);
+        assert_eq!(cfg.partition, Partition::NonIidShards);
+        assert_eq!(cfg.fixed_batch, 8);
+        assert_eq!(cfg.fixed_cut, 3);
+        assert_eq!(cfg.train.eval_every, 2);
+        assert_eq!(cfg.train.agg_interval, 3);
+        assert!((cfg.train.epsilon - 0.4).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,188 @@
+//! Observer hooks + the built-in observers (CSV history, progress
+//! logging, early stop on convergence).
+
+use std::path::PathBuf;
+
+use crate::latency::Decisions;
+use crate::metrics::{History, CONVERGENCE_ACC_THRESHOLD, CONVERGENCE_WINDOW};
+
+use super::RoundReport;
+
+/// Callbacks fired by [`super::Session::step`], in this order per round:
+/// `on_round`, then `on_aggregation` (aggregation rounds), then
+/// `on_reoptimize` (after fresh decisions land), then `on_eval`
+/// (evaluation rounds). `on_complete` fires once from
+/// [`super::Session::finish`].
+pub trait Observer {
+    fn on_round(&mut self, _report: &RoundReport) {}
+    fn on_aggregation(&mut self, _report: &RoundReport) {}
+    fn on_reoptimize(&mut self, _report: &RoundReport, _decisions: &Decisions) {}
+    fn on_eval(&mut self, _report: &RoundReport, _test_acc: f64) {}
+    /// Flush side effects at the end of the run.
+    fn on_complete(&mut self, _history: &History) -> crate::Result<()> {
+        Ok(())
+    }
+    /// Ask the driving loop to stop after the current round.
+    fn should_stop(&self) -> bool {
+        false
+    }
+}
+
+/// Writes the run history as `round,sim_time,loss,test_acc` CSV when the
+/// session finishes.
+pub struct CsvHistory {
+    path: PathBuf,
+}
+
+impl CsvHistory {
+    pub fn new(path: impl Into<PathBuf>) -> CsvHistory {
+        CsvHistory { path: path.into() }
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
+impl Observer for CsvHistory {
+    fn on_complete(&mut self, history: &History) -> crate::Result<()> {
+        history.write_csv(&self.path)
+    }
+}
+
+/// Logs re-optimizations and evaluation points to stderr.
+pub struct ProgressLogger;
+
+impl Observer for ProgressLogger {
+    fn on_reoptimize(&mut self, report: &RoundReport, decisions: &Decisions) {
+        eprintln!(
+            "[round {:>4}] re-optimized: b={:?} cut={:?}",
+            report.round, decisions.batch, decisions.cut
+        );
+    }
+
+    fn on_eval(&mut self, report: &RoundReport, test_acc: f64) {
+        eprintln!(
+            "[round {:>4}] sim_time {:>9.2}s  loss {:.4}  test_acc {:.2}%",
+            report.round,
+            report.sim_time,
+            report.outcome.mean_loss,
+            test_acc * 100.0
+        );
+    }
+}
+
+/// Early stop on the paper's convergence rule: test accuracy improves by
+/// less than `threshold` across `window` consecutive evaluation rounds
+/// (stateful mirror of [`History::converged`]).
+pub struct EarlyStop {
+    threshold: f64,
+    window: usize,
+    running_max: Option<f64>,
+    stagnant: usize,
+    triggered_at: Option<(usize, f64, f64)>,
+}
+
+impl EarlyStop {
+    pub fn new(threshold: f64, window: usize) -> EarlyStop {
+        EarlyStop { threshold, window, running_max: None, stagnant: 0, triggered_at: None }
+    }
+
+    /// The paper's defaults (0.02% over five evaluation rounds).
+    pub fn paper_default() -> EarlyStop {
+        EarlyStop::new(CONVERGENCE_ACC_THRESHOLD, CONVERGENCE_WINDOW)
+    }
+
+    /// `(round, sim_time, accuracy)` of the convergence point, if reached.
+    pub fn triggered(&self) -> Option<(usize, f64, f64)> {
+        self.triggered_at
+    }
+}
+
+impl Observer for EarlyStop {
+    fn on_eval(&mut self, report: &RoundReport, test_acc: f64) {
+        match self.running_max {
+            None => self.running_max = Some(test_acc),
+            Some(m) => {
+                if (test_acc - m).max(0.0) < self.threshold {
+                    self.stagnant += 1;
+                    if self.stagnant >= self.window && self.triggered_at.is_none() {
+                        self.triggered_at = Some((report.round, report.sim_time, test_acc));
+                    }
+                } else {
+                    self.stagnant = 0;
+                }
+                self.running_max = Some(m.max(test_acc));
+            }
+        }
+    }
+
+    fn should_stop(&self) -> bool {
+        self.triggered_at.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RoundOutcome;
+    use crate::latency::RoundLatency;
+
+    fn fake_report(round: usize, test_acc: Option<f64>) -> RoundReport {
+        RoundReport {
+            round,
+            sim_time: round as f64,
+            outcome: RoundOutcome { mean_loss: 1.0, train_acc: 0.5 },
+            latency: RoundLatency {
+                per_device: vec![],
+                server_fwd: 0.0,
+                server_bwd: 0.0,
+                t_split: 1.0,
+                t_agg: 0.0,
+            },
+            aggregated: false,
+            reoptimized: false,
+            decisions: Decisions::uniform(1, 8, 4),
+            test_acc,
+        }
+    }
+
+    fn feed(stop: &mut EarlyStop, accs: &[f64]) {
+        for (i, &a) in accs.iter().enumerate() {
+            let r = fake_report(i + 1, Some(a));
+            stop.on_eval(&r, a);
+        }
+    }
+
+    #[test]
+    fn early_stop_matches_history_converged() {
+        // Same sequence as metrics::tests::converged_detects_stagnation.
+        let accs = [0.1, 0.3, 0.5, 0.6, 0.6, 0.6, 0.6, 0.6, 0.6];
+        let mut stop = EarlyStop::new(0.0002, 5);
+        feed(&mut stop, &accs);
+        let (round, _, acc) = stop.triggered().unwrap();
+        assert_eq!(round, 9); // 1-based round of the 9th eval
+        assert!((acc - 0.6).abs() < 1e-12);
+        assert!(stop.should_stop());
+    }
+
+    #[test]
+    fn early_stop_resets_on_improvement() {
+        let mut stop = EarlyStop::new(0.0002, 5);
+        feed(&mut stop, &[0.1, 0.1, 0.1, 0.1, 0.5, 0.5, 0.5, 0.5]);
+        assert!(stop.triggered().is_none());
+        assert!(!stop.should_stop());
+    }
+
+    #[test]
+    fn csv_history_writes_on_complete() {
+        let mut h = History::default();
+        h.push(crate::metrics::Record { round: 1, sim_time: 1.0, loss: 2.0, test_acc: Some(0.1) });
+        let path = std::env::temp_dir().join("hasfl_observer_csv_test.csv");
+        let mut obs = CsvHistory::new(&path);
+        obs.on_complete(&h).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("round,sim_time,loss,test_acc"));
+        assert_eq!(text.lines().count(), 2);
+    }
+}

@@ -1,0 +1,199 @@
+//! The step-driven training session and its per-round report.
+
+use crate::coordinator::{RoundOutcome, Trainer};
+use crate::latency::{Decisions, RoundLatency};
+use crate::metrics::{History, Record};
+use crate::runtime::EngineStats;
+
+use super::Observer;
+
+/// Everything that happened in one training round, in callback/driver
+/// friendly form.
+#[derive(Debug, Clone)]
+pub struct RoundReport {
+    /// 1-based round index.
+    pub round: usize,
+    /// Simulated wall-clock after this round (latency model).
+    pub sim_time: f64,
+    /// The round's training outcome (mean loss + train accuracy).
+    pub outcome: RoundOutcome,
+    /// Latency breakdown of this round (Eqns 28–39).
+    pub latency: RoundLatency,
+    /// Whether this was a client-side aggregation round (every I rounds).
+    pub aggregated: bool,
+    /// Whether BS/MS were re-optimized this round (Alg 1 line 24).
+    pub reoptimized: bool,
+    /// The decisions in force *after* this round (fresh ones when
+    /// `reoptimized`, the current window's otherwise).
+    pub decisions: Decisions,
+    /// Test accuracy, present on evaluation rounds.
+    pub test_acc: Option<f64>,
+}
+
+/// A live training session over the PJRT engine.
+///
+/// Created by [`super::ExperimentBuilder::build`]. Call [`Session::step`]
+/// until [`Session::is_done`] (or use the [`Session::run_to_completion`] /
+/// [`Session::run_concurrent`] drivers), then [`Session::finish`] to flush
+/// observers and shut the engine down.
+pub struct Session {
+    trainer: Trainer,
+    observers: Vec<Box<dyn Observer>>,
+    round: usize,
+    concurrent: bool,
+}
+
+impl Session {
+    pub(super) fn new(trainer: Trainer, observers: Vec<Box<dyn Observer>>, concurrent: bool) -> Session {
+        Session { trainer, observers, round: 0, concurrent }
+    }
+
+    /// Rounds completed so far.
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    /// Whether the configured round budget is exhausted.
+    pub fn is_done(&self) -> bool {
+        self.round >= self.trainer.cfg().train.rounds
+    }
+
+    /// Toggle concurrent-actor rounds (numerics identical either way).
+    pub fn set_concurrent(&mut self, on: bool) {
+        self.concurrent = on;
+    }
+
+    /// The experiment configuration.
+    pub fn config(&self) -> &crate::config::Config {
+        self.trainer.cfg()
+    }
+
+    /// Accumulated run history.
+    pub fn history(&self) -> &History {
+        self.trainer.history()
+    }
+
+    /// The decisions currently in force.
+    pub fn decisions(&self) -> &Decisions {
+        self.trainer.decisions()
+    }
+
+    /// Simulated wall-clock so far.
+    pub fn sim_time(&self) -> f64 {
+        self.trainer.sim_time()
+    }
+
+    /// Latency breakdown of a round under the current decisions.
+    pub fn current_latency(&self) -> RoundLatency {
+        self.trainer.current_round_latency()
+    }
+
+    /// Read access to the underlying trainer (estimator, manifest,
+    /// bound parameters, ...).
+    pub fn trainer(&self) -> &Trainer {
+        &self.trainer
+    }
+
+    /// Evaluate test accuracy of the averaged global model right now
+    /// (off-schedule; scheduled evals happen inside [`Session::step`]).
+    pub fn evaluate_now(&mut self) -> crate::Result<f64> {
+        self.trainer.evaluate()
+    }
+
+    /// Engine-side execution statistics.
+    pub fn engine_stats(&self) -> crate::Result<EngineStats> {
+        self.trainer.engine().stats_blocking()
+    }
+
+    /// Advance one training round: steps a1–a5 on every device, post-round
+    /// aggregation/re-optimization bookkeeping, scheduled evaluation, and
+    /// history record — exactly the historical `Trainer::run()` body, one
+    /// iteration at a time.
+    pub fn step(&mut self) -> crate::Result<RoundReport> {
+        let t = self.round + 1;
+        let outcome = if self.concurrent {
+            self.trainer.run_round_concurrent()?
+        } else {
+            self.trainer.run_round()?
+        };
+        let post = self.trainer.post_round(t);
+        let test_acc = if t % self.trainer.cfg().train.eval_every == 0 {
+            Some(self.trainer.evaluate()?)
+        } else {
+            None
+        };
+        self.trainer.push_record(Record {
+            round: t,
+            sim_time: self.trainer.sim_time(),
+            loss: outcome.mean_loss,
+            test_acc,
+        });
+        self.round = t;
+
+        let report = RoundReport {
+            round: t,
+            sim_time: self.trainer.sim_time(),
+            outcome,
+            latency: post.latency,
+            aggregated: post.aggregated,
+            reoptimized: post.reoptimized,
+            decisions: self.trainer.decisions().clone(),
+            test_acc,
+        };
+        for obs in &mut self.observers {
+            obs.on_round(&report);
+            if report.aggregated {
+                obs.on_aggregation(&report);
+            }
+            if report.reoptimized {
+                obs.on_reoptimize(&report, &report.decisions);
+            }
+            if let Some(acc) = report.test_acc {
+                obs.on_eval(&report, acc);
+            }
+        }
+        Ok(report)
+    }
+
+    /// Whether any observer requested an early stop.
+    pub fn stop_requested(&self) -> bool {
+        self.observers.iter().any(|o| o.should_stop())
+    }
+
+    /// Run sequential rounds until the budget is exhausted or an observer
+    /// requests a stop.
+    pub fn run_to_completion(&mut self) -> crate::Result<()> {
+        while !self.is_done() {
+            self.step()?;
+            if self.stop_requested() {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// [`Session::run_to_completion`] in concurrent-actor mode.
+    pub fn run_concurrent(&mut self) -> crate::Result<()> {
+        self.set_concurrent(true);
+        self.run_to_completion()
+    }
+
+    /// Flush observers (`on_complete`), shut the engine down, and return
+    /// the run history. Every observer gets to flush and the engine is
+    /// stopped even when an earlier observer errors; the first error is
+    /// reported.
+    pub fn finish(mut self) -> crate::Result<History> {
+        let history = self.trainer.take_history();
+        let mut first_err = None;
+        for obs in &mut self.observers {
+            if let Err(e) = obs.on_complete(&history) {
+                first_err.get_or_insert(e);
+            }
+        }
+        self.trainer.engine().shutdown();
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(history),
+        }
+    }
+}

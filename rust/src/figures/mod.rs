@@ -13,7 +13,7 @@ use std::path::{Path, PathBuf};
 
 use crate::config::{Config, Partition, StrategyKind};
 use crate::convergence::BoundParams;
-use crate::coordinator::Trainer;
+use crate::experiment::Experiment;
 use crate::latency::{round_latency, Decisions};
 use crate::metrics::{CsvTable, History};
 use crate::model::ModelProfile;
@@ -59,11 +59,9 @@ fn training_config(opts: &FigureOpts, partition: Partition, strategy: StrategyKi
 }
 
 fn run_training(cfg: Config, artifacts: &Path) -> crate::Result<History> {
-    let mut t = Trainer::new(cfg, artifacts)?;
-    t.run()?;
-    let h = t.history.clone();
-    t.engine.shutdown();
-    Ok(h)
+    let mut session = Experiment::builder().config(cfg).artifacts(artifacts).build()?;
+    session.run_to_completion()?;
+    session.finish()
 }
 
 fn strategy_tag(kind: StrategyKind) -> &'static str {
@@ -209,9 +207,10 @@ pub fn fig5_setting(
         // Probe the strategy's round cost to convert the time budget into
         // a round budget (clamped to keep runtime sane).
         let probe = {
-            let t = Trainer::new(cfg.clone(), &opts.artifacts)?;
-            let lat = round_latency(&t.profile, &t.devices, &t.cfg.server, &t.dec);
-            t.engine.shutdown();
+            let session =
+                Experiment::builder().config(cfg.clone()).artifacts(&opts.artifacts).build()?;
+            let lat = session.current_latency();
+            session.finish()?;
             lat.t_split.max(1e-9)
         };
         let rounds = ((budget_secs / probe).ceil() as usize)

@@ -17,14 +17,17 @@
 //! Python never runs at training time: [`runtime`] loads the AOT artifacts
 //! through the PJRT C API (`xla` crate) and executes them from Rust.
 //!
-//! See DESIGN.md for the paper-to-module map and EXPERIMENTS.md for the
-//! reproduction of every figure/table.
+//! Drive the system through [`experiment`] — the builder/session/observer
+//! API that every CLI subcommand, figure generator, example, and bench
+//! uses. See `DESIGN.md` (repo root) for the paper-to-module map and the
+//! experiment index (§6).
 
 pub mod aggregation;
 pub mod config;
 pub mod convergence;
 pub mod coordinator;
 pub mod data;
+pub mod experiment;
 pub mod figures;
 pub mod latency;
 pub mod metrics;
@@ -35,6 +38,7 @@ pub mod runtime;
 pub mod util;
 
 pub use config::Config;
+pub use experiment::{Experiment, Observer, Preset, RoundReport, Session};
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

@@ -5,17 +5,20 @@
 //!                [--strategy hasfl|rbs_hams|habs_rms|rbs_rms|rbs_rhams|fixed]
 //!                [--rounds N] [--devices N] [--seed S] [--non-iid]
 //!                [--artifacts DIR] [--out history.csv] [--concurrent]
+//!                [--early-stop] [--progress]
 //! hasfl optimize [--devices N] [--model vgg16|resnet18|splitcnn8] [--seed S]
 //! hasfl latency  [--batch B] [--cut C] [--model ...] [--devices N]
 //! hasfl info     [--artifacts DIR]
+//! hasfl config   [--preset small|figure|table1] [--out cfg.json]
 //! ```
 
 use std::path::PathBuf;
 
-use hasfl::config::{Config, ModelKind, Partition, StrategyKind};
+use hasfl::config::{Config, StrategyKind};
 use hasfl::convergence::BoundParams;
-use hasfl::coordinator::Trainer;
+use hasfl::experiment::{CsvHistory, EarlyStop, Experiment, Preset, ProgressLogger};
 use hasfl::latency::{round_latency, Decisions};
+use hasfl::metrics::{CONVERGENCE_ACC_THRESHOLD, CONVERGENCE_WINDOW};
 use hasfl::model::{Manifest, ModelProfile};
 use hasfl::optimizer::{solve_joint, OptContext};
 use hasfl::rng::Pcg32;
@@ -36,71 +39,73 @@ fn profile_arg(name: &str, artifacts: &std::path::Path) -> hasfl::Result<ModelPr
 }
 
 fn cmd_train(args: &Args) -> hasfl::Result<()> {
-    let mut cfg = match args.get("config") {
-        Some(path) => Config::load(std::path::Path::new(path))?,
-        None => match args.get("preset").unwrap_or("small") {
-            "small" => Config::small(),
-            "figure" => Config::figure_small(),
-            "table1" => {
-                let mut c = Config::table1();
-                c.model = ModelKind::Splitcnn8;
-                c
-            }
-            p => anyhow::bail!("unknown preset '{p}'"),
-        },
+    let mut builder = match args.get("config") {
+        Some(path) => Experiment::builder().config(Config::load(std::path::Path::new(path))?),
+        None => Experiment::builder().preset(Preset::parse(args.get("preset").unwrap_or("small"))?),
     };
     if let Some(s) = args.get("strategy") {
-        cfg.strategy = StrategyKind::parse(s)?;
+        builder = builder.strategy(StrategyKind::parse(s)?);
     }
     if let Some(r) = args.get_opt::<usize>("rounds")? {
-        cfg.train.rounds = r;
+        builder = builder.rounds(r);
     }
     if let Some(n) = args.get_opt::<usize>("devices")? {
-        cfg.fleet.n_devices = n;
+        builder = builder.devices(n);
     }
     if let Some(s) = args.get_opt::<u64>("seed")? {
-        cfg.seed = s;
+        builder = builder.seed(s);
     }
     if args.flag("non-iid") {
-        cfg.partition = Partition::NonIidShards;
+        builder = builder.non_iid();
     }
-    let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
-
-    eprintln!(
-        "training: N={} rounds={} strategy={} partition={}",
-        cfg.fleet.n_devices,
-        cfg.train.rounds,
-        cfg.strategy.as_str(),
-        cfg.partition.as_str()
-    );
-    let mut trainer = Trainer::new(cfg, &artifacts)?;
-    if args.flag("concurrent") {
-        trainer.run_concurrent()?;
-    } else {
-        trainer.run()?;
+    builder = builder
+        .artifacts(args.get("artifacts").unwrap_or("artifacts"))
+        .concurrent(args.flag("concurrent"));
+    let out = args.get("out").map(PathBuf::from);
+    if let Some(path) = &out {
+        builder = builder.observe(CsvHistory::new(path));
+    }
+    if args.flag("early-stop") {
+        builder = builder.observe(EarlyStop::paper_default());
+    }
+    if args.flag("progress") {
+        builder = builder.observe(ProgressLogger);
     }
 
-    if let Some(&(round, time, acc)) = trainer.history.eval_points().last() {
+    let mut session = builder.build()?;
+    {
+        let cfg = session.config();
+        eprintln!(
+            "training: N={} rounds={} strategy={} partition={}",
+            cfg.fleet.n_devices,
+            cfg.train.rounds,
+            cfg.strategy.as_str(),
+            cfg.partition.as_str()
+        );
+    }
+    session.run_to_completion()?;
+
+    if let Some(&(round, time, acc)) = session.history().eval_points().last() {
         eprintln!(
             "done: round {round} sim_time {time:.1}s test_acc {:.2}% loss {:.4}",
             acc * 100.0,
-            trainer.history.last_loss().unwrap_or(f64::NAN)
+            session.history().last_loss().unwrap_or(f64::NAN)
         );
     }
-    if let Some((round, time, acc)) = trainer.history.converged(0.0002, 5) {
+    if let Some((round, time, acc)) =
+        session.history().converged(CONVERGENCE_ACC_THRESHOLD, CONVERGENCE_WINDOW)
+    {
         eprintln!("converged @ round {round}: {:.2}% after {time:.1}s", acc * 100.0);
     }
-    if let Some(path) = args.get("out") {
-        let path = PathBuf::from(path);
-        trainer.history.write_csv(&path)?;
-        eprintln!("history -> {}", path.display());
-    }
-    let stats = trainer.engine.stats_blocking()?;
+    let stats = session.engine_stats()?;
     eprintln!(
         "engine: {} execs ({:.2}s exec, {:.2}s marshal), {} compiles ({:.1}s)",
         stats.executions, stats.exec_secs, stats.marshal_secs, stats.compiles, stats.compile_secs
     );
-    trainer.engine.shutdown();
+    session.finish()?; // flushes the CSV observer
+    if let Some(path) = out {
+        eprintln!("history -> {}", path.display());
+    }
     Ok(())
 }
 
@@ -110,9 +115,11 @@ fn cmd_optimize(args: &Args) -> hasfl::Result<()> {
     let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
     let profile = profile_arg(args.get("model").unwrap_or("vgg16"), &artifacts)?;
 
-    let mut cfg = Config::table1();
-    cfg.fleet.n_devices = devices;
-    cfg.seed = seed;
+    let cfg = Experiment::builder()
+        .config(Config::table1())
+        .devices(devices)
+        .seed(seed)
+        .build_config()?;
     let bound = BoundParams::default_for(&profile, cfg.train.lr);
     let fleet = cfg.sample_fleet();
     let ctx = OptContext {
@@ -150,8 +157,10 @@ fn cmd_latency(args: &Args) -> hasfl::Result<()> {
     let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
     let profile = profile_arg(args.get("model").unwrap_or("vgg16"), &artifacts)?;
 
-    let mut cfg = Config::table1();
-    cfg.fleet.n_devices = devices;
+    let cfg = Experiment::builder()
+        .config(Config::table1())
+        .devices(devices)
+        .build_config()?;
     let fleet = cfg.sample_fleet();
     let dec = Decisions::uniform(devices, batch, cut);
     let lat = round_latency(&profile, &fleet, &cfg.server, &dec);
@@ -182,6 +191,8 @@ fn cmd_info(args: &Args) -> hasfl::Result<()> {
 }
 
 fn cmd_config(args: &Args) -> hasfl::Result<()> {
+    // Emits the *raw* preset configs (Table I keeps its analytic VGG-16
+    // model here; `train --preset table1` swaps in the executable model).
     let cfg = match args.get("preset").unwrap_or("table1") {
         "small" => Config::small(),
         "figure" => Config::figure_small(),
@@ -210,6 +221,20 @@ fn main() -> hasfl::Result<()> {
         _ => {
             eprintln!("{USAGE}");
             std::process::exit(2);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::USAGE;
+
+    #[test]
+    fn usage_names_every_subcommand() {
+        // The doc comment, USAGE string, and main() dispatch must stay in
+        // sync; this guards the USAGE half.
+        for sub in ["train", "optimize", "latency", "info", "config"] {
+            assert!(USAGE.contains(sub), "USAGE is missing '{sub}'");
         }
     }
 }

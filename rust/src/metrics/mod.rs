@@ -3,6 +3,14 @@
 
 use std::io::Write;
 
+/// The paper's convergence rule, threshold half: "the test accuracy
+/// increases by less than 0.02%" per evaluation round.
+pub const CONVERGENCE_ACC_THRESHOLD: f64 = 0.0002;
+
+/// The paper's convergence rule, window half: stagnation must persist for
+/// five consecutive evaluation rounds.
+pub const CONVERGENCE_WINDOW: usize = 5;
+
 /// One training-round record.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Record {
@@ -74,7 +82,7 @@ impl History {
     /// Converged time with the paper's defaults, falling back to the last
     /// evaluation when the run ended before stagnation.
     pub fn converged_or_last(&self) -> Option<(usize, f64, f64)> {
-        self.converged(0.0002, 5)
+        self.converged(CONVERGENCE_ACC_THRESHOLD, CONVERGENCE_WINDOW)
             .or_else(|| self.eval_points().last().copied())
     }
 

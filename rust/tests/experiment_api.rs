@@ -1,0 +1,236 @@
+//! Tests for the `experiment` session API: builder validation, step/driver
+//! parity, and observer callback ordering. Engine-backed tests are skipped
+//! without artifacts (run `make artifacts`).
+
+use std::cell::RefCell;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use hasfl::config::{Config, ModelKind, StrategyKind};
+use hasfl::experiment::{Experiment, Observer, RoundReport};
+use hasfl::latency::Decisions;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+fn tiny_config() -> Config {
+    let mut cfg = Config::small();
+    cfg.fleet.n_devices = 2;
+    cfg.train.rounds = 5;
+    cfg.train.agg_interval = 2;
+    cfg.train.eval_every = 2;
+    cfg.train.train_samples = 256;
+    cfg.train.test_samples = 64;
+    cfg.train.batch_cap = 16;
+    cfg.strategy = StrategyKind::Fixed;
+    cfg.fixed_batch = 8;
+    cfg.fixed_cut = 3;
+    cfg
+}
+
+// ---------------------------------------------------------------------------
+// Builder validation (no artifacts / engine needed)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn build_rejects_zero_devices() {
+    let err = Experiment::builder().devices(0).build().unwrap_err();
+    assert!(err.to_string().contains("device"), "{err}");
+}
+
+#[test]
+fn build_rejects_zero_rounds() {
+    assert!(Experiment::builder().rounds(0).build().is_err());
+}
+
+#[test]
+fn build_rejects_analytic_models() {
+    let err = Experiment::builder().config(Config::table1()).build().unwrap_err();
+    assert!(err.to_string().contains("analytic"), "{err}");
+}
+
+#[test]
+fn build_rejects_bad_fixed_batch() {
+    assert!(Experiment::builder().fixed_batch(0).build().is_err());
+    // small preset: batch_cap = 32
+    assert!(Experiment::builder().fixed_batch(64).build().is_err());
+}
+
+#[test]
+fn build_rejects_missing_artifacts() {
+    let err = Experiment::builder()
+        .artifacts("definitely_not_an_artifacts_dir")
+        .build()
+        .unwrap_err();
+    assert!(err.to_string().contains("artifacts"), "{err}");
+}
+
+#[test]
+fn build_config_skips_engine_checks() {
+    // Analytic configs validate without an artifacts directory.
+    let cfg = Experiment::builder()
+        .config(Config::table1())
+        .devices(40)
+        .build_config()
+        .unwrap();
+    assert_eq!(cfg.model, ModelKind::Vgg16);
+    assert_eq!(cfg.fleet.n_devices, 40);
+}
+
+// ---------------------------------------------------------------------------
+// Engine-backed: artifact-level validation, parity, observers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn build_rejects_out_of_range_cut() {
+    let Some(dir) = artifacts_dir() else { return };
+    let err = Experiment::builder()
+        .config(tiny_config())
+        .fixed_cut(99)
+        .artifacts(&dir)
+        .build()
+        .unwrap_err();
+    assert!(err.to_string().contains("cut"), "{err}");
+}
+
+#[test]
+fn build_rejects_class_mismatch() {
+    let Some(dir) = artifacts_dir() else { return };
+    let err = Experiment::builder()
+        .config(tiny_config())
+        .tune(|c| c.train.classes = 100)
+        .artifacts(&dir)
+        .build()
+        .unwrap_err();
+    assert!(err.to_string().contains("classes"), "{err}");
+}
+
+#[test]
+fn manual_steps_match_run_to_completion() {
+    // Step-driven parity: driving the session by hand produces exactly the
+    // history the closed driver produces (same RNG stream, same records).
+    let Some(dir) = artifacts_dir() else { return };
+
+    let mut a = Experiment::builder().config(tiny_config()).artifacts(&dir).build().unwrap();
+    let mut reports = Vec::new();
+    while !a.is_done() {
+        reports.push(a.step().unwrap());
+    }
+    let ha = a.finish().unwrap();
+
+    let mut b = Experiment::builder().config(tiny_config()).artifacts(&dir).build().unwrap();
+    b.run_to_completion().unwrap();
+    let hb = b.finish().unwrap();
+
+    assert_eq!(ha.records, hb.records);
+    assert_eq!(reports.len(), 5);
+    // The report stream mirrors the history records exactly.
+    for (rep, rec) in reports.iter().zip(&ha.records) {
+        assert_eq!(rep.round, rec.round);
+        assert_eq!(rep.outcome.mean_loss, rec.loss);
+        assert_eq!(rep.sim_time, rec.sim_time);
+        assert_eq!(rep.test_acc, rec.test_acc);
+    }
+    // agg_interval = 2: rounds 2 and 4 aggregate + re-optimize.
+    let agg_rounds: Vec<usize> =
+        reports.iter().filter(|r| r.aggregated).map(|r| r.round).collect();
+    assert_eq!(agg_rounds, vec![2, 4]);
+}
+
+#[derive(Default)]
+struct RecordingObserver {
+    events: Rc<RefCell<Vec<String>>>,
+}
+
+impl Observer for RecordingObserver {
+    fn on_round(&mut self, report: &RoundReport) {
+        self.events.borrow_mut().push(format!("round:{}", report.round));
+    }
+    fn on_aggregation(&mut self, report: &RoundReport) {
+        self.events.borrow_mut().push(format!("agg:{}", report.round));
+    }
+    fn on_reoptimize(&mut self, report: &RoundReport, _dec: &Decisions) {
+        self.events.borrow_mut().push(format!("reopt:{}", report.round));
+    }
+    fn on_eval(&mut self, report: &RoundReport, _acc: f64) {
+        self.events.borrow_mut().push(format!("eval:{}", report.round));
+    }
+    fn on_complete(&mut self, _history: &hasfl::metrics::History) -> hasfl::Result<()> {
+        self.events.borrow_mut().push("complete".into());
+        Ok(())
+    }
+}
+
+#[test]
+fn observer_callbacks_fire_in_order() {
+    let Some(dir) = artifacts_dir() else { return };
+    let events = Rc::new(RefCell::new(Vec::new()));
+    let obs = RecordingObserver { events: Rc::clone(&events) };
+    let mut session = Experiment::builder()
+        .config(tiny_config())
+        .rounds(4)
+        .artifacts(&dir)
+        .observe(obs)
+        .build()
+        .unwrap();
+    session.run_to_completion().unwrap();
+    session.finish().unwrap();
+
+    // agg_interval = 2, eval_every = 2: per round on_round first, then
+    // aggregation -> reoptimize -> eval on the even rounds, and
+    // on_complete exactly once at finish().
+    let got = events.borrow().clone();
+    let want = vec![
+        "round:1",
+        "round:2",
+        "agg:2",
+        "reopt:2",
+        "eval:2",
+        "round:3",
+        "round:4",
+        "agg:4",
+        "reopt:4",
+        "eval:4",
+        "complete",
+    ];
+    assert_eq!(got, want);
+}
+
+struct StopAfter {
+    rounds: usize,
+    seen: usize,
+}
+
+impl Observer for StopAfter {
+    fn on_round(&mut self, _report: &RoundReport) {
+        self.seen += 1;
+    }
+    fn should_stop(&self) -> bool {
+        self.seen >= self.rounds
+    }
+}
+
+#[test]
+fn observer_can_stop_the_run_early() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut session = Experiment::builder()
+        .config(tiny_config())
+        .rounds(50)
+        .artifacts(&dir)
+        .observe(StopAfter { rounds: 3, seen: 0 })
+        .build()
+        .unwrap();
+    session.run_to_completion().unwrap();
+    assert_eq!(session.round(), 3);
+    assert!(!session.is_done());
+    assert!(session.stop_requested());
+    let history = session.finish().unwrap();
+    assert_eq!(history.records.len(), 3);
+}

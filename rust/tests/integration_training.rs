@@ -1,10 +1,11 @@
 //! End-to-end integration over the full coordinator: real SFL training of
-//! SplitCNN-8 through the PJRT runtime (skipped without artifacts).
+//! SplitCNN-8 through the PJRT runtime, driven by the `experiment` session
+//! API (skipped without artifacts).
 
 use std::path::PathBuf;
 
 use hasfl::config::{Config, Partition, StrategyKind};
-use hasfl::coordinator::Trainer;
+use hasfl::experiment::{Experiment, Session};
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -31,18 +32,30 @@ fn tiny_config() -> Config {
     cfg
 }
 
+fn tiny_session(dir: &std::path::Path) -> Session {
+    Experiment::builder()
+        .config(tiny_config())
+        .artifacts(dir)
+        .build()
+        .expect("session")
+}
+
 #[test]
 fn training_reduces_loss() {
     let Some(dir) = artifacts_dir() else { return };
-    let mut cfg = tiny_config();
-    cfg.train.rounds = 20;
-    let mut trainer = Trainer::new(cfg, &dir).expect("trainer");
-    trainer.run().expect("run");
-    let first: f64 = trainer.history.records[..4].iter().map(|r| r.loss).sum::<f64>() / 4.0;
-    let last: f64 = trainer.history.records[16..].iter().map(|r| r.loss).sum::<f64>() / 4.0;
+    let mut session = Experiment::builder()
+        .config(tiny_config())
+        .rounds(20)
+        .artifacts(&dir)
+        .build()
+        .expect("session");
+    session.run_to_completion().expect("run");
+    let records = &session.history().records;
+    let first: f64 = records[..4].iter().map(|r| r.loss).sum::<f64>() / 4.0;
+    let last: f64 = records[16..].iter().map(|r| r.loss).sum::<f64>() / 4.0;
     assert!(last < first, "loss did not decrease: {first} -> {last}");
-    assert!(trainer.sim_time > 0.0);
-    trainer.engine.shutdown();
+    assert!(session.sim_time() > 0.0);
+    session.finish().expect("finish");
 }
 
 #[test]
@@ -50,74 +63,88 @@ fn sequential_and_concurrent_rounds_agree() {
     // Same seed => identical sampling; the engine serializes compute, so
     // the concurrent actor topology must produce the same histories.
     let Some(dir) = artifacts_dir() else { return };
-    let mut a = Trainer::new(tiny_config(), &dir).expect("trainer a");
-    a.run().expect("run a");
-    let mut b = Trainer::new(tiny_config(), &dir).expect("trainer b");
+    let mut a = tiny_session(&dir);
+    a.run_to_completion().expect("run a");
+    let mut b = tiny_session(&dir);
     b.run_concurrent().expect("run b");
-    assert_eq!(a.history.records.len(), b.history.records.len());
-    for (ra, rb) in a.history.records.iter().zip(&b.history.records) {
+    assert_eq!(a.history().records.len(), b.history().records.len());
+    for (ra, rb) in a.history().records.iter().zip(&b.history().records) {
         assert!((ra.loss - rb.loss).abs() < 1e-6, "round {}: {} vs {}", ra.round, ra.loss, rb.loss);
         assert_eq!(ra.test_acc.is_some(), rb.test_acc.is_some());
     }
-    a.engine.shutdown();
-    b.engine.shutdown();
+    a.finish().expect("finish a");
+    b.finish().expect("finish b");
 }
 
 #[test]
 fn hasfl_strategy_runs_end_to_end() {
     let Some(dir) = artifacts_dir() else { return };
-    let mut cfg = tiny_config();
-    cfg.strategy = StrategyKind::Hasfl;
-    cfg.train.rounds = 6;
-    let mut trainer = Trainer::new(cfg, &dir).expect("trainer");
-    trainer.run().expect("run");
+    let mut session = Experiment::builder()
+        .config(tiny_config())
+        .strategy(StrategyKind::Hasfl)
+        .rounds(6)
+        .artifacts(&dir)
+        .build()
+        .expect("session");
+    session.run_to_completion().expect("run");
     // HASFL decisions must be in range and memory-feasible.
-    for (&b, &c) in trainer.dec.batch.iter().zip(&trainer.dec.cut) {
+    let dec = session.decisions();
+    let valid_cuts = session.trainer().manifest().valid_cuts.clone();
+    for (&b, &c) in dec.batch.iter().zip(&dec.cut) {
         assert!(b >= 1 && b <= 64);
-        assert!(trainer.manifest.valid_cuts.contains(&c));
+        assert!(valid_cuts.contains(&c));
     }
-    trainer.engine.shutdown();
+    session.finish().expect("finish");
 }
 
 #[test]
 fn noniid_partition_trains() {
     let Some(dir) = artifacts_dir() else { return };
-    let mut cfg = tiny_config();
-    cfg.partition = Partition::NonIidShards;
-    cfg.train.rounds = 6;
-    let mut trainer = Trainer::new(cfg, &dir).expect("trainer");
-    trainer.run().expect("run");
-    assert_eq!(trainer.history.records.len(), 6);
-    trainer.engine.shutdown();
+    let mut session = Experiment::builder()
+        .config(tiny_config())
+        .partition(Partition::NonIidShards)
+        .rounds(6)
+        .artifacts(&dir)
+        .build()
+        .expect("session");
+    session.run_to_completion().expect("run");
+    assert_eq!(session.history().records.len(), 6);
+    session.finish().expect("finish");
 }
 
 #[test]
 fn evaluation_accuracy_improves_over_random_guess() {
     let Some(dir) = artifacts_dir() else { return };
-    let mut cfg = tiny_config();
-    cfg.train.rounds = 60;
-    cfg.train.eval_every = 20;
-    cfg.fixed_batch = 16;
-    let mut trainer = Trainer::new(cfg, &dir).expect("trainer");
-    trainer.run().expect("run");
-    let accs = trainer.history.eval_points();
+    let mut session = Experiment::builder()
+        .config(tiny_config())
+        .rounds(60)
+        .eval_every(20)
+        .fixed_batch(16)
+        .artifacts(&dir)
+        .build()
+        .expect("session");
+    session.run_to_completion().expect("run");
+    let accs = session.history().eval_points();
     let best = accs.iter().map(|&(_, _, a)| a).fold(0.0f64, f64::max);
     // Random guess = 10%; the synthetic classes are separable so even a
     // short run should clear this comfortably.
     assert!(best > 0.2, "best acc {best} after {} evals", accs.len());
-    trainer.engine.shutdown();
+    session.finish().expect("finish");
 }
 
 #[test]
 fn estimator_picks_up_real_gradient_stats() {
     let Some(dir) = artifacts_dir() else { return };
-    let mut cfg = tiny_config();
-    cfg.train.rounds = 5;
-    let mut trainer = Trainer::new(cfg, &dir).expect("trainer");
-    trainer.run().expect("run");
-    assert_eq!(trainer.estimator.rounds_seen(), 5);
-    assert!(trainer.estimator.gsq().iter().any(|&g| g > 0.0));
-    let bp = trainer.bound_params();
+    let mut session = Experiment::builder()
+        .config(tiny_config())
+        .rounds(5)
+        .artifacts(&dir)
+        .build()
+        .expect("session");
+    session.run_to_completion().expect("run");
+    assert_eq!(session.trainer().estimator().rounds_seen(), 5);
+    assert!(session.trainer().estimator().gsq().iter().any(|&g| g > 0.0));
+    let bp = session.trainer().bound_params();
     assert!(bp.sigma_sq.iter().all(|&s| s >= 0.0));
-    trainer.engine.shutdown();
+    session.finish().expect("finish");
 }
