@@ -1,9 +1,14 @@
 # Top-level targets. `make check` is the tier-1 gate (see ROADMAP.md).
 
-.PHONY: check artifacts artifacts100 test
+.PHONY: check artifacts artifacts100 test bench-smoke
 
 check:
 	./ci.sh
+
+# One-iteration bench run (no timing assertions): proves the bench harness
+# and its BENCH_*.json emission still work. Wired into ci.sh.
+bench-smoke:
+	cd rust && HASFL_BENCH_SMOKE=1 cargo bench --bench e2e_round
 
 # AOT-lower the SplitCNN-8 fwd/bwd artifacts consumed by the PJRT runtime.
 artifacts:

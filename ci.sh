@@ -21,4 +21,7 @@ cargo fmt --check
 echo "== cargo clippy -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
 
+echo "== bench smoke (1 iteration, no timing assertions) =="
+HASFL_BENCH_SMOKE=1 cargo bench --bench e2e_round
+
 echo "CI OK"

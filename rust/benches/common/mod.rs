@@ -1,26 +1,37 @@
 //! Shared mini bench harness (criterion is unavailable offline): warmup +
-//! timed iterations, reporting min/median/mean like `cargo bench` output.
+//! timed iterations, reporting min/p50/mean/p95 like `cargo bench` output,
+//! with a machine-readable JSON form for the `BENCH_*.json` trajectory
+//! files and a CI smoke mode (`HASFL_BENCH_SMOKE=1`: one iteration, no
+//! warmup, no timing assertions — it only proves the harness still runs).
 
 use std::time::Instant;
+
+use hasfl::metrics::LatencySummary;
 
 pub struct BenchResult {
     pub name: String,
     pub iters: usize,
-    pub median_ns: f64,
-    pub mean_ns: f64,
-    pub min_ns: f64,
+    /// Percentile summary of the timed iterations, in nanoseconds.
+    pub summary: LatencySummary,
 }
 
 impl BenchResult {
     pub fn print(&self) {
         println!(
-            "bench {:<42} iters {:>5}  min {:>12}  median {:>12}  mean {:>12}",
+            "bench {:<42} iters {:>5}  min {:>12}  p50 {:>12}  mean {:>12}  p95 {:>12}",
             self.name,
             self.iters,
-            fmt_ns(self.min_ns),
-            fmt_ns(self.median_ns),
-            fmt_ns(self.mean_ns)
+            fmt_ns(self.summary.min),
+            fmt_ns(self.summary.p50),
+            fmt_ns(self.summary.mean),
+            fmt_ns(self.summary.p95)
         );
+    }
+
+    /// JSON object with millisecond-scaled percentiles.
+    #[allow(dead_code)] // only the benches that emit BENCH_*.json use this
+    pub fn to_json_ms(&self) -> hasfl::util::Json {
+        self.summary.scaled(1e-6).to_json("ms")
     }
 }
 
@@ -36,8 +47,24 @@ pub fn fmt_ns(ns: f64) -> String {
     }
 }
 
-/// Time `f` for `iters` iterations after `warmup` runs.
+/// Whether CI smoke mode is active.
+pub fn smoke() -> bool {
+    std::env::var("HASFL_BENCH_SMOKE").is_ok()
+}
+
+/// `(warmup, iters)` honouring smoke mode (one bare iteration there).
+pub fn iters_for(warmup: usize, iters: usize) -> (usize, usize) {
+    if smoke() {
+        (0, 1)
+    } else {
+        (warmup, iters)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs (both reduced to a
+/// single bare iteration in smoke mode).
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    let (warmup, iters) = iters_for(warmup, iters);
     for _ in 0..warmup {
         f();
     }
@@ -47,16 +74,8 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
         f();
         samples.push(t0.elapsed().as_nanos() as f64);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let median = samples[samples.len() / 2];
-    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
-    let res = BenchResult {
-        name: name.to_string(),
-        iters,
-        median_ns: median,
-        mean_ns: mean,
-        min_ns: samples[0],
-    };
+    let summary = LatencySummary::from_samples(&samples).expect("iters >= 1");
+    let res = BenchResult { name: name.to_string(), iters, summary };
     res.print();
     res
 }

@@ -1,50 +1,139 @@
 //! End-to-end round throughput: a full split-training step (all devices,
-//! steps a1–a5 + post-round aggregation) in sequential vs concurrent-actor
-//! mode, plus evaluation cost. The headline L3 number for DESIGN.md §8.
+//! steps a1–a5 + post-round aggregation) in sequential, single-engine
+//! concurrent, and pooled-concurrent modes, plus evaluation cost. The
+//! headline L3 number for DESIGN.md §8.
+//!
+//! Emits a machine-readable `BENCH_e2e.json` at the repo root (override
+//! with `HASFL_BENCH_JSON=path`; smoke mode writes to the temp dir) so
+//! future PRs have a perf trajectory to regress against.
 
 #[path = "common/mod.rs"]
 mod common;
 
 use hasfl::config::StrategyKind;
-use hasfl::experiment::{Experiment, Preset};
+use hasfl::experiment::{Experiment, Preset, Session};
+use hasfl::runtime::EngineStats;
+use hasfl::util::Json;
 
-fn main() {
-    let Some(dir) = common::artifacts_dir() else { return };
+const FLEET: usize = 4;
+const BATCH: u32 = 16;
+const CUT: usize = 4;
 
-    let mut session = Experiment::builder()
+fn build_session(dir: &std::path::Path, pool: usize) -> Session {
+    Experiment::builder()
         .preset(Preset::Small)
-        .devices(4)
+        .devices(FLEET)
         .strategy(StrategyKind::Fixed)
-        .fixed_batch(16)
-        .fixed_cut(4)
+        .fixed_batch(BATCH)
+        .fixed_cut(CUT)
         // Big round budget, no scheduled evals, no aggregation windows:
         // step() timing stays pure per-round work.
         .rounds(1_000_000)
         .eval_every(1_000_000)
         .agg_interval(1_000_000)
+        .engine_pool(pool)
         .tune(|c| {
             c.train.train_samples = 1024;
             c.train.test_samples = 256;
         })
-        .artifacts(&dir)
+        .artifacts(dir)
         .build()
-        .expect("session");
+        .expect("session")
+}
 
-    common::bench("step_sequential_n4_b16", 2, 15, || {
-        std::hint::black_box(session.step().unwrap());
-    });
-    session.set_concurrent(true);
-    common::bench("step_concurrent_n4_b16", 2, 15, || {
-        std::hint::black_box(session.step().unwrap());
-    });
-    common::bench("evaluate_testset_256", 1, 5, || {
-        std::hint::black_box(session.evaluate_now().unwrap());
-    });
+/// Per-round marshal accounting for one session's engine stats.
+fn marshal_json(stats: &EngineStats, rounds: usize) -> Json {
+    let rounds = rounds.max(1) as f64;
+    let packed = stats.upload_bytes as f64;
+    let saved = stats.buffer_hit_bytes as f64;
+    let mut j = Json::obj();
+    j.set("engine_pool_width", Json::Num(stats.pool_width as f64))
+        .set("rounds", Json::Num(rounds))
+        .set("exec_secs", Json::Num(stats.exec_secs))
+        .set("upload_secs", Json::Num(stats.upload_secs))
+        .set("download_secs", Json::Num(stats.download_secs))
+        .set("marshal_secs", Json::Num(stats.marshal_secs()))
+        .set("upload_bytes_per_round", Json::Num(packed / rounds))
+        .set("download_bytes_per_round", Json::Num(stats.download_bytes as f64 / rounds))
+        .set("buffer_hit_bytes_per_round", Json::Num(saved / rounds))
+        // Fraction of would-be upload bytes that skipped literal packing
+        // thanks to the buffer cache (the seed packed everything).
+        .set("upload_saved_frac", Json::Num(saved / (saved + packed).max(1.0)))
+        .set("buffer_hits", Json::Num(stats.buffer_hits as f64))
+        .set("buffer_misses", Json::Num(stats.buffer_misses as f64));
+    j
+}
 
-    let stats = session.engine_stats().unwrap();
-    println!(
-        "engine: {} execs, exec {:.2}s, marshal {:.2}s, {} compiles {:.1}s",
-        stats.executions, stats.exec_secs, stats.marshal_secs, stats.compiles, stats.compile_secs
-    );
-    session.finish().unwrap();
+fn bench_json_path() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("HASFL_BENCH_JSON") {
+        return p.into();
+    }
+    if common::smoke() {
+        return std::env::temp_dir().join("BENCH_e2e.json");
+    }
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_e2e.json")
+}
+
+fn main() {
+    let Some(dir) = common::artifacts_dir() else { return };
+
+    // Sequential baseline (single lane, the seed data path).
+    let mut seq = build_session(&dir, 1);
+    let r_seq = common::bench("step_sequential_n4_b16", 2, 15, || {
+        std::hint::black_box(seq.step().unwrap());
+    });
+    let seq_stats = seq.engine_stats().unwrap();
+    let seq_rounds = seq.round();
+    seq.finish().unwrap();
+
+    // Concurrent actors over one engine lane: message passing overlaps,
+    // compute still serializes.
+    let mut conc1 = build_session(&dir, 1);
+    conc1.set_concurrent(true);
+    let r_conc1 = common::bench("step_concurrent_pool1_n4_b16", 2, 15, || {
+        std::hint::black_box(conc1.step().unwrap());
+    });
+    conc1.finish().unwrap();
+
+    // Pooled concurrent: devices spread over engine lanes (auto width).
+    let mut pooled = build_session(&dir, 0);
+    pooled.set_concurrent(true);
+    let width = pooled.engine_width();
+    let r_pool = common::bench(&format!("step_concurrent_pool{width}_n4_b16"), 2, 15, || {
+        std::hint::black_box(pooled.step().unwrap());
+    });
+    let pool_stats = pooled.engine_stats().unwrap();
+    let pool_rounds = pooled.round();
+
+    let r_eval = common::bench("evaluate_testset_256", 1, 5, || {
+        std::hint::black_box(pooled.evaluate_now().unwrap());
+    });
+    println!("engine (pooled): {}", pool_stats.summary());
+    pooled.finish().unwrap();
+
+    let mut j = Json::obj();
+    j.set("bench", Json::Str("e2e_round".into()))
+        .set("smoke", Json::Bool(common::smoke()))
+        .set("fleet", Json::Num(FLEET as f64))
+        .set("fixed_batch", Json::Num(BATCH as f64))
+        .set("fixed_cut", Json::Num(CUT as f64))
+        .set("engine_pool_width", Json::Num(width as f64))
+        .set("step_sequential", r_seq.to_json_ms())
+        .set("step_concurrent_pool1", r_conc1.to_json_ms())
+        .set("step_concurrent_pooled", r_pool.to_json_ms())
+        .set("evaluate", r_eval.to_json_ms())
+        .set(
+            "speedup_pool1_vs_sequential",
+            Json::Num(r_seq.summary.p50 / r_conc1.summary.p50),
+        )
+        .set(
+            "speedup_pooled_vs_sequential",
+            Json::Num(r_seq.summary.p50 / r_pool.summary.p50),
+        )
+        .set("marshal_sequential", marshal_json(&seq_stats, seq_rounds))
+        .set("marshal_pooled", marshal_json(&pool_stats, pool_rounds));
+
+    let path = bench_json_path();
+    std::fs::write(&path, j.dump()).expect("write bench json");
+    println!("bench report -> {}", path.display());
 }

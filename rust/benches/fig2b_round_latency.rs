@@ -4,6 +4,8 @@
 //! Reports (i) the paper's fig2b rows (simulated latency per batch size)
 //! and (ii) the wall-clock cost of evaluating the latency model itself —
 //! it sits inside the optimizer's inner loop, so it must stay cheap.
+//! Timings report min/p50/mean/p95; `HASFL_BENCH_SMOKE=1` runs one bare
+//! iteration per case (the CI `make bench-smoke` path).
 
 #[path = "common/mod.rs"]
 mod common;

@@ -1,5 +1,7 @@
 //! Bench + table for Fig 3(b): computing and communication overhead of SFL
 //! at different model split points (VGG-16, b=16).
+//! Timings report min/p50/mean/p95; `HASFL_BENCH_SMOKE=1` runs one bare
+//! iteration per case (the CI `make bench-smoke` path).
 
 #[path = "common/mod.rs"]
 mod common;

@@ -2,6 +2,8 @@
 //! solver, and the MS BCD/Dinkelbach solvers across fleet sizes. The paper
 //! re-optimizes every I rounds, so solve time must be negligible next to a
 //! training round (~seconds at paper scale).
+//! Timings report min/p50/mean/p95; `HASFL_BENCH_SMOKE=1` runs one bare
+//! iteration per case (the CI `make bench-smoke` path).
 
 #[path = "common/mod.rs"]
 mod common;

@@ -1,14 +1,16 @@
-//! PJRT runtime hot path: executable-cache hit cost, literal marshalling,
-//! and the three split-step executions at several (cut, bucket) points.
-//! This is the L3 perf target: the engine boundary must not dominate the
-//! actual XLA compute.
+//! PJRT runtime hot path: executable-cache hit cost, literal marshalling
+//! (fresh vs buffer-cached parameters), and the three split-step
+//! executions at several (cut, bucket) points. This is the L3 perf target:
+//! the engine boundary must not dominate the actual XLA compute.
 
 #[path = "common/mod.rs"]
 mod common;
 
+use std::sync::Arc;
+
 use hasfl::model::{Manifest, Params};
-use hasfl::runtime::{tensor_to_host, EngineHandle, HostTensor, StepArtifacts};
 use hasfl::rng::Pcg32;
+use hasfl::runtime::{tensor_to_shared, BufKey, EngineHandle, ExecInput, HostTensor, StepArtifacts};
 
 fn main() {
     let Some(dir) = common::artifacts_dir() else { return };
@@ -33,19 +35,38 @@ fn main() {
         let w = HostTensor { shape: vec![b], data: vec![1.0; b] };
         let sa = StepArtifacts::resolve(&manifest, cut, bucket).unwrap();
 
-        // client_fwd
+        // client_fwd, params marshalled fresh on every call (seed path)
         let mut cf_in = vec![x.clone()];
-        cf_in.extend(params.client_slice(cut).iter().map(tensor_to_host));
+        cf_in.extend(params.client_slice(cut).iter().map(hasfl::runtime::tensor_to_host));
         common::bench(&format!("client_fwd_c{cut}_b{bucket}"), 3, 30, || {
             std::hint::black_box(
                 engine.execute_blocking(&sa.client_fwd, cf_in.clone()).unwrap(),
             );
         });
 
+        // client_fwd again, params served from the engine buffer cache
+        let x_shared = Arc::new(x.clone());
+        let cached_in: Vec<ExecInput> = std::iter::once(ExecInput::cached(
+            BufKey { set: cut as u64, slot: BufKey::SLOT_X },
+            1,
+            Arc::clone(&x_shared),
+        ))
+        .chain(params.client_slice(cut).iter().enumerate().map(|(s, t)| {
+            ExecInput::cached(BufKey { set: cut as u64, slot: s as u32 }, 1, tensor_to_shared(t))
+        }))
+        .collect();
+        common::bench(&format!("client_fwd_c{cut}_b{bucket}_cached"), 3, 30, || {
+            std::hint::black_box(
+                engine
+                    .execute_inputs_blocking(0, &sa.client_fwd, cached_in.clone())
+                    .unwrap(),
+            );
+        });
+
         // server_step
         let a = engine.execute_blocking(&sa.client_fwd, cf_in.clone()).unwrap().remove(0);
         let mut ss_in = vec![a.clone(), y.clone(), w.clone()];
-        ss_in.extend(params.server_slice(cut).iter().map(tensor_to_host));
+        ss_in.extend(params.server_slice(cut).iter().map(hasfl::runtime::tensor_to_host));
         common::bench(&format!("server_step_c{cut}_b{bucket}"), 3, 30, || {
             std::hint::black_box(
                 engine.execute_blocking(&sa.server_step, ss_in.clone()).unwrap(),
@@ -54,7 +75,7 @@ fn main() {
 
         // client_bwd
         let mut cb_in = vec![x.clone(), a.clone()];
-        cb_in.extend(params.client_slice(cut).iter().map(tensor_to_host));
+        cb_in.extend(params.client_slice(cut).iter().map(hasfl::runtime::tensor_to_host));
         common::bench(&format!("client_bwd_c{cut}_b{bucket}"), 3, 30, || {
             std::hint::black_box(
                 engine.execute_blocking(&sa.client_bwd, cb_in.clone()).unwrap(),
@@ -69,18 +90,23 @@ fn main() {
         data: (0..64 * px).map(|_| rng.normal() as f32 * 0.5).collect(),
     };
     let mut inputs = vec![x];
-    inputs.extend(params.tensors.iter().map(tensor_to_host));
+    inputs.extend(params.tensors.iter().map(hasfl::runtime::tensor_to_host));
     common::bench("full_fwd_b64 (eval path)", 3, 30, || {
         std::hint::black_box(engine.execute_blocking(&name, inputs.clone()).unwrap());
     });
 
     let stats = engine.stats_blocking().unwrap();
     println!(
-        "engine stats: {} execs, exec {:.3}s, marshal {:.3}s ({:.1}% of exec)",
+        "engine stats: {} execs, exec {:.3}s, marshal {:.3}s ({:.1}% of exec; \
+         up {:.3}s / down {:.3}s), {} buffer hits saved {:.1} MiB",
         stats.executions,
         stats.exec_secs,
-        stats.marshal_secs,
-        100.0 * stats.marshal_secs / stats.exec_secs.max(1e-9)
+        stats.marshal_secs(),
+        100.0 * stats.marshal_secs() / stats.exec_secs.max(1e-9),
+        stats.upload_secs,
+        stats.download_secs,
+        stats.buffer_hits,
+        stats.buffer_hit_bytes as f64 / (1024.0 * 1024.0)
     );
     engine.shutdown();
 }

@@ -41,15 +41,27 @@ pub fn aggregate_forged(params: &mut [Params], dec: &Decisions) {
 
 /// Global model = average of every device's full model (used for
 /// evaluation; matches the paper's analysis object w^t = mean_i w_i^t).
+///
+/// Single accumulate-then-scale pass over flat slices: start from a copy of
+/// the first set, add the rest element-wise, then multiply once by 1/n —
+/// one divide per *model* instead of the historical one divide per
+/// (element × device). Agreement with the old per-element `/ n`
+/// formulation is covered by a tolerance test below.
 pub fn global_average(params: &[Params]) -> Params {
     assert!(!params.is_empty());
-    let mut out = params[0].zeros_like();
-    let n = params.len() as f32;
-    for p in params {
+    let mut out = params[0].clone();
+    out.version = 0;
+    for p in &params[1..] {
         for (o, t) in out.tensors.iter_mut().zip(&p.tensors) {
             for (ov, &tv) in o.data.iter_mut().zip(&t.data) {
-                *ov += tv / n;
+                *ov += tv;
             }
+        }
+    }
+    let inv = 1.0 / params.len() as f32;
+    for t in out.tensors.iter_mut() {
+        for v in &mut t.data {
+            *v *= inv;
         }
     }
     out
@@ -78,6 +90,7 @@ mod tests {
                 .map(|_| Tensor { shape: vec![2], data: vec![v, v] })
                 .collect(),
             n_blocks,
+            version: 0,
         }
     }
 
@@ -120,6 +133,45 @@ mod tests {
         let g = global_average(&params);
         for t in &g.tensors {
             assert_eq!(t.data, vec![2.0, 2.0]);
+        }
+    }
+
+    #[test]
+    fn global_average_matches_per_element_divide_formulation() {
+        // Bit-equivalence tolerance check: accumulate-then-scale vs the old
+        // `sum of (v / n)` loop. The two round differently, but must agree
+        // to float tolerance on realistic magnitudes.
+        let mut rng = crate::rng::Pcg32::seeded(77);
+        let n_blocks = 3;
+        let sets: Vec<Params> = (0..5)
+            .map(|_| Params {
+                tensors: (0..2 * n_blocks)
+                    .map(|_| Tensor {
+                        shape: vec![17],
+                        data: (0..17).map(|_| rng.normal() as f32).collect(),
+                    })
+                    .collect(),
+                n_blocks,
+                version: 0,
+            })
+            .collect();
+
+        // Old formulation, inlined as the reference.
+        let mut want = sets[0].zeros_like();
+        let n = sets.len() as f32;
+        for p in &sets {
+            for (o, t) in want.tensors.iter_mut().zip(&p.tensors) {
+                for (ov, &tv) in o.data.iter_mut().zip(&t.data) {
+                    *ov += tv / n;
+                }
+            }
+        }
+
+        let got = global_average(&sets);
+        for (g, w) in got.tensors.iter().zip(&want.tensors) {
+            for (&a, &b) in g.data.iter().zip(&w.data) {
+                assert!((a - b).abs() <= 1e-6 + 1e-6 * b.abs(), "{a} vs {b}");
+            }
         }
     }
 

@@ -250,6 +250,10 @@ pub struct Config {
     /// Fixed decisions used when `strategy` is one of the fixed variants.
     pub fixed_batch: u32,
     pub fixed_cut: usize,
+    /// PJRT engine-pool width: lanes that execute devices concurrently.
+    /// 0 = auto (min of fleet size, host parallelism, and 8). Numerics are
+    /// identical at any width (verified by `rust/tests/parity_modes.rs`).
+    pub engine_pool: usize,
 }
 
 impl Config {
@@ -289,7 +293,8 @@ impl Config {
             .set("partition", Json::Str(self.partition.as_str().into()))
             .set("strategy", Json::Str(self.strategy.as_str().into()))
             .set("fixed_batch", Json::Num(self.fixed_batch as f64))
-            .set("fixed_cut", Json::Num(self.fixed_cut as f64));
+            .set("fixed_cut", Json::Num(self.fixed_cut as f64))
+            .set("engine_pool", Json::Num(self.engine_pool as f64));
         root
     }
 
@@ -333,6 +338,11 @@ impl Config {
             strategy: StrategyKind::parse(j.req("strategy")?.as_str()?)?,
             fixed_batch: j.req("fixed_batch")?.as_u32()?,
             fixed_cut: j.req("fixed_cut")?.as_usize()?,
+            // Absent in configs saved before the engine pool existed: auto.
+            engine_pool: match j.get("engine_pool") {
+                Some(v) => v.as_usize()?,
+                None => 0,
+            },
         })
     }
 
@@ -448,6 +458,23 @@ mod tests {
             cfg.save(&path).unwrap();
             assert_eq!(Config::load(&path).unwrap(), cfg, "file round-trip for preset '{name}'");
         }
+    }
+
+    #[test]
+    fn engine_pool_defaults_to_auto_for_legacy_configs() {
+        // Configs saved before the engine pool existed have no
+        // "engine_pool" key; they must load as 0 (auto).
+        let mut j = Config::small().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("engine_pool");
+        }
+        let cfg = Config::from_json(&j).unwrap();
+        assert_eq!(cfg.engine_pool, 0);
+
+        let mut cfg2 = Config::small();
+        cfg2.engine_pool = 3;
+        let back = Config::from_json(&Json::parse(&cfg2.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.engine_pool, 3);
     }
 
     #[test]

@@ -42,6 +42,7 @@ impl Config {
             strategy: StrategyKind::Hasfl,
             fixed_batch: 16,
             fixed_cut: 4,
+            engine_pool: 0,
         }
     }
 

@@ -5,17 +5,20 @@
 //! [`Trainer`] owns the per-round primitives; the driving loop lives in
 //! [`crate::experiment::Session`], which steps the trainer one round at a
 //! time. Two execution modes with identical numerics:
-//! - [`Trainer::run_round`] — sequential round (single caller thread).
-//! - [`Trainer::run_round_concurrent`] — actor round: one OS thread per edge
-//!   device runs steps a1/a5 and the server exchange; the PJRT engine
-//!   thread serializes actual compute (CPU client), so this mode exercises
-//!   the real message-passing topology without changing results.
+//! - [`Trainer::run_round`] — sequential round (single caller thread,
+//!   engine lane 0).
+//! - [`Trainer::run_round_concurrent`] — actor round: one OS thread per
+//!   edge device runs steps a1/a5 and the server exchange, routed to
+//!   engine lane `i % pool_width`, so device legs genuinely overlap when
+//!   the pool has width > 1. Results are applied in device order, so
+//!   numerics are bit-identical to sequential mode (`tests/parity_modes`).
 
 mod round;
 
 pub use round::RoundOutcome;
 
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::aggregation::{aggregate_common, aggregate_forged, global_average};
 use crate::config::{Config, Device, ModelKind};
@@ -26,7 +29,7 @@ use crate::metrics::{History, Record};
 use crate::model::{profile_for, Manifest, ModelProfile, Params};
 use crate::optimizer::{decide, OptContext, StrategyInputs};
 use crate::rng::Pcg32;
-use crate::runtime::EngineHandle;
+use crate::runtime::{tensor_to_shared, BufKey, EngineHandle, ExecInput, HostTensor, StepArtifacts};
 
 /// Post-round bookkeeping result (latency + aggregation events), consumed
 /// by [`crate::experiment::Session::step`] when assembling the round
@@ -59,6 +62,32 @@ pub struct Trainer {
     pub(crate) sim_time: f64,
     pub(crate) dec: Decisions,
     strategy_inputs: StrategyInputs,
+    /// Per-device artifact names resolved once per decision window
+    /// (refreshed only when `dec` changes, not on every round).
+    pub(crate) step_artifacts: Vec<Arc<StepArtifacts>>,
+    /// Rounds started so far; versions the per-round input batch buffers.
+    pub(crate) rounds_run: u64,
+    /// Evaluations run so far; versions the eval-time global-model buffers.
+    eval_epoch: u64,
+    /// Version of the fleet-common server sub-model (bumped by the
+    /// per-round Eqn-4 aggregation in [`Trainer::post_round`]).
+    pub(crate) common_version: u64,
+    /// Version of the last full fleet synchronisation (forged aggregation).
+    pub(crate) sync_version: u64,
+    /// True while every device provably holds identical parameters (at
+    /// init, and on the round right after a forged sync) — lets devices
+    /// share packed client-side literals. Cleared by the first SGD update.
+    pub(crate) fleet_synced: bool,
+}
+
+/// Resolve the configured engine-pool width: 0 = auto (fleet size capped by
+/// host parallelism and 8 — lanes beyond the core count only add memory).
+fn resolve_pool_width(configured: usize, n_devices: usize) -> usize {
+    if configured > 0 {
+        return configured;
+    }
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    n_devices.min(cores).clamp(1, 8)
 }
 
 impl Trainer {
@@ -69,7 +98,8 @@ impl Trainer {
     /// bounds, artifact compatibility) before reaching here.
     pub(crate) fn new(cfg: Config, artifacts_dir: &Path) -> crate::Result<Trainer> {
         debug_assert_eq!(cfg.model, ModelKind::Splitcnn8, "builder admits only the executable model");
-        let engine = EngineHandle::spawn(artifacts_dir.to_path_buf())?;
+        let width = resolve_pool_width(cfg.engine_pool, cfg.fleet.n_devices);
+        let engine = EngineHandle::spawn_pool(artifacts_dir.to_path_buf(), width)?;
         let manifest = Manifest::load(artifacts_dir)?;
         anyhow::ensure!(
             manifest.num_classes == cfg.train.classes,
@@ -120,9 +150,31 @@ impl Trainer {
             sim_time: 0.0,
             dec: Decisions::uniform(n, 1, 1),
             strategy_inputs,
+            step_artifacts: Vec::new(),
+            rounds_run: 0,
+            eval_epoch: 0,
+            common_version: 0,
+            sync_version: 0,
+            // Every device holds a clone of `init` until the first update.
+            fleet_synced: true,
         };
         t.dec = t.next_decisions();
+        t.refresh_step_artifacts()?;
         Ok(t)
+    }
+
+    /// Re-resolve per-device artifact names from the decisions in force.
+    /// Called whenever `dec` changes so `prepare_device` (the per-round
+    /// path) only clones an `Arc`.
+    fn refresh_step_artifacts(&mut self) -> crate::Result<()> {
+        let n = self.dec.cut.len();
+        let mut arts = Vec::with_capacity(n);
+        for i in 0..n {
+            let sa = StepArtifacts::resolve(&self.manifest, self.dec.cut[i], self.dec.batch[i])?;
+            arts.push(Arc::new(sa));
+        }
+        self.step_artifacts = arts;
+        Ok(())
     }
 
     /// The experiment configuration.
@@ -168,6 +220,12 @@ impl Trainer {
     /// The Assumption-2 gradient-statistics estimator.
     pub fn estimator(&self) -> &GradStatsEstimator {
         &self.estimator
+    }
+
+    /// Per-device model parameters (read access for parity tests and
+    /// diagnostics).
+    pub fn params(&self) -> &[Params] {
+        &self.params
     }
 
     pub(crate) fn push_record(&mut self, rec: Record) {
@@ -226,10 +284,19 @@ impl Trainer {
     /// `full_fwd` artifact.
     pub(crate) fn evaluate(&mut self) -> crate::Result<f64> {
         let global = global_average(&self.params);
+        self.eval_epoch += 1;
         let bucket = self.manifest.max_bucket();
         let classes = self.cfg.train.classes;
         let name = Manifest::full_name("full_fwd", bucket);
         let px = crate::data::PIXELS;
+
+        // Pack the averaged model once per evaluation; every chunk after
+        // the first serves the parameters from the engine buffer cache.
+        let mut global_inputs = Vec::with_capacity(global.tensors.len());
+        for (s, t) in global.tensors.iter().enumerate() {
+            let key = BufKey { set: BufKey::EVAL_SET, slot: s as u32 };
+            global_inputs.push(ExecInput::cached(key, self.eval_epoch, tensor_to_shared(t)));
+        }
 
         let mut correct = 0usize;
         let mut total = 0usize;
@@ -241,12 +308,13 @@ impl Trainer {
             for r in 0..take {
                 x[r * px..(r + 1) * px].copy_from_slice(self.test_set.image(i + r));
             }
-            let mut inputs = vec![crate::runtime::HostTensor {
+            let mut inputs = Vec::with_capacity(1 + global_inputs.len());
+            inputs.push(ExecInput::Fresh(HostTensor {
                 shape: vec![bucket as usize, 32, 32, 3],
                 data: x,
-            }];
-            inputs.extend(global.tensors.iter().map(crate::runtime::tensor_to_host));
-            let out = self.engine.execute_blocking(&name, inputs)?;
+            }));
+            inputs.extend(global_inputs.iter().cloned());
+            let out = self.engine.execute_inputs_blocking(0, &name, inputs)?;
             let logits = &out[0];
             for r in 0..take {
                 let row = &logits.data[r * classes..(r + 1) * classes];
@@ -269,21 +337,30 @@ impl Trainer {
     /// Advance the simulated clock for round `t` and perform the periodic
     /// aggregation + re-optimization bookkeeping. Returns the latency and
     /// aggregation events for the round report.
-    pub(crate) fn post_round(&mut self, t: usize) -> PostRound {
+    pub(crate) fn post_round(&mut self, t: usize) -> crate::Result<PostRound> {
         let latency = self.current_round_latency();
         self.sim_time += latency.t_split;
 
-        // Per-round server-side common aggregation (Eqn 4).
+        // Per-round server-side common aggregation (Eqn 4). After it, the
+        // common region is identical on every device, which is what lets
+        // `prepare_device` key those tensors under `BufKey::COMMON_SET`.
         aggregate_common(&mut self.params, &self.dec);
+        self.common_version += 1;
 
         let aggregated = t % self.cfg.train.agg_interval == 0;
         if aggregated {
             // Steps b1-b3 (Eqn 7) + re-optimization (Alg 1 line 24).
             aggregate_forged(&mut self.params, &self.dec);
             self.sim_time += latency.t_agg;
+            self.sync_version += 1;
+            self.fleet_synced = true;
+            // Re-optimization may move L_c; that is only safe for the
+            // COMMON_SET keying because it happens on forged-sync rounds,
+            // when the *whole* model is fleet-identical.
             self.dec = self.next_decisions();
+            self.refresh_step_artifacts()?;
         }
-        PostRound { latency, aggregated, reoptimized: aggregated }
+        Ok(PostRound { latency, aggregated, reoptimized: aggregated })
     }
 
     pub fn n_devices(&self) -> usize {

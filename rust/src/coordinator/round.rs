@@ -1,9 +1,20 @@
 //! One split-training round (Algorithm 1, steps a1–a5) over the PJRT
 //! runtime, in sequential and concurrent-actor forms.
+//!
+//! Data-movement contract: a round *moves* activations and gradients, not
+//! weights. Parameters are copied out of [`Trainer::params`] exactly once
+//! (into shared `Arc` tensors) and everything downstream — the device
+//! threads, the engine channel, the cf/cb double use — clones handles, not
+//! data. The engine's buffer cache then packs each versioned tensor into a
+//! PJRT literal at most once per lane per version (DESIGN.md §8).
+
+use std::sync::Arc;
 
 use super::Trainer;
 use crate::model::Tensor;
-use crate::runtime::{host_to_tensor, tensor_to_host, HostTensor, StepArtifacts};
+use crate::runtime::{
+    host_to_tensor, tensor_to_shared, BufKey, ExecInput, HostTensor, StepArtifacts,
+};
 
 /// Aggregate result of one round.
 #[derive(Debug, Clone)]
@@ -15,17 +26,19 @@ pub struct RoundOutcome {
 }
 
 /// Everything one device needs for its round, detached from the trainer so
-/// async tasks can own it.
+/// async tasks can own it. Parameter inputs are `Arc`-backed handles.
 struct DeviceWork {
     idx: usize,
     #[allow(dead_code)] // kept for tracing/debug parity with the paper notation
     cut: usize,
-    artifacts: StepArtifacts,
-    x: HostTensor,
-    onehot: HostTensor,
-    weights: HostTensor,
-    client_params: Vec<HostTensor>,
-    server_params: Vec<HostTensor>,
+    /// Engine-pool lane this device's executes are routed to.
+    lane: usize,
+    artifacts: Arc<StepArtifacts>,
+    x: ExecInput,
+    onehot: ExecInput,
+    weights: ExecInput,
+    client_params: Vec<ExecInput>,
+    server_params: Vec<ExecInput>,
     true_batch: u32,
 }
 
@@ -39,10 +52,32 @@ struct DeviceResult {
 }
 
 impl Trainer {
-    fn prepare_device(&mut self, i: usize) -> crate::Result<DeviceWork> {
+    /// One shared `Arc` per fleet-identical tensor slot for this round
+    /// (`None` where the slot is device-specific), built from device 0 so
+    /// the identical bytes are host-copied once per round, not per device.
+    fn shared_param_arcs(&self) -> Vec<Option<Arc<HostTensor>>> {
+        let p0 = &self.params[0];
+        let common_lo = 2 * self.dec.l_c().min(p0.n_blocks);
+        let mut shared = Vec::with_capacity(p0.tensors.len());
+        for (slot, t) in p0.tensors.iter().enumerate() {
+            if slot >= common_lo || self.fleet_synced {
+                shared.push(Some(tensor_to_shared(t)));
+            } else {
+                shared.push(None);
+            }
+        }
+        shared
+    }
+
+    fn prepare_device(
+        &mut self,
+        i: usize,
+        lane: usize,
+        shared: &[Option<Arc<HostTensor>>],
+    ) -> crate::Result<DeviceWork> {
         let cut = self.dec.cut[i];
         let b = self.dec.batch[i];
-        let artifacts = StepArtifacts::resolve(&self.manifest, cut, b)?;
+        let artifacts = Arc::clone(&self.step_artifacts[i]);
         let bucket = artifacts.bucket;
         let classes = self.cfg.train.classes;
 
@@ -50,16 +85,75 @@ impl Trainer {
         // (disjoint field borrows: samplers mutably, train_set immutably)
         let batch = self.samplers[i].sample(&self.train_set, b, bucket);
 
+        // Buffer-cache keying: the slot is the global tensor index; the set
+        // is the device, except for regions that are provably identical
+        // across the fleet this round — the common server sub-model (Eqn 4
+        // averages it every round) and, right after a forged sync, the
+        // whole model. Shared sets let devices on the same engine lane
+        // reuse one packed literal (invalidation rules: DESIGN.md §8).
         let params = &self.params[i];
+        let common_lo = 2 * self.dec.l_c().min(params.n_blocks);
+        let pv = params.version;
+        let (common_version, sync_version) = (self.common_version, self.sync_version);
+        #[cfg(debug_assertions)]
+        for (slot, t) in params.tensors.iter().enumerate() {
+            if shared[slot].is_some() {
+                debug_assert_eq!(
+                    t,
+                    &self.params[0].tensors[slot],
+                    "shared-set keying requires fleet-identical tensors (slot {slot})"
+                );
+            }
+        }
+        let keyed = |slot: usize, t: &Tensor| -> ExecInput {
+            match &shared[slot] {
+                Some(arc) if slot >= common_lo => ExecInput::cached(
+                    BufKey { set: BufKey::COMMON_SET, slot: slot as u32 },
+                    common_version,
+                    Arc::clone(arc),
+                ),
+                Some(arc) => ExecInput::cached(
+                    BufKey { set: BufKey::SYNC_SET, slot: slot as u32 },
+                    sync_version,
+                    Arc::clone(arc),
+                ),
+                None => ExecInput::cached(
+                    BufKey { set: i as u64, slot: slot as u32 },
+                    pv,
+                    tensor_to_shared(t),
+                ),
+            }
+        };
+        let mut client_params = Vec::with_capacity(2 * cut);
+        let mut server_params = Vec::with_capacity(params.tensors.len() - 2 * cut);
+        for (slot, t) in params.tensors.iter().enumerate() {
+            if slot < 2 * cut {
+                client_params.push(keyed(slot, t));
+            } else {
+                server_params.push(keyed(slot, t));
+            }
+        }
+
         Ok(DeviceWork {
             idx: i,
             cut,
+            lane,
             artifacts,
-            x: HostTensor { shape: vec![bucket as usize, 32, 32, 3], data: batch.x },
-            onehot: HostTensor { shape: vec![bucket as usize, classes], data: batch.onehot },
-            weights: HostTensor { shape: vec![bucket as usize], data: batch.weights },
-            client_params: params.client_slice(cut).iter().map(tensor_to_host).collect(),
-            server_params: params.server_slice(cut).iter().map(tensor_to_host).collect(),
+            x: ExecInput::cached(
+                BufKey { set: i as u64, slot: BufKey::SLOT_X },
+                self.rounds_run,
+                Arc::new(HostTensor { shape: vec![bucket as usize, 32, 32, 3], data: batch.x }),
+            ),
+            onehot: ExecInput::Fresh(HostTensor {
+                shape: vec![bucket as usize, classes],
+                data: batch.onehot,
+            }),
+            weights: ExecInput::Fresh(HostTensor {
+                shape: vec![bucket as usize],
+                data: batch.weights,
+            }),
+            client_params,
+            server_params,
             true_batch: batch.true_batch,
         })
     }
@@ -69,22 +163,36 @@ impl Trainer {
         engine: &crate::runtime::EngineHandle,
         work: DeviceWork,
     ) -> crate::Result<DeviceResult> {
-        // a1) client-side forward propagation.
-        let mut cf_in = Vec::with_capacity(1 + work.client_params.len());
-        cf_in.push(work.x.clone());
-        cf_in.extend(work.client_params.iter().cloned());
-        let mut cf_out = engine.execute_blocking(&work.artifacts.client_fwd, cf_in)?;
+        let DeviceWork {
+            idx,
+            lane,
+            artifacts,
+            x,
+            onehot,
+            weights,
+            client_params,
+            server_params,
+            true_batch,
+            ..
+        } = work;
+
+        // a1) client-side forward propagation. `x` and the client params
+        // are needed again in a5, so clone the handles (Arc bumps).
+        let mut cf_in = Vec::with_capacity(1 + client_params.len());
+        cf_in.push(x.clone());
+        cf_in.extend(client_params.iter().cloned());
+        let mut cf_out = engine.execute_inputs_blocking(lane, &artifacts.client_fwd, cf_in)?;
         let activations = cf_out.remove(0);
 
         // a2) activations + labels to the edge server (message passing is
         // simulated by the latency model; data moves via this call).
         // a3) server-side FP + BP.
-        let mut ss_in = Vec::with_capacity(3 + work.server_params.len());
-        ss_in.push(activations);
-        ss_in.push(work.onehot.clone());
-        ss_in.push(work.weights.clone());
-        ss_in.extend(work.server_params.iter().cloned());
-        let mut ss_out = engine.execute_blocking(&work.artifacts.server_step, ss_in)?;
+        let mut ss_in = Vec::with_capacity(3 + server_params.len());
+        ss_in.push(ExecInput::Fresh(activations));
+        ss_in.push(onehot);
+        ss_in.push(weights);
+        ss_in.extend(server_params);
+        let mut ss_out = engine.execute_inputs_blocking(lane, &artifacts.server_step, ss_in)?;
         let loss = ss_out.remove(0).data[0] as f64;
         let correct = ss_out.remove(0).data[0] as f64;
         let grad_a = ss_out.remove(0);
@@ -92,15 +200,15 @@ impl Trainer {
 
         // a4) activations' gradients back to the device.
         // a5) client-side backward pass (recompute-based VJP).
-        let mut cb_in = Vec::with_capacity(2 + work.client_params.len());
-        cb_in.push(work.x);
-        cb_in.push(grad_a);
-        cb_in.extend(work.client_params);
-        let cb_out = engine.execute_blocking(&work.artifacts.client_bwd, cb_in)?;
+        let mut cb_in = Vec::with_capacity(2 + client_params.len());
+        cb_in.push(x);
+        cb_in.push(ExecInput::Fresh(grad_a));
+        cb_in.extend(client_params);
+        let cb_out = engine.execute_inputs_blocking(lane, &artifacts.client_bwd, cb_in)?;
         let mut grads: Vec<Tensor> = cb_out.into_iter().map(host_to_tensor).collect();
         grads.extend(server_grads);
 
-        Ok(DeviceResult { idx: work.idx, grads, loss, correct, true_batch: work.true_batch })
+        Ok(DeviceResult { idx, grads, loss, correct, true_batch })
     }
 
     fn apply_results(&mut self, results: Vec<DeviceResult>) -> RoundOutcome {
@@ -125,6 +233,8 @@ impl Trainer {
             batches.push(r.true_batch);
             per_device_grads.push(r.grads);
         }
+        // Devices just diverged: per-device buffer keys from here on.
+        self.fleet_synced = false;
         // Feed the Assumption-2 constants estimator (approach of [24]).
         self.estimator.observe_round(&per_device_grads, &batches);
 
@@ -135,24 +245,33 @@ impl Trainer {
     }
 
     /// Sequential round: steps a1–a5 for every device, then SGD updates.
+    /// All traffic routes to engine lane 0 — extra pool lanes stay cold
+    /// (no compiles, no buffer copies) for sequential sessions.
     pub(crate) fn run_round(&mut self) -> crate::Result<RoundOutcome> {
+        self.rounds_run += 1;
         let n = self.n_devices();
+        let shared = self.shared_param_arcs();
         let mut results = Vec::with_capacity(n);
         for i in 0..n {
-            let work = self.prepare_device(i)?;
+            let work = self.prepare_device(i, 0, &shared)?;
             results.push(Self::exec_device_blocking(&self.engine, work)?);
         }
         Ok(self.apply_results(results))
     }
 
     /// Actor round: one OS thread per device, true message-passing
-    /// concurrency (the CPU engine serializes compute, so numerics match
-    /// the sequential mode exactly — verified by integration tests).
+    /// concurrency. Devices route to engine lane `idx % width`, so with a
+    /// pool width > 1 their compute genuinely overlaps; results are applied
+    /// in device order either way, so numerics match the sequential mode
+    /// exactly (verified by `rust/tests/parity_modes.rs`).
     pub(crate) fn run_round_concurrent(&mut self) -> crate::Result<RoundOutcome> {
+        self.rounds_run += 1;
         let n = self.n_devices();
+        let width = self.engine.width();
+        let shared = self.shared_param_arcs();
         let mut works = Vec::with_capacity(n);
         for i in 0..n {
-            works.push(self.prepare_device(i)?);
+            works.push(self.prepare_device(i, i % width, &shared)?);
         }
         let engine = self.engine.clone();
         let results: Vec<crate::Result<DeviceResult>> = std::thread::scope(|scope| {

@@ -224,6 +224,14 @@ impl ExperimentBuilder {
         self
     }
 
+    /// PJRT engine-pool width: 0 = auto (fleet size capped by host
+    /// parallelism), n = exactly n lanes. Width changes wall-clock only,
+    /// never numerics (`rust/tests/parity_modes.rs`).
+    pub fn engine_pool(mut self, width: usize) -> Self {
+        self.cfg.engine_pool = width;
+        self
+    }
+
     /// Attach a boxed observer.
     pub fn observer(mut self, obs: Box<dyn Observer>) -> Self {
         self.observers.push(obs);
@@ -373,6 +381,7 @@ mod tests {
             .fixed_cut(3)
             .eval_every(2)
             .agg_interval(3)
+            .engine_pool(2)
             .tune(|c| c.train.epsilon = 0.4)
             .build_config()
             .unwrap();
@@ -385,6 +394,7 @@ mod tests {
         assert_eq!(cfg.fixed_cut, 3);
         assert_eq!(cfg.train.eval_every, 2);
         assert_eq!(cfg.train.agg_interval, 3);
+        assert_eq!(cfg.engine_pool, 2);
         assert!((cfg.train.epsilon - 0.4).abs() < 1e-12);
     }
 }

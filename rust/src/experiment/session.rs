@@ -100,9 +100,14 @@ impl Session {
         self.trainer.evaluate()
     }
 
-    /// Engine-side execution statistics.
+    /// Engine-side execution statistics (merged across pool lanes).
     pub fn engine_stats(&self) -> crate::Result<EngineStats> {
         self.trainer.engine().stats_blocking()
+    }
+
+    /// Width of the PJRT engine pool backing this session.
+    pub fn engine_width(&self) -> usize {
+        self.trainer.engine().width()
     }
 
     /// Advance one training round: steps a1–a5 on every device, post-round
@@ -116,7 +121,7 @@ impl Session {
         } else {
             self.trainer.run_round()?
         };
-        let post = self.trainer.post_round(t);
+        let post = self.trainer.post_round(t)?;
         let test_acc = if t % self.trainer.cfg().train.eval_every == 0 {
             Some(self.trainer.evaluate()?)
         } else {

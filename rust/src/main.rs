@@ -5,7 +5,7 @@
 //!                [--strategy hasfl|rbs_hams|habs_rms|rbs_rms|rbs_rhams|fixed]
 //!                [--rounds N] [--devices N] [--seed S] [--non-iid]
 //!                [--artifacts DIR] [--out history.csv] [--concurrent]
-//!                [--early-stop] [--progress]
+//!                [--pool N] [--early-stop] [--progress]
 //! hasfl optimize [--devices N] [--model vgg16|resnet18|splitcnn8] [--seed S]
 //! hasfl latency  [--batch B] [--cut C] [--model ...] [--devices N]
 //! hasfl info     [--artifacts DIR]
@@ -22,6 +22,7 @@ use hasfl::metrics::{CONVERGENCE_ACC_THRESHOLD, CONVERGENCE_WINDOW};
 use hasfl::model::{Manifest, ModelProfile};
 use hasfl::optimizer::{solve_joint, OptContext};
 use hasfl::rng::Pcg32;
+use hasfl::runtime::EngineHandle;
 use hasfl::util::Args;
 
 const USAGE: &str = "usage: hasfl <train|optimize|latency|info|config> [options]";
@@ -57,6 +58,9 @@ fn cmd_train(args: &Args) -> hasfl::Result<()> {
     }
     if args.flag("non-iid") {
         builder = builder.non_iid();
+    }
+    if let Some(p) = args.get_opt::<usize>("pool")? {
+        builder = builder.engine_pool(p);
     }
     builder = builder
         .artifacts(args.get("artifacts").unwrap_or("artifacts"))
@@ -98,10 +102,7 @@ fn cmd_train(args: &Args) -> hasfl::Result<()> {
         eprintln!("converged @ round {round}: {:.2}% after {time:.1}s", acc * 100.0);
     }
     let stats = session.engine_stats()?;
-    eprintln!(
-        "engine: {} execs ({:.2}s exec, {:.2}s marshal), {} compiles ({:.1}s)",
-        stats.executions, stats.exec_secs, stats.marshal_secs, stats.compiles, stats.compile_secs
-    );
+    eprintln!("engine: {}", stats.summary());
     session.finish()?; // flushes the CSV observer
     if let Some(path) = out {
         eprintln!("history -> {}", path.display());
@@ -187,7 +188,40 @@ fn cmd_info(args: &Args) -> hasfl::Result<()> {
         .map(|md| md.len())
         .sum();
     println!("total HLO text: {:.1} MiB", total_bytes as f64 / (1024.0 * 1024.0));
+
+    // Runtime smoke (best-effort: `info` stays usable when the PJRT
+    // runtime cannot initialize): spawn one engine lane, warm the smallest
+    // monolithic artifact, and report the execution-statistics fields
+    // (marshal split, buffer-cache counters, pool width).
+    match engine_smoke(&artifacts, &m) {
+        Ok(stats) => {
+            println!("engine pool width: {} (info uses 1 lane; training uses", stats.pool_width);
+            println!("  `engine_pool` from the config, 0 = auto = min(fleet, cores, 8))");
+            println!("engine: {}", stats.summary());
+            println!(
+                "  upload {} B / download {} B / buffer hits {} ({} B) / misses {}",
+                stats.upload_bytes,
+                stats.download_bytes,
+                stats.buffer_hits,
+                stats.buffer_hit_bytes,
+                stats.buffer_misses
+            );
+        }
+        Err(e) => eprintln!("engine smoke skipped (PJRT unavailable): {e}"),
+    }
     Ok(())
+}
+
+fn engine_smoke(
+    artifacts: &std::path::Path,
+    m: &Manifest,
+) -> hasfl::Result<hasfl::runtime::EngineStats> {
+    let engine = EngineHandle::spawn(artifacts.to_path_buf())?;
+    let smallest = m.buckets.iter().copied().min().unwrap_or(1);
+    engine.warm_blocking(&Manifest::full_name("full_fwd", smallest))?;
+    let stats = engine.stats_blocking()?;
+    engine.shutdown();
+    Ok(stats)
 }
 
 fn cmd_config(args: &Args) -> hasfl::Result<()> {

@@ -1,7 +1,73 @@
 //! Training metrics: round records, the paper's converged-time detector,
-//! and CSV emitters for the figure harness.
+//! CSV emitters for the figure harness, and latency percentile summaries
+//! for the machine-readable bench reports (`BENCH_*.json`).
 
 use std::io::Write;
+
+use crate::util::Json;
+
+/// Nearest-rank percentile over an ascending-sorted slice, `q` in `[0, 1]`.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty sample set");
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Percentile summary of a latency sample set. Unit-agnostic: outputs are
+/// in whatever unit the samples were.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencySummary {
+    pub p50: f64,
+    pub p95: f64,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub n: usize,
+}
+
+impl LatencySummary {
+    /// Summarise raw samples (unsorted is fine); `None` when empty.
+    pub fn from_samples(samples: &[f64]) -> Option<LatencySummary> {
+        if samples.is_empty() {
+            return None;
+        }
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(LatencySummary {
+            p50: percentile(&s, 0.50),
+            p95: percentile(&s, 0.95),
+            mean: s.iter().sum::<f64>() / s.len() as f64,
+            min: s[0],
+            max: s[s.len() - 1],
+            n: s.len(),
+        })
+    }
+
+    /// JSON object with a unit-suffixed key set, e.g. `p50_ms` for
+    /// `unit = "ms"`.
+    pub fn to_json(&self, unit: &str) -> Json {
+        let mut j = Json::obj();
+        j.set(&format!("p50_{unit}"), Json::Num(self.p50))
+            .set(&format!("p95_{unit}"), Json::Num(self.p95))
+            .set(&format!("mean_{unit}"), Json::Num(self.mean))
+            .set(&format!("min_{unit}"), Json::Num(self.min))
+            .set(&format!("max_{unit}"), Json::Num(self.max))
+            .set("samples", Json::Num(self.n as f64));
+        j
+    }
+
+    /// The same summary in a different unit (e.g. ns -> ms with 1e-6).
+    pub fn scaled(&self, k: f64) -> LatencySummary {
+        LatencySummary {
+            p50: self.p50 * k,
+            p95: self.p95 * k,
+            mean: self.mean * k,
+            min: self.min * k,
+            max: self.max * k,
+            n: self.n,
+        }
+    }
+}
 
 /// The paper's convergence rule, threshold half: "the test accuracy
 /// increases by less than 0.02%" per evaluation round.
@@ -200,5 +266,33 @@ mod tests {
         let mut t = CsvTable::new(&["a", "b"]);
         t.rowf(&[1.0, 2.0]);
         assert_eq!(t.n_rows(), 1);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let s: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        assert_eq!(percentile(&s, 0.50), 50.0);
+        assert_eq!(percentile(&s, 0.95), 95.0);
+        assert_eq!(percentile(&s, 0.0), 1.0);
+        assert_eq!(percentile(&s, 1.0), 100.0);
+        assert_eq!(percentile(&[7.0], 0.5), 7.0);
+    }
+
+    #[test]
+    fn latency_summary_orders_samples() {
+        let sum = LatencySummary::from_samples(&[3.0, 1.0, 2.0, 10.0]).unwrap();
+        assert_eq!(sum.min, 1.0);
+        assert_eq!(sum.max, 10.0);
+        assert_eq!(sum.p50, 2.0);
+        assert_eq!(sum.p95, 10.0);
+        assert_eq!(sum.n, 4);
+        assert!((sum.mean - 4.0).abs() < 1e-12);
+        assert!(LatencySummary::from_samples(&[]).is_none());
+
+        let ms = sum.scaled(1e-6);
+        assert!((ms.max - 1e-5).abs() < 1e-18);
+        let j = ms.to_json("ms");
+        assert!(j.get("p95_ms").is_some());
+        assert!(j.get("samples").is_some());
     }
 }

@@ -45,6 +45,10 @@ pub struct Params {
     pub tensors: Vec<Tensor>,
     /// Blocks in the model (tensors.len() == 2 * n_blocks).
     pub n_blocks: usize,
+    /// Mutation counter, bumped by every in-place update (SGD, averaging).
+    /// The runtime's parameter-buffer cache keys literals by this version,
+    /// so invalidation lives next to mutation (DESIGN.md §8).
+    pub version: u64,
 }
 
 impl Params {
@@ -56,13 +60,14 @@ impl Params {
             tensors.push(Tensor::he_init(&ps.w, &mut rng));
             tensors.push(Tensor::zeros(&ps.b));
         }
-        Params { tensors, n_blocks: manifest.param_shapes.len() }
+        Params { tensors, n_blocks: manifest.param_shapes.len(), version: 0 }
     }
 
     pub fn zeros_like(&self) -> Params {
         Params {
             tensors: self.tensors.iter().map(|t| Tensor::zeros(&t.shape)).collect(),
             n_blocks: self.n_blocks,
+            version: 0,
         }
     }
 
@@ -96,6 +101,7 @@ impl Params {
                 *w -= (lr * gv as f64) as f32;
             }
         }
+        self.version += 1;
     }
 
     /// Per-block squared L2 norms of a gradient list aligned to the model's
@@ -115,11 +121,15 @@ impl Params {
 
 /// Average tensors element-wise over tensor index range `range` across many
 /// parameter sets, writing the mean back into every set (synchronisation).
+/// Bumps every set's version (the content changed for the whole fleet).
 pub fn average_in_place(sets: &mut [Params], range: std::ops::Range<usize>) {
-    if sets.is_empty() {
+    if sets.is_empty() || range.is_empty() {
         return;
     }
     let n = sets.len() as f32;
+    for s in sets.iter_mut() {
+        s.version += 1;
+    }
     for ti in range {
         let len = sets[0].tensors[ti].data.len();
         let mut mean = vec![0.0f32; len];
@@ -150,6 +160,7 @@ mod tests {
                 Tensor { shape: vec![1], data: vec![1.5] },
             ],
             n_blocks: 2,
+            version: 0,
         }
     }
 
@@ -197,6 +208,26 @@ mod tests {
         let var = t.l2_sq() / t.numel() as f64;
         let want = 2.0 / 1000.0;
         assert!((var - want).abs() / want < 0.25, "var {var} want {want}");
+    }
+
+    #[test]
+    fn mutations_bump_the_version() {
+        let mut p = toy_params();
+        assert_eq!(p.version, 0);
+        let g = vec![
+            Tensor { shape: vec![2], data: vec![1.0, 1.0] },
+            Tensor { shape: vec![1], data: vec![2.0] },
+        ];
+        p.sgd_update_range(0..2, &g, 0.1);
+        assert_eq!(p.version, 1);
+
+        let mut sets = vec![p.clone(), p.clone()];
+        average_in_place(&mut sets, 0..2);
+        assert_eq!(sets[0].version, 2);
+        assert_eq!(sets[1].version, 2);
+        // An empty range mutates nothing, so the version must not move.
+        average_in_place(&mut sets, 1..1);
+        assert_eq!(sets[0].version, 2);
     }
 
     #[test]

@@ -1,7 +1,10 @@
-//! The single-threaded PJRT engine: compile-on-first-use executable cache
-//! over the AOT artifacts (pattern adapted from /opt/xla-example/load_hlo).
+//! The PJRT engine: compile-on-first-use executable cache over the AOT
+//! artifacts (pattern adapted from /opt/xla-example/load_hlo), plus an
+//! engine-resident parameter-buffer cache so versioned tensors are packed
+//! into PJRT literals once per version instead of once per execute.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::model::Manifest;
@@ -23,7 +26,57 @@ impl HostTensor {
     }
 }
 
-/// Execution statistics for the §Perf pass.
+/// Identity of a cacheable engine buffer: `(parameter set, tensor slot)`.
+///
+/// Sets `0..N` are the per-device parameter sets; the reserved ids below
+/// mark regions that are provably identical across devices for a round, so
+/// devices sharing an engine lane also share the packed literal
+/// (invalidation rules: DESIGN.md §8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BufKey {
+    pub set: u64,
+    pub slot: u32,
+}
+
+impl BufKey {
+    /// Set id for the fleet-common server sub-model (averaged every round).
+    pub const COMMON_SET: u64 = u64::MAX;
+    /// Set id for the fully-synchronised model (round after a forged sync).
+    pub const SYNC_SET: u64 = u64::MAX - 1;
+    /// Set id for the evaluation-time global-average model.
+    pub const EVAL_SET: u64 = u64::MAX - 2;
+    /// Slot id for the per-device input batch (parameters use their global
+    /// tensor index as the slot).
+    pub const SLOT_X: u32 = u32::MAX;
+}
+
+/// One engine input: either a transient tensor packed fresh on every call,
+/// or a versioned tensor backed by the engine-resident buffer cache.
+#[derive(Debug, Clone)]
+pub enum ExecInput {
+    /// One-shot tensor (activations, gradients, labels, weights).
+    Fresh(HostTensor),
+    /// Versioned tensor: the engine reuses its cached literal while the
+    /// version matches and re-packs from `tensor` when it does not.
+    Cached { key: BufKey, version: u64, tensor: Arc<HostTensor> },
+}
+
+impl ExecInput {
+    pub fn cached(key: BufKey, version: u64, tensor: Arc<HostTensor>) -> ExecInput {
+        ExecInput::Cached { key, version, tensor }
+    }
+
+    /// The host tensor carried by this input.
+    pub fn tensor(&self) -> &HostTensor {
+        match self {
+            ExecInput::Fresh(t) => t,
+            ExecInput::Cached { tensor, .. } => tensor,
+        }
+    }
+}
+
+/// Execution statistics for the §Perf pass. One instance per engine lane;
+/// [`EngineStats::merge`] folds lanes into pool-wide totals.
 #[derive(Debug, Clone, Default)]
 pub struct EngineStats {
     pub executions: u64,
@@ -32,15 +85,88 @@ pub struct EngineStats {
     pub exec_secs: f64,
     /// Seconds spent compiling artifacts.
     pub compile_secs: f64,
-    /// Seconds spent packing/unpacking literals.
-    pub marshal_secs: f64,
+    /// Seconds packing input literals (host -> engine upload).
+    pub upload_secs: f64,
+    /// Seconds unpacking output literals (engine -> host download).
+    pub download_secs: f64,
+    /// Bytes packed into input literals (fresh tensors + buffer misses).
+    pub upload_bytes: u64,
+    /// Bytes read back from output literals.
+    pub download_bytes: u64,
+    /// Cacheable inputs served from the buffer cache (no re-pack).
+    pub buffer_hits: u64,
+    /// Cacheable inputs that had to be (re)packed.
+    pub buffer_misses: u64,
+    /// Bytes that skipped re-packing thanks to the buffer cache.
+    pub buffer_hit_bytes: u64,
+    /// Engine lanes contributing to these stats (1 per lane; summed on
+    /// merge, so pool-wide stats report the pool width).
+    pub pool_width: usize,
 }
 
-/// PJRT CPU engine with an executable cache. Lives on one thread.
+impl EngineStats {
+    /// Total seconds spent packing/unpacking literals.
+    pub fn marshal_secs(&self) -> f64 {
+        self.upload_secs + self.download_secs
+    }
+
+    /// Fold another lane's stats into this one.
+    pub fn merge(&mut self, o: &EngineStats) {
+        self.executions += o.executions;
+        self.compiles += o.compiles;
+        self.exec_secs += o.exec_secs;
+        self.compile_secs += o.compile_secs;
+        self.upload_secs += o.upload_secs;
+        self.download_secs += o.download_secs;
+        self.upload_bytes += o.upload_bytes;
+        self.download_bytes += o.download_bytes;
+        self.buffer_hits += o.buffer_hits;
+        self.buffer_misses += o.buffer_misses;
+        self.buffer_hit_bytes += o.buffer_hit_bytes;
+        self.pool_width += o.pool_width;
+    }
+
+    /// One-line human summary (CLI `train`/`info` and the benches).
+    pub fn summary(&self) -> String {
+        const MIB: f64 = 1024.0 * 1024.0;
+        format!(
+            "{} execs on {} lane(s): exec {:.2}s, marshal {:.2}s (up {:.2}s / down {:.2}s), \
+             uploaded {:.1} MiB, {:.1} MiB served by {} buffer hits ({} misses), \
+             {} compiles ({:.1}s)",
+            self.executions,
+            self.pool_width.max(1),
+            self.exec_secs,
+            self.marshal_secs(),
+            self.upload_secs,
+            self.download_secs,
+            self.upload_bytes as f64 / MIB,
+            self.buffer_hit_bytes as f64 / MIB,
+            self.buffer_hits,
+            self.buffer_misses,
+            self.compiles,
+            self.compile_secs,
+        )
+    }
+}
+
+/// Pack a host tensor into a PJRT literal (the upload marshal step).
+fn pack_literal(name: &str, t: &HostTensor) -> crate::Result<xla::Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &t.shape, bytes)
+        .map_err(|e| anyhow::anyhow!("literal {name}: {e:?}"))
+}
+
+/// PJRT CPU engine with an executable cache and a parameter-buffer cache.
+/// Lives on one thread (one pool lane).
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Engine-resident literals for versioned inputs, keyed by (set, slot)
+    /// and tagged with the version and shape they were packed from.
+    buffers: HashMap<BufKey, (u64, Vec<usize>, xla::Literal)>,
     stats: EngineStats,
 }
 
@@ -49,7 +175,13 @@ impl Engine {
     pub fn load(artifacts_dir: &std::path::Path) -> crate::Result<Engine> {
         let manifest = Manifest::load(artifacts_dir)?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e:?}"))?;
-        Ok(Engine { client, manifest, cache: HashMap::new(), stats: EngineStats::default() })
+        Ok(Engine {
+            client,
+            manifest,
+            cache: HashMap::new(),
+            buffers: HashMap::new(),
+            stats: EngineStats { pool_width: 1, ..EngineStats::default() },
+        })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -88,10 +220,15 @@ impl Engine {
     /// Execute an artifact with the given inputs; returns all outputs.
     ///
     /// Inputs must match the manifest's arg specs (checked). Outputs are the
-    /// decomposed elements of the return tuple, in manifest order.
-    pub fn execute(&mut self, name: &str, inputs: &[HostTensor]) -> crate::Result<Vec<HostTensor>> {
+    /// decomposed elements of the return tuple, in manifest order. Cached
+    /// inputs whose version matches the buffer cache skip literal packing.
+    pub fn execute(&mut self, name: &str, inputs: &[ExecInput]) -> crate::Result<Vec<HostTensor>> {
         self.warm(name)?;
-        let entry = self.manifest.get(name).expect("warmed artifact exists");
+        // Disjoint field borrows keep one manifest lookup alive for the
+        // whole call (the seed re-fetched the entry after execution because
+        // the borrow of `self` had to be released for the stats updates).
+        let Engine { manifest, cache, buffers, stats, .. } = self;
+        let entry = manifest.get(name).expect("warmed artifact exists");
         if inputs.len() != entry.args.len() {
             anyhow::bail!(
                 "{name}: {} inputs given, {} expected",
@@ -100,37 +237,53 @@ impl Engine {
             );
         }
         for (inp, spec) in inputs.iter().zip(&entry.args) {
-            if inp.shape != spec.shape {
+            let t = inp.tensor();
+            if t.shape != spec.shape {
                 anyhow::bail!(
                     "{name}: arg {} shape {:?} != spec {:?}",
                     spec.name,
-                    inp.shape,
+                    t.shape,
                     spec.shape
                 );
             }
-            if inp.data.len() != spec.numel() {
+            if t.data.len() != spec.numel() {
                 anyhow::bail!("{name}: arg {} data len mismatch", spec.name);
             }
         }
 
+        // Upload: pack fresh tensors, serve versioned ones from the buffer
+        // cache. Cached literals are moved out for the call and re-inserted
+        // after success, so no literal is ever cloned; an error path drops
+        // them, trading one redundant repack on the next call for simple
+        // error handling.
         let t0 = Instant::now();
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| {
-                let bytes: &[u8] = unsafe {
-                    std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
-                };
-                xla::Literal::create_from_shape_and_untyped_data(
-                    xla::ElementType::F32,
-                    &t.shape,
-                    bytes,
-                )
-                .map_err(|e| anyhow::anyhow!("literal {name}: {e:?}"))
-            })
-            .collect::<crate::Result<Vec<_>>>()?;
-        self.stats.marshal_secs += t0.elapsed().as_secs_f64();
+        let mut literals: Vec<xla::Literal> = Vec::with_capacity(inputs.len());
+        for inp in inputs {
+            match inp {
+                ExecInput::Fresh(t) => {
+                    literals.push(pack_literal(name, t)?);
+                    stats.upload_bytes += (t.data.len() * 4) as u64;
+                }
+                ExecInput::Cached { key, version, tensor } => match buffers.remove(key) {
+                    // A hit must match version AND shape: a caller reusing
+                    // a key across shapes degrades to a repack, never to a
+                    // stale literal.
+                    Some((v, shape, lit)) if v == *version && shape == tensor.shape => {
+                        stats.buffer_hits += 1;
+                        stats.buffer_hit_bytes += (tensor.data.len() * 4) as u64;
+                        literals.push(lit);
+                    }
+                    _ => {
+                        stats.buffer_misses += 1;
+                        literals.push(pack_literal(name, tensor)?);
+                        stats.upload_bytes += (tensor.data.len() * 4) as u64;
+                    }
+                },
+            }
+        }
+        stats.upload_secs += t0.elapsed().as_secs_f64();
 
-        let exe = self.cache.get(name).expect("warmed");
+        let exe = cache.get(name).expect("warmed");
         let t1 = Instant::now();
         let result = exe
             .execute::<xla::Literal>(&literals)
@@ -138,15 +291,21 @@ impl Engine {
         let root = result[0][0]
             .to_literal_sync()
             .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
-        self.stats.executions += 1;
-        self.stats.exec_secs += t1.elapsed().as_secs_f64();
+        stats.executions += 1;
+        stats.exec_secs += t1.elapsed().as_secs_f64();
+
+        // Return versioned literals to the buffer cache for the next call.
+        for (inp, lit) in inputs.iter().zip(literals) {
+            if let ExecInput::Cached { key, version, tensor } = inp {
+                buffers.insert(*key, (*version, tensor.shape.clone(), lit));
+            }
+        }
 
         let t2 = Instant::now();
         // aot.py lowers with return_tuple=True: root is always a tuple.
         let parts = root
             .to_tuple()
             .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))?;
-        let entry = self.manifest.get(name).expect("exists");
         if parts.len() != entry.outputs.len() {
             anyhow::bail!(
                 "{name}: {} outputs, {} expected",
@@ -161,14 +320,20 @@ impl Engine {
                 let data = lit
                     .to_vec::<f32>()
                     .map_err(|e| anyhow::anyhow!("read {name}/{}: {e:?}", spec.name))?;
+                stats.download_bytes += (data.len() * 4) as u64;
                 Ok(HostTensor { shape: spec.shape.clone(), data })
             })
             .collect::<crate::Result<Vec<_>>>()?;
-        self.stats.marshal_secs += t2.elapsed().as_secs_f64();
+        stats.download_secs += t2.elapsed().as_secs_f64();
         Ok(outputs)
     }
 
     pub fn cached_len(&self) -> usize {
         self.cache.len()
+    }
+
+    /// Live entries in the parameter-buffer cache.
+    pub fn buffer_len(&self) -> usize {
+        self.buffers.len()
     }
 }

@@ -1,20 +1,22 @@
-//! Thread-safe handle to a dedicated engine thread.
+//! Thread-safe handle to a pool of dedicated engine threads.
 //!
-//! PJRT wrapper types hold raw pointers and are not `Send`, so the engine
-//! lives on its own OS thread; coordinator actors (device threads) talk to
-//! it through an mpsc request channel with per-request reply channels. On a
-//! CPU PJRT client compute is serialized anyway, so a single engine thread
-//! is not a bottleneck (measured in rust/benches/runtime_hotpath.rs).
+//! PJRT wrapper types hold raw pointers and are not `Send`, so each engine
+//! lives on its own OS thread ("lane") that owns a PJRT CPU client, an
+//! executable cache, and a parameter-buffer cache; coordinator actors
+//! (device threads) talk to lanes through mpsc request channels with
+//! per-request reply channels. A single CPU PJRT client serializes compute,
+//! so concurrent rounds only overlap for real when the pool has width > 1
+//! (measured in rust/benches/e2e_round.rs).
 
 use std::path::PathBuf;
 use std::sync::mpsc;
 
-use super::engine::{Engine, EngineStats, HostTensor};
+use super::engine::{Engine, EngineStats, ExecInput, HostTensor};
 
 enum Request {
     Execute {
         name: String,
-        inputs: Vec<HostTensor>,
+        inputs: Vec<ExecInput>,
         resp: mpsc::Sender<crate::Result<Vec<HostTensor>>>,
     },
     Warm {
@@ -27,81 +29,139 @@ enum Request {
     Shutdown,
 }
 
-/// Cloneable handle to the engine thread.
+/// Cloneable handle to the engine pool. Each clone carries its own channel
+/// senders, so handles can move freely into device threads.
 #[derive(Clone)]
 pub struct EngineHandle {
-    tx: mpsc::Sender<Request>,
+    lanes: Vec<mpsc::Sender<Request>>,
+}
+
+fn spawn_lane(artifacts_dir: PathBuf, lane: usize) -> crate::Result<mpsc::Sender<Request>> {
+    let (tx, rx) = mpsc::channel::<Request>();
+    let (ready_tx, ready_rx) = mpsc::channel::<crate::Result<()>>();
+    std::thread::Builder::new()
+        .name(format!("pjrt-engine-{lane}"))
+        .spawn(move || {
+            let mut engine = match Engine::load(&artifacts_dir) {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Request::Execute { name, inputs, resp } => {
+                        let _ = resp.send(engine.execute(&name, &inputs));
+                    }
+                    Request::Warm { name, resp } => {
+                        let _ = resp.send(engine.warm(&name));
+                    }
+                    Request::Stats { resp } => {
+                        let _ = resp.send(engine.stats().clone());
+                    }
+                    Request::Shutdown => break,
+                }
+            }
+        })
+        .expect("spawn engine thread");
+    ready_rx.recv().expect("engine thread alive")?;
+    Ok(tx)
 }
 
 impl EngineHandle {
-    /// Spawn the engine thread over an artifacts directory.
+    /// Spawn a single-lane engine over an artifacts directory (the seed
+    /// behaviour; numerics are identical at any width).
     pub fn spawn(artifacts_dir: PathBuf) -> crate::Result<EngineHandle> {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let (ready_tx, ready_rx) = mpsc::channel::<crate::Result<()>>();
-        std::thread::Builder::new()
-            .name("pjrt-engine".into())
-            .spawn(move || {
-                let mut engine = match Engine::load(&artifacts_dir) {
-                    Ok(e) => {
-                        let _ = ready_tx.send(Ok(()));
-                        e
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                while let Ok(req) = rx.recv() {
-                    match req {
-                        Request::Execute { name, inputs, resp } => {
-                            let _ = resp.send(engine.execute(&name, &inputs));
-                        }
-                        Request::Warm { name, resp } => {
-                            let _ = resp.send(engine.warm(&name));
-                        }
-                        Request::Stats { resp } => {
-                            let _ = resp.send(engine.stats().clone());
-                        }
-                        Request::Shutdown => break,
-                    }
-                }
-            })
-            .expect("spawn engine thread");
-        ready_rx.recv().expect("engine thread alive")?;
-        Ok(EngineHandle { tx })
+        EngineHandle::spawn_pool(artifacts_dir, 1)
     }
 
-    /// Execute an artifact (blocks the calling thread until done).
+    /// Spawn an engine pool of `width` lanes (clamped to >= 1). Each lane
+    /// owns its own PJRT CPU client and compiles lazily, so lanes only pay
+    /// for the artifacts they actually execute.
+    pub fn spawn_pool(artifacts_dir: PathBuf, width: usize) -> crate::Result<EngineHandle> {
+        let width = width.max(1);
+        let mut lanes = Vec::with_capacity(width);
+        for lane in 0..width {
+            match spawn_lane(artifacts_dir.clone(), lane) {
+                Ok(tx) => lanes.push(tx),
+                Err(e) => {
+                    for tx in &lanes {
+                        let _ = tx.send(Request::Shutdown);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(EngineHandle { lanes })
+    }
+
+    /// Number of engine lanes in the pool.
+    pub fn width(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Execute an artifact on lane 0 with fresh (uncached) inputs. This is
+    /// the seed-compatible entry point used by tests and micro-benches.
     pub fn execute_blocking(
         &self,
         name: &str,
         inputs: Vec<HostTensor>,
     ) -> crate::Result<Vec<HostTensor>> {
+        let inputs = inputs.into_iter().map(ExecInput::Fresh).collect();
+        self.execute_inputs_blocking(0, name, inputs)
+    }
+
+    /// Execute an artifact on a specific lane (`lane % width`), blocking
+    /// the calling thread until done. Versioned inputs hit that lane's
+    /// parameter-buffer cache.
+    pub fn execute_inputs_blocking(
+        &self,
+        lane: usize,
+        name: &str,
+        inputs: Vec<ExecInput>,
+    ) -> crate::Result<Vec<HostTensor>> {
+        let lane = lane % self.lanes.len();
         let (resp, rx) = mpsc::channel();
-        self.tx
+        self.lanes[lane]
             .send(Request::Execute { name: name.to_string(), inputs, resp })
             .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
         rx.recv().map_err(|_| anyhow::anyhow!("engine dropped reply"))?
     }
 
-    /// Pre-compile an artifact (returns true on a cache miss).
+    /// Pre-compile an artifact on every lane (returns true if any lane had
+    /// a cache miss).
     pub fn warm_blocking(&self, name: &str) -> crate::Result<bool> {
-        let (resp, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Warm { name: name.to_string(), resp })
-            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("engine dropped reply"))?
+        let mut missed = false;
+        for tx in &self.lanes {
+            let (resp, rx) = mpsc::channel();
+            tx.send(Request::Warm { name: name.to_string(), resp })
+                .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+            missed |= rx.recv().map_err(|_| anyhow::anyhow!("engine dropped reply"))??;
+        }
+        Ok(missed)
     }
 
+    /// Pool-wide statistics: per-lane stats merged, with `pool_width`
+    /// reporting the number of lanes.
     pub fn stats_blocking(&self) -> crate::Result<EngineStats> {
-        let (resp, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Stats { resp })
-            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("engine dropped reply"))
+        let mut total = EngineStats::default();
+        for tx in &self.lanes {
+            let (resp, rx) = mpsc::channel();
+            tx.send(Request::Stats { resp })
+                .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+            let lane = rx.recv().map_err(|_| anyhow::anyhow!("engine dropped reply"))?;
+            total.merge(&lane);
+        }
+        Ok(total)
     }
 
     pub fn shutdown(&self) {
-        let _ = self.tx.send(Request::Shutdown);
+        for tx in &self.lanes {
+            let _ = tx.send(Request::Shutdown);
+        }
     }
 }

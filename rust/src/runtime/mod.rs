@@ -2,24 +2,40 @@
 //! `python/compile/aot.py` and executes them from the Rust training path.
 //!
 //! Two layers:
-//! - [`Engine`] — owns the `xla::PjRtClient` and a lazily-populated cache of
-//!   compiled executables keyed by artifact name. **Not `Send`** (PJRT
-//!   wrappers hold raw pointers), so it must live on one thread.
+//! - [`Engine`] — owns an `xla::PjRtClient`, a lazily-populated cache of
+//!   compiled executables keyed by artifact name, and a parameter-buffer
+//!   cache of packed literals keyed by [`BufKey`] + version. **Not `Send`**
+//!   (PJRT wrappers hold raw pointers), so each engine lives on one thread.
 //! - [`EngineHandle`] — a cloneable, thread-safe handle that proxies
-//!   execution requests to a dedicated engine thread over channels. This is
-//!   what the tokio coordinator actors use.
+//!   execution requests to a pool of dedicated engine threads ("lanes")
+//!   over channels. Devices are routed to `lane = idx % width`, so
+//!   concurrent rounds overlap for real when the pool has width > 1.
+//!
+//! Inputs cross the boundary as [`ExecInput`]: `Fresh` tensors (packed into
+//! a literal on every call) or `Cached` tensors (packed once per version,
+//! then served from the lane's buffer cache). The full data path is
+//! documented in DESIGN.md §8.
 
 mod engine;
 mod handle;
 
-pub use engine::{Engine, EngineStats, HostTensor};
+pub use engine::{BufKey, Engine, EngineStats, ExecInput, HostTensor};
 pub use handle::EngineHandle;
+
+use std::sync::Arc;
 
 use crate::model::{Manifest, Tensor};
 
 /// Convert a parameter tensor into a runtime host tensor (borrowing shape).
 pub fn tensor_to_host(t: &Tensor) -> HostTensor {
     HostTensor { shape: t.shape.clone(), data: t.data.clone() }
+}
+
+/// Convert a parameter tensor into a shared host tensor: the one host-side
+/// copy a round makes per parameter. Everything downstream (device threads,
+/// engine requests, the cf/cb double use) clones the `Arc`, not the data.
+pub fn tensor_to_shared(t: &Tensor) -> Arc<HostTensor> {
+    Arc::new(tensor_to_host(t))
 }
 
 /// Convert a runtime output back into a parameter tensor.
@@ -88,5 +104,60 @@ mod tests {
         assert_eq!(sa.client_fwd, "client_fwd_c3_b16");
         assert_eq!(sa.server_step, "server_step_c3_b16");
         assert!(StepArtifacts::resolve(&m, 3, 100).is_err());
+    }
+
+    #[test]
+    fn exec_input_carries_its_tensor() {
+        let t = HostTensor { shape: vec![2], data: vec![1.0, 2.0] };
+        let fresh = ExecInput::Fresh(t.clone());
+        assert_eq!(fresh.tensor(), &t);
+        let cached = ExecInput::cached(BufKey { set: 3, slot: 7 }, 42, Arc::new(t.clone()));
+        assert_eq!(cached.tensor(), &t);
+        // Cloning a cached input is an Arc bump, not a data copy.
+        let c2 = cached.clone();
+        match (&cached, &c2) {
+            (ExecInput::Cached { tensor: a, .. }, ExecInput::Cached { tensor: b, .. }) => {
+                assert!(Arc::ptr_eq(a, b));
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn reserved_buf_sets_are_distinct() {
+        let ids = [BufKey::COMMON_SET, BufKey::SYNC_SET, BufKey::EVAL_SET];
+        for (i, a) in ids.iter().enumerate() {
+            for b in &ids[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn engine_stats_merge_sums_lanes() {
+        let mut a = EngineStats {
+            executions: 2,
+            upload_secs: 0.5,
+            download_secs: 0.25,
+            upload_bytes: 100,
+            buffer_hits: 3,
+            buffer_hit_bytes: 40,
+            pool_width: 1,
+            ..EngineStats::default()
+        };
+        let b = EngineStats {
+            executions: 1,
+            upload_secs: 0.5,
+            buffer_misses: 2,
+            pool_width: 1,
+            ..EngineStats::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.executions, 3);
+        assert_eq!(a.pool_width, 2);
+        assert_eq!(a.buffer_hits, 3);
+        assert_eq!(a.buffer_misses, 2);
+        assert!((a.marshal_secs() - 1.25).abs() < 1e-12);
+        assert!(!a.summary().is_empty());
     }
 }

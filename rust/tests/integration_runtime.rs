@@ -7,7 +7,9 @@
 use std::path::PathBuf;
 
 use hasfl::model::{Manifest, Params};
-use hasfl::runtime::{tensor_to_host, EngineHandle, HostTensor, StepArtifacts};
+use hasfl::runtime::{
+    tensor_to_host, tensor_to_shared, BufKey, EngineHandle, ExecInput, HostTensor, StepArtifacts,
+};
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -188,6 +190,97 @@ fn engine_stats_accumulate() {
     let stats = engine.stats_blocking().unwrap();
     assert_eq!(stats.executions, 2);
     assert_eq!(stats.compiles, 1); // cache hit on the second call
+    assert_eq!(stats.pool_width, 1);
     assert!(stats.exec_secs > 0.0);
+    assert!(stats.upload_bytes > 0);
+    assert!(stats.download_bytes > 0);
+    // Fresh inputs never touch the buffer cache.
+    assert_eq!(stats.buffer_hits + stats.buffer_misses, 0);
+    engine.shutdown();
+}
+
+/// Build `full_fwd` inputs with the parameters as versioned cached inputs.
+fn cached_inputs(params: &Params, x: &HostTensor, version: u64) -> Vec<ExecInput> {
+    let mut inputs = vec![ExecInput::Fresh(x.clone())];
+    inputs.extend(params.tensors.iter().enumerate().map(|(s, t)| {
+        ExecInput::cached(BufKey { set: 0, slot: s as u32 }, version, tensor_to_shared(t))
+    }));
+    inputs
+}
+
+#[test]
+fn buffer_cache_serves_stable_versions_and_invalidates_on_bump() {
+    let Some((engine, manifest)) = setup() else { return };
+    let params = Params::init(&manifest, 6);
+    let (x, _, _) = fake_batch(4, manifest.num_classes, 4);
+    let name = Manifest::full_name("full_fwd", 4);
+    let n_params = params.tensors.len() as u64;
+
+    // Reference output through the fresh (uncached) path.
+    let mut fresh = vec![x.clone()];
+    fresh.extend(params.tensors.iter().map(tensor_to_host));
+    let want = engine.execute_blocking(&name, fresh).expect("fresh");
+
+    // First cached call packs every parameter (all misses)...
+    let got1 = engine
+        .execute_inputs_blocking(0, &name, cached_inputs(&params, &x, 1))
+        .expect("cached 1");
+    // ...the second serves them all from the buffer cache...
+    let got2 = engine
+        .execute_inputs_blocking(0, &name, cached_inputs(&params, &x, 1))
+        .expect("cached 2");
+    let stats = engine.stats_blocking().unwrap();
+    assert_eq!(stats.buffer_misses, n_params);
+    assert_eq!(stats.buffer_hits, n_params);
+    assert!(stats.buffer_hit_bytes > 0);
+
+    // ...and a version bump re-packs (no stale literals).
+    let got3 = engine
+        .execute_inputs_blocking(0, &name, cached_inputs(&params, &x, 2))
+        .expect("cached 3");
+    let stats = engine.stats_blocking().unwrap();
+    assert_eq!(stats.buffer_misses, 2 * n_params);
+    assert_eq!(stats.buffer_hits, n_params);
+
+    // Cached execution is bit-identical to the fresh path.
+    for got in [&got1, &got2, &got3] {
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.data, w.data, "cached output differs from fresh output");
+        }
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn engine_pool_lanes_execute_independently() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = EngineHandle::spawn_pool(dir.clone(), 2).expect("pool");
+    assert_eq!(engine.width(), 2);
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let params = Params::init(&manifest, 7);
+    let (x, _, _) = fake_batch(4, manifest.num_classes, 4);
+    let name = Manifest::full_name("full_fwd", 4);
+
+    let run = |lane: usize| {
+        engine
+            .execute_inputs_blocking(lane, &name, cached_inputs(&params, &x, 1))
+            .expect("exec")
+    };
+    let out0 = run(0);
+    let out1 = run(1);
+    for (a, b) in out0.iter().zip(&out1) {
+        assert_eq!(a.data, b.data, "lanes disagree");
+    }
+    // Lane routing wraps modulo the width; each lane has its own caches.
+    let out2 = run(2); // lane 0 again: params now hit
+    assert_eq!(out2[0].data, out0[0].data);
+    let stats = engine.stats_blocking().unwrap();
+    assert_eq!(stats.pool_width, 2);
+    assert_eq!(stats.executions, 3);
+    assert_eq!(stats.compiles, 2); // one compile per lane
+    let n_params = params.tensors.len() as u64;
+    assert_eq!(stats.buffer_misses, 2 * n_params); // one pack per lane
+    assert_eq!(stats.buffer_hits, n_params); // the wrapped call hit lane 0
     engine.shutdown();
 }

@@ -60,8 +60,10 @@ fn training_reduces_loss() {
 
 #[test]
 fn sequential_and_concurrent_rounds_agree() {
-    // Same seed => identical sampling; the engine serializes compute, so
-    // the concurrent actor topology must produce the same histories.
+    // Same seed => identical sampling => identical histories. The default
+    // engine pool (auto width) may genuinely overlap device compute here;
+    // results are applied in device order, so numerics must not move (the
+    // strict bit-identity version of this lives in tests/parity_modes.rs).
     let Some(dir) = artifacts_dir() else { return };
     let mut a = tiny_session(&dir);
     a.run_to_completion().expect("run a");

@@ -1,0 +1,106 @@
+//! Parity guarantee for the execution modes: sequential, single-engine
+//! concurrent, and pooled-concurrent rounds must produce bit-identical
+//! `Params` and identical `RoundReport`/history streams for a fixed seed.
+//! This is what licenses the engine pool as a pure wall-clock optimisation.
+//!
+//! Skipped without `artifacts/manifest.json` (run `make artifacts`), like
+//! the other engine-backed tests.
+
+use std::path::PathBuf;
+
+use hasfl::config::{Config, StrategyKind};
+use hasfl::experiment::{Experiment, RoundReport};
+use hasfl::model::Params;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+fn parity_config() -> Config {
+    let mut cfg = Config::small();
+    cfg.fleet.n_devices = 4;
+    cfg.train.rounds = 6;
+    cfg.train.agg_interval = 3;
+    cfg.train.eval_every = 3;
+    cfg.train.train_samples = 256;
+    cfg.train.test_samples = 64;
+    cfg.train.batch_cap = 16;
+    cfg.strategy = StrategyKind::Fixed;
+    cfg.fixed_batch = 8;
+    cfg.fixed_cut = 3;
+    cfg
+}
+
+/// Run one mode to completion, returning (reports, history, final params).
+fn run_mode(
+    dir: &std::path::Path,
+    pool: usize,
+    concurrent: bool,
+) -> (Vec<RoundReport>, hasfl::metrics::History, Vec<Params>) {
+    let mut session = Experiment::builder()
+        .config(parity_config())
+        .engine_pool(pool)
+        .concurrent(concurrent)
+        .artifacts(dir)
+        .build()
+        .expect("session");
+    let mut reports = Vec::new();
+    while !session.is_done() {
+        reports.push(session.step().expect("step"));
+    }
+    let params = session.trainer().params().to_vec();
+    let history = session.finish().expect("finish");
+    (reports, history, params)
+}
+
+fn assert_reports_identical(a: &[RoundReport], b: &[RoundReport], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: round count");
+    for (ra, rb) in a.iter().zip(b) {
+        assert_eq!(ra.round, rb.round, "{what}");
+        assert_eq!(ra.outcome.mean_loss, rb.outcome.mean_loss, "{what}: round {}", ra.round);
+        assert_eq!(ra.outcome.train_acc, rb.outcome.train_acc, "{what}: round {}", ra.round);
+        assert_eq!(ra.sim_time, rb.sim_time, "{what}: round {}", ra.round);
+        assert_eq!(ra.aggregated, rb.aggregated, "{what}: round {}", ra.round);
+        assert_eq!(ra.reoptimized, rb.reoptimized, "{what}: round {}", ra.round);
+        assert_eq!(ra.test_acc, rb.test_acc, "{what}: round {}", ra.round);
+        assert_eq!(ra.decisions.batch, rb.decisions.batch, "{what}: round {}", ra.round);
+        assert_eq!(ra.decisions.cut, rb.decisions.cut, "{what}: round {}", ra.round);
+    }
+}
+
+#[test]
+fn sequential_single_engine_and_pooled_rounds_are_bit_identical() {
+    let Some(dir) = artifacts_dir() else { return };
+
+    let (rep_seq, hist_seq, params_seq) = run_mode(&dir, 1, false);
+    let (rep_c1, hist_c1, params_c1) = run_mode(&dir, 1, true);
+    let (rep_pool, hist_pool, params_pool) = run_mode(&dir, 4, true);
+
+    assert_reports_identical(&rep_seq, &rep_c1, "sequential vs concurrent(pool=1)");
+    assert_reports_identical(&rep_seq, &rep_pool, "sequential vs concurrent(pool=4)");
+    assert_eq!(hist_seq.records, hist_c1.records);
+    assert_eq!(hist_seq.records, hist_pool.records);
+
+    // Bit-identical final model state on every device (Params derives
+    // PartialEq over raw f32 data — no tolerance).
+    assert_eq!(params_seq, params_c1, "params: sequential vs concurrent(pool=1)");
+    assert_eq!(params_seq, params_pool, "params: sequential vs concurrent(pool=4)");
+}
+
+#[test]
+fn pooled_sequential_matches_single_engine_sequential() {
+    // Pool width must not leak into *sequential* numerics either (all
+    // sequential traffic routes to lane 0).
+    let Some(dir) = artifacts_dir() else { return };
+    let (rep_a, hist_a, params_a) = run_mode(&dir, 1, false);
+    let (rep_b, hist_b, params_b) = run_mode(&dir, 3, false);
+    assert_reports_identical(&rep_a, &rep_b, "sequential pool=1 vs pool=3");
+    assert_eq!(hist_a.records, hist_b.records);
+    assert_eq!(params_a, params_b);
+}

@@ -250,6 +250,7 @@ fn prop_aggregation_preserves_mean() {
                     })
                     .collect(),
                 n_blocks,
+                version: 0,
             })
             .collect();
         let before = global_average(&sets);
