@@ -1,14 +1,28 @@
-# Top-level targets. `make check` is the tier-1 gate (see ROADMAP.md).
+# Top-level targets. `make check` is the tier-1 gate (see ROADMAP.md);
+# hosted CI (.github/workflows/ci.yml) runs the same ./ci.sh battery.
 
-.PHONY: check artifacts artifacts100 test bench-smoke
+.PHONY: check check-deps artifacts artifacts100 test bench-smoke
 
 check:
 	./ci.sh
 
+# License/advisory gate over the dependency graph (rust/deny.toml). Skips
+# with a notice when cargo-deny is not installed (the offline dev image);
+# hosted CI installs it, so new dependencies are gated on every PR.
+check-deps:
+	@cd rust && if command -v cargo-deny >/dev/null 2>&1; then \
+		cargo deny check; \
+	else \
+		echo "cargo-deny not installed; skipping dependency gate"; \
+		echo "(hosted CI runs it; locally: cargo install cargo-deny --locked)"; \
+	fi
+
 # One-iteration bench run (no timing assertions): proves the bench harness
-# and its BENCH_*.json emission still work. Wired into ci.sh.
+# and its BENCH_*.json emission still work, and that the mega-fleet
+# scenario (>= 1000 devices) completes a 5-round smoke. Wired into ci.sh.
 bench-smoke:
 	cd rust && HASFL_BENCH_SMOKE=1 cargo bench --bench e2e_round
+	cd rust && HASFL_BENCH_SMOKE=1 cargo bench --bench scenario_fleet
 
 # AOT-lower the SplitCNN-8 fwd/bwd artifacts consumed by the PJRT runtime.
 artifacts:

@@ -1,11 +1,17 @@
 #!/usr/bin/env bash
-# Tier-1 verification gate (also available as `make check`).
+# Tier-1 verification gate (also available as `make check`). Hosted CI
+# (.github/workflows/ci.yml) runs this exact script on push + PR — it is
+# the gate of record.
 #
 # Runs the full local CI battery over the Rust workspace:
 #   1. release build        (binaries + examples + benches must compile)
-#   2. test suite           (engine-backed tests self-skip without artifacts)
+#   2. test suite           (engine-backed tests self-skip without artifacts;
+#                            includes the scenario-determinism suite)
 #   3. formatting           (cargo fmt --check)
 #   4. lints                (cargo clippy -D warnings)
+#   5. dependency gate      (cargo deny check; skipped if not installed)
+#   6. bench smoke          (1 iteration: e2e_round + mega-fleet scenario)
+#   7. example smoke        (churn_fleet end-to-end under HASFL_BENCH_SMOKE)
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
@@ -21,7 +27,13 @@ cargo fmt --check
 echo "== cargo clippy -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
 
+echo "== dependency gate (make check-deps) =="
+make -C .. check-deps
+
 echo "== bench smoke (1 iteration, no timing assertions) =="
-HASFL_BENCH_SMOKE=1 cargo bench --bench e2e_round
+make -C .. bench-smoke
+
+echo "== churn_fleet example smoke (determinism + liveness asserts) =="
+HASFL_BENCH_SMOKE=1 cargo run --release --example churn_fleet
 
 echo "CI OK"

@@ -1,0 +1,88 @@
+//! The standing scale benchmark: the `mega-fleet` scenario (>= 1000
+//! simulated devices) through the analytic pipeline — fleet evolution,
+//! membership-driven BS re-solves, and the O(N) latency model. Future perf
+//! PRs regress against `BENCH_scenario.json` (override the path with
+//! `HASFL_SCENARIO_BENCH_JSON`; smoke mode writes to the temp dir).
+//!
+//! In CI smoke mode (`HASFL_BENCH_SMOKE=1`, `make bench-smoke`) the
+//! headline number is exactly one 5-round mega-fleet run — the acceptance
+//! smoke for the scenario engine at scale.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use hasfl::config::Config;
+use hasfl::scenario::{ScenarioEngine, ScenarioPreset, ScenarioSim};
+use hasfl::util::Json;
+
+fn mega_config(seed: u64) -> Config {
+    let mut cfg = Config::table1();
+    cfg.fleet.n_devices = ScenarioPreset::MegaFleet.suggested_devices().unwrap();
+    cfg.strategy = ScenarioPreset::MegaFleet.suggested_strategy().unwrap();
+    cfg.seed = seed;
+    cfg
+}
+
+fn bench_json_path() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("HASFL_SCENARIO_BENCH_JSON") {
+        return p.into();
+    }
+    if common::smoke() {
+        return std::env::temp_dir().join("BENCH_scenario.json");
+    }
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_scenario.json")
+}
+
+fn main() {
+    let cfg = mega_config(2025);
+    let n = cfg.fleet.n_devices;
+
+    // Engine-only cost: one fleet evolution step at 1k+ devices.
+    let mut engine =
+        ScenarioEngine::new(ScenarioPreset::MegaFleet.scenario(), cfg.sample_fleet(), cfg.seed)
+            .expect("engine");
+    let r_advance = common::bench(&format!("megafleet_engine_advance_n{n}"), 2, 20, || {
+        std::hint::black_box(engine.advance());
+    });
+
+    // Full analytic round: evolution + (membership-driven) re-solve +
+    // subset latency. Five rounds per iteration — in smoke mode this is
+    // exactly the 5-round mega-fleet completion check.
+    let mut sim = ScenarioSim::new(mega_config(2025), ScenarioPreset::MegaFleet.scenario())
+        .expect("sim");
+    let r_rounds = common::bench(&format!("megafleet_5rounds_n{n}"), 1, 8, || {
+        for _ in 0..5 {
+            std::hint::black_box(sim.step());
+        }
+    });
+
+    let trace = sim.trace();
+    assert!(trace.len() >= 5, "mega-fleet smoke must complete 5 rounds");
+    let split = trace.split_summary().expect("rounds");
+    let drift = trace.drift_summary().expect("rounds");
+    println!(
+        "megafleet: rounds {} | active(final) {} | partial rounds {} | re-solves {}",
+        trace.len(),
+        trace.rounds.last().map_or(0, |r| r.n_active),
+        trace.partial_rounds(),
+        trace.resolves()
+    );
+
+    let mut j = Json::obj();
+    j.set("bench", Json::Str("scenario_fleet".into()))
+        .set("smoke", Json::Bool(common::smoke()))
+        .set("fleet", Json::Num(n as f64))
+        .set("rounds_run", Json::Num(trace.len() as f64))
+        .set("engine_advance", r_advance.to_json_ms())
+        .set("five_rounds", r_rounds.to_json_ms())
+        .set("resolves", Json::Num(trace.resolves() as f64))
+        .set("partial_rounds", Json::Num(trace.partial_rounds() as f64))
+        .set("t_split_p50_s", Json::Num(split.p50))
+        .set("t_split_p95_s", Json::Num(split.p95))
+        .set("drift_p50", Json::Num(drift.p50))
+        .set("drift_max", Json::Num(drift.max));
+
+    let path = bench_json_path();
+    std::fs::write(&path, j.dump()).expect("write bench json");
+    println!("bench report -> {}", path.display());
+}

@@ -9,7 +9,7 @@
 //!    `I` rounds.
 
 use crate::latency::Decisions;
-use crate::model::{average_in_place, Params};
+use crate::model::{average_in_place, weighted_average_in_place, Params};
 
 /// Average the server-side common sub-model across devices (every round).
 ///
@@ -37,6 +37,44 @@ pub fn aggregate_forged(params: &mut [Params], dec: &Decisions) {
     let l = params[0].n_blocks;
     let l_c = dec.l_c().min(l);
     average_in_place(params, Params::block_range(0, l_c));
+}
+
+/// Partial-participation variant of [`aggregate_common`] for dynamic
+/// fleets: only this round's surviving participants contribute, weighted
+/// by the samples they processed (the Eqn-39 aggregation event exchanges
+/// exactly these sub-models). Every device — dropped and offline members
+/// included — receives the aggregate, which keeps the common region
+/// fleet-identical (the runtime's `COMMON_SET` cache invariant).
+pub fn aggregate_common_partial(
+    params: &mut [Params],
+    dec: &Decisions,
+    participants: &[usize],
+    weights: &[f64],
+) {
+    if params.is_empty() {
+        return;
+    }
+    let l = params[0].n_blocks;
+    let l_c = dec.l_c().min(l);
+    weighted_average_in_place(params, Params::block_range(l_c, l), participants, weights);
+}
+
+/// Partial-participation variant of [`aggregate_forged`]: the forged
+/// client-specific models of the surviving participants are averaged with
+/// Eqn-39 sample weights and broadcast to the whole roster, so rejoining
+/// devices resume from the current global model.
+pub fn aggregate_forged_partial(
+    params: &mut [Params],
+    dec: &Decisions,
+    participants: &[usize],
+    weights: &[f64],
+) {
+    if params.is_empty() {
+        return;
+    }
+    let l = params[0].n_blocks;
+    let l_c = dec.l_c().min(l);
+    weighted_average_in_place(params, Params::block_range(0, l_c), participants, weights);
 }
 
 /// Global model = average of every device's full model (used for
@@ -125,6 +163,28 @@ mod tests {
         aggregate_common(&mut params, &dec);
         aggregate_forged(&mut params, &dec);
         assert_eq!(divergence(&params[0], &params[1], 0..8), 0.0);
+    }
+
+    #[test]
+    fn partial_aggregation_syncs_the_whole_roster() {
+        // Device 2 dropped mid-round: it contributes nothing, but both
+        // aggregation halves still leave the fleet fully synchronised.
+        let mut params =
+            vec![params_with(1.0, 4), params_with(3.0, 4), params_with(9.0, 4)];
+        let dec = Decisions { batch: vec![8, 16, 8], cut: vec![2, 2, 2] };
+        let (participants, weights) = (vec![0, 1], vec![8.0, 16.0]);
+        aggregate_common_partial(&mut params, &dec, &participants, &weights);
+        aggregate_forged_partial(&mut params, &dec, &participants, &weights);
+        // Weighted mean of 1.0 (w=8) and 3.0 (w=16): 7/3.
+        let want = (8.0 * 1.0 + 16.0 * 3.0) as f32 / 24.0;
+        for p in &params {
+            for t in &p.tensors {
+                for &v in &t.data {
+                    assert!((v - want).abs() < 1e-6, "{v} vs {want}");
+                }
+            }
+        }
+        assert_eq!(divergence(&params[0], &params[2], 0..8), 0.0);
     }
 
     #[test]

@@ -254,6 +254,10 @@ pub struct Config {
     /// 0 = auto (min of fleet size, host parallelism, and 8). Numerics are
     /// identical at any width (verified by `rust/tests/parity_modes.rs`).
     pub engine_pool: usize,
+    /// Dynamic-fleet scenario evolving channels/compute/membership over
+    /// rounds (`None` = the historical static fleet). See
+    /// [`crate::scenario`].
+    pub scenario: Option<crate::scenario::Scenario>,
 }
 
 impl Config {
@@ -295,6 +299,9 @@ impl Config {
             .set("fixed_batch", Json::Num(self.fixed_batch as f64))
             .set("fixed_cut", Json::Num(self.fixed_cut as f64))
             .set("engine_pool", Json::Num(self.engine_pool as f64));
+        if let Some(s) = &self.scenario {
+            root.set("scenario", s.to_json());
+        }
         root
     }
 
@@ -342,6 +349,12 @@ impl Config {
             engine_pool: match j.get("engine_pool") {
                 Some(v) => v.as_usize()?,
                 None => 0,
+            },
+            // Absent in configs saved before the scenario engine existed
+            // (and in static-fleet configs): no dynamic scenario.
+            scenario: match j.get("scenario") {
+                Some(v) => Some(crate::scenario::Scenario::from_json(v)?),
+                None => None,
             },
         })
     }
@@ -475,6 +488,21 @@ mod tests {
         cfg2.engine_pool = 3;
         let back = Config::from_json(&Json::parse(&cfg2.to_json().dump()).unwrap()).unwrap();
         assert_eq!(back.engine_pool, 3);
+    }
+
+    #[test]
+    fn scenario_field_roundtrips_and_defaults_to_none() {
+        // Configs saved before the scenario engine existed have no
+        // "scenario" key; they must load as None (static fleet).
+        let cfg = Config::table1();
+        assert!(cfg.scenario.is_none());
+        let back = Config::from_json(&Json::parse(&cfg.to_json().dump()).unwrap()).unwrap();
+        assert!(back.scenario.is_none());
+
+        let mut cfg = Config::table1();
+        cfg.scenario = Some(crate::scenario::ScenarioPreset::ChurnHeavy.scenario());
+        let back = Config::from_json(&Json::parse(&cfg.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back, cfg);
     }
 
     #[test]

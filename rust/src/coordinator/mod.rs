@@ -20,16 +20,20 @@ pub use round::RoundOutcome;
 use std::path::Path;
 use std::sync::Arc;
 
-use crate::aggregation::{aggregate_common, aggregate_forged, global_average};
+use crate::aggregation::{
+    aggregate_common, aggregate_common_partial, aggregate_forged, aggregate_forged_partial,
+    global_average,
+};
 use crate::config::{Config, Device, ModelKind};
 use crate::convergence::{BoundParams, GradStatsEstimator};
 use crate::data::{partition, BatchSampler, Dataset};
-use crate::latency::{round_latency, Decisions, RoundLatency};
+use crate::latency::{round_latency, round_latency_subset, Decisions, RoundLatency};
 use crate::metrics::{History, Record};
 use crate::model::{profile_for, Manifest, ModelProfile, Params};
 use crate::optimizer::{decide, OptContext, StrategyInputs};
 use crate::rng::Pcg32;
 use crate::runtime::{tensor_to_shared, BufKey, EngineHandle, ExecInput, HostTensor, StepArtifacts};
+use crate::scenario::{FleetSnapshot, ScenarioEngine};
 
 /// Post-round bookkeeping result (latency + aggregation events), consumed
 /// by [`crate::experiment::Session::step`] when assembling the round
@@ -78,6 +82,20 @@ pub struct Trainer {
     /// init, and on the round right after a forged sync) — lets devices
     /// share packed client-side literals. Cleared by the first SGD update.
     pub(crate) fleet_synced: bool,
+    /// Dynamic-fleet scenario engine (`None` = the historical static
+    /// fleet; no scenario code runs on that path).
+    scenario: Option<ScenarioEngine>,
+    /// Snapshot of the round currently executing (scenario runs only);
+    /// handed to the round report by [`Trainer::take_snapshot`].
+    last_snapshot: Option<FleetSnapshot>,
+    /// Roster-sized mask of devices that execute the current round (active
+    /// and not dropped mid-round). All-true without a scenario.
+    participation: Vec<bool>,
+    /// Devices that completed the last round (ascending ids) and the
+    /// samples each processed — the Eqn-39 weights for partial
+    /// aggregation under churn.
+    round_participants: Vec<usize>,
+    round_weights: Vec<f64>,
 }
 
 /// Resolve the configured engine-pool width: 0 = auto (fleet size capped by
@@ -133,6 +151,12 @@ impl Trainer {
         let strategy_rng = Pcg32::new(cfg.seed, 0x57A7);
         let strategy_inputs =
             StrategyInputs { fixed_batch: cfg.fixed_batch, fixed_cut: cfg.fixed_cut };
+        // The scenario engine shares the experiment seed, so the analytic
+        // sim and the executable path see the same fleet evolution.
+        let scenario = match &cfg.scenario {
+            Some(spec) => Some(ScenarioEngine::new(spec.clone(), devices.clone(), cfg.seed)?),
+            None => None,
+        };
 
         let mut t = Trainer {
             cfg,
@@ -157,6 +181,11 @@ impl Trainer {
             sync_version: 0,
             // Every device holds a clone of `init` until the first update.
             fleet_synced: true,
+            scenario,
+            last_snapshot: None,
+            participation: vec![true; n],
+            round_participants: Vec::new(),
+            round_weights: Vec::new(),
         };
         t.dec = t.next_decisions();
         t.refresh_step_artifacts()?;
@@ -228,6 +257,28 @@ impl Trainer {
         &self.params
     }
 
+    /// Roster-sized mask of devices executing the current round.
+    pub fn participation(&self) -> &[bool] {
+        &self.participation
+    }
+
+    /// Advance the dynamic scenario (if any) at the top of a round:
+    /// refresh effective device resources from the engine and rebuild the
+    /// participation mask (active members minus mid-round dropouts). A
+    /// no-op — no RNG draws, no state changes — on static fleets.
+    pub(crate) fn begin_round(&mut self) {
+        let Some(engine) = self.scenario.as_mut() else { return };
+        let snap = engine.advance();
+        self.devices = engine.effective_roster().to_vec();
+        self.participation = snap.participation(self.devices.len());
+        self.last_snapshot = Some(snap);
+    }
+
+    /// Hand the current round's fleet snapshot to the round report.
+    pub(crate) fn take_snapshot(&mut self) -> Option<FleetSnapshot> {
+        self.last_snapshot.take()
+    }
+
     pub(crate) fn push_record(&mut self, rec: Record) {
         self.history.push(rec);
     }
@@ -236,9 +287,38 @@ impl Trainer {
         std::mem::take(&mut self.history)
     }
 
-    /// Latency breakdown of one round under the current decisions.
+    /// Latency breakdown of one round under the current decisions. With a
+    /// scenario attached, only the round's participants gate the phases
+    /// (Eqn 38's maxima run over the surviving devices), priced at the
+    /// snapshot's *realized* rates — transient straggler slowdowns included
+    /// (the optimizer, by contrast, sees the persistent straggler-free
+    /// rates in `self.devices`).
     pub fn current_round_latency(&self) -> RoundLatency {
-        round_latency(&self.profile, &self.devices, &self.cfg.server, &self.dec)
+        match &self.last_snapshot {
+            Some(snap) => {
+                let mut devices = Vec::with_capacity(snap.active.len());
+                let mut batch = Vec::with_capacity(snap.active.len());
+                let mut cut = Vec::with_capacity(snap.active.len());
+                for (k, &id) in snap.active.iter().enumerate() {
+                    if !self.participation[id] {
+                        continue;
+                    }
+                    devices.push(snap.devices[k].clone());
+                    batch.push(self.dec.batch[id]);
+                    cut.push(self.dec.cut[id]);
+                }
+                let sub = Decisions { batch, cut };
+                round_latency(&self.profile, &devices, &self.cfg.server, &sub)
+            }
+            None if self.scenario.is_some() => round_latency_subset(
+                &self.profile,
+                &self.devices,
+                &self.cfg.server,
+                &self.dec,
+                &self.participation,
+            ),
+            None => round_latency(&self.profile, &self.devices, &self.cfg.server, &self.dec),
+        }
     }
 
     /// Current bound parameters: estimated from real gradients once the
@@ -337,6 +417,14 @@ impl Trainer {
     /// Advance the simulated clock for round `t` and perform the periodic
     /// aggregation + re-optimization bookkeeping. Returns the latency and
     /// aggregation events for the round report.
+    ///
+    /// Scenario runs aggregate *partially*: only this round's surviving
+    /// participants contribute (sample-weighted, the Eqn-39 aggregation
+    /// event's weights), and every roster member — dropped and offline
+    /// devices included — receives the result, preserving the runtime's
+    /// fleet-identical buffer-cache invariants. Fleet drift crossing the
+    /// scenario's `resolve_drift` trigger pulls the next aggregation +
+    /// BS/MS re-solve forward instead of waiting for the fixed window.
     pub(crate) fn post_round(&mut self, t: usize) -> crate::Result<PostRound> {
         let latency = self.current_round_latency();
         self.sim_time += latency.t_split;
@@ -344,21 +432,55 @@ impl Trainer {
         // Per-round server-side common aggregation (Eqn 4). After it, the
         // common region is identical on every device, which is what lets
         // `prepare_device` key those tensors under `BufKey::COMMON_SET`.
-        aggregate_common(&mut self.params, &self.dec);
+        // Full-participation rounds use the paper's unweighted mean (so a
+        // `static` scenario is bit-identical to a plain session); rounds
+        // with offline/dropped members aggregate partially.
+        let partial =
+            self.scenario.is_some() && self.round_participants.len() < self.params.len();
+        if partial {
+            aggregate_common_partial(
+                &mut self.params,
+                &self.dec,
+                &self.round_participants,
+                &self.round_weights,
+            );
+        } else {
+            aggregate_common(&mut self.params, &self.dec);
+        }
         self.common_version += 1;
 
-        let aggregated = t % self.cfg.train.agg_interval == 0;
+        let drift_hit = match (&self.scenario, &self.last_snapshot) {
+            (Some(engine), Some(snap)) => engine
+                .spec()
+                .resolve_drift
+                .map_or(false, |thr| snap.drift >= thr),
+            _ => false,
+        };
+        let aggregated = t % self.cfg.train.agg_interval == 0 || drift_hit;
         if aggregated {
             // Steps b1-b3 (Eqn 7) + re-optimization (Alg 1 line 24).
-            aggregate_forged(&mut self.params, &self.dec);
+            if partial {
+                aggregate_forged_partial(
+                    &mut self.params,
+                    &self.dec,
+                    &self.round_participants,
+                    &self.round_weights,
+                );
+            } else {
+                aggregate_forged(&mut self.params, &self.dec);
+            }
             self.sim_time += latency.t_agg;
             self.sync_version += 1;
             self.fleet_synced = true;
             // Re-optimization may move L_c; that is only safe for the
             // COMMON_SET keying because it happens on forged-sync rounds,
-            // when the *whole* model is fleet-identical.
+            // when the *whole* model is fleet-identical (partial
+            // aggregation broadcasts to the full roster for this reason).
             self.dec = self.next_decisions();
             self.refresh_step_artifacts()?;
+            if let Some(engine) = self.scenario.as_mut() {
+                engine.mark_resolved();
+            }
         }
         Ok(PostRound { latency, aggregated, reoptimized: aggregated })
     }

@@ -223,6 +223,12 @@ impl Trainer {
         let mut sorted = results;
         sorted.sort_by_key(|r| r.idx);
 
+        // Who completed this round and how many samples each processed —
+        // the participant set and Eqn-39 weights for partial aggregation
+        // under churn (full roster with uniform decisions otherwise).
+        self.round_participants.clear();
+        self.round_weights.clear();
+
         for r in sorted {
             loss_sum += r.loss;
             correct_sum += r.correct;
@@ -230,6 +236,8 @@ impl Trainer {
             let nt = self.params[r.idx].tensors.len();
             debug_assert_eq!(r.grads.len(), nt);
             self.params[r.idx].sgd_update_range(0..nt, &r.grads, lr);
+            self.round_participants.push(r.idx);
+            self.round_weights.push(r.true_batch as f64);
             batches.push(r.true_batch);
             per_device_grads.push(r.grads);
         }
@@ -244,15 +252,21 @@ impl Trainer {
         }
     }
 
-    /// Sequential round: steps a1–a5 for every device, then SGD updates.
-    /// All traffic routes to engine lane 0 — extra pool lanes stay cold
-    /// (no compiles, no buffer copies) for sequential sessions.
+    /// Sequential round: steps a1–a5 for every participating device, then
+    /// SGD updates. All traffic routes to engine lane 0 — extra pool lanes
+    /// stay cold (no compiles, no buffer copies) for sequential sessions.
+    /// With a scenario attached, offline members and mid-round dropouts
+    /// are skipped; partial aggregation handles them in `post_round`.
     pub(crate) fn run_round(&mut self) -> crate::Result<RoundOutcome> {
+        self.begin_round();
         self.rounds_run += 1;
         let n = self.n_devices();
         let shared = self.shared_param_arcs();
         let mut results = Vec::with_capacity(n);
         for i in 0..n {
+            if !self.participation()[i] {
+                continue;
+            }
             let work = self.prepare_device(i, 0, &shared)?;
             results.push(Self::exec_device_blocking(&self.engine, work)?);
         }
@@ -265,12 +279,16 @@ impl Trainer {
     /// in device order either way, so numerics match the sequential mode
     /// exactly (verified by `rust/tests/parity_modes.rs`).
     pub(crate) fn run_round_concurrent(&mut self) -> crate::Result<RoundOutcome> {
+        self.begin_round();
         self.rounds_run += 1;
         let n = self.n_devices();
         let width = self.engine.width();
         let shared = self.shared_param_arcs();
         let mut works = Vec::with_capacity(n);
         for i in 0..n {
+            if !self.participation()[i] {
+                continue;
+            }
             works.push(self.prepare_device(i, i % width, &shared)?);
         }
         let engine = self.engine.clone();

@@ -112,6 +112,44 @@ mod tests {
     }
 
     #[test]
+    fn identical_seeds_give_identical_partitions() {
+        // Partition determinism underpins run reproducibility (and the
+        // scenario suite's bit-identical round histories): same seed, same
+        // dataset => the exact same index assignment, run after run.
+        let d = Dataset::synthetic(1000, 10, 11);
+        for seed in [0u64, 1, 42, u64::MAX] {
+            let a = split_iid(&d, 7, &mut Pcg32::seeded(seed));
+            let b = split_iid(&d, 7, &mut Pcg32::seeded(seed));
+            assert_eq!(a, b, "split_iid diverged for seed {seed}");
+
+            let a = shards_non_iid(&d, 7, &mut Pcg32::seeded(seed));
+            let b = shards_non_iid(&d, 7, &mut Pcg32::seeded(seed));
+            assert_eq!(a, b, "shards_non_iid diverged for seed {seed}");
+        }
+        // And different seeds actually differ.
+        let a = split_iid(&d, 7, &mut Pcg32::seeded(1));
+        let b = split_iid(&d, 7, &mut Pcg32::seeded(2));
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn shards_lose_no_samples_on_remainder() {
+        // 2003 % 14 shards != 0: the trailing remainder must land in the
+        // last shard, not fall off the end.
+        for (len, n_devices) in [(2003usize, 7usize), (101, 4), (999, 10)] {
+            let d = Dataset::synthetic(len, 10, 13);
+            let mut rng = Pcg32::seeded(17);
+            let parts = shards_non_iid(&d, n_devices, &mut rng);
+            assert_eq!(parts.len(), n_devices);
+            let mut all: Vec<usize> = parts.concat();
+            assert_eq!(all.len(), len, "len {len} across {n_devices} devices");
+            all.sort_unstable();
+            all.dedup();
+            assert_eq!(all.len(), len, "duplicated samples for len {len}");
+        }
+    }
+
+    #[test]
     fn partition_dispatch() {
         let d = Dataset::synthetic(100, 10, 9);
         let mut rng = Pcg32::seeded(10);

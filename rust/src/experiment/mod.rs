@@ -45,7 +45,7 @@
 mod observer;
 mod session;
 
-pub use observer::{CsvHistory, EarlyStop, Observer, ProgressLogger};
+pub use observer::{CsvHistory, EarlyStop, FleetTraceCsv, Observer, ProgressLogger};
 pub use session::{RoundReport, Session};
 
 use std::path::{Path, PathBuf};
@@ -53,6 +53,7 @@ use std::path::{Path, PathBuf};
 use crate::config::{Config, ModelKind, Partition, StrategyKind};
 use crate::coordinator::Trainer;
 use crate::model::Manifest;
+use crate::scenario::{Scenario, ScenarioPreset};
 
 /// Named experiment presets (the validated entry points into [`Config`]).
 ///
@@ -232,6 +233,20 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Attach a dynamic-fleet scenario (channel drift, churn, stragglers;
+    /// see [`crate::scenario`]). Rounds then run over the evolving fleet:
+    /// dropped devices are skipped with partial aggregation, and drift can
+    /// trigger early BS/MS re-solves.
+    pub fn scenario(mut self, scenario: Scenario) -> Self {
+        self.cfg.scenario = Some(scenario);
+        self
+    }
+
+    /// [`ExperimentBuilder::scenario`] from a named preset.
+    pub fn scenario_preset(self, preset: ScenarioPreset) -> Self {
+        self.scenario(preset.scenario())
+    }
+
     /// Attach a boxed observer.
     pub fn observer(mut self, obs: Box<dyn Observer>) -> Self {
         self.observers.push(obs);
@@ -273,6 +288,9 @@ impl ExperimentBuilder {
             cfg.fixed_batch,
             cfg.train.batch_cap
         );
+        if let Some(s) = &cfg.scenario {
+            s.validate(cfg.fleet.n_devices)?;
+        }
         Ok(())
     }
 
@@ -366,6 +384,20 @@ mod tests {
             .tune(|c| c.train.lr = f64::NAN)
             .build_config()
             .is_err());
+    }
+
+    #[test]
+    fn builder_accepts_and_validates_scenarios() {
+        let cfg = Experiment::builder()
+            .scenario_preset(ScenarioPreset::ChurnHeavy)
+            .build_config()
+            .unwrap();
+        assert_eq!(cfg.scenario.as_ref().unwrap().name, "churn-heavy");
+
+        // Invalid scenario specs are rejected up front.
+        let mut bad = ScenarioPreset::ChurnHeavy.scenario();
+        bad.resolve_drift = Some(f64::NAN);
+        assert!(Experiment::builder().scenario(bad).build_config().is_err());
     }
 
     #[test]

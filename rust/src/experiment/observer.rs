@@ -4,17 +4,23 @@
 use std::path::PathBuf;
 
 use crate::latency::Decisions;
-use crate::metrics::{History, CONVERGENCE_ACC_THRESHOLD, CONVERGENCE_WINDOW};
+use crate::metrics::{
+    FleetRound, FleetTrace, History, CONVERGENCE_ACC_THRESHOLD, CONVERGENCE_WINDOW,
+};
+use crate::scenario::FleetSnapshot;
 
 use super::RoundReport;
 
 /// Callbacks fired by [`super::Session::step`], in this order per round:
-/// `on_round`, then `on_aggregation` (aggregation rounds), then
-/// `on_reoptimize` (after fresh decisions land), then `on_eval`
-/// (evaluation rounds). `on_complete` fires once from
-/// [`super::Session::finish`].
+/// `on_round`, then `on_fleet` (scenario sessions only), then
+/// `on_aggregation` (aggregation rounds), then `on_reoptimize` (after
+/// fresh decisions land), then `on_eval` (evaluation rounds).
+/// `on_complete` fires once from [`super::Session::finish`].
 pub trait Observer {
     fn on_round(&mut self, _report: &RoundReport) {}
+    /// The round's fleet snapshot; fires only when the session runs under
+    /// a dynamic scenario.
+    fn on_fleet(&mut self, _report: &RoundReport, _snapshot: &FleetSnapshot) {}
     fn on_aggregation(&mut self, _report: &RoundReport) {}
     fn on_reoptimize(&mut self, _report: &RoundReport, _decisions: &Decisions) {}
     fn on_eval(&mut self, _report: &RoundReport, _test_acc: f64) {}
@@ -47,6 +53,46 @@ impl CsvHistory {
 impl Observer for CsvHistory {
     fn on_complete(&mut self, history: &History) -> crate::Result<()> {
         history.write_csv(&self.path)
+    }
+}
+
+/// Collects the per-round fleet trace of a scenario session (membership,
+/// drift, latency — see [`FleetTrace`]) and writes it as CSV when the
+/// session finishes. Produces a header-only file on static-fleet sessions
+/// (no snapshots ever fire).
+pub struct FleetTraceCsv {
+    path: PathBuf,
+    trace: FleetTrace,
+}
+
+impl FleetTraceCsv {
+    pub fn new(path: impl Into<PathBuf>) -> FleetTraceCsv {
+        FleetTraceCsv { path: path.into(), trace: FleetTrace::default() }
+    }
+
+    pub fn trace(&self) -> &FleetTrace {
+        &self.trace
+    }
+}
+
+impl Observer for FleetTraceCsv {
+    fn on_fleet(&mut self, report: &RoundReport, snapshot: &FleetSnapshot) {
+        self.trace.push(FleetRound {
+            round: report.round,
+            n_active: snapshot.active.len(),
+            n_dropped: snapshot.dropped.len(),
+            n_joined: snapshot.joined.len(),
+            n_left: snapshot.left.len(),
+            drift: snapshot.drift,
+            resolved: report.reoptimized,
+            t_split: report.latency.t_split,
+            t_agg: if report.aggregated { report.latency.t_agg } else { 0.0 },
+            sim_time: report.sim_time,
+        });
+    }
+
+    fn on_complete(&mut self, _history: &History) -> crate::Result<()> {
+        self.trace.write_csv(&self.path)
     }
 }
 
@@ -144,6 +190,7 @@ mod tests {
             reoptimized: false,
             decisions: Decisions::uniform(1, 8, 4),
             test_acc,
+            fleet: None,
         }
     }
 
@@ -172,6 +219,29 @@ mod tests {
         feed(&mut stop, &[0.1, 0.1, 0.1, 0.1, 0.5, 0.5, 0.5, 0.5]);
         assert!(stop.triggered().is_none());
         assert!(!stop.should_stop());
+    }
+
+    #[test]
+    fn fleet_trace_csv_collects_snapshots() {
+        let path = std::env::temp_dir().join("hasfl_fleet_obs_test.csv");
+        let mut obs = FleetTraceCsv::new(&path);
+        let report = fake_report(1, None);
+        let snap = FleetSnapshot {
+            round: 1,
+            active: vec![0, 1, 2],
+            devices: vec![],
+            dropped: vec![2],
+            joined: vec![],
+            left: vec![],
+            drift: 0.1,
+        };
+        obs.on_fleet(&report, &snap);
+        assert_eq!(obs.trace().len(), 1);
+        assert_eq!(obs.trace().rounds[0].n_active, 3);
+        assert_eq!(obs.trace().rounds[0].n_dropped, 1);
+        obs.on_complete(&History::default()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
     }
 
     #[test]

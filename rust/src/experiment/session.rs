@@ -4,6 +4,7 @@ use crate::coordinator::{RoundOutcome, Trainer};
 use crate::latency::{Decisions, RoundLatency};
 use crate::metrics::{History, Record};
 use crate::runtime::EngineStats;
+use crate::scenario::FleetSnapshot;
 
 use super::Observer;
 
@@ -28,6 +29,9 @@ pub struct RoundReport {
     pub decisions: Decisions,
     /// Test accuracy, present on evaluation rounds.
     pub test_acc: Option<f64>,
+    /// The round's fleet snapshot (membership, effective rates, drift).
+    /// Present only when the session runs under a dynamic scenario.
+    pub fleet: Option<FleetSnapshot>,
 }
 
 /// A live training session over the PJRT engine.
@@ -144,9 +148,13 @@ impl Session {
             reoptimized: post.reoptimized,
             decisions: self.trainer.decisions().clone(),
             test_acc,
+            fleet: self.trainer.take_snapshot(),
         };
         for obs in &mut self.observers {
             obs.on_round(&report);
+            if let Some(snapshot) = &report.fleet {
+                obs.on_fleet(&report, snapshot);
+            }
             if report.aggregated {
                 obs.on_aggregation(&report);
             }

@@ -28,7 +28,16 @@ impl Decisions {
     }
 
     /// L_c — the maximum client-specific depth across devices (§IV).
+    ///
+    /// Empty fleets have no L_c; they are rejected up front at the
+    /// `Scenario`/`Config` validation layer (`ExperimentBuilder` and
+    /// `Scenario::validate`), so reaching here with zero devices is a
+    /// caller bug, not a user-input condition.
     pub fn l_c(&self) -> usize {
+        debug_assert!(
+            !self.cut.is_empty(),
+            "L_c of an empty fleet (empty fleets are rejected at config/scenario validation)"
+        );
         self.cut.iter().copied().max().unwrap_or(0)
     }
 }
@@ -185,6 +194,33 @@ pub fn round_latency(
     RoundLatency { per_device, server_fwd, server_bwd, t_split, t_agg }
 }
 
+/// [`round_latency`] over the masked subset of the fleet: devices with
+/// `mask[i] == false` (offline members, mid-round dropouts) contribute to
+/// no phase maximum and no server-side sum. Used by dynamic-fleet rounds
+/// where only the surviving participants gate the round (the server
+/// proceeds with the activations it received).
+pub fn round_latency_subset(
+    p: &ModelProfile,
+    devices: &[Device],
+    server: &Server,
+    dec: &Decisions,
+    mask: &[bool],
+) -> RoundLatency {
+    assert_eq!(devices.len(), mask.len());
+    assert_eq!(devices.len(), dec.n());
+    let idx: Vec<usize> = mask
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &m)| m.then_some(i))
+        .collect();
+    let sub_devices: Vec<Device> = idx.iter().map(|&i| devices[i].clone()).collect();
+    let sub_dec = Decisions {
+        batch: idx.iter().map(|&i| dec.batch[i]).collect(),
+        cut: idx.iter().map(|&i| dec.cut[i]).collect(),
+    };
+    round_latency(p, &sub_devices, server, &sub_dec)
+}
+
 /// Eqn 40: total latency for R rounds with aggregation interval I:
 /// T = R * T_S + floor(R / I) * T_A.
 pub fn total_latency(round: &RoundLatency, rounds: usize, interval: usize) -> f64 {
@@ -275,6 +311,24 @@ mod tests {
         devs[7].up_bps /= 20.0;
         let slow = round_latency(&p, &devs, &s, &dec).t_split;
         assert!(slow > base * 1.5, "{slow} vs {base}");
+    }
+
+    #[test]
+    fn subset_latency_ignores_masked_devices() {
+        let (p, mut devs, s) = setup();
+        let dec = Decisions::uniform(devs.len(), 16, 4);
+        // Slow device 7 to a crawl; masking it out must restore the round.
+        devs[7].up_bps /= 50.0;
+        let full = round_latency(&p, &devs, &s, &dec);
+        let mut mask = vec![true; devs.len()];
+        mask[7] = false;
+        let sub = round_latency_subset(&p, &devs, &s, &dec, &mask);
+        assert!(sub.t_split < full.t_split);
+        assert_eq!(sub.per_device.len(), devs.len() - 1);
+        // An all-true mask reproduces the full round exactly.
+        let all_mask = vec![true; devs.len()];
+        let all = round_latency_subset(&p, &devs, &s, &dec, &all_mask);
+        assert_eq!(all.t_split, full.t_split);
     }
 
     #[test]

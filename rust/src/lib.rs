@@ -7,8 +7,10 @@
 //! - **L3 (this crate)** — the coordinator: split-training round
 //!   orchestration across simulated heterogeneous edge devices, the
 //!   convergence-bound engine (Theorem 1 / Corollary 1), the latency model
-//!   (Eqns 28–40), and the joint batch-size + model-splitting optimizer
-//!   (Algorithm 2: Newton–Jacobi BS solver + Dinkelbach/BCD MS solver).
+//!   (Eqns 28–40), the joint batch-size + model-splitting optimizer
+//!   (Algorithm 2: Newton–Jacobi BS solver + Dinkelbach/BCD MS solver),
+//!   and the [`scenario`] engine that evolves fleet state over rounds
+//!   (channel drift, device churn, stragglers — DESIGN.md §9).
 //! - **L2 (python/compile/model.py)** — the split CNN fwd/bwd in JAX,
 //!   AOT-lowered to HLO text artifacts at build time.
 //! - **L1 (python/compile/kernels/)** — Pallas GEMM + softmax-xent kernels
@@ -35,6 +37,7 @@ pub mod model;
 pub mod optimizer;
 pub mod rng;
 pub mod runtime;
+pub mod scenario;
 pub mod util;
 
 pub use config::Config;

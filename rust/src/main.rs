@@ -4,8 +4,12 @@
 //! hasfl train    [--preset small|figure|table1] [--config cfg.json]
 //!                [--strategy hasfl|rbs_hams|habs_rms|rbs_rms|rbs_rhams|fixed]
 //!                [--rounds N] [--devices N] [--seed S] [--non-iid]
-//!                [--artifacts DIR] [--out history.csv] [--concurrent]
-//!                [--pool N] [--early-stop] [--progress]
+//!                [--scenario static|drifting-channels|diurnal|churn-heavy|mega-fleet|spec.json]
+//!                [--artifacts DIR] [--out history.csv] [--fleet-out trace.csv]
+//!                [--concurrent] [--pool N] [--early-stop] [--progress]
+//! hasfl scenario [--preset ...|--spec spec.json] [--devices N] [--rounds R]
+//!                [--seed S] [--model vgg16|resnet18] [--strategy ...]
+//!                [--out trace.csv]
 //! hasfl optimize [--devices N] [--model vgg16|resnet18|splitcnn8] [--seed S]
 //! hasfl latency  [--batch B] [--cut C] [--model ...] [--devices N]
 //! hasfl info     [--artifacts DIR]
@@ -16,16 +20,29 @@ use std::path::PathBuf;
 
 use hasfl::config::{Config, StrategyKind};
 use hasfl::convergence::BoundParams;
-use hasfl::experiment::{CsvHistory, EarlyStop, Experiment, Preset, ProgressLogger};
+use hasfl::experiment::{CsvHistory, EarlyStop, Experiment, FleetTraceCsv, Preset, ProgressLogger};
 use hasfl::latency::{round_latency, Decisions};
 use hasfl::metrics::{CONVERGENCE_ACC_THRESHOLD, CONVERGENCE_WINDOW};
 use hasfl::model::{Manifest, ModelProfile};
 use hasfl::optimizer::{solve_joint, OptContext};
 use hasfl::rng::Pcg32;
 use hasfl::runtime::EngineHandle;
+use hasfl::scenario::{Scenario, ScenarioPreset, ScenarioSim};
 use hasfl::util::Args;
 
-const USAGE: &str = "usage: hasfl <train|optimize|latency|info|config> [options]";
+const USAGE: &str = "usage: hasfl <train|scenario|optimize|latency|info|config> [options]";
+
+/// Resolve a `--scenario` value: a path to a spec JSON (anything that
+/// exists on disk) or a preset name.
+fn scenario_arg(value: &str) -> hasfl::Result<Scenario> {
+    let path = std::path::Path::new(value);
+    if path.exists() {
+        return Scenario::load(path);
+    }
+    ScenarioPreset::parse(value)
+        .map(|p| p.scenario())
+        .map_err(|e| anyhow::anyhow!("--scenario '{value}': no such spec file, and {e}"))
+}
 
 fn profile_arg(name: &str, artifacts: &std::path::Path) -> hasfl::Result<ModelProfile> {
     Ok(match name {
@@ -62,12 +79,18 @@ fn cmd_train(args: &Args) -> hasfl::Result<()> {
     if let Some(p) = args.get_opt::<usize>("pool")? {
         builder = builder.engine_pool(p);
     }
+    if let Some(s) = args.get("scenario") {
+        builder = builder.scenario(scenario_arg(s)?);
+    }
     builder = builder
         .artifacts(args.get("artifacts").unwrap_or("artifacts"))
         .concurrent(args.flag("concurrent"));
     let out = args.get("out").map(PathBuf::from);
     if let Some(path) = &out {
         builder = builder.observe(CsvHistory::new(path));
+    }
+    if let Some(path) = args.get("fleet-out") {
+        builder = builder.observe(FleetTraceCsv::new(path));
     }
     if args.flag("early-stop") {
         builder = builder.observe(EarlyStop::paper_default());
@@ -106,6 +129,63 @@ fn cmd_train(args: &Args) -> hasfl::Result<()> {
     session.finish()?; // flushes the CSV observer
     if let Some(path) = out {
         eprintln!("history -> {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_scenario(args: &Args) -> hasfl::Result<()> {
+    // Analytic dynamic-fleet simulation: scenario engine + latency model +
+    // BS/MS optimizer, no PJRT runtime (scales to 1k+ devices).
+    let (preset, scenario) = match args.get("spec") {
+        Some(path) => (None, Scenario::load(std::path::Path::new(path))?),
+        None => {
+            let p = ScenarioPreset::parse(args.get("preset").unwrap_or("drifting-channels"))?;
+            (Some(p), p.scenario())
+        }
+    };
+    let default_devices = preset.and_then(|p| p.suggested_devices()).unwrap_or(20);
+    let devices = args.get_or("devices", default_devices)?;
+    let rounds = args.get_or("rounds", 100usize)?;
+    anyhow::ensure!(rounds >= 1, "--rounds must be >= 1");
+    let seed = args.get_or("seed", 2025u64)?;
+
+    let mut cfg = Config::table1();
+    cfg.fleet.n_devices = devices;
+    cfg.seed = seed;
+    cfg.model = hasfl::config::ModelKind::parse(args.get("model").unwrap_or("vgg16"))?;
+    cfg.strategy = match args.get("strategy") {
+        Some(s) => StrategyKind::parse(s)?,
+        None => preset
+            .and_then(|p| p.suggested_strategy())
+            .unwrap_or(cfg.strategy),
+    };
+
+    let mut sim = ScenarioSim::new(cfg, scenario.clone())?;
+    eprintln!(
+        "scenario '{}': N={devices} rounds={rounds} strategy={} seed={seed}",
+        scenario.name,
+        sim.config().strategy.as_str()
+    );
+    sim.run(rounds);
+
+    let trace = sim.trace();
+    let split = trace.split_summary().expect("rounds >= 1");
+    let drift = trace.drift_summary().expect("rounds >= 1");
+    println!("rounds: {} | sim_time: {:.2}s", trace.len(), sim.sim_time());
+    println!(
+        "active: final {} | partial rounds: {} | re-solves: {}",
+        trace.rounds.last().map_or(0, |r| r.n_active),
+        trace.partial_rounds(),
+        trace.resolves()
+    );
+    println!(
+        "t_split: p50 {:.4}s p95 {:.4}s max {:.4}s | drift: p50 {:.4} max {:.4}",
+        split.p50, split.p95, split.max, drift.p50, drift.max
+    );
+    if let Some(path) = args.get("out") {
+        let path = PathBuf::from(path);
+        trace.write_csv(&path)?;
+        eprintln!("fleet trace -> {}", path.display());
     }
     Ok(())
 }
@@ -248,6 +328,7 @@ fn main() -> hasfl::Result<()> {
     let args = Args::from_env()?;
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
+        Some("scenario") => cmd_scenario(&args),
         Some("optimize") => cmd_optimize(&args),
         Some("latency") => cmd_latency(&args),
         Some("info") => cmd_info(&args),
@@ -267,7 +348,7 @@ mod tests {
     fn usage_names_every_subcommand() {
         // The doc comment, USAGE string, and main() dispatch must stay in
         // sync; this guards the USAGE half.
-        for sub in ["train", "optimize", "latency", "info", "config"] {
+        for sub in ["train", "scenario", "optimize", "latency", "info", "config"] {
             assert!(USAGE.contains(sub), "USAGE is missing '{sub}'");
         }
     }

@@ -173,6 +173,102 @@ impl History {
     }
 }
 
+/// One round of a dynamic-fleet run (scenario engine attached): fleet
+/// membership, drift since the last re-solve, and the round's latency —
+/// the latency-vs-drift record that figures and benches plot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetRound {
+    pub round: usize,
+    /// Fleet members online this round.
+    pub n_active: usize,
+    /// Members that failed mid-round (completed no work).
+    pub n_dropped: usize,
+    pub n_joined: usize,
+    pub n_left: usize,
+    /// Mean relative fleet deviation since the last BS/MS re-solve.
+    pub drift: f64,
+    /// Whether BS/MS were re-solved this round (window or drift trigger).
+    pub resolved: bool,
+    /// Split-training round latency over the surviving devices (Eqn 38).
+    pub t_split: f64,
+    /// Aggregation latency charged this round (0 outside aggregation
+    /// events, Eqn 39).
+    pub t_agg: f64,
+    pub sim_time: f64,
+}
+
+/// Per-round trace of a dynamic-fleet run + derived statistics. Equality
+/// is bit-exact, which is what the scenario determinism suite asserts.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FleetTrace {
+    pub rounds: Vec<FleetRound>,
+}
+
+impl FleetTrace {
+    pub fn push(&mut self, r: FleetRound) {
+        self.rounds.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rounds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rounds.is_empty()
+    }
+
+    /// Number of rounds that ended in a BS/MS re-solve.
+    pub fn resolves(&self) -> usize {
+        self.rounds.iter().filter(|r| r.resolved).count()
+    }
+
+    /// Rounds where at least one device failed mid-round.
+    pub fn partial_rounds(&self) -> usize {
+        self.rounds.iter().filter(|r| r.n_dropped > 0).count()
+    }
+
+    /// Percentile summary of per-round split latency (seconds).
+    pub fn split_summary(&self) -> Option<LatencySummary> {
+        let s: Vec<f64> = self.rounds.iter().map(|r| r.t_split).collect();
+        LatencySummary::from_samples(&s)
+    }
+
+    /// Percentile summary of per-round drift.
+    pub fn drift_summary(&self) -> Option<LatencySummary> {
+        let s: Vec<f64> = self.rounds.iter().map(|r| r.drift).collect();
+        LatencySummary::from_samples(&s)
+    }
+
+    /// Write the trace as CSV (one row per round).
+    pub fn write_csv(&self, path: &std::path::Path) -> crate::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(
+            f,
+            "round,n_active,n_dropped,n_joined,n_left,drift,resolved,t_split,t_agg,sim_time"
+        )?;
+        for r in &self.rounds {
+            writeln!(
+                f,
+                "{},{},{},{},{},{:.6},{},{:.6},{:.6},{:.6}",
+                r.round,
+                r.n_active,
+                r.n_dropped,
+                r.n_joined,
+                r.n_left,
+                r.drift,
+                r.resolved as u8,
+                r.t_split,
+                r.t_agg,
+                r.sim_time
+            )?;
+        }
+        Ok(())
+    }
+}
+
 /// Generic CSV table writer for figure data.
 pub struct CsvTable {
     header: Vec<String>,
@@ -266,6 +362,36 @@ mod tests {
         let mut t = CsvTable::new(&["a", "b"]);
         t.rowf(&[1.0, 2.0]);
         assert_eq!(t.n_rows(), 1);
+    }
+
+    #[test]
+    fn fleet_trace_stats_and_csv() {
+        let mut t = FleetTrace::default();
+        for i in 1..=4usize {
+            t.push(FleetRound {
+                round: i,
+                n_active: 8 - i,
+                n_dropped: i % 2,
+                n_joined: 0,
+                n_left: 0,
+                drift: 0.1 * i as f64,
+                resolved: i % 2 == 0,
+                t_split: i as f64,
+                t_agg: 0.0,
+                sim_time: i as f64,
+            });
+        }
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.resolves(), 2);
+        assert_eq!(t.partial_rounds(), 2);
+        assert_eq!(t.split_summary().unwrap().max, 4.0);
+        assert!(t.drift_summary().unwrap().mean > 0.0);
+
+        let path = std::env::temp_dir().join("hasfl_fleet_trace_test.csv");
+        t.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("round,n_active,n_dropped"));
+        assert_eq!(text.lines().count(), 5);
     }
 
     #[test]

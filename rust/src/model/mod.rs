@@ -6,7 +6,7 @@ pub mod params;
 pub mod profiles;
 
 pub use manifest::{ArtifactEntry, BlockRow, Manifest, ParamShape, TensorSpec};
-pub use params::{average_in_place, Params, Tensor};
+pub use params::{average_in_place, weighted_average_in_place, Params, Tensor};
 pub use profiles::{LayerCost, ModelProfile};
 
 use crate::config::ModelKind;

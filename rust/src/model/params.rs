@@ -147,6 +147,46 @@ pub fn average_in_place(sets: &mut [Params], range: std::ops::Range<usize>) {
     }
 }
 
+/// Weighted partial synchronisation: average tensor range `range` over the
+/// `participants` subset (weights normalised internally), writing the
+/// result into *every* set — contributors and non-contributors alike, so
+/// the synced region stays fleet-identical (the invariant the runtime's
+/// shared buffer-cache keying relies on, DESIGN.md §8). Used by
+/// dynamic-fleet rounds where offline/dropped devices contribute nothing
+/// but still receive the aggregate. Bumps every set's version.
+pub fn weighted_average_in_place(
+    sets: &mut [Params],
+    range: std::ops::Range<usize>,
+    participants: &[usize],
+    weights: &[f64],
+) {
+    if sets.is_empty() || range.is_empty() || participants.is_empty() {
+        return;
+    }
+    assert_eq!(participants.len(), weights.len());
+    debug_assert!(participants.iter().all(|&p| p < sets.len()));
+    let wsum: f64 = weights.iter().sum();
+    if wsum <= 0.0 {
+        return;
+    }
+    let scaled: Vec<f32> = weights.iter().map(|&w| (w / wsum) as f32).collect();
+    for s in sets.iter_mut() {
+        s.version += 1;
+    }
+    for ti in range {
+        let len = sets[0].tensors[ti].data.len();
+        let mut mean = vec![0.0f32; len];
+        for (&p, &k) in participants.iter().zip(&scaled) {
+            for (m, &v) in mean.iter_mut().zip(&sets[p].tensors[ti].data) {
+                *m += k * v;
+            }
+        }
+        for s in sets.iter_mut() {
+            s.tensors[ti].data.copy_from_slice(&mean);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,6 +239,42 @@ mod tests {
         assert_eq!(sets[1].tensors[2].data, vec![3.0, 4.0]);
         a.tensors[0].data = vec![0.0; 2];
         b.tensors[0].data = vec![0.0; 2];
+    }
+
+    #[test]
+    fn weighted_average_excludes_nonparticipants_but_syncs_everyone() {
+        let mut a = toy_params(); // tensors[0] = [1, 2]
+        a.tensors[0].data = vec![2.0, 2.0];
+        let mut b = toy_params();
+        b.tensors[0].data = vec![6.0, 6.0];
+        let mut c = toy_params();
+        c.tensors[0].data = vec![100.0, 100.0]; // non-participant
+        let mut sets = vec![a, b, c];
+        // Participants 0 and 1 with weights 1:3 -> mean 5.0; device 2
+        // contributes nothing but receives the aggregate.
+        weighted_average_in_place(&mut sets, 0..1, &[0, 1], &[1.0, 3.0]);
+        for s in &sets {
+            assert_eq!(s.tensors[0].data, vec![5.0, 5.0]);
+            assert_eq!(s.version, 1);
+        }
+        // Range end untouched.
+        assert_eq!(sets[2].tensors[1].data, vec![0.5]);
+    }
+
+    #[test]
+    fn weighted_average_full_equal_weights_matches_plain_average() {
+        let mut x = vec![toy_params(), toy_params()];
+        x[1].tensors[0].data = vec![3.0, 4.0];
+        let mut y = x.clone();
+        average_in_place(&mut x, 0..2);
+        weighted_average_in_place(&mut y, 0..2, &[0, 1], &[1.0, 1.0]);
+        for (a, b) in x.iter().zip(&y) {
+            for (ta, tb) in a.tensors.iter().zip(&b.tensors) {
+                for (&va, &vb) in ta.data.iter().zip(&tb.data) {
+                    assert!((va - vb).abs() < 1e-6, "{va} vs {vb}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,407 @@
+//! The deterministic scenario engine: evolves a roster of devices round by
+//! round under a [`Scenario`](super::Scenario) spec and emits per-round
+//! [`FleetSnapshot`]s.
+//!
+//! Determinism contract: the engine owns a single PCG stream seeded from
+//! the experiment seed; every draw is a pure function of (seed, spec,
+//! round), so two engines built from the same inputs produce bit-identical
+//! snapshot sequences regardless of who consumes them (asserted by
+//! `rust/tests/scenario_determinism.rs`).
+
+use crate::config::Device;
+use crate::rng::Pcg32;
+
+use super::{ChurnModel, Drift, Scenario};
+
+/// Per-roster-member evolution state.
+#[derive(Debug, Clone)]
+struct DeviceState {
+    base: Device,
+    channel_mult: f64,
+    compute_mult: f64,
+    active: bool,
+    /// Phase offset (fraction of a period) for `Drift::Periodic`.
+    phase: f64,
+}
+
+/// One round's fleet state, as consumed by the latency model, the
+/// coordinator, and the round report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSnapshot {
+    /// 1-based round index this snapshot describes.
+    pub round: usize,
+    /// Stable roster ids of the devices active this round (ascending).
+    pub active: Vec<usize>,
+    /// *Realized* resources of each active device this round (same order
+    /// as `active`): base rates x channel multiplier, base FLOPS x compute
+    /// multiplier, with any transient straggler slowdown applied. Feed
+    /// these to the latency model; feed the *persistent* rates
+    /// ([`ScenarioEngine::effective_roster`], straggler-free) to the
+    /// optimizer, so a one-round slowdown is never baked into a whole
+    /// decision window.
+    pub devices: Vec<Device>,
+    /// Roster ids (subset of `active`) that fail mid-round: they complete
+    /// no work this round but remain fleet members.
+    pub dropped: Vec<usize>,
+    /// Roster ids that came online this round.
+    pub joined: Vec<usize>,
+    /// Roster ids that went offline this round.
+    pub left: Vec<usize>,
+    /// Mean relative deviation of the fleet from its state at the last
+    /// re-solve (membership changes count 1.0 each); drives the
+    /// `resolve_drift` trigger.
+    pub drift: f64,
+}
+
+impl FleetSnapshot {
+    /// Roster-sized participation mask: active and not dropped mid-round.
+    pub fn participation(&self, roster: usize) -> Vec<bool> {
+        let mut mask = vec![false; roster];
+        for &i in &self.active {
+            mask[i] = true;
+        }
+        for &i in &self.dropped {
+            mask[i] = false;
+        }
+        mask
+    }
+
+    /// Ids of devices that complete the round (active minus dropped).
+    pub fn survivors(&self) -> Vec<usize> {
+        self.active.iter().copied().filter(|i| !self.dropped.contains(i)).collect()
+    }
+}
+
+/// Evolve one multiplier one round forward.
+fn evolve(drift: &Drift, mult: f64, round: usize, phase: f64, rng: &mut Pcg32) -> f64 {
+    match *drift {
+        Drift::Static => mult,
+        Drift::GaussMarkov { rho, sigma, floor, ceil } => {
+            let next = 1.0 + rho * (mult - 1.0) + sigma * rng.normal();
+            next.clamp(floor, ceil)
+        }
+        Drift::Periodic { period, amplitude } => {
+            let x = 2.0 * std::f64::consts::PI * (round as f64 / period + phase);
+            1.0 + amplitude * x.sin()
+        }
+    }
+}
+
+/// Effective device under the current multipliers and slowdown factor.
+fn effective(base: &Device, channel: f64, compute: f64, slow: f64) -> Device {
+    Device {
+        flops: base.flops * compute / slow,
+        up_bps: base.up_bps * channel / slow,
+        down_bps: base.down_bps * channel / slow,
+        fed_up_bps: base.fed_up_bps * channel / slow,
+        fed_down_bps: base.fed_down_bps * channel / slow,
+        mem_bytes: base.mem_bytes,
+    }
+}
+
+/// The seeded fleet evolver. See the [module docs](self).
+pub struct ScenarioEngine {
+    spec: Scenario,
+    roster: Vec<DeviceState>,
+    rng: Pcg32,
+    round: usize,
+    /// Effective roster state (all members) as of the current round.
+    effective: Vec<Device>,
+    /// Effective roster state + membership at the last re-solve: the drift
+    /// reference.
+    reference: Vec<Device>,
+    reference_active: Vec<bool>,
+}
+
+impl ScenarioEngine {
+    /// Build an engine over a sampled base fleet. The whole roster starts
+    /// active with unit multipliers.
+    pub fn new(spec: Scenario, base: Vec<Device>, seed: u64) -> crate::Result<ScenarioEngine> {
+        spec.validate(base.len())?;
+        let n = base.len();
+        let roster: Vec<DeviceState> = base
+            .into_iter()
+            .enumerate()
+            .map(|(i, d)| DeviceState {
+                base: d,
+                channel_mult: 1.0,
+                compute_mult: 1.0,
+                active: true,
+                phase: i as f64 / n as f64,
+            })
+            .collect();
+        let effective: Vec<Device> = roster.iter().map(|s| s.base.clone()).collect();
+        let reference = effective.clone();
+        Ok(ScenarioEngine {
+            spec,
+            roster,
+            rng: Pcg32::new(seed, 0x5CE7A),
+            round: 0,
+            effective,
+            reference,
+            reference_active: vec![true; n],
+        })
+    }
+
+    pub fn spec(&self) -> &Scenario {
+        &self.spec
+    }
+
+    pub fn roster_len(&self) -> usize {
+        self.roster.len()
+    }
+
+    /// Rounds evolved so far.
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    /// Persistent effective resources of the whole roster (inactive
+    /// members included, transient straggler slowdowns excluded) as of the
+    /// last [`ScenarioEngine::advance`] — the optimizer's view of the
+    /// fleet. Per-round realized rates live in
+    /// [`FleetSnapshot::devices`].
+    pub fn effective_roster(&self) -> &[Device] {
+        &self.effective
+    }
+
+    /// Reset the drift reference to the current fleet state. Called by the
+    /// coordinator/sim right after a BS/MS re-solve so `drift` measures
+    /// deviation since the decisions in force were computed.
+    pub fn mark_resolved(&mut self) {
+        self.reference = self.effective.clone();
+        self.reference_active = self.roster.iter().map(|s| s.active).collect();
+    }
+
+    /// Evolve the fleet one round and return its snapshot.
+    pub fn advance(&mut self) -> FleetSnapshot {
+        self.round += 1;
+        let round = self.round;
+        let n = self.roster.len();
+
+        // 1) Membership churn. One uniform draw per roster member per round
+        //    keeps the stream layout independent of membership state.
+        let mut joined = Vec::new();
+        let mut left = Vec::new();
+        if let Some(ChurnModel { leave_prob, join_prob, min_active, .. }) = self.spec.churn {
+            let min_active = min_active.min(n);
+            let mut active_count = self.roster.iter().filter(|s| s.active).count();
+            for i in 0..n {
+                let u = self.rng.next_f64();
+                if self.roster[i].active {
+                    if u < leave_prob && active_count > min_active {
+                        self.roster[i].active = false;
+                        active_count -= 1;
+                        left.push(i);
+                    }
+                } else if u < join_prob {
+                    self.roster[i].active = true;
+                    active_count += 1;
+                    joined.push(i);
+                }
+            }
+        }
+
+        // 2) Channel/compute drift evolves for the whole roster (inactive
+        //    members keep drifting, so a rejoining device does not come back
+        //    with frozen conditions).
+        for st in self.roster.iter_mut() {
+            st.channel_mult =
+                evolve(&self.spec.channel, st.channel_mult, round, st.phase, &mut self.rng);
+            st.compute_mult =
+                evolve(&self.spec.compute, st.compute_mult, round, st.phase, &mut self.rng);
+        }
+
+        let active: Vec<usize> = (0..n).filter(|&i| self.roster[i].active).collect();
+
+        // 3) Transient straggler: slow one random active device this round.
+        let mut straggler: Option<(usize, f64)> = None;
+        if let Some(sg) = self.spec.straggler {
+            if self.rng.next_f64() < sg.prob && !active.is_empty() {
+                let victim = active[self.rng.below(active.len() as u32) as usize];
+                let factor = sg.slowdown.sample(&mut self.rng);
+                straggler = Some((victim, factor));
+            }
+        }
+
+        // 4) Mid-round dropout: at least one device always survives.
+        let mut dropped = Vec::new();
+        if let Some(ChurnModel { dropout_prob, .. }) = self.spec.churn {
+            if dropout_prob > 0.0 {
+                let mut survivors = active.len();
+                for &i in &active {
+                    let u = self.rng.next_f64();
+                    if u < dropout_prob && survivors > 1 {
+                        dropped.push(i);
+                        survivors -= 1;
+                    }
+                }
+            }
+        }
+
+        // 5) Persistent effective roster resources (straggler-free): the
+        //    optimizer's view of the fleet, and the drift baseline. The
+        //    transient straggler slowdown is applied only to the snapshot's
+        //    realized per-round rates below.
+        for (i, st) in self.roster.iter().enumerate() {
+            self.effective[i] = effective(&st.base, st.channel_mult, st.compute_mult, 1.0);
+        }
+
+        // 6) Drift vs the last-re-solve reference: mean relative deviation
+        //    of compute + links over still-active devices, plus 1.0 per
+        //    membership flip. Straggler-free on both sides, so a one-round
+        //    spike cannot attract a re-solve by itself.
+        let rel = |now: f64, was: f64| ((now - was) / was).abs();
+        let mut acc = 0.0;
+        for i in 0..n {
+            let is_active = self.roster[i].active;
+            if is_active != self.reference_active[i] {
+                acc += 1.0;
+                continue;
+            }
+            if !is_active {
+                continue;
+            }
+            let (e, r) = (&self.effective[i], &self.reference[i]);
+            acc += (rel(e.flops, r.flops) + rel(e.up_bps, r.up_bps) + rel(e.down_bps, r.down_bps))
+                / 3.0;
+        }
+        let drift = acc / active.len().max(1) as f64;
+
+        let devices: Vec<Device> = active
+            .iter()
+            .map(|&i| {
+                let slow = match straggler {
+                    Some((v, f)) if v == i => f,
+                    _ => 1.0,
+                };
+                let st = &self.roster[i];
+                effective(&st.base, st.channel_mult, st.compute_mult, slow)
+            })
+            .collect();
+        FleetSnapshot { round, active, devices, dropped, joined, left, drift }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::scenario::ScenarioPreset;
+
+    fn engine(preset: ScenarioPreset, n: usize, seed: u64) -> ScenarioEngine {
+        let mut cfg = Config::table1();
+        cfg.fleet.n_devices = n;
+        cfg.seed = seed;
+        ScenarioEngine::new(preset.scenario(), cfg.sample_fleet(), seed).unwrap()
+    }
+
+    #[test]
+    fn rejects_empty_roster() {
+        let err = ScenarioEngine::new(ScenarioPreset::Static.scenario(), vec![], 1).unwrap_err();
+        assert!(err.to_string().contains("non-empty fleet"), "{err}");
+    }
+
+    #[test]
+    fn static_scenario_never_moves_the_fleet() {
+        let mut eng = engine(ScenarioPreset::Static, 6, 7);
+        let base = eng.effective_roster().to_vec();
+        for t in 1..=10 {
+            let snap = eng.advance();
+            assert_eq!(snap.round, t);
+            assert_eq!(snap.active, (0..6).collect::<Vec<_>>());
+            assert!(snap.dropped.is_empty() && snap.joined.is_empty() && snap.left.is_empty());
+            assert_eq!(snap.drift, 0.0);
+            assert_eq!(snap.devices, base);
+        }
+    }
+
+    #[test]
+    fn snapshots_are_bit_identical_across_engines() {
+        for preset in ScenarioPreset::ALL {
+            let mut a = engine(preset, 12, 99);
+            let mut b = engine(preset, 12, 99);
+            for _ in 0..25 {
+                assert_eq!(a.advance(), b.advance(), "preset '{}'", preset.as_str());
+            }
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = engine(ScenarioPreset::DriftingChannels, 8, 1);
+        let mut b = engine(ScenarioPreset::DriftingChannels, 8, 2);
+        let differs = (0..10).any(|_| a.advance().devices != b.advance().devices);
+        assert!(differs);
+    }
+
+    #[test]
+    fn churn_respects_min_active_and_survivors() {
+        let mut eng = engine(ScenarioPreset::ChurnHeavy, 10, 3);
+        let min_active = eng.spec().churn.unwrap().min_active;
+        let mut saw_membership_change = false;
+        let mut saw_dropout = false;
+        for _ in 0..200 {
+            let snap = eng.advance();
+            assert!(snap.active.len() >= min_active, "active {} < min", snap.active.len());
+            assert!(!snap.survivors().is_empty(), "a round must have >= 1 survivor");
+            for d in &snap.dropped {
+                assert!(snap.active.contains(d), "dropped device not active");
+            }
+            saw_membership_change |= !snap.joined.is_empty() || !snap.left.is_empty();
+            saw_dropout |= !snap.dropped.is_empty();
+        }
+        assert!(saw_membership_change, "churn-heavy produced no churn in 200 rounds");
+        assert!(saw_dropout, "churn-heavy produced no dropout in 200 rounds");
+    }
+
+    #[test]
+    fn gauss_markov_rates_stay_clamped_and_drift_grows() {
+        let mut eng = engine(ScenarioPreset::DriftingChannels, 8, 11);
+        let base = eng.effective_roster().to_vec();
+        let mut max_drift = 0.0f64;
+        for _ in 0..50 {
+            let snap = eng.advance();
+            for (id, d) in snap.active.iter().zip(&snap.devices) {
+                // Clamp bounds are [0.3, 1.7]; widen a hair for the f64
+                // multiply/divide round-trip.
+                let ratio = d.up_bps / base[*id].up_bps;
+                assert!((0.299..=1.701).contains(&ratio), "ratio {ratio}");
+            }
+            max_drift = max_drift.max(snap.drift);
+        }
+        assert!(max_drift > 0.0, "drifting channels produced zero drift");
+    }
+
+    #[test]
+    fn mark_resolved_resets_the_drift_reference() {
+        let mut eng = engine(ScenarioPreset::DriftingChannels, 8, 13);
+        for _ in 0..20 {
+            eng.advance();
+        }
+        eng.mark_resolved();
+        // One step after a re-solve, AR(1) drift is small vs 20 steps.
+        let after = eng.advance().drift;
+        assert!(after < 0.3, "post-resolve drift {after} unexpectedly large");
+    }
+
+    #[test]
+    fn diurnal_fading_is_periodic_and_phase_offset() {
+        let mut eng = engine(ScenarioPreset::Diurnal, 4, 17);
+        let mut per_round: Vec<Vec<f64>> = Vec::new();
+        for _ in 0..96 {
+            let snap = eng.advance();
+            per_round.push(snap.devices.iter().map(|d| d.up_bps).collect());
+        }
+        // Period 48: round t and t+48 coincide (deterministic, no RNG).
+        for t in 0..48 {
+            for i in 0..4 {
+                let (a, b) = (per_round[t][i], per_round[t + 48][i]);
+                assert!((a - b).abs() < 1e-6 * a.abs(), "round {t} dev {i}: {a} vs {b}");
+            }
+        }
+        // Distinct phases: devices are not in lock-step within a round.
+        let r0 = &per_round[10];
+        assert!(r0.iter().any(|&v| (v - r0[0]).abs() > 1e-9));
+    }
+}

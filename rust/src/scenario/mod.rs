@@ -1,0 +1,514 @@
+//! Dynamic scenario engine: time-varying channels, compute jitter, device
+//! churn, and straggler injection over the simulated edge fleet.
+//!
+//! HASFL's premise is that BS/MS decisions must track *heterogeneous and
+//! time-varying* edge conditions (§I of the paper; AdaptSFL and ParallelSFL
+//! both evaluate under fluctuating channels and device dropout). The static
+//! fleets of `config::FleetConfig` never exercise that: rates are fixed for
+//! the life of a run, so the optimizer's re-solve cadence is only ever
+//! driven by the fixed decision window. This module adds a deterministic,
+//! seeded [`Scenario`] spec that evolves fleet state round by round:
+//!
+//! - [`Drift`] — per-device channel-rate and compute-capability evolution
+//!   (Gauss–Markov AR(1) drift or deterministic periodic/diurnal fading).
+//! - [`ChurnModel`] — devices leave, rejoin, and drop out *mid-round*
+//!   (dropouts complete no work that round; partial aggregation handles
+//!   them, see `aggregation::aggregate_common_partial`).
+//! - [`StragglerModel`] — transient one-round slowdowns of a random victim.
+//! - `resolve_drift` — a relative fleet-drift threshold that pulls the next
+//!   aggregation + BS/MS re-solve *forward* instead of waiting for the
+//!   fixed window (DESIGN.md §9).
+//!
+//! [`engine::ScenarioEngine`] turns a spec + base fleet into a per-round
+//! [`engine::FleetSnapshot`] stream; [`sim::ScenarioSim`] drives the
+//! analytic latency model + optimizer over that stream (no PJRT runtime
+//! needed, scales to 1k+ devices — the `mega-fleet` preset is the standing
+//! scale benchmark, `rust/benches/scenario_fleet.rs`). The executable
+//! training path attaches the same engine through
+//! `ExperimentBuilder::scenario`.
+//!
+//! Everything is specified by value and serialised through the in-repo
+//! JSON substrate, exactly like [`crate::config::Config`]; same seed + same
+//! spec ⇒ bit-identical snapshot and round-history streams
+//! (`rust/tests/scenario_determinism.rs`).
+
+pub mod engine;
+pub mod sim;
+
+pub use engine::{FleetSnapshot, ScenarioEngine};
+pub use sim::{ScenarioSim, SimRound};
+
+use crate::config::{Range, StrategyKind};
+use crate::util::Json;
+
+/// Per-round evolution of a per-device multiplier (applied to channel
+/// rates or compute capability; 1.0 = the device's sampled base value).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Drift {
+    /// No evolution: the multiplier stays at 1.0.
+    Static,
+    /// Gauss–Markov AR(1) drift around 1.0:
+    /// `m' = clamp(1 + rho*(m - 1) + sigma*xi, floor, ceil)`, xi ~ N(0,1).
+    GaussMarkov { rho: f64, sigma: f64, floor: f64, ceil: f64 },
+    /// Deterministic periodic (diurnal) fading:
+    /// `m(t) = 1 + amplitude * sin(2*pi*(t/period + phase_i))`, with a
+    /// per-device phase offset so the fleet does not fade in lock-step.
+    Periodic { period: f64, amplitude: f64 },
+}
+
+impl Drift {
+    fn validate(&self, what: &str) -> crate::Result<()> {
+        match *self {
+            Drift::Static => Ok(()),
+            Drift::GaussMarkov { rho, sigma, floor, ceil } => {
+                anyhow::ensure!(
+                    (0.0..1.0).contains(&rho),
+                    "{what}: Gauss-Markov rho {rho} outside [0, 1)"
+                );
+                anyhow::ensure!(
+                    sigma.is_finite() && sigma >= 0.0,
+                    "{what}: Gauss-Markov sigma {sigma} must be finite and >= 0"
+                );
+                anyhow::ensure!(
+                    floor > 0.0 && ceil >= floor,
+                    "{what}: Gauss-Markov clamp [{floor}, {ceil}] must satisfy 0 < floor <= ceil"
+                );
+                Ok(())
+            }
+            Drift::Periodic { period, amplitude } => {
+                anyhow::ensure!(period > 0.0, "{what}: period {period} must be > 0");
+                anyhow::ensure!(
+                    (0.0..1.0).contains(&amplitude),
+                    "{what}: amplitude {amplitude} outside [0, 1) (would zero a rate)"
+                );
+                Ok(())
+            }
+        }
+    }
+
+    fn to_json(self) -> Json {
+        let mut j = Json::obj();
+        match self {
+            Drift::Static => {
+                j.set("kind", Json::Str("static".into()));
+            }
+            Drift::GaussMarkov { rho, sigma, floor, ceil } => {
+                j.set("kind", Json::Str("gauss_markov".into()))
+                    .set("rho", Json::Num(rho))
+                    .set("sigma", Json::Num(sigma))
+                    .set("floor", Json::Num(floor))
+                    .set("ceil", Json::Num(ceil));
+            }
+            Drift::Periodic { period, amplitude } => {
+                j.set("kind", Json::Str("periodic".into()))
+                    .set("period", Json::Num(period))
+                    .set("amplitude", Json::Num(amplitude));
+            }
+        }
+        j
+    }
+
+    fn from_json(j: &Json) -> crate::Result<Drift> {
+        Ok(match j.req("kind")?.as_str()? {
+            "static" => Drift::Static,
+            "gauss_markov" => Drift::GaussMarkov {
+                rho: j.req("rho")?.as_f64()?,
+                sigma: j.req("sigma")?.as_f64()?,
+                floor: j.req("floor")?.as_f64()?,
+                ceil: j.req("ceil")?.as_f64()?,
+            },
+            "periodic" => Drift::Periodic {
+                period: j.req("period")?.as_f64()?,
+                amplitude: j.req("amplitude")?.as_f64()?,
+            },
+            other => anyhow::bail!("unknown drift kind '{other}'"),
+        })
+    }
+}
+
+/// Device churn: membership changes between rounds plus mid-round dropout.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnModel {
+    /// Per-round probability an active device goes offline.
+    pub leave_prob: f64,
+    /// Per-round probability an offline device rejoins the fleet.
+    pub join_prob: f64,
+    /// Per-round probability an active device fails *mid-round*: it
+    /// completes no work that round but stays in the fleet.
+    pub dropout_prob: f64,
+    /// Churn never shrinks the active set below this (clamped to the
+    /// roster size at engine construction).
+    pub min_active: usize,
+}
+
+impl ChurnModel {
+    fn validate(&self) -> crate::Result<()> {
+        for (name, p) in [
+            ("leave_prob", self.leave_prob),
+            ("join_prob", self.join_prob),
+            ("dropout_prob", self.dropout_prob),
+        ] {
+            anyhow::ensure!((0.0..=1.0).contains(&p), "churn {name} {p} outside [0, 1]");
+        }
+        anyhow::ensure!(
+            self.min_active >= 1,
+            "churn min_active must be >= 1: an empty fleet has no round latency \
+             and no L_c (Decisions::l_c would silently be 0)"
+        );
+        Ok(())
+    }
+
+    fn to_json(self) -> Json {
+        let mut j = Json::obj();
+        j.set("leave_prob", Json::Num(self.leave_prob))
+            .set("join_prob", Json::Num(self.join_prob))
+            .set("dropout_prob", Json::Num(self.dropout_prob))
+            .set("min_active", Json::Num(self.min_active as f64));
+        j
+    }
+
+    fn from_json(j: &Json) -> crate::Result<ChurnModel> {
+        Ok(ChurnModel {
+            leave_prob: j.req("leave_prob")?.as_f64()?,
+            join_prob: j.req("join_prob")?.as_f64()?,
+            dropout_prob: j.req("dropout_prob")?.as_f64()?,
+            min_active: j.req("min_active")?.as_usize()?,
+        })
+    }
+}
+
+/// Transient straggler injection: with probability `prob` per round, one
+/// random active device is slowed by a factor drawn from `slowdown` (rates
+/// and compute divided by it) for that round only.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StragglerModel {
+    pub prob: f64,
+    pub slowdown: Range,
+}
+
+impl StragglerModel {
+    fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.prob),
+            "straggler prob {} outside [0, 1]",
+            self.prob
+        );
+        anyhow::ensure!(
+            self.slowdown.lo >= 1.0,
+            "straggler slowdown lower bound {} must be >= 1 (a factor)",
+            self.slowdown.lo
+        );
+        Ok(())
+    }
+
+    fn to_json(self) -> Json {
+        let mut j = Json::obj();
+        j.set("prob", Json::Num(self.prob))
+            .set("slowdown", Json::from_f64s(&[self.slowdown.lo, self.slowdown.hi]));
+        j
+    }
+
+    fn from_json(j: &Json) -> crate::Result<StragglerModel> {
+        let s = j.req("slowdown")?.f64_vec()?;
+        anyhow::ensure!(s.len() == 2, "slowdown needs [lo, hi]");
+        Ok(StragglerModel { prob: j.req("prob")?.as_f64()?, slowdown: Range::new(s[0], s[1]) })
+    }
+}
+
+/// A complete dynamic-fleet scenario, applied on top of the base fleet
+/// sampled from `Config.fleet`. Serde-style round-trippable through the
+/// in-repo JSON codec ([`Scenario::to_json`] / [`Scenario::from_json`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    /// Evolution of the per-device channel multiplier (all four link rates).
+    pub channel: Drift,
+    /// Evolution of the per-device compute multiplier (`f_i`).
+    pub compute: Drift,
+    pub churn: Option<ChurnModel>,
+    pub straggler: Option<StragglerModel>,
+    /// Mean relative fleet drift (vs the state at the last re-solve) that
+    /// triggers an *early* aggregation + BS/MS re-solve. `None` = re-solve
+    /// only on the fixed decision window.
+    pub resolve_drift: Option<f64>,
+}
+
+impl Scenario {
+    /// Validate the spec against a fleet of `n_devices` roster members.
+    ///
+    /// Empty fleets are rejected here (not deep inside the latency model):
+    /// `Decisions::l_c()` over zero devices would silently report 0 and
+    /// every phase maximum would collapse to 0 seconds.
+    pub fn validate(&self, n_devices: usize) -> crate::Result<()> {
+        anyhow::ensure!(
+            n_devices >= 1,
+            "scenario '{}' needs a non-empty fleet (n_devices >= 1)",
+            self.name
+        );
+        self.channel.validate("channel")?;
+        self.compute.validate("compute")?;
+        if let Some(c) = &self.churn {
+            c.validate()?;
+        }
+        if let Some(s) = &self.straggler {
+            s.validate()?;
+        }
+        if let Some(thr) = self.resolve_drift {
+            anyhow::ensure!(
+                thr.is_finite() && thr > 0.0,
+                "resolve_drift {thr} must be finite and > 0"
+            );
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", Json::Str(self.name.clone()))
+            .set("channel", self.channel.to_json())
+            .set("compute", self.compute.to_json());
+        if let Some(c) = self.churn {
+            j.set("churn", c.to_json());
+        }
+        if let Some(s) = self.straggler {
+            j.set("straggler", s.to_json());
+        }
+        if let Some(thr) = self.resolve_drift {
+            j.set("resolve_drift", Json::Num(thr));
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Scenario> {
+        Ok(Scenario {
+            name: j.req("name")?.as_str()?.to_string(),
+            channel: Drift::from_json(j.req("channel")?)?,
+            compute: Drift::from_json(j.req("compute")?)?,
+            churn: match j.get("churn") {
+                Some(c) => Some(ChurnModel::from_json(c)?),
+                None => None,
+            },
+            straggler: match j.get("straggler") {
+                Some(s) => Some(StragglerModel::from_json(s)?),
+                None => None,
+            },
+            resolve_drift: match j.get("resolve_drift") {
+                Some(v) => Some(v.as_f64()?),
+                None => None,
+            },
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> crate::Result<Scenario> {
+        let text = std::fs::read_to_string(path)?;
+        Scenario::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_json().dump())?;
+        Ok(())
+    }
+}
+
+/// Named scenario presets spanning the evaluation axes of the paper's
+/// related work: static control, channel drift, diurnal fading, heavy
+/// churn, and the 1k+-device scale stressor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioPreset {
+    /// Control: the historical fixed fleet, expressed as a scenario.
+    Static,
+    /// Gauss–Markov channel-rate drift with drift-triggered re-solves.
+    DriftingChannels,
+    /// Deterministic day/night fading of channels and compute.
+    Diurnal,
+    /// Aggressive join/leave churn + mid-round dropout + stragglers.
+    ChurnHeavy,
+    /// The standing scale benchmark: gentle drift + churn, intended for
+    /// fleets of >= 1000 simulated devices (see `suggested_devices`).
+    MegaFleet,
+}
+
+impl ScenarioPreset {
+    pub const ALL: [ScenarioPreset; 5] = [
+        ScenarioPreset::Static,
+        ScenarioPreset::DriftingChannels,
+        ScenarioPreset::Diurnal,
+        ScenarioPreset::ChurnHeavy,
+        ScenarioPreset::MegaFleet,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ScenarioPreset::Static => "static",
+            ScenarioPreset::DriftingChannels => "drifting-channels",
+            ScenarioPreset::Diurnal => "diurnal",
+            ScenarioPreset::ChurnHeavy => "churn-heavy",
+            ScenarioPreset::MegaFleet => "mega-fleet",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<ScenarioPreset> {
+        Ok(match s {
+            "static" => ScenarioPreset::Static,
+            "drifting-channels" | "drifting_channels" => ScenarioPreset::DriftingChannels,
+            "diurnal" => ScenarioPreset::Diurnal,
+            "churn-heavy" | "churn_heavy" => ScenarioPreset::ChurnHeavy,
+            "mega-fleet" | "mega_fleet" => ScenarioPreset::MegaFleet,
+            _ => anyhow::bail!(
+                "unknown scenario preset '{s}' (expected \
+                 static|drifting-channels|diurnal|churn-heavy|mega-fleet)"
+            ),
+        })
+    }
+
+    /// The preset's scenario spec.
+    pub fn scenario(&self) -> Scenario {
+        let name = self.as_str().to_string();
+        match self {
+            ScenarioPreset::Static => Scenario {
+                name,
+                channel: Drift::Static,
+                compute: Drift::Static,
+                churn: None,
+                straggler: None,
+                resolve_drift: None,
+            },
+            ScenarioPreset::DriftingChannels => Scenario {
+                name,
+                channel: Drift::GaussMarkov { rho: 0.9, sigma: 0.08, floor: 0.3, ceil: 1.7 },
+                compute: Drift::GaussMarkov { rho: 0.95, sigma: 0.02, floor: 0.5, ceil: 1.5 },
+                churn: None,
+                straggler: None,
+                resolve_drift: Some(0.15),
+            },
+            ScenarioPreset::Diurnal => Scenario {
+                name,
+                channel: Drift::Periodic { period: 48.0, amplitude: 0.5 },
+                compute: Drift::Periodic { period: 96.0, amplitude: 0.25 },
+                churn: None,
+                straggler: None,
+                resolve_drift: Some(0.2),
+            },
+            ScenarioPreset::ChurnHeavy => Scenario {
+                name,
+                channel: Drift::GaussMarkov { rho: 0.85, sigma: 0.05, floor: 0.4, ceil: 1.6 },
+                compute: Drift::Static,
+                churn: Some(ChurnModel {
+                    leave_prob: 0.08,
+                    join_prob: 0.25,
+                    dropout_prob: 0.05,
+                    min_active: 2,
+                }),
+                straggler: Some(StragglerModel { prob: 0.2, slowdown: Range::new(4.0, 16.0) }),
+                resolve_drift: Some(0.25),
+            },
+            ScenarioPreset::MegaFleet => Scenario {
+                name,
+                channel: Drift::GaussMarkov { rho: 0.9, sigma: 0.05, floor: 0.5, ceil: 1.5 },
+                compute: Drift::GaussMarkov { rho: 0.95, sigma: 0.02, floor: 0.6, ceil: 1.4 },
+                churn: Some(ChurnModel {
+                    leave_prob: 0.02,
+                    join_prob: 0.1,
+                    dropout_prob: 0.01,
+                    min_active: 32,
+                }),
+                straggler: Some(StragglerModel { prob: 0.3, slowdown: Range::new(4.0, 24.0) }),
+                resolve_drift: Some(0.2),
+            },
+        }
+    }
+
+    /// Fleet size the preset is designed around (`None` = caller's choice).
+    pub fn suggested_devices(&self) -> Option<usize> {
+        match self {
+            ScenarioPreset::MegaFleet => Some(1024),
+            _ => None,
+        }
+    }
+
+    /// Strategy that stays tractable at the preset's scale. The full HASFL
+    /// BCD solve is O(N^2) per sweep and infeasible at 1k+ devices; the
+    /// mega-fleet preset pairs with the heterogeneity-aware BS solver at a
+    /// fixed cut (Newton–Jacobi, O(N) per iteration).
+    pub fn suggested_strategy(&self) -> Option<StrategyKind> {
+        match self {
+            ScenarioPreset::MegaFleet => Some(StrategyKind::HabsFixedCut),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_parse_roundtrip() {
+        for p in ScenarioPreset::ALL {
+            assert_eq!(ScenarioPreset::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(ScenarioPreset::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn every_preset_roundtrips_through_json() {
+        for p in ScenarioPreset::ALL {
+            let s = p.scenario();
+            let back = Scenario::from_json(&Json::parse(&s.to_json().dump()).unwrap()).unwrap();
+            assert_eq!(s, back, "preset '{}'", p.as_str());
+        }
+    }
+
+    #[test]
+    fn scenario_save_load_roundtrip() {
+        let s = ScenarioPreset::ChurnHeavy.scenario();
+        let path = std::env::temp_dir().join("hasfl_scenario_rt.json");
+        s.save(&path).unwrap();
+        assert_eq!(Scenario::load(&path).unwrap(), s);
+    }
+
+    #[test]
+    fn every_preset_validates_at_table1_scale() {
+        for p in ScenarioPreset::ALL {
+            p.scenario().validate(20).unwrap();
+        }
+    }
+
+    #[test]
+    fn empty_fleet_is_rejected() {
+        // Regression for the Decisions::l_c() empty-fleet hole: construction
+        // is refused at the validation layer, before any latency math runs.
+        let err = ScenarioPreset::Static.scenario().validate(0).unwrap_err();
+        assert!(err.to_string().contains("non-empty fleet"), "{err}");
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        let mut s = ScenarioPreset::DriftingChannels.scenario();
+        s.channel = Drift::GaussMarkov { rho: 1.5, sigma: 0.1, floor: 0.5, ceil: 1.5 };
+        assert!(s.validate(4).is_err());
+
+        let mut s = ScenarioPreset::Diurnal.scenario();
+        s.compute = Drift::Periodic { period: 0.0, amplitude: 0.2 };
+        assert!(s.validate(4).is_err());
+
+        let mut s = ScenarioPreset::ChurnHeavy.scenario();
+        s.churn = Some(ChurnModel {
+            leave_prob: 0.1,
+            join_prob: 0.1,
+            dropout_prob: 0.1,
+            min_active: 0,
+        });
+        assert!(s.validate(4).is_err());
+
+        let mut s = ScenarioPreset::ChurnHeavy.scenario();
+        s.resolve_drift = Some(-1.0);
+        assert!(s.validate(4).is_err());
+    }
+
+    #[test]
+    fn mega_fleet_targets_1k_devices() {
+        assert!(ScenarioPreset::MegaFleet.suggested_devices().unwrap() >= 1000);
+        assert!(ScenarioPreset::MegaFleet.suggested_strategy().is_some());
+    }
+}

@@ -1,0 +1,334 @@
+//! Analytic scenario driver: the latency model + BS/MS optimizer over a
+//! [`ScenarioEngine`] stream, no PJRT runtime required.
+//!
+//! This is the scale path: a 1k+-device `mega-fleet` round costs one fleet
+//! evolution, one (possibly skipped) strategy solve, and one O(N) latency
+//! evaluation — `rust/benches/scenario_fleet.rs` uses it as the standing
+//! scale benchmark. Executable training under a scenario goes through
+//! `ExperimentBuilder::scenario` instead (same engine, real gradients).
+//!
+//! Re-solve cadence approximates the coordinator: decisions refresh on the
+//! fixed aggregation window *and* whenever fleet drift crosses the
+//! scenario's `resolve_drift` trigger (an early aggregation event). One
+//! divergence from the executable path: a membership change re-solves
+//! immediately (and is charged as an aggregation event), because the sim's
+//! decision vectors are sized to the active set, while the `Trainer` keeps
+//! roster-sized decisions and lets membership flips feed the drift trigger
+//! instead.
+
+use crate::config::{Config, Device, ModelKind};
+use crate::convergence::BoundParams;
+use crate::latency::{round_latency_subset, Decisions};
+use crate::metrics::{FleetRound, FleetTrace};
+use crate::model::{profile_for, ModelProfile};
+use crate::optimizer::{decide, OptContext, StrategyInputs};
+use crate::rng::Pcg32;
+
+use super::{FleetSnapshot, Scenario, ScenarioEngine};
+
+/// Alias: one simulated round's record (shared with the executable path's
+/// fleet trace).
+pub type SimRound = FleetRound;
+
+/// Step-driven analytic simulation of training rounds over a dynamic fleet.
+pub struct ScenarioSim {
+    cfg: Config,
+    scenario: Scenario,
+    profile: ModelProfile,
+    engine: ScenarioEngine,
+    strategy_rng: Pcg32,
+    inputs: StrategyInputs,
+    bound: BoundParams,
+    /// Decisions for the current active set (aligned with `active_ids`).
+    dec: Decisions,
+    /// Roster ids the decisions in force were solved for.
+    active_ids: Vec<usize>,
+    round: usize,
+    sim_time: f64,
+    resolves: usize,
+    trace: FleetTrace,
+}
+
+impl ScenarioSim {
+    /// Build a sim from a validated config + scenario. Analytic only: the
+    /// model must be one of the profile-backed kinds (`vgg16`/`resnet18`).
+    pub fn new(cfg: Config, scenario: Scenario) -> crate::Result<ScenarioSim> {
+        scenario.validate(cfg.fleet.n_devices)?;
+        anyhow::ensure!(
+            cfg.model != ModelKind::Splitcnn8,
+            "ScenarioSim is analytic; model '{}' requires the PJRT runtime \
+             (attach scenarios to executable runs via ExperimentBuilder::scenario)",
+            cfg.model.as_str()
+        );
+        let profile = profile_for(cfg.model, None);
+        let bound = BoundParams::default_for(&profile, cfg.train.lr);
+        let engine = ScenarioEngine::new(scenario.clone(), cfg.sample_fleet(), cfg.seed)?;
+        let mut strategy_rng = Pcg32::new(cfg.seed, 0x57A7);
+        let inputs = StrategyInputs { fixed_batch: cfg.fixed_batch, fixed_cut: cfg.fixed_cut };
+
+        // Initial decisions over the full (round-0) fleet.
+        let n = engine.roster_len();
+        let dec = {
+            let ctx = OptContext {
+                profile: &profile,
+                devices: engine.effective_roster(),
+                server: &cfg.server,
+                bound: &bound,
+                interval: cfg.train.agg_interval,
+                epsilon: cfg.train.epsilon,
+                batch_cap: cfg.train.batch_cap,
+            };
+            decide(cfg.strategy, &ctx, &mut strategy_rng, inputs)
+        };
+
+        Ok(ScenarioSim {
+            cfg,
+            scenario,
+            profile,
+            engine,
+            strategy_rng,
+            inputs,
+            bound,
+            dec,
+            active_ids: (0..n).collect(),
+            round: 0,
+            sim_time: 0.0,
+            resolves: 0,
+            trace: FleetTrace::default(),
+        })
+    }
+
+    /// Re-solve BS/MS for the snapshot's active set and reset the drift
+    /// reference. Decisions are solved over the *persistent* effective
+    /// rates (straggler-free), not the round's realized rates, so a
+    /// one-round slowdown is never baked into a whole decision window.
+    fn resolve(&mut self, snap: &FleetSnapshot) {
+        let roster = self.engine.effective_roster();
+        let devices: Vec<Device> =
+            snap.active.iter().map(|&i| roster[i].clone()).collect();
+        let dec = {
+            let ctx = OptContext {
+                profile: &self.profile,
+                devices: &devices,
+                server: &self.cfg.server,
+                bound: &self.bound,
+                interval: self.cfg.train.agg_interval,
+                epsilon: self.cfg.train.epsilon,
+                batch_cap: self.cfg.train.batch_cap,
+            };
+            decide(self.cfg.strategy, &ctx, &mut self.strategy_rng, self.inputs)
+        };
+        self.dec = dec;
+        self.active_ids = snap.active.clone();
+        self.engine.mark_resolved();
+        self.resolves += 1;
+    }
+
+    /// Advance one simulated round. Returns its record (also appended to
+    /// [`ScenarioSim::trace`]).
+    pub fn step(&mut self) -> FleetRound {
+        let snap = self.engine.advance();
+        self.round += 1;
+        debug_assert_eq!(self.round, snap.round);
+
+        // Membership changed since the decisions were solved: the decision
+        // vectors no longer match the active set — re-solve now (and
+        // charge the round as an aggregation event below: redistributing
+        // sub-models to joiners/leavers is exactly the Eqn-39 exchange).
+        let mut resolved = false;
+        let membership_changed = snap.active != self.active_ids;
+        if membership_changed {
+            self.resolve(&snap);
+            resolved = true;
+        }
+
+        // Round latency over the surviving devices (active minus mid-round
+        // dropouts), under the decisions in force. `dec` and
+        // `snap.devices` are both active-set-aligned, so the subset mask
+        // is simply "not dropped".
+        let mask: Vec<bool> =
+            snap.active.iter().map(|id| !snap.dropped.contains(id)).collect();
+        let lat =
+            round_latency_subset(&self.profile, &snap.devices, &self.cfg.server, &self.dec, &mask);
+        self.sim_time += lat.t_split;
+
+        // Aggregation events: the fixed window, drift crossing the trigger
+        // (which pulls the event forward), or a membership change.
+        let window = self.round % self.cfg.train.agg_interval == 0;
+        let drift_hit = self.scenario.resolve_drift.map_or(false, |thr| snap.drift >= thr);
+        let mut t_agg = 0.0;
+        if window || drift_hit || membership_changed {
+            t_agg = lat.t_agg;
+            self.sim_time += t_agg;
+            // A membership change already re-solved this round; don't run
+            // (and count) a second solve.
+            if !resolved {
+                self.resolve(&snap);
+                resolved = true;
+            }
+        }
+
+        let rec = FleetRound {
+            round: self.round,
+            n_active: snap.active.len(),
+            n_dropped: snap.dropped.len(),
+            n_joined: snap.joined.len(),
+            n_left: snap.left.len(),
+            drift: snap.drift,
+            resolved,
+            t_split: lat.t_split,
+            t_agg,
+            sim_time: self.sim_time,
+        };
+        self.trace.push(rec.clone());
+        rec
+    }
+
+    /// Run `rounds` simulated rounds.
+    pub fn run(&mut self, rounds: usize) -> &FleetTrace {
+        for _ in 0..rounds {
+            self.step();
+        }
+        &self.trace
+    }
+
+    pub fn trace(&self) -> &FleetTrace {
+        &self.trace
+    }
+
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    pub fn sim_time(&self) -> f64 {
+        self.sim_time
+    }
+
+    /// BS/MS re-solves during stepping (the initial solve at construction
+    /// is not counted).
+    pub fn resolves(&self) -> usize {
+        self.resolves
+    }
+
+    /// The decisions currently in force.
+    pub fn decisions(&self) -> &Decisions {
+        &self.dec
+    }
+
+    pub fn engine(&self) -> &ScenarioEngine {
+        &self.engine
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StrategyKind;
+    use crate::scenario::ScenarioPreset;
+
+    fn sim(preset: ScenarioPreset, n: usize, strategy: StrategyKind, seed: u64) -> ScenarioSim {
+        let mut cfg = Config::table1();
+        cfg.fleet.n_devices = n;
+        cfg.strategy = strategy;
+        cfg.seed = seed;
+        ScenarioSim::new(cfg, preset.scenario()).unwrap()
+    }
+
+    #[test]
+    fn rejects_executable_model_and_empty_fleet() {
+        let mut cfg = Config::table1();
+        cfg.model = crate::config::ModelKind::Splitcnn8;
+        assert!(ScenarioSim::new(cfg, ScenarioPreset::Static.scenario()).is_err());
+
+        let mut cfg = Config::table1();
+        cfg.fleet.n_devices = 0;
+        assert!(ScenarioSim::new(cfg, ScenarioPreset::Static.scenario()).is_err());
+    }
+
+    #[test]
+    fn static_scenario_resolves_only_on_the_window() {
+        let mut s = sim(ScenarioPreset::Static, 6, StrategyKind::Fixed, 5);
+        let interval = s.config().train.agg_interval;
+        s.run(2 * interval);
+        for r in &s.trace().rounds {
+            assert_eq!(r.resolved, r.round % interval == 0, "round {}", r.round);
+            assert_eq!(r.n_active, 6);
+            assert_eq!(r.n_dropped, 0);
+            assert_eq!(r.drift, 0.0);
+        }
+        assert_eq!(s.resolves(), 2);
+    }
+
+    #[test]
+    fn drift_trigger_pulls_resolves_forward() {
+        // Drifting channels with a tight trigger: re-solves must land on
+        // non-window rounds too (the window alone fires every 15th round).
+        let mut spec = ScenarioPreset::DriftingChannels.scenario();
+        spec.resolve_drift = Some(0.05);
+        let mut cfg = Config::table1();
+        cfg.fleet.n_devices = 8;
+        cfg.strategy = StrategyKind::Fixed;
+        cfg.seed = 9;
+        let mut s = ScenarioSim::new(cfg, spec).unwrap();
+        let interval = s.config().train.agg_interval;
+        s.run(60);
+        let off_window = s
+            .trace()
+            .rounds
+            .iter()
+            .filter(|r| r.resolved && r.round % interval != 0)
+            .count();
+        assert!(off_window > 0, "no drift-triggered re-solves in 60 drifting rounds");
+        assert!(s.trace().drift_summary().unwrap().max > 0.0);
+    }
+
+    #[test]
+    fn churn_heavy_produces_partial_rounds() {
+        let mut s = sim(ScenarioPreset::ChurnHeavy, 12, StrategyKind::RbsRhams, 21);
+        s.run(80);
+        assert!(s.trace().partial_rounds() > 0, "no mid-round dropouts in 80 rounds");
+        let any_membership = s
+            .trace()
+            .rounds
+            .iter()
+            .any(|r| r.n_joined > 0 || r.n_left > 0);
+        assert!(any_membership, "no membership churn in 80 rounds");
+        // Every round completed with at least one survivor and finite time.
+        for r in &s.trace().rounds {
+            assert!(r.n_active > r.n_dropped, "round {} had no survivors", r.round);
+            assert!(r.t_split.is_finite() && r.t_split > 0.0);
+        }
+        assert!(s.sim_time().is_finite() && s.sim_time() > 0.0);
+    }
+
+    #[test]
+    fn identical_seed_and_spec_give_bit_identical_traces() {
+        for preset in [ScenarioPreset::DriftingChannels, ScenarioPreset::ChurnHeavy] {
+            let mut a = sim(preset, 10, StrategyKind::Fixed, 33);
+            let mut b = sim(preset, 10, StrategyKind::Fixed, 33);
+            a.run(40);
+            b.run(40);
+            assert_eq!(a.trace(), b.trace(), "preset '{}'", preset.as_str());
+            assert_eq!(a.decisions(), b.decisions());
+        }
+    }
+
+    #[test]
+    fn straggler_rounds_cost_more() {
+        // Churn-heavy injects 4-16x slowdowns; the p95/p50 split-latency
+        // ratio must reflect them (the straggler effect the paper attacks).
+        let mut s = sim(ScenarioPreset::ChurnHeavy, 12, StrategyKind::Fixed, 41);
+        s.run(100);
+        let sum = s.trace().split_summary().unwrap();
+        assert!(
+            sum.p95 > sum.p50,
+            "stragglers left no tail: p95 {} <= p50 {}",
+            sum.p95,
+            sum.p50
+        );
+    }
+}

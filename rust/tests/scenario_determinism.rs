@@ -1,0 +1,209 @@
+//! Scenario-determinism suite: same seed + same `Scenario` spec must give
+//! bit-identical per-round fleet snapshots and round histories — on the
+//! analytic sim path always, and on the executable training path when AOT
+//! artifacts are present (engine-backed halves self-skip otherwise, like
+//! the other integration tests).
+//!
+//! Also hosts the mega-fleet smoke: the >= 1000-device preset must
+//! complete a 5-round analytic run quickly (the full bench lives in
+//! `rust/benches/scenario_fleet.rs`, wired into `make bench-smoke`).
+
+use std::path::PathBuf;
+
+use hasfl::config::{Config, StrategyKind};
+use hasfl::experiment::{Experiment, FleetTraceCsv, RoundReport};
+use hasfl::scenario::{Scenario, ScenarioEngine, ScenarioPreset, ScenarioSim};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+fn sim_config(n: usize, seed: u64) -> Config {
+    let mut cfg = Config::table1();
+    cfg.fleet.n_devices = n;
+    cfg.seed = seed;
+    cfg.strategy = StrategyKind::Fixed;
+    cfg
+}
+
+#[test]
+fn snapshot_streams_are_bit_identical_for_every_preset() {
+    for preset in ScenarioPreset::ALL {
+        let cfg = sim_config(16, 4242);
+        let base = cfg.sample_fleet();
+        let mut a = ScenarioEngine::new(preset.scenario(), base.clone(), cfg.seed).unwrap();
+        let mut b = ScenarioEngine::new(preset.scenario(), base, cfg.seed).unwrap();
+        for _ in 0..30 {
+            assert_eq!(a.advance(), b.advance(), "preset '{}'", preset.as_str());
+        }
+    }
+}
+
+#[test]
+fn spec_json_roundtrip_preserves_the_stream() {
+    // A spec that survives JSON must drive the exact same evolution: the
+    // codec cannot perturb determinism.
+    for preset in ScenarioPreset::ALL {
+        let spec = preset.scenario();
+        let back =
+            Scenario::from_json(&hasfl::util::Json::parse(&spec.to_json().dump()).unwrap())
+                .unwrap();
+        let cfg = sim_config(10, 7);
+        let base = cfg.sample_fleet();
+        let mut a = ScenarioEngine::new(spec, base.clone(), cfg.seed).unwrap();
+        let mut b = ScenarioEngine::new(back, base, cfg.seed).unwrap();
+        for _ in 0..20 {
+            assert_eq!(a.advance(), b.advance(), "preset '{}'", preset.as_str());
+        }
+    }
+}
+
+#[test]
+fn sim_round_histories_are_bit_identical() {
+    let presets =
+        [ScenarioPreset::DriftingChannels, ScenarioPreset::Diurnal, ScenarioPreset::ChurnHeavy];
+    for preset in presets {
+        let mut a = ScenarioSim::new(sim_config(12, 99), preset.scenario()).unwrap();
+        let mut b = ScenarioSim::new(sim_config(12, 99), preset.scenario()).unwrap();
+        a.run(45);
+        b.run(45);
+        assert_eq!(a.trace(), b.trace(), "preset '{}'", preset.as_str());
+        assert_eq!(a.decisions(), b.decisions(), "preset '{}'", preset.as_str());
+        assert_eq!(a.sim_time(), b.sim_time(), "preset '{}'", preset.as_str());
+    }
+}
+
+#[test]
+fn mega_fleet_five_round_smoke() {
+    // The standing scale scenario: >= 1000 devices through fleet evolution,
+    // the heterogeneity-aware BS solver, and the O(N) latency model.
+    let mut cfg = sim_config(ScenarioPreset::MegaFleet.suggested_devices().unwrap(), 2025);
+    cfg.strategy = ScenarioPreset::MegaFleet.suggested_strategy().unwrap();
+    assert!(cfg.fleet.n_devices >= 1000);
+    let mut sim = ScenarioSim::new(cfg, ScenarioPreset::MegaFleet.scenario()).unwrap();
+    sim.run(5);
+    assert_eq!(sim.trace().len(), 5);
+    for r in &sim.trace().rounds {
+        assert!(r.n_active >= 32, "round {}: active {}", r.round, r.n_active);
+        assert!(r.n_active > r.n_dropped, "round {} had no survivors", r.round);
+        assert!(r.t_split.is_finite() && r.t_split > 0.0);
+    }
+    assert!(sim.sim_time().is_finite() && sim.sim_time() > 0.0);
+}
+
+// ---- executable path (self-skips without artifacts) ----------------------
+
+fn scenario_session_config() -> Config {
+    let mut cfg = Config::small();
+    cfg.fleet.n_devices = 4;
+    cfg.train.rounds = 8;
+    cfg.train.agg_interval = 4;
+    cfg.train.eval_every = 4;
+    cfg.train.train_samples = 256;
+    cfg.train.test_samples = 64;
+    cfg.train.batch_cap = 16;
+    cfg.strategy = StrategyKind::Fixed;
+    cfg.fixed_batch = 8;
+    cfg.fixed_cut = 3;
+    cfg
+}
+
+fn run_scenario_session(
+    dir: &std::path::Path,
+    spec: Scenario,
+) -> (Vec<RoundReport>, hasfl::metrics::History) {
+    // Unique trace path per call: tests run concurrently in one process.
+    static CALL: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+    let call = CALL.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let csv = std::env::temp_dir()
+        .join(format!("hasfl_scn_trace_{}_{call}.csv", std::process::id()));
+    let mut session = Experiment::builder()
+        .config(scenario_session_config())
+        .scenario(spec)
+        .observe(FleetTraceCsv::new(&csv))
+        .artifacts(dir)
+        .build()
+        .expect("session");
+    let mut reports = Vec::new();
+    while !session.is_done() {
+        reports.push(session.step().expect("step"));
+    }
+    let history = session.finish().expect("finish");
+    // The FleetTraceCsv observer flushed one row per round.
+    let text = std::fs::read_to_string(&csv).expect("trace csv");
+    assert_eq!(text.lines().count(), reports.len() + 1, "trace rows");
+    (reports, history)
+}
+
+#[test]
+fn executable_scenario_sessions_are_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let spec = ScenarioPreset::ChurnHeavy.scenario();
+    let (rep_a, hist_a) = run_scenario_session(&dir, spec.clone());
+    let (rep_b, hist_b) = run_scenario_session(&dir, spec);
+
+    assert_eq!(hist_a.records, hist_b.records);
+    assert_eq!(rep_a.len(), rep_b.len());
+    for (a, b) in rep_a.iter().zip(&rep_b) {
+        assert_eq!(a.outcome.mean_loss, b.outcome.mean_loss, "round {}", a.round);
+        assert_eq!(a.sim_time, b.sim_time, "round {}", a.round);
+        assert_eq!(a.fleet, b.fleet, "round {}", a.round);
+    }
+    // Scenario sessions surface a snapshot on every round.
+    assert!(rep_a.iter().all(|r| r.fleet.is_some()));
+}
+
+#[test]
+fn executable_scenario_handles_dropouts_and_trains() {
+    // Churn-heavy end-to-end through the real engine: dropped devices are
+    // skipped, partial aggregation keeps the fleet consistent, and the
+    // model still trains (finite losses all the way).
+    let Some(dir) = artifacts_dir() else { return };
+    let mut spec = ScenarioPreset::ChurnHeavy.scenario();
+    // Crank dropout so a 8-round run reliably sees partial rounds.
+    if let Some(churn) = &mut spec.churn {
+        churn.dropout_prob = 0.35;
+    }
+    let (reports, history) = run_scenario_session(&dir, spec);
+    assert_eq!(reports.len(), 8);
+    for r in &reports {
+        assert!(r.outcome.mean_loss.is_finite(), "round {}: loss", r.round);
+        let snap = r.fleet.as_ref().unwrap();
+        assert!(snap.active.len() > snap.dropped.len(), "round {}: survivors", r.round);
+    }
+    assert_eq!(history.records.len(), 8);
+}
+
+#[test]
+fn static_scenario_matches_plain_session() {
+    // The `static` preset must reproduce the historical fixed-fleet run
+    // bit-for-bit: same per-round losses, same sim clock, same history.
+    let Some(dir) = artifacts_dir() else { return };
+
+    let mut plain = Experiment::builder()
+        .config(scenario_session_config())
+        .artifacts(&dir)
+        .build()
+        .expect("plain session");
+    let mut plain_reports = Vec::new();
+    while !plain.is_done() {
+        plain_reports.push(plain.step().expect("step"));
+    }
+    let plain_hist = plain.finish().expect("finish");
+
+    let (scn_reports, scn_hist) =
+        run_scenario_session(&dir, ScenarioPreset::Static.scenario());
+
+    assert_eq!(plain_hist.records, scn_hist.records);
+    for (a, b) in plain_reports.iter().zip(&scn_reports) {
+        assert_eq!(a.outcome.mean_loss, b.outcome.mean_loss, "round {}", a.round);
+        assert_eq!(a.sim_time, b.sim_time, "round {}", a.round);
+        assert_eq!(a.decisions.batch, b.decisions.batch, "round {}", a.round);
+    }
+}
