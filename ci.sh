@@ -12,6 +12,9 @@
 #   5. dependency gate      (cargo deny check; skipped if not installed)
 #   6. bench smoke          (1 iteration: e2e_round + mega-fleet scenario)
 #   7. example smoke        (churn_fleet end-to-end under HASFL_BENCH_SMOKE)
+#   8. resume smoke         (train 3 rounds -> checkpoint -> resume 2 more;
+#                            history must be byte-identical to 5 straight
+#                            rounds; skipped without AOT artifacts)
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
@@ -35,5 +38,23 @@ make -C .. bench-smoke
 
 echo "== churn_fleet example smoke (determinism + liveness asserts) =="
 HASFL_BENCH_SMOKE=1 cargo run --release --example churn_fleet
+
+echo "== checkpoint resume smoke (train 3 + resume 2 == straight 5) =="
+if [ -f artifacts/manifest.json ]; then
+  CKPT_TMP=$(mktemp -d)
+  # Straight 5-round run, checkpointing at round 3 along the way.
+  ./target/release/hasfl train --preset small --rounds 5 --seed 1234 \
+    --checkpoint-every 3 --checkpoint-dir "$CKPT_TMP/ck" \
+    --out "$CKPT_TMP/straight.csv"
+  # Warm restart from the round-3 checkpoint; the CSV holds the restored
+  # rounds 1-3 plus the replayed rounds 4-5 and must be byte-identical.
+  ./target/release/hasfl train --resume "$CKPT_TMP/ck/ckpt_round_000003.hckpt" \
+    --out "$CKPT_TMP/resumed.csv"
+  cmp "$CKPT_TMP/straight.csv" "$CKPT_TMP/resumed.csv"
+  rm -rf "$CKPT_TMP"
+  echo "resume smoke OK (bit-identical histories)"
+else
+  echo "no AOT artifacts; resume smoke skipped (run 'make artifacts')"
+fi
 
 echo "CI OK"

@@ -1,0 +1,308 @@
+//! Byte-level codec for the checkpoint format: little-endian fixed-width
+//! primitives, length-prefixed containers, and an FNV-1a payload checksum.
+//!
+//! Floats travel as raw IEEE-754 bit patterns (`to_bits`/`from_bits`), so
+//! a save/load round-trip is bit-exact by construction — the foundation of
+//! the resume-determinism contract (`rust/tests/checkpoint_resume.rs`).
+//! Every read is bounds-checked against the remaining buffer, so a
+//! truncated or corrupted file fails with a clear error instead of a
+//! panic.
+
+/// FNV-1a 64-bit hash of a byte slice (payload integrity check).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Incremental little-endian writer.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> ByteWriter {
+        ByteWriter::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn f32s(&mut self, vs: &[f32]) {
+        self.usize(vs.len());
+        for &v in vs {
+            self.f32(v);
+        }
+    }
+
+    pub fn f64s(&mut self, vs: &[f64]) {
+        self.usize(vs.len());
+        for &v in vs {
+            self.f64(v);
+        }
+    }
+
+    pub fn u32s(&mut self, vs: &[u32]) {
+        self.usize(vs.len());
+        for &v in vs {
+            self.u32(v);
+        }
+    }
+
+    pub fn usizes(&mut self, vs: &[usize]) {
+        self.usize(vs.len());
+        for &v in vs {
+            self.usize(v);
+        }
+    }
+
+    pub fn bools(&mut self, vs: &[bool]) {
+        self.usize(vs.len());
+        for &v in vs {
+            self.bool(v);
+        }
+    }
+
+    pub fn opt_f64s(&mut self, vs: &Option<Vec<f64>>) {
+        match vs {
+            Some(v) => {
+                self.bool(true);
+                self.f64s(v);
+            }
+            None => self.bool(false),
+        }
+    }
+}
+
+/// Bounds-checked little-endian reader over a borrowed buffer.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or_else(|| anyhow::anyhow!("corrupt checkpoint: length overflow"))?;
+        anyhow::ensure!(
+            end <= self.buf.len(),
+            "truncated checkpoint: wanted {n} bytes at offset {}, only {} remain",
+            self.pos,
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> crate::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> crate::Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => anyhow::bail!("corrupt checkpoint: bad bool byte {v}"),
+        }
+    }
+
+    pub fn u32(&mut self) -> crate::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> crate::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> crate::Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| anyhow::anyhow!("corrupt checkpoint: count {v} overflows"))
+    }
+
+    /// A container length, sanity-bounded by the bytes that remain (each
+    /// element needs at least `min_elem_bytes`), so a corrupted length
+    /// cannot trigger a huge allocation.
+    fn len(&mut self, min_elem_bytes: usize) -> crate::Result<usize> {
+        let n = self.usize()?;
+        anyhow::ensure!(
+            n.checked_mul(min_elem_bytes.max(1))
+                .is_some_and(|need| need <= self.remaining()),
+            "corrupt checkpoint: container of {n} elements exceeds the remaining {} bytes",
+            self.remaining()
+        );
+        Ok(n)
+    }
+
+    pub fn f32(&mut self) -> crate::Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn f64(&mut self) -> crate::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn str(&mut self) -> crate::Result<String> {
+        let n = self.len(1)?;
+        let bytes = self.take(n)?;
+        Ok(std::str::from_utf8(bytes)
+            .map_err(|_| anyhow::anyhow!("corrupt checkpoint: non-UTF-8 string"))?
+            .to_string())
+    }
+
+    pub fn f32s(&mut self) -> crate::Result<Vec<f32>> {
+        let n = self.len(4)?;
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    pub fn f64s(&mut self) -> crate::Result<Vec<f64>> {
+        let n = self.len(8)?;
+        (0..n).map(|_| self.f64()).collect()
+    }
+
+    pub fn u32s(&mut self) -> crate::Result<Vec<u32>> {
+        let n = self.len(4)?;
+        (0..n).map(|_| self.u32()).collect()
+    }
+
+    pub fn usizes(&mut self) -> crate::Result<Vec<usize>> {
+        let n = self.len(8)?;
+        (0..n).map(|_| self.usize()).collect()
+    }
+
+    pub fn bools(&mut self) -> crate::Result<Vec<bool>> {
+        let n = self.len(1)?;
+        (0..n).map(|_| self.bool()).collect()
+    }
+
+    pub fn opt_f64s(&mut self) -> crate::Result<Option<Vec<f64>>> {
+        Ok(if self.bool()? { Some(self.f64s()?) } else { None })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_roundtrip_bit_exactly() {
+        let mut w = ByteWriter::new();
+        w.u8(7);
+        w.bool(true);
+        w.u32(u32::MAX - 3);
+        w.u64(u64::MAX - 5);
+        w.usize(12345);
+        w.f32(-0.0);
+        w.f64(f64::NAN);
+        w.str("héllo");
+        w.f32s(&[1.5, -2.25]);
+        w.f64s(&[3.5]);
+        w.u32s(&[9, 8]);
+        w.usizes(&[1, 2, 3]);
+        w.bools(&[true, false]);
+        w.opt_f64s(&Some(vec![4.0]));
+        w.opt_f64s(&None);
+        let bytes = w.into_bytes();
+
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert!(r.bool().unwrap());
+        assert_eq!(r.u32().unwrap(), u32::MAX - 3);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 5);
+        assert_eq!(r.usize().unwrap(), 12345);
+        assert_eq!(r.f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        // NaN survives as its exact bit pattern.
+        assert_eq!(r.f64().unwrap().to_bits(), f64::NAN.to_bits());
+        assert_eq!(r.str().unwrap(), "héllo");
+        assert_eq!(r.f32s().unwrap(), vec![1.5, -2.25]);
+        assert_eq!(r.f64s().unwrap(), vec![3.5]);
+        assert_eq!(r.u32s().unwrap(), vec![9, 8]);
+        assert_eq!(r.usizes().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.bools().unwrap(), vec![true, false]);
+        assert_eq!(r.opt_f64s().unwrap(), Some(vec![4.0]));
+        assert_eq!(r.opt_f64s().unwrap(), None);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn truncated_reads_error_instead_of_panicking() {
+        let mut w = ByteWriter::new();
+        w.u64(42);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes[..5]);
+        let err = r.u64().unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn absurd_container_length_is_rejected() {
+        // A corrupted length prefix must not trigger a huge allocation.
+        let mut w = ByteWriter::new();
+        w.usize(usize::MAX / 2);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert!(r.f64s().is_err());
+    }
+
+    #[test]
+    fn bad_bool_is_rejected() {
+        let mut r = ByteReader::new(&[2]);
+        assert!(r.bool().is_err());
+    }
+
+    #[test]
+    fn fnv_is_stable_and_sensitive() {
+        let h = fnv1a64(b"hasfl");
+        assert_eq!(h, fnv1a64(b"hasfl"));
+        assert_ne!(h, fnv1a64(b"hasfm"));
+        assert_ne!(fnv1a64(b""), 0);
+    }
+}

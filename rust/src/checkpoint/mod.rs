@@ -1,0 +1,635 @@
+//! Crash-safe checkpoint/resume subsystem (DESIGN.md §10).
+//!
+//! A checkpoint is a single versioned file capturing the *complete*
+//! training state between two rounds: every per-device [`Params`] tensor
+//! (+ version counters), every PCG RNG stream (strategy, per-device
+//! samplers, scenario engine), the Assumption-2 estimator, the scenario
+//! engine's fleet roster/drift/churn state, the incumbent [`Decisions`],
+//! the run history, the simulated clock, and the buffer-cache version
+//! counters. The experiment [`Config`](crate::config::Config) is embedded
+//! as canonical JSON so a resume rebuilds the deterministic substrate
+//! (datasets, partitions, artifacts) from it and then overlays the
+//! evolving state — a resumed run is **bit-identical** to the
+//! uninterrupted one (`rust/tests/checkpoint_resume.rs`, plus the ci.sh
+//! resume smoke).
+//!
+//! Crash safety: [`CheckpointState::save`] writes to a temp sibling,
+//! fsyncs, then atomically renames into place, so a crash mid-write never
+//! clobbers the previous checkpoint. Files carry a magic tag, a format
+//! version, a payload length, and an FNV-1a checksum; truncation,
+//! corruption, and version skew all fail loudly on load.
+//!
+//! Entry points:
+//! - [`crate::experiment::Session::checkpoint`] — write one now.
+//! - [`CheckpointObserver`] — periodic write-every-N-rounds observer with
+//!   keep-last-K retention.
+//! - [`crate::experiment::ExperimentBuilder::resume_from`] — rebuild a
+//!   session from a checkpoint file.
+//! - CLI: `hasfl train --checkpoint-every N --checkpoint-dir D` and
+//!   `hasfl train --resume PATH`.
+
+mod codec;
+
+use std::path::{Path, PathBuf};
+
+use crate::config::Device;
+use crate::convergence::EstimatorState;
+use crate::experiment::{Observer, RoundReport};
+use crate::latency::Decisions;
+use crate::metrics::Record;
+use crate::model::{Params, Tensor};
+use crate::scenario::{DeviceEvoState, ScenarioEngineState};
+
+use codec::{fnv1a64, ByteReader, ByteWriter};
+
+/// File magic: the first 8 bytes of every HASFL checkpoint.
+pub const MAGIC: [u8; 8] = *b"HASFLCKP";
+
+/// On-disk format version this build reads and writes.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Header bytes before the payload: magic (8) + version (4) + payload
+/// length (8).
+const HEADER_LEN: usize = 20;
+
+/// The complete training state of a session between two rounds. Plain
+/// data: captured by the coordinator, serialized here, restorable onto a
+/// freshly-built trainer with the same config.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointState {
+    /// The experiment configuration as its canonical JSON dump — the
+    /// resume path's authoritative config and the compatibility anchor.
+    pub config_json: String,
+    /// Rounds completed when the checkpoint was taken (the session's
+    /// round counter).
+    pub round: u64,
+    /// Trainer round counter (versions the per-round input buffers).
+    pub rounds_run: u64,
+    /// Evaluations run so far (versions the eval-time buffers).
+    pub eval_epoch: u64,
+    /// Version of the fleet-common server sub-model.
+    pub common_version: u64,
+    /// Version of the last full fleet synchronisation.
+    pub sync_version: u64,
+    /// Whether every device provably holds identical parameters.
+    pub fleet_synced: bool,
+    /// Simulated wall-clock so far (seconds).
+    pub sim_time: f64,
+    /// Per-device full-model parameters (bit-exact f32 payloads).
+    pub params: Vec<Params>,
+    /// The decisions in force.
+    pub dec: Decisions,
+    /// Run history records accumulated so far.
+    pub history: Vec<Record>,
+    /// Assumption-2 gradient-statistics estimator state.
+    pub estimator: EstimatorState,
+    /// Strategy RNG stream `(state, inc)`.
+    pub strategy_rng: (u64, u64),
+    /// Per-device batch-sampler RNG streams `(state, inc)`.
+    pub sampler_rngs: Vec<(u64, u64)>,
+    /// Scenario-engine state (`None` on static-fleet runs).
+    pub scenario: Option<ScenarioEngineState>,
+}
+
+fn write_device(w: &mut ByteWriter, d: &Device) {
+    w.f64(d.flops);
+    w.f64(d.up_bps);
+    w.f64(d.down_bps);
+    w.f64(d.fed_up_bps);
+    w.f64(d.fed_down_bps);
+    w.f64(d.mem_bytes);
+}
+
+fn read_device(r: &mut ByteReader) -> crate::Result<Device> {
+    Ok(Device {
+        flops: r.f64()?,
+        up_bps: r.f64()?,
+        down_bps: r.f64()?,
+        fed_up_bps: r.f64()?,
+        fed_down_bps: r.f64()?,
+        mem_bytes: r.f64()?,
+    })
+}
+
+fn write_devices(w: &mut ByteWriter, ds: &[Device]) {
+    w.usize(ds.len());
+    for d in ds {
+        write_device(w, d);
+    }
+}
+
+fn read_devices(r: &mut ByteReader) -> crate::Result<Vec<Device>> {
+    let n = r.usize()?;
+    (0..n).map(|_| read_device(r)).collect()
+}
+
+fn write_tensor(w: &mut ByteWriter, t: &Tensor) {
+    w.usizes(&t.shape);
+    w.f32s(&t.data);
+}
+
+fn read_tensor(r: &mut ByteReader) -> crate::Result<Tensor> {
+    Ok(Tensor { shape: r.usizes()?, data: r.f32s()? })
+}
+
+fn write_params(w: &mut ByteWriter, p: &Params) {
+    w.usize(p.n_blocks);
+    w.u64(p.version);
+    w.usize(p.tensors.len());
+    for t in &p.tensors {
+        write_tensor(w, t);
+    }
+}
+
+fn read_params(r: &mut ByteReader) -> crate::Result<Params> {
+    let n_blocks = r.usize()?;
+    let version = r.u64()?;
+    let n = r.usize()?;
+    let tensors = (0..n).map(|_| read_tensor(r)).collect::<crate::Result<Vec<_>>>()?;
+    Ok(Params { tensors, n_blocks, version })
+}
+
+fn write_record(w: &mut ByteWriter, rec: &Record) {
+    w.usize(rec.round);
+    w.f64(rec.sim_time);
+    w.f64(rec.loss);
+    match rec.test_acc {
+        Some(a) => {
+            w.bool(true);
+            w.f64(a);
+        }
+        None => w.bool(false),
+    }
+}
+
+fn read_record(r: &mut ByteReader) -> crate::Result<Record> {
+    Ok(Record {
+        round: r.usize()?,
+        sim_time: r.f64()?,
+        loss: r.f64()?,
+        test_acc: if r.bool()? { Some(r.f64()?) } else { None },
+    })
+}
+
+fn write_estimator(w: &mut ByteWriter, e: &EstimatorState) {
+    w.usize(e.n_blocks);
+    w.f64(e.alpha);
+    w.f64s(&e.gsq);
+    w.f64s(&e.sigma_sq);
+    w.f64(e.beta);
+    w.usize(e.rounds_seen);
+    w.opt_f64s(&e.prev_flat_grad);
+    w.opt_f64s(&e.prev_flat_param);
+}
+
+fn read_estimator(r: &mut ByteReader) -> crate::Result<EstimatorState> {
+    Ok(EstimatorState {
+        n_blocks: r.usize()?,
+        alpha: r.f64()?,
+        gsq: r.f64s()?,
+        sigma_sq: r.f64s()?,
+        beta: r.f64()?,
+        rounds_seen: r.usize()?,
+        prev_flat_grad: r.opt_f64s()?,
+        prev_flat_param: r.opt_f64s()?,
+    })
+}
+
+fn write_scenario(w: &mut ByteWriter, s: &ScenarioEngineState) {
+    w.u64(s.rng.0);
+    w.u64(s.rng.1);
+    w.usize(s.round);
+    w.usize(s.roster.len());
+    for evo in &s.roster {
+        write_device(w, &evo.base);
+        w.f64(evo.channel_mult);
+        w.f64(evo.compute_mult);
+        w.bool(evo.active);
+        w.f64(evo.phase);
+    }
+    write_devices(w, &s.effective);
+    write_devices(w, &s.reference);
+    w.bools(&s.reference_active);
+}
+
+fn read_scenario(r: &mut ByteReader) -> crate::Result<ScenarioEngineState> {
+    let rng = (r.u64()?, r.u64()?);
+    let round = r.usize()?;
+    let n = r.usize()?;
+    let mut roster = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        roster.push(DeviceEvoState {
+            base: read_device(r)?,
+            channel_mult: r.f64()?,
+            compute_mult: r.f64()?,
+            active: r.bool()?,
+            phase: r.f64()?,
+        });
+    }
+    Ok(ScenarioEngineState {
+        rng,
+        round,
+        roster,
+        effective: read_devices(r)?,
+        reference: read_devices(r)?,
+        reference_active: r.bools()?,
+    })
+}
+
+fn write_state(w: &mut ByteWriter, s: &CheckpointState) {
+    w.str(&s.config_json);
+    w.u64(s.round);
+    w.u64(s.rounds_run);
+    w.u64(s.eval_epoch);
+    w.u64(s.common_version);
+    w.u64(s.sync_version);
+    w.bool(s.fleet_synced);
+    w.f64(s.sim_time);
+    w.usize(s.params.len());
+    for p in &s.params {
+        write_params(w, p);
+    }
+    w.u32s(&s.dec.batch);
+    w.usizes(&s.dec.cut);
+    w.usize(s.history.len());
+    for rec in &s.history {
+        write_record(w, rec);
+    }
+    write_estimator(w, &s.estimator);
+    w.u64(s.strategy_rng.0);
+    w.u64(s.strategy_rng.1);
+    w.usize(s.sampler_rngs.len());
+    for &(st, inc) in &s.sampler_rngs {
+        w.u64(st);
+        w.u64(inc);
+    }
+    match &s.scenario {
+        Some(sc) => {
+            w.bool(true);
+            write_scenario(w, sc);
+        }
+        None => w.bool(false),
+    }
+}
+
+fn read_state(r: &mut ByteReader) -> crate::Result<CheckpointState> {
+    let config_json = r.str()?;
+    let round = r.u64()?;
+    let rounds_run = r.u64()?;
+    let eval_epoch = r.u64()?;
+    let common_version = r.u64()?;
+    let sync_version = r.u64()?;
+    let fleet_synced = r.bool()?;
+    let sim_time = r.f64()?;
+    let n_params = r.usize()?;
+    let params = (0..n_params).map(|_| read_params(r)).collect::<crate::Result<Vec<_>>>()?;
+    let dec = Decisions { batch: r.u32s()?, cut: r.usizes()? };
+    let n_hist = r.usize()?;
+    let history = (0..n_hist).map(|_| read_record(r)).collect::<crate::Result<Vec<_>>>()?;
+    let estimator = read_estimator(r)?;
+    let strategy_rng = (r.u64()?, r.u64()?);
+    let n_samplers = r.usize()?;
+    let sampler_rngs = (0..n_samplers)
+        .map(|_| -> crate::Result<(u64, u64)> { Ok((r.u64()?, r.u64()?)) })
+        .collect::<crate::Result<Vec<_>>>()?;
+    let scenario = if r.bool()? { Some(read_scenario(r)?) } else { None };
+    Ok(CheckpointState {
+        config_json,
+        round,
+        rounds_run,
+        eval_epoch,
+        common_version,
+        sync_version,
+        fleet_synced,
+        sim_time,
+        params,
+        dec,
+        history,
+        estimator,
+        strategy_rng,
+        sampler_rngs,
+        scenario,
+    })
+}
+
+impl CheckpointState {
+    /// Serialize to the on-disk byte layout:
+    /// `MAGIC | FORMAT_VERSION | payload_len | payload | fnv1a64(payload)`.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        write_state(&mut w, self);
+        let payload = w.into_bytes();
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + 8);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        let sum = fnv1a64(&payload);
+        out.extend_from_slice(&payload);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Parse and verify the on-disk byte layout. Distinct, descriptive
+    /// errors for bad magic, version skew, truncation, and corruption.
+    pub fn from_bytes(bytes: &[u8]) -> crate::Result<CheckpointState> {
+        anyhow::ensure!(
+            bytes.len() >= HEADER_LEN,
+            "truncated checkpoint: {} bytes is smaller than the {HEADER_LEN}-byte header",
+            bytes.len()
+        );
+        anyhow::ensure!(
+            bytes[..8] == MAGIC,
+            "not a HASFL checkpoint (bad magic; expected {:?})",
+            std::str::from_utf8(&MAGIC).unwrap()
+        );
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        anyhow::ensure!(
+            version == FORMAT_VERSION,
+            "checkpoint format version {version} is unsupported \
+             (this build reads version {FORMAT_VERSION})"
+        );
+        let payload_len = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
+        let payload_len = usize::try_from(payload_len)
+            .map_err(|_| anyhow::anyhow!("corrupt checkpoint: payload length overflows"))?;
+        let want = HEADER_LEN
+            .checked_add(payload_len)
+            .and_then(|n| n.checked_add(8))
+            .ok_or_else(|| anyhow::anyhow!("corrupt checkpoint: payload length overflows"))?;
+        anyhow::ensure!(
+            bytes.len() == want,
+            "truncated checkpoint: header claims {want} bytes, file has {}",
+            bytes.len()
+        );
+        let payload = &bytes[HEADER_LEN..HEADER_LEN + payload_len];
+        let sum = u64::from_le_bytes(bytes[HEADER_LEN + payload_len..].try_into().unwrap());
+        anyhow::ensure!(
+            fnv1a64(payload) == sum,
+            "corrupt checkpoint: payload checksum mismatch"
+        );
+        let mut r = ByteReader::new(payload);
+        let state = read_state(&mut r)?;
+        anyhow::ensure!(
+            r.remaining() == 0,
+            "corrupt checkpoint: {} unparsed trailing payload bytes",
+            r.remaining()
+        );
+        Ok(state)
+    }
+
+    /// Crash-safe write: serialize into a temp sibling, fsync it, then
+    /// atomically rename into place. A crash mid-write leaves the previous
+    /// checkpoint (if any) untouched.
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let file_name = match path.file_name() {
+            Some(name) => name.to_string_lossy().into_owned(),
+            None => anyhow::bail!("checkpoint path '{}' has no file name", path.display()),
+        };
+        let tmp = path.with_file_name(format!("{file_name}.tmp-{}", std::process::id()));
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&self.to_bytes())?;
+            // Durable before the rename makes it visible.
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        // The file's fsync does not cover the directory entry: sync the
+        // parent too, so the rename itself survives power loss (without
+        // it, a later retention unlink could be journaled first and a
+        // crash would leave zero checkpoints on disk). Best-effort: not
+        // every filesystem lets a directory be opened for sync.
+        #[cfg(unix)]
+        if let Some(dir) = path.parent() {
+            let dir = if dir.as_os_str().is_empty() { Path::new(".") } else { dir };
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+        Ok(())
+    }
+
+    /// Load and verify a checkpoint file.
+    pub fn load(path: &Path) -> crate::Result<CheckpointState> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("cannot read checkpoint '{}': {e}", path.display()))?;
+        Self::from_bytes(&bytes)
+            .map_err(|e| anyhow::anyhow!("checkpoint '{}': {e}", path.display()))
+    }
+}
+
+/// Periodic checkpointer: every `every` rounds it asks the session to
+/// write `ckpt_round_NNNNNN.hckpt` into `dir`, keeping only the newest
+/// `keep_last` files (write-to-temp + atomic rename happens inside
+/// [`CheckpointState::save`], so an interrupted write never corrupts an
+/// older checkpoint).
+pub struct CheckpointObserver {
+    dir: PathBuf,
+    every: usize,
+    keep_last: usize,
+    written: Vec<PathBuf>,
+    /// Whether `written` has been seeded from the files already on disk
+    /// (checkpoints surviving a crash must count against `keep_last` too,
+    /// or a resumed run would accumulate them forever).
+    seeded: bool,
+}
+
+impl CheckpointObserver {
+    /// Checkpoint every `every` rounds into `dir` (keep-last-3 default).
+    pub fn new(dir: impl Into<PathBuf>, every: usize) -> CheckpointObserver {
+        CheckpointObserver {
+            dir: dir.into(),
+            every: every.max(1),
+            keep_last: 3,
+            written: Vec::new(),
+            seeded: false,
+        }
+    }
+
+    /// Retain only the newest `k` checkpoints (older ones are deleted
+    /// after each successful write).
+    pub fn keep_last(mut self, k: usize) -> CheckpointObserver {
+        self.keep_last = k.max(1);
+        self
+    }
+
+    /// The file this observer writes for a given round.
+    pub fn path_for(&self, round: usize) -> PathBuf {
+        self.dir.join(format!("ckpt_round_{round:06}.hckpt"))
+    }
+
+    /// Paths written so far (oldest first, pre-existing on-disk
+    /// checkpoints included once seeded), after retention pruning.
+    pub fn written(&self) -> &[PathBuf] {
+        &self.written
+    }
+
+    /// Fold checkpoints already on disk (e.g. survivors of a crashed
+    /// run) into the retention window, oldest first (name order is round
+    /// order — zero-padded), and sweep atomic-write temp leftovers whose
+    /// rename never happened (retention would otherwise never touch
+    /// them, and each crashed run orphans a fresh pid-suffixed file).
+    fn seed_from_disk(&mut self, just_written: &Path) {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else { return };
+        let mut old: Vec<PathBuf> = Vec::new();
+        for path in entries.filter_map(|e| e.ok().map(|e| e.path())) {
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+            if !name.starts_with("ckpt_round_") || path == just_written {
+                continue;
+            }
+            if name.ends_with(".hckpt") {
+                old.push(path);
+            } else if name.contains(".hckpt.tmp-") {
+                // Best-effort sweep of a crashed save's temp file.
+                let _ = std::fs::remove_file(&path);
+            }
+        }
+        old.sort();
+        self.written.splice(0..0, old);
+    }
+}
+
+impl Observer for CheckpointObserver {
+    fn checkpoint_request(&mut self, report: &RoundReport) -> Option<PathBuf> {
+        (report.round % self.every == 0).then(|| self.path_for(report.round))
+    }
+
+    fn on_checkpoint(&mut self, _report: &RoundReport, path: &Path) {
+        if !self.seeded {
+            self.seeded = true;
+            self.seed_from_disk(path);
+        }
+        // A rewrite of a round already in the window (a resumed run
+        // replaying past a crash survivor) moves that path to the newest
+        // slot instead of duplicating it — a duplicate would make the
+        // age-ordered pruning below unlink one of the newest K files.
+        self.written.retain(|p| p != path);
+        self.written.push(path.to_path_buf());
+        while self.written.len() > self.keep_last {
+            // Best-effort retention: a missing file is not an error.
+            let old = self.written.remove(0);
+            let _ = std::fs::remove_file(old);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RoundOutcome;
+    use crate::latency::RoundLatency;
+
+    fn fake_report(round: usize) -> RoundReport {
+        RoundReport {
+            round,
+            sim_time: round as f64,
+            outcome: RoundOutcome { mean_loss: 1.0, train_acc: 0.5, participants: 1 },
+            latency: RoundLatency {
+                per_device: vec![],
+                server_fwd: 0.0,
+                server_bwd: 0.0,
+                t_split: 1.0,
+                t_agg: 0.0,
+            },
+            aggregated: false,
+            reoptimized: false,
+            decisions: Decisions::uniform(1, 8, 4),
+            test_acc: None,
+            fleet: None,
+        }
+    }
+
+    #[test]
+    fn observer_requests_on_schedule() {
+        let mut obs = CheckpointObserver::new("ckdir", 3);
+        assert!(obs.checkpoint_request(&fake_report(1)).is_none());
+        assert!(obs.checkpoint_request(&fake_report(2)).is_none());
+        let p = obs.checkpoint_request(&fake_report(3)).unwrap();
+        assert_eq!(p, PathBuf::from("ckdir/ckpt_round_000003.hckpt"));
+        assert!(obs.checkpoint_request(&fake_report(6)).is_some());
+    }
+
+    #[test]
+    fn observer_retention_counts_crash_survivors() {
+        // Checkpoints left on disk by a crashed run must count against
+        // keep_last on resume, not accumulate forever.
+        let dir = std::env::temp_dir()
+            .join(format!("hasfl_ckpt_survivors_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut obs = CheckpointObserver::new(&dir, 1).keep_last(2);
+        // Survivors of the "previous" run, plus an atomic-write temp file
+        // orphaned by a crash mid-save.
+        for round in [3usize, 6] {
+            std::fs::write(obs.path_for(round), b"stale").unwrap();
+        }
+        let orphan = dir.join("ckpt_round_000007.hckpt.tmp-12345");
+        std::fs::write(&orphan, b"partial").unwrap();
+        // The resumed run writes rounds 9 and 12.
+        for round in [9usize, 12] {
+            let path = obs.path_for(round);
+            std::fs::write(&path, b"fresh").unwrap();
+            obs.on_checkpoint(&fake_report(round), &path);
+        }
+        assert!(!obs.path_for(3).exists());
+        assert!(!obs.path_for(6).exists());
+        assert!(obs.path_for(9).exists());
+        assert!(obs.path_for(12).exists());
+        assert!(!orphan.exists(), "crashed-save temp file must be swept");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn observer_retention_handles_rewritten_rounds() {
+        // Resuming from a non-newest checkpoint rewrites round numbers
+        // that already exist on disk; the rewrite must not duplicate
+        // window entries (a duplicate would make the age-ordered pruning
+        // unlink one of the newest K files).
+        let dir = std::env::temp_dir()
+            .join(format!("hasfl_ckpt_rewrite_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut obs = CheckpointObserver::new(&dir, 4).keep_last(3);
+        // Survivors of the previous run...
+        for round in [4usize, 8, 12] {
+            std::fs::write(obs.path_for(round), b"stale").unwrap();
+        }
+        // ...then a run resumed from round 4 replays rounds 8/12 and
+        // continues to 16.
+        for round in [8usize, 12, 16] {
+            let path = obs.path_for(round);
+            std::fs::write(&path, b"fresh").unwrap();
+            obs.on_checkpoint(&fake_report(round), &path);
+        }
+        assert!(!obs.path_for(4).exists());
+        assert!(obs.path_for(8).exists());
+        assert!(obs.path_for(12).exists());
+        assert!(obs.path_for(16).exists());
+        assert_eq!(obs.written().len(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn observer_retention_keeps_last_k() {
+        let dir = std::env::temp_dir()
+            .join(format!("hasfl_ckpt_retention_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut obs = CheckpointObserver::new(&dir, 1).keep_last(2);
+        for round in 1..=4 {
+            let path = obs.path_for(round);
+            std::fs::write(&path, b"stub").unwrap();
+            obs.on_checkpoint(&fake_report(round), &path);
+        }
+        assert_eq!(obs.written().len(), 2);
+        assert!(!obs.path_for(1).exists());
+        assert!(!obs.path_for(2).exists());
+        assert!(obs.path_for(3).exists());
+        assert!(obs.path_for(4).exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -36,6 +36,14 @@ impl Range {
         0.5 * (self.lo + self.hi)
     }
 
+    /// True when both bounds are finite and strictly positive — a valid
+    /// rate/capability interval. The latency kernels divide by sampled
+    /// values from these ranges, so a zero or non-finite bound silently
+    /// poisons every objective with `inf`/`NaN`.
+    pub fn is_positive(&self) -> bool {
+        self.lo.is_finite() && self.hi.is_finite() && self.lo > 0.0
+    }
+
     fn to_json(self) -> Json {
         Json::from_f64s(&[self.lo, self.hi])
     }
@@ -75,6 +83,25 @@ pub struct Server {
     pub from_fed_bps: f64,
 }
 
+impl Server {
+    /// The zero-rate guard for the edge/fed server resources (the latency
+    /// kernels divide by every one of these).
+    pub fn validate(&self) -> crate::Result<()> {
+        for (name, v) in [
+            ("flops", self.flops),
+            ("to_fed_bps", self.to_fed_bps),
+            ("from_fed_bps", self.from_fed_bps),
+        ] {
+            anyhow::ensure!(
+                v.is_finite() && v > 0.0,
+                "server {name} {v} must be finite and > 0 \
+                 (latency kernels divide by it)"
+            );
+        }
+        Ok(())
+    }
+}
+
 /// Fleet sampling configuration (Table I ranges by default).
 #[derive(Debug, Clone, PartialEq)]
 pub struct FleetConfig {
@@ -93,6 +120,37 @@ pub struct FleetConfig {
 }
 
 impl FleetConfig {
+    /// Reject fleets that could sample a zero, negative, or non-finite
+    /// resource. The latency kernels (Eqns 28–37) divide by
+    /// `flops`/`up_bps`/`down_bps`/... with no guard, so a zero-rate
+    /// device yields `inf`/`NaN` round latencies that silently poison the
+    /// optimizer's objectives — the contract is that such devices are
+    /// rejected here (and at `Scenario` validation, whose drift floors and
+    /// slowdown bounds keep evolved rates positive), never reached.
+    pub fn validate(&self) -> crate::Result<()> {
+        for (name, r) in [
+            ("flops", self.flops),
+            ("up_bps", self.up_bps),
+            ("down_bps", self.down_bps),
+            ("fed_up_bps", self.fed_up_bps),
+            ("fed_down_bps", self.fed_down_bps),
+        ] {
+            anyhow::ensure!(
+                r.is_positive(),
+                "fleet {name} range [{}, {}] must be finite and > 0 \
+                 (zero rates yield infinite round latencies)",
+                r.lo,
+                r.hi
+            );
+        }
+        anyhow::ensure!(
+            self.mem_bytes.is_finite() && self.mem_bytes > 0.0,
+            "fleet mem_bytes {} must be finite and > 0",
+            self.mem_bytes
+        );
+        Ok(())
+    }
+
     /// Sample a heterogeneous fleet deterministically.
     pub fn sample(&self, rng: &mut Pcg32) -> Vec<Device> {
         (0..self.n_devices)
@@ -411,6 +469,34 @@ mod tests {
         let fleet = Config::table1().sample_fleet();
         let f0 = fleet[0].flops;
         assert!(fleet.iter().any(|d| (d.flops - f0).abs() > 1e9));
+    }
+
+    #[test]
+    fn zero_rate_fleets_and_servers_are_rejected() {
+        // Regression: zero-rate devices (a valid mid-churn state if left
+        // unvalidated) make the latency kernels divide by zero.
+        assert!(Config::table1().fleet.validate().is_ok());
+        assert!(Config::table1().server.validate().is_ok());
+
+        let mut f = Config::table1().fleet;
+        f.up_bps = Range::new(0.0, 1e6);
+        assert!(f.validate().is_err());
+
+        let mut f = Config::table1().fleet;
+        f.flops = Range::new(1e9, f64::INFINITY);
+        assert!(f.validate().is_err());
+
+        let mut f = Config::table1().fleet;
+        f.mem_bytes = 0.0;
+        assert!(f.validate().is_err());
+
+        let mut s = Config::table1().server;
+        s.to_fed_bps = 0.0;
+        assert!(s.validate().is_err());
+
+        let mut s = Config::table1().server;
+        s.flops = f64::NAN;
+        assert!(s.validate().is_err());
     }
 
     #[test]

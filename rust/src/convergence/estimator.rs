@@ -13,6 +13,21 @@
 
 use crate::model::Tensor;
 
+/// Serializable snapshot of a [`GradStatsEstimator`] (the checkpoint
+/// subsystem persists it so a resumed run re-optimizes from the same
+/// estimated Assumption-2 constants as the uninterrupted run).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EstimatorState {
+    pub n_blocks: usize,
+    pub alpha: f64,
+    pub gsq: Vec<f64>,
+    pub sigma_sq: Vec<f64>,
+    pub beta: f64,
+    pub rounds_seen: usize,
+    pub prev_flat_grad: Option<Vec<f64>>,
+    pub prev_flat_param: Option<Vec<f64>>,
+}
+
 /// Exponential-moving-average estimator of per-layer bound constants.
 #[derive(Debug, Clone)]
 pub struct GradStatsEstimator {
@@ -149,6 +164,35 @@ impl GradStatsEstimator {
         self.rounds_seen
     }
 
+    /// Full estimator state for checkpointing.
+    pub fn to_state(&self) -> EstimatorState {
+        EstimatorState {
+            n_blocks: self.n_blocks,
+            alpha: self.alpha,
+            gsq: self.gsq.clone(),
+            sigma_sq: self.sigma_sq.clone(),
+            beta: self.beta,
+            rounds_seen: self.rounds_seen,
+            prev_flat_grad: self.prev_flat_grad.clone(),
+            prev_flat_param: self.prev_flat_param.clone(),
+        }
+    }
+
+    /// Rebuild an estimator from checkpointed state (exact inverse of
+    /// [`GradStatsEstimator::to_state`]).
+    pub fn from_state(s: EstimatorState) -> GradStatsEstimator {
+        GradStatsEstimator {
+            n_blocks: s.n_blocks,
+            alpha: s.alpha,
+            gsq: s.gsq,
+            sigma_sq: s.sigma_sq,
+            beta: s.beta,
+            rounds_seen: s.rounds_seen,
+            prev_flat_grad: s.prev_flat_grad,
+            prev_flat_param: s.prev_flat_param,
+        }
+    }
+
     /// Produce BoundParams using current estimates (gamma/theta0 given).
     pub fn to_bound_params(&self, gamma: f64, theta0: f64) -> super::BoundParams {
         super::BoundParams {
@@ -167,6 +211,19 @@ mod tests {
 
     fn tensor(v: &[f32]) -> Tensor {
         Tensor { shape: vec![v.len()], data: v.to_vec() }
+    }
+
+    #[test]
+    fn state_roundtrip_preserves_estimates() {
+        let mut est = GradStatsEstimator::new(1);
+        let g1 = vec![tensor(&[3.0, 0.0]), tensor(&[4.0])];
+        let g2 = vec![tensor(&[0.0, 3.0]), tensor(&[4.0])];
+        est.observe_round(&[g1, g2], &[8, 8]);
+        est.observe_smoothness(vec![2.0], vec![1.0]);
+        let back = GradStatsEstimator::from_state(est.to_state());
+        assert_eq!(back.to_state(), est.to_state());
+        assert_eq!(back.gsq(), est.gsq());
+        assert_eq!(back.rounds_seen(), est.rounds_seen());
     }
 
     #[test]

@@ -5,7 +5,7 @@
 
 mod estimator;
 
-pub use estimator::GradStatsEstimator;
+pub use estimator::{EstimatorState, GradStatsEstimator};
 
 use crate::latency::{round_latency, Decisions};
 use crate::model::ModelProfile;

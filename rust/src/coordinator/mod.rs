@@ -7,11 +7,13 @@
 //! time. Two execution modes with identical numerics:
 //! - [`Trainer::run_round`] — sequential round (single caller thread,
 //!   engine lane 0).
-//! - [`Trainer::run_round_concurrent`] — actor round: one OS thread per
-//!   edge device runs steps a1/a5 and the server exchange, routed to
-//!   engine lane `i % pool_width`, so device legs genuinely overlap when
-//!   the pool has width > 1. Results are applied in device order, so
-//!   numerics are bit-identical to sequential mode (`tests/parity_modes`).
+//! - [`Trainer::run_round_concurrent`] — actor round: a bounded pool of
+//!   at most `pool_width` worker threads pulls device work off a shared
+//!   queue (a 1000-device round costs `pool_width` threads, not 1000),
+//!   each device routed to engine lane `i % pool_width` so device legs
+//!   genuinely overlap when the pool has width > 1. Results are applied
+//!   in device order, so numerics are bit-identical to sequential mode
+//!   (`tests/parity_modes`).
 
 mod round;
 
@@ -24,6 +26,7 @@ use crate::aggregation::{
     aggregate_common, aggregate_common_partial, aggregate_forged, aggregate_forged_partial,
     global_average,
 };
+use crate::checkpoint::CheckpointState;
 use crate::config::{Config, Device, ModelKind};
 use crate::convergence::{BoundParams, GradStatsEstimator};
 use crate::data::{partition, BatchSampler, Dataset};
@@ -287,6 +290,111 @@ impl Trainer {
         std::mem::take(&mut self.history)
     }
 
+    /// Capture the complete training state between rounds — everything
+    /// [`Trainer::restore`] needs to reproduce the uninterrupted run
+    /// bit-for-bit. `round` is the session's completed-round counter.
+    ///
+    /// The capture clones the per-device `Params` (one transient extra
+    /// copy of the fleet's parameters while the checkpoint serializes) —
+    /// accepted for the executable path's fleet sizes; a borrowing
+    /// serializer is the upgrade path if checkpointing ever runs at the
+    /// analytic sim's 1k+-device scale.
+    pub(crate) fn capture(&self, round: usize) -> CheckpointState {
+        CheckpointState {
+            config_json: self.cfg.to_json().dump(),
+            round: round as u64,
+            rounds_run: self.rounds_run,
+            eval_epoch: self.eval_epoch,
+            common_version: self.common_version,
+            sync_version: self.sync_version,
+            fleet_synced: self.fleet_synced,
+            sim_time: self.sim_time,
+            params: self.params.clone(),
+            dec: self.dec.clone(),
+            history: self.history.records.clone(),
+            estimator: self.estimator.to_state(),
+            strategy_rng: self.strategy_rng.state_parts(),
+            sampler_rngs: self.samplers.iter().map(|s| s.rng_state()).collect(),
+            scenario: self.scenario.as_ref().map(|e| e.to_state()),
+        }
+    }
+
+    /// Restore a freshly-built trainer (same config) to checkpointed
+    /// state. [`Trainer::new`] already rebuilt the deterministic substrate
+    /// (engine, manifest, datasets, partitions) from the config; this
+    /// overlays every piece of state that evolves during training: params,
+    /// RNG streams, sampler cursors, estimator, scenario engine, incumbent
+    /// decisions, history, clocks, and the buffer-cache version counters.
+    /// Takes the state by value and moves the heavy payloads (params,
+    /// history) in, so a resume never holds a third copy of the fleet's
+    /// parameters.
+    pub(crate) fn restore(&mut self, state: CheckpointState) -> crate::Result<()> {
+        let n = self.params.len();
+        anyhow::ensure!(
+            state.params.len() == n,
+            "checkpoint holds {} device models, config fleet has {n}",
+            state.params.len()
+        );
+        for (i, (have, want)) in self.params.iter().zip(&state.params).enumerate() {
+            anyhow::ensure!(
+                have.tensors.len() == want.tensors.len() && have.n_blocks == want.n_blocks,
+                "checkpoint device {i} holds {} tensors / {} blocks, model expects {} / {}",
+                want.tensors.len(),
+                want.n_blocks,
+                have.tensors.len(),
+                have.n_blocks
+            );
+        }
+        anyhow::ensure!(
+            state.sampler_rngs.len() == self.samplers.len(),
+            "checkpoint holds {} sampler streams, fleet has {}",
+            state.sampler_rngs.len(),
+            self.samplers.len()
+        );
+        anyhow::ensure!(
+            state.dec.n() == n,
+            "checkpoint decisions cover {} devices, fleet has {n}",
+            state.dec.n()
+        );
+        match (&mut self.scenario, &state.scenario) {
+            (Some(engine), Some(s)) => {
+                engine.restore_state(s)?;
+                // The optimizer's fleet view: the persistent effective
+                // roster as of the checkpointed round.
+                self.devices = engine.effective_roster().to_vec();
+            }
+            (None, None) => {}
+            (Some(_), None) => {
+                anyhow::bail!("config has a scenario but the checkpoint carries no engine state")
+            }
+            (None, Some(_)) => {
+                anyhow::bail!("checkpoint carries scenario state but the config has no scenario")
+            }
+        }
+        self.params = state.params;
+        self.dec = state.dec;
+        self.refresh_step_artifacts()?;
+        self.history = History { records: state.history };
+        self.estimator = GradStatsEstimator::from_state(state.estimator);
+        self.strategy_rng = Pcg32::from_state_parts(state.strategy_rng.0, state.strategy_rng.1);
+        for (s, &(st, inc)) in self.samplers.iter_mut().zip(&state.sampler_rngs) {
+            s.restore_rng(st, inc);
+        }
+        self.sim_time = state.sim_time;
+        self.rounds_run = state.rounds_run;
+        self.eval_epoch = state.eval_epoch;
+        self.common_version = state.common_version;
+        self.sync_version = state.sync_version;
+        self.fleet_synced = state.fleet_synced;
+        // Per-round transients: rebuilt by `begin_round`/`apply_results`
+        // at the top of the next step, exactly as in the uninterrupted run.
+        self.last_snapshot = None;
+        self.participation = vec![true; n];
+        self.round_participants.clear();
+        self.round_weights.clear();
+        Ok(())
+    }
+
     /// Latency breakdown of one round under the current decisions. With a
     /// scenario attached, only the round's participants gate the phases
     /// (Eqn 38's maxima run over the surviving devices), priced at the
@@ -306,6 +414,18 @@ impl Trainer {
                     devices.push(snap.devices[k].clone());
                     batch.push(self.dec.batch[id]);
                     cut.push(self.dec.cut[id]);
+                }
+                if devices.is_empty() {
+                    // Every participant dropped: the round moved no data
+                    // and took no time (an explicitly empty round; see
+                    // `RoundOutcome::is_empty`).
+                    return RoundLatency {
+                        per_device: Vec::new(),
+                        server_fwd: 0.0,
+                        server_bwd: 0.0,
+                        t_split: 0.0,
+                        t_agg: 0.0,
+                    };
                 }
                 let sub = Decisions { batch, cut };
                 round_latency(&self.profile, &devices, &self.cfg.server, &sub)
@@ -437,17 +557,24 @@ impl Trainer {
         // with offline/dropped members aggregate partially.
         let partial =
             self.scenario.is_some() && self.round_participants.len() < self.params.len();
-        if partial {
-            aggregate_common_partial(
-                &mut self.params,
-                &self.dec,
-                &self.round_participants,
-                &self.round_weights,
-            );
-        } else {
-            aggregate_common(&mut self.params, &self.dec);
+        // A round where every participant dropped moves no parameters:
+        // skip the Eqn-4 aggregation entirely and keep `common_version`
+        // stable, so the COMMON_SET cache keys stay valid and the next
+        // non-empty round is not forced into a spurious repack.
+        let empty_round = self.scenario.is_some() && self.round_participants.is_empty();
+        if !empty_round {
+            if partial {
+                aggregate_common_partial(
+                    &mut self.params,
+                    &self.dec,
+                    &self.round_participants,
+                    &self.round_weights,
+                );
+            } else {
+                aggregate_common(&mut self.params, &self.dec);
+            }
+            self.common_version += 1;
         }
-        self.common_version += 1;
 
         let drift_hit = match (&self.scenario, &self.last_snapshot) {
             (Some(engine), Some(snap)) => engine
@@ -456,7 +583,13 @@ impl Trainer {
                 .map_or(false, |thr| snap.drift >= thr),
             _ => false,
         };
-        let aggregated = t % self.cfg.train.agg_interval == 0 || drift_hit;
+        // An empty round also defers the forged-sync event: a
+        // zero-participant sync would be a no-op that leaves the fleet
+        // non-identical, and the re-solve it triggers could move L_c —
+        // which is only safe when the *whole* model is fleet-identical
+        // (the COMMON_SET keying contract). The next window (or the
+        // drift trigger, which keeps accumulating) picks the event up.
+        let aggregated = (t % self.cfg.train.agg_interval == 0 || drift_hit) && !empty_round;
         if aggregated {
             // Steps b1-b3 (Eqn 7) + re-optimization (Alg 1 line 24).
             if partial {
@@ -469,9 +602,12 @@ impl Trainer {
             } else {
                 aggregate_forged(&mut self.params, &self.dec);
             }
+            // Both forms broadcast the aggregate to the full roster, so
+            // the fleet is provably identical from here (empty rounds
+            // never reach this branch).
+            self.fleet_synced = true;
             self.sim_time += latency.t_agg;
             self.sync_version += 1;
-            self.fleet_synced = true;
             // Re-optimization may move L_c; that is only safe for the
             // COMMON_SET keying because it happens on forged-sync rounds,
             // when the *whole* model is fleet-identical (partial

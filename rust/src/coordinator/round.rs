@@ -19,10 +19,29 @@ use crate::runtime::{
 /// Aggregate result of one round.
 #[derive(Debug, Clone)]
 pub struct RoundOutcome {
-    /// Mean training loss across devices.
+    /// Mean training loss across participating devices (`NaN` on an empty
+    /// round — no device completed any work).
     pub mean_loss: f64,
-    /// Weighted training accuracy across devices this round.
+    /// Weighted training accuracy across participating devices (`NaN` on
+    /// an empty round).
     pub train_acc: f64,
+    /// Devices that completed the round. `0` marks an explicitly empty
+    /// round: no samples were processed and no parameters moved.
+    pub participants: usize,
+}
+
+impl RoundOutcome {
+    /// The explicit empty-round marker (heavy churn can drop every
+    /// participant): NaN stats instead of a fake `0.0` loss that would
+    /// pollute CSV histories and convergence detection.
+    pub fn empty() -> RoundOutcome {
+        RoundOutcome { mean_loss: f64::NAN, train_acc: f64::NAN, participants: 0 }
+    }
+
+    /// True when no device completed the round.
+    pub fn is_empty(&self) -> bool {
+        self.participants == 0
+    }
 }
 
 /// Everything one device needs for its round, detached from the trainer so
@@ -118,7 +137,7 @@ impl Trainer {
                     Arc::clone(arc),
                 ),
                 None => ExecInput::cached(
-                    BufKey { set: i as u64, slot: slot as u32 },
+                    BufKey { set: BufKey::device_set(i), slot: slot as u32 },
                     pv,
                     tensor_to_shared(t),
                 ),
@@ -140,7 +159,7 @@ impl Trainer {
             lane,
             artifacts,
             x: ExecInput::cached(
-                BufKey { set: i as u64, slot: BufKey::SLOT_X },
+                BufKey { set: BufKey::device_set(i), slot: BufKey::SLOT_X },
                 self.rounds_run,
                 Arc::new(HostTensor { shape: vec![bucket as usize, 32, 32, 3], data: batch.x }),
             ),
@@ -212,7 +231,21 @@ impl Trainer {
     }
 
     fn apply_results(&mut self, results: Vec<DeviceResult>) -> RoundOutcome {
-        let n = results.len().max(1);
+        // Who completed this round and how many samples each processed —
+        // the participant set and Eqn-39 weights for partial aggregation
+        // under churn (full roster with uniform decisions otherwise).
+        self.round_participants.clear();
+        self.round_weights.clear();
+
+        if results.is_empty() {
+            // Every participant dropped (churn-heavy rounds): nothing to
+            // update, nothing to estimate — report the round explicitly
+            // empty instead of a fake 0.0 loss. `fleet_synced` is left
+            // untouched: no parameters moved, so nothing diverged.
+            return RoundOutcome::empty();
+        }
+
+        let n = results.len();
         let lr = self.cfg.train.lr;
         let mut loss_sum = 0.0;
         let mut correct_sum = 0.0;
@@ -222,12 +255,6 @@ impl Trainer {
         let mut batches: Vec<u32> = Vec::with_capacity(n);
         let mut sorted = results;
         sorted.sort_by_key(|r| r.idx);
-
-        // Who completed this round and how many samples each processed —
-        // the participant set and Eqn-39 weights for partial aggregation
-        // under churn (full roster with uniform decisions otherwise).
-        self.round_participants.clear();
-        self.round_weights.clear();
 
         for r in sorted {
             loss_sum += r.loss;
@@ -249,6 +276,7 @@ impl Trainer {
         RoundOutcome {
             mean_loss: loss_sum / n as f64,
             train_acc: correct_sum / batch_sum.max(1) as f64,
+            participants: n,
         }
     }
 
@@ -273,10 +301,12 @@ impl Trainer {
         Ok(self.apply_results(results))
     }
 
-    /// Actor round: one OS thread per device, true message-passing
-    /// concurrency. Devices route to engine lane `idx % width`, so with a
-    /// pool width > 1 their compute genuinely overlaps; results are applied
-    /// in device order either way, so numerics match the sequential mode
+    /// Actor round over a bounded worker pool: at most `engine.width()`
+    /// OS threads pull device work off a shared queue, so a 1000-device
+    /// round costs `width` threads, not 1000. Devices route to engine
+    /// lane `idx % width` (assigned at prepare time, so lane routing is
+    /// independent of which worker picks the work up), and results are
+    /// applied in device order, so numerics match the sequential mode
     /// exactly (verified by `rust/tests/parity_modes.rs`).
     pub(crate) fn run_round_concurrent(&mut self) -> crate::Result<RoundOutcome> {
         self.begin_round();
@@ -284,31 +314,61 @@ impl Trainer {
         let n = self.n_devices();
         let width = self.engine.width();
         let shared = self.shared_param_arcs();
-        let mut works = Vec::with_capacity(n);
+        let mut works = std::collections::VecDeque::with_capacity(n);
         for i in 0..n {
             if !self.participation()[i] {
                 continue;
             }
-            works.push(self.prepare_device(i, i % width, &shared)?);
+            works.push_back(self.prepare_device(i, i % width, &shared)?);
         }
+        let n_works = works.len();
+        let workers = width.min(n_works);
         let engine = self.engine.clone();
-        let results: Vec<crate::Result<DeviceResult>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = works
-                .into_iter()
-                .map(|work| {
+        let queue = std::sync::Mutex::new(works);
+        let done: std::sync::Mutex<Vec<crate::Result<DeviceResult>>> =
+            std::sync::Mutex::new(Vec::with_capacity(n_works));
+        let panicked = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
                     let engine = engine.clone();
-                    scope.spawn(move || Self::exec_device_blocking(&engine, work))
+                    let queue = &queue;
+                    let done = &done;
+                    scope.spawn(move || loop {
+                        let work = queue.lock().unwrap().pop_front();
+                        let Some(work) = work else { break };
+                        let res = Self::exec_device_blocking(&engine, work);
+                        done.lock().unwrap().push(res);
+                    })
                 })
                 .collect();
-            handles
-                .into_iter()
-                .map(|h| {
-                    h.join()
-                        .map_err(|_| anyhow::anyhow!("device thread panicked"))?
-                })
-                .collect()
+            handles.into_iter().map(|h| h.join()).filter(|r| r.is_err()).count()
         });
-        let results = results.into_iter().collect::<crate::Result<Vec<_>>>()?;
+        anyhow::ensure!(panicked == 0, "{panicked} device worker thread(s) panicked");
+        let results = done
+            .into_inner()
+            .map_err(|_| anyhow::anyhow!("device result store poisoned"))?
+            .into_iter()
+            .collect::<crate::Result<Vec<_>>>()?;
         Ok(self.apply_results(results))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::RoundOutcome;
+
+    #[test]
+    fn empty_round_is_nan_marked_not_zero() {
+        // Regression: a round where every participant dropped used to
+        // report mean_loss = 0.0 / train_acc = 0.0, polluting histories
+        // and convergence detection with fake-perfect losses.
+        let empty = RoundOutcome::empty();
+        assert!(empty.is_empty());
+        assert_eq!(empty.participants, 0);
+        assert!(empty.mean_loss.is_nan());
+        assert!(empty.train_acc.is_nan());
+
+        let real = RoundOutcome { mean_loss: 1.5, train_acc: 0.5, participants: 3 };
+        assert!(!real.is_empty());
     }
 }

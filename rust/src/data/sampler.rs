@@ -35,6 +35,18 @@ impl BatchSampler {
         self.indices.len()
     }
 
+    /// Raw RNG state `(state, inc)` for checkpointing (the partition
+    /// indices are deterministic from the config and are rebuilt on
+    /// resume; only the stream cursor evolves).
+    pub fn rng_state(&self) -> (u64, u64) {
+        self.rng.state_parts()
+    }
+
+    /// Restore the sampler's RNG stream from checkpointed state.
+    pub fn restore_rng(&mut self, state: u64, inc: u64) {
+        self.rng = Pcg32::from_state_parts(state, inc);
+    }
+
     /// Sample a batch of `b` samples (with replacement when b exceeds the
     /// partition) and pad it to `bucket` rows with zero-weighted rows.
     pub fn sample(&mut self, dataset: &Dataset, b: u32, bucket: u32) -> HostBatch {
@@ -127,6 +139,19 @@ mod tests {
         let b = s.sample(&d, 8, 8);
         assert_eq!(b.true_batch, 8);
         assert_eq!(b.weights, vec![1.0; 8]);
+    }
+
+    #[test]
+    fn rng_state_roundtrip_resumes_the_batch_stream() {
+        let (d, mut s) = setup();
+        s.sample(&d, 8, 8);
+        let (state, inc) = s.rng_state();
+        let mut resumed = BatchSampler::new((0..64).collect(), Pcg32::seeded(999));
+        resumed.restore_rng(state, inc);
+        let a = s.sample(&d, 8, 8);
+        let b = resumed.sample(&d, 8, 8);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.onehot, b.onehot);
     }
 
     #[test]

@@ -115,6 +115,9 @@ impl Experiment {
             artifacts: PathBuf::from("artifacts"),
             concurrent: false,
             observers: Vec::new(),
+            resume: None,
+            rounds_override: None,
+            pool_override: None,
         }
     }
 }
@@ -125,6 +128,17 @@ pub struct ExperimentBuilder {
     artifacts: PathBuf,
     concurrent: bool,
     observers: Vec<Box<dyn Observer>>,
+    /// Checkpoint file to resume from; its embedded config is then
+    /// authoritative (only the round budget may be overridden on top).
+    resume: Option<PathBuf>,
+    /// Explicit `.rounds(..)` value, applied over a resumed config too so
+    /// a resumed run can extend its round budget.
+    rounds_override: Option<usize>,
+    /// Explicit `.engine_pool(..)` value, applied over a resumed config
+    /// too: pool width is a pure wall-clock knob (numerics are identical
+    /// at any width, `rust/tests/parity_modes.rs`), so resuming on a
+    /// differently-sized machine may retune it.
+    pool_override: Option<usize>,
 }
 
 impl ExperimentBuilder {
@@ -147,9 +161,25 @@ impl ExperimentBuilder {
         self
     }
 
-    /// Round-budget override.
+    /// Round-budget override. With [`ExperimentBuilder::resume_from`],
+    /// this overrides the checkpointed budget too (extend a finished run
+    /// by resuming it with a larger budget).
     pub fn rounds(mut self, rounds: usize) -> Self {
         self.cfg.train.rounds = rounds;
+        self.rounds_override = Some(rounds);
+        self
+    }
+
+    /// Resume a session from a checkpoint file written by
+    /// [`Session::checkpoint`] or [`crate::checkpoint::CheckpointObserver`].
+    /// The checkpoint's embedded config becomes the session config
+    /// (validated against the artifacts as usual); the complete training
+    /// state — params, RNG streams, sampler cursors, estimator, scenario
+    /// engine, decisions, history, clocks — is restored so the resumed run
+    /// is bit-identical to the uninterrupted one
+    /// (`rust/tests/checkpoint_resume.rs`).
+    pub fn resume_from(mut self, path: impl Into<PathBuf>) -> Self {
+        self.resume = Some(path.into());
         self
     }
 
@@ -227,9 +257,12 @@ impl ExperimentBuilder {
 
     /// PJRT engine-pool width: 0 = auto (fleet size capped by host
     /// parallelism), n = exactly n lanes. Width changes wall-clock only,
-    /// never numerics (`rust/tests/parity_modes.rs`).
+    /// never numerics (`rust/tests/parity_modes.rs`), so with
+    /// [`ExperimentBuilder::resume_from`] it also overrides the
+    /// checkpointed width.
     pub fn engine_pool(mut self, width: usize) -> Self {
         self.cfg.engine_pool = width;
+        self.pool_override = Some(width);
         self
     }
 
@@ -261,6 +294,15 @@ impl ExperimentBuilder {
     /// Pure configuration checks that need no filesystem access.
     fn validate_config(cfg: &Config) -> crate::Result<()> {
         anyhow::ensure!(cfg.fleet.n_devices >= 1, "fleet needs at least 1 device");
+        anyhow::ensure!(
+            (cfg.fleet.n_devices as u64) < crate::runtime::BufKey::RESERVED_FLOOR,
+            "fleet of {} devices collides with the reserved buffer-set ids \
+             (device indices must stay below {})",
+            cfg.fleet.n_devices,
+            crate::runtime::BufKey::RESERVED_FLOOR
+        );
+        cfg.fleet.validate()?;
+        cfg.server.validate()?;
         anyhow::ensure!(cfg.train.rounds >= 1, "round budget must be >= 1");
         anyhow::ensure!(cfg.train.eval_every >= 1, "eval_every must be >= 1");
         anyhow::ensure!(cfg.train.agg_interval >= 1, "agg_interval must be >= 1");
@@ -339,7 +381,42 @@ impl ExperimentBuilder {
     }
 
     /// Validate everything and build the training [`Session`].
-    pub fn build(self) -> crate::Result<Session> {
+    ///
+    /// With [`ExperimentBuilder::resume_from`], the checkpoint is loaded
+    /// and verified first (magic/version/checksum), its embedded config
+    /// becomes the session config (round budget overridable via
+    /// [`ExperimentBuilder::rounds`]), and the full training state is
+    /// restored onto the freshly-built trainer.
+    pub fn build(mut self) -> crate::Result<Session> {
+        if let Some(path) = self.resume.take() {
+            let state = crate::checkpoint::CheckpointState::load(&path)?;
+            let json = crate::util::Json::parse(&state.config_json)?;
+            let mut cfg = Config::from_json(&json).map_err(|e| {
+                anyhow::anyhow!("checkpoint '{}': bad embedded config: {e}", path.display())
+            })?;
+            if let Some(rounds) = self.rounds_override {
+                cfg.train.rounds = rounds;
+            }
+            if let Some(pool) = self.pool_override {
+                cfg.engine_pool = pool;
+            }
+            Self::validate_config(&cfg)?;
+            anyhow::ensure!(
+                cfg.model == ModelKind::Splitcnn8,
+                "checkpointed model '{}' is analytic-only and cannot resume training",
+                cfg.model.as_str()
+            );
+            Self::validate_against_manifest(&cfg, &self.artifacts)?;
+            let mut trainer = Trainer::new(cfg, &self.artifacts)?;
+            let round = state.round as usize;
+            trainer
+                .restore(state)
+                .map_err(|e| anyhow::anyhow!("checkpoint '{}': {e}", path.display()))?;
+            let mut session = Session::new(trainer, self.observers, self.concurrent);
+            session.set_completed_rounds(round);
+            session.notify_resumed();
+            return Ok(session);
+        }
         Self::validate_config(&self.cfg)?;
         anyhow::ensure!(
             self.cfg.model == ModelKind::Splitcnn8,
@@ -384,6 +461,42 @@ mod tests {
             .tune(|c| c.train.lr = f64::NAN)
             .build_config()
             .is_err());
+    }
+
+    #[test]
+    fn zero_rate_configs_are_rejected_up_front() {
+        // Regression for the latency-kernel division guard (see
+        // `config::FleetConfig::validate`).
+        assert!(Experiment::builder()
+            .tune(|c| c.fleet.up_bps = crate::config::Range::new(0.0, 1e6))
+            .build_config()
+            .is_err());
+        assert!(Experiment::builder()
+            .tune(|c| c.fleet.flops = crate::config::Range::new(1e9, f64::INFINITY))
+            .build_config()
+            .is_err());
+        assert!(Experiment::builder()
+            .tune(|c| c.server.to_fed_bps = 0.0)
+            .build_config()
+            .is_err());
+    }
+
+    #[cfg(target_pointer_width = "64")]
+    #[test]
+    fn astronomical_fleets_cannot_reach_reserved_buffer_sets() {
+        // Device buffer-set ids are the device indices; the validator
+        // refuses fleets that could collide with the reserved shared sets.
+        let err = Experiment::builder().devices(usize::MAX).build_config().unwrap_err();
+        assert!(err.to_string().contains("reserved buffer-set"), "{err}");
+    }
+
+    #[test]
+    fn resume_from_missing_file_fails_fast() {
+        let err = Experiment::builder()
+            .resume_from("/nonexistent/dir/ckpt.hckpt")
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("cannot read checkpoint"), "{err}");
     }
 
     #[test]

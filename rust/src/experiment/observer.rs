@@ -14,8 +14,10 @@ use super::RoundReport;
 /// Callbacks fired by [`super::Session::step`], in this order per round:
 /// `on_round`, then `on_fleet` (scenario sessions only), then
 /// `on_aggregation` (aggregation rounds), then `on_reoptimize` (after
-/// fresh decisions land), then `on_eval` (evaluation rounds).
-/// `on_complete` fires once from [`super::Session::finish`].
+/// fresh decisions land), then `on_eval` (evaluation rounds), then
+/// `checkpoint_request`/`on_checkpoint` (so checkpoints capture the fully
+/// booked round). `on_complete` fires once from
+/// [`super::Session::finish`].
 pub trait Observer {
     fn on_round(&mut self, _report: &RoundReport) {}
     /// The round's fleet snapshot; fires only when the session runs under
@@ -24,6 +26,25 @@ pub trait Observer {
     fn on_aggregation(&mut self, _report: &RoundReport) {}
     fn on_reoptimize(&mut self, _report: &RoundReport, _decisions: &Decisions) {}
     fn on_eval(&mut self, _report: &RoundReport, _test_acc: f64) {}
+    /// Ask the session to checkpoint the just-completed round: return the
+    /// file to write. The session captures the complete training state and
+    /// saves it crash-safely (write-to-temp + atomic rename, see
+    /// [`crate::checkpoint`]), then fires [`Observer::on_checkpoint`].
+    /// Fired after every per-round event above, so the captured state
+    /// includes the round's full bookkeeping.
+    fn checkpoint_request(&mut self, _report: &RoundReport) -> Option<std::path::PathBuf> {
+        None
+    }
+    /// A checkpoint of `report`'s round was written to `path` (retention
+    /// pruning hooks here).
+    fn on_checkpoint(&mut self, _report: &RoundReport, _path: &std::path::Path) {}
+    /// The session was rebuilt from a checkpoint: `history` holds the
+    /// restored records for rounds `1..=k`. Observers carrying
+    /// cross-round state (convergence windows, running maxima) rebuild
+    /// it here so a resumed run behaves like the uninterrupted one
+    /// ([`EarlyStop`] does); pure per-round sinks ignore it and simply
+    /// continue from round k+1.
+    fn on_resume(&mut self, _history: &History) {}
     /// Flush side effects at the end of the run.
     fn on_complete(&mut self, _history: &History) -> crate::Result<()> {
         Ok(())
@@ -59,7 +80,11 @@ impl Observer for CsvHistory {
 /// Collects the per-round fleet trace of a scenario session (membership,
 /// drift, latency — see [`FleetTrace`]) and writes it as CSV when the
 /// session finishes. Produces a header-only file on static-fleet sessions
-/// (no snapshots ever fire).
+/// (no snapshots ever fire). On a resumed session the trace holds only
+/// the post-resume rounds (snapshots are per-round events, not part of
+/// the restored history); the replayed rounds themselves are still
+/// bit-identical to the uninterrupted run's
+/// (`rust/tests/checkpoint_resume.rs`).
 pub struct FleetTraceCsv {
     path: PathBuf,
     trace: FleetTrace,
@@ -143,23 +168,35 @@ impl EarlyStop {
     pub fn triggered(&self) -> Option<(usize, f64, f64)> {
         self.triggered_at
     }
-}
 
-impl Observer for EarlyStop {
-    fn on_eval(&mut self, report: &RoundReport, test_acc: f64) {
+    fn observe(&mut self, round: usize, sim_time: f64, test_acc: f64) {
         match self.running_max {
             None => self.running_max = Some(test_acc),
             Some(m) => {
                 if (test_acc - m).max(0.0) < self.threshold {
                     self.stagnant += 1;
                     if self.stagnant >= self.window && self.triggered_at.is_none() {
-                        self.triggered_at = Some((report.round, report.sim_time, test_acc));
+                        self.triggered_at = Some((round, sim_time, test_acc));
                     }
                 } else {
                     self.stagnant = 0;
                 }
                 self.running_max = Some(m.max(test_acc));
             }
+        }
+    }
+}
+
+impl Observer for EarlyStop {
+    fn on_eval(&mut self, report: &RoundReport, test_acc: f64) {
+        self.observe(report.round, report.sim_time, test_acc);
+    }
+
+    fn on_resume(&mut self, history: &History) {
+        // Replay the restored evaluation points so the stagnation window
+        // and running maximum match the uninterrupted run's state.
+        for (round, sim_time, acc) in history.eval_points() {
+            self.observe(round, sim_time, acc);
         }
     }
 
@@ -178,7 +215,7 @@ mod tests {
         RoundReport {
             round,
             sim_time: round as f64,
-            outcome: RoundOutcome { mean_loss: 1.0, train_acc: 0.5 },
+            outcome: RoundOutcome { mean_loss: 1.0, train_acc: 0.5, participants: 1 },
             latency: RoundLatency {
                 per_device: vec![],
                 server_fwd: 0.0,
@@ -211,6 +248,29 @@ mod tests {
         assert_eq!(round, 9); // 1-based round of the 9th eval
         assert!((acc - 0.6).abs() < 1e-12);
         assert!(stop.should_stop());
+    }
+
+    #[test]
+    fn early_stop_rebuilds_its_window_on_resume() {
+        // A resumed run replays the restored eval points through
+        // on_resume, so the stagnation window matches the uninterrupted
+        // run: 4 stagnant restored evals + 1 live eval => trigger.
+        let mut h = History::default();
+        for (i, &a) in [0.1, 0.5, 0.5, 0.5, 0.5, 0.5].iter().enumerate() {
+            h.push(crate::metrics::Record {
+                round: i + 1,
+                sim_time: i as f64,
+                loss: 1.0,
+                test_acc: Some(a),
+            });
+        }
+        let mut stop = EarlyStop::new(0.0002, 5);
+        stop.on_resume(&h);
+        assert!(!stop.should_stop(), "4 stagnant evals must not trigger a 5-window");
+        let r = fake_report(7, Some(0.5));
+        stop.on_eval(&r, 0.5);
+        assert!(stop.should_stop());
+        assert_eq!(stop.triggered().unwrap().0, 7);
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! The step-driven training session and its per-round report.
 
+use std::path::{Path, PathBuf};
+
 use crate::coordinator::{RoundOutcome, Trainer};
 use crate::latency::{Decisions, RoundLatency};
 use crate::metrics::{History, Record};
@@ -50,6 +52,31 @@ pub struct Session {
 impl Session {
     pub(super) fn new(trainer: Trainer, observers: Vec<Box<dyn Observer>>, concurrent: bool) -> Session {
         Session { trainer, observers, round: 0, concurrent }
+    }
+
+    /// Start the round counter at `round` (the resume path: the restored
+    /// trainer already holds that many completed rounds of state).
+    pub(super) fn set_completed_rounds(&mut self, round: usize) {
+        self.round = round;
+    }
+
+    /// Fire [`Observer::on_resume`] with the restored history so
+    /// stateful observers (convergence windows, running maxima) rebuild
+    /// their cross-round state.
+    pub(super) fn notify_resumed(&mut self) {
+        let history = self.trainer.history().clone();
+        for obs in &mut self.observers {
+            obs.on_resume(&history);
+        }
+    }
+
+    /// Write a crash-safe checkpoint of the complete training state to
+    /// `path` (serialize to a temp sibling, fsync, atomic rename — see
+    /// [`crate::checkpoint`]). The file embeds the session config; resume
+    /// with [`super::ExperimentBuilder::resume_from`], which reproduces
+    /// the uninterrupted run bit-for-bit.
+    pub fn checkpoint(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        self.trainer.capture(self.round).save(path.as_ref())
     }
 
     /// Rounds completed so far.
@@ -164,6 +191,20 @@ impl Session {
             if let Some(acc) = report.test_acc {
                 obs.on_eval(&report, acc);
             }
+        }
+
+        // Checkpoint requests fire last, after every observer booked the
+        // round, so the captured state is the complete between-rounds
+        // state (collect first: writing borrows the trainer).
+        let mut requests: Vec<(usize, PathBuf)> = Vec::new();
+        for (i, obs) in self.observers.iter_mut().enumerate() {
+            if let Some(path) = obs.checkpoint_request(&report) {
+                requests.push((i, path));
+            }
+        }
+        for (i, path) in requests {
+            self.checkpoint(&path)?;
+            self.observers[i].on_checkpoint(&report, &path);
         }
         Ok(report)
     }

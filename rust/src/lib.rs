@@ -21,10 +21,13 @@
 //!
 //! Drive the system through [`experiment`] — the builder/session/observer
 //! API that every CLI subcommand, figure generator, example, and bench
-//! uses. See `DESIGN.md` (repo root) for the paper-to-module map and the
-//! experiment index (§6).
+//! uses. Long runs survive crashes through [`checkpoint`] — versioned,
+//! atomic on-disk snapshots of the complete training state with
+//! bit-identical warm restarts (DESIGN.md §10). See `DESIGN.md` (repo
+//! root) for the paper-to-module map and the experiment index (§6).
 
 pub mod aggregation;
+pub mod checkpoint;
 pub mod config;
 pub mod convergence;
 pub mod coordinator;

@@ -7,6 +7,8 @@
 //!                [--scenario static|drifting-channels|diurnal|churn-heavy|mega-fleet|spec.json]
 //!                [--artifacts DIR] [--out history.csv] [--fleet-out trace.csv]
 //!                [--concurrent] [--pool N] [--early-stop] [--progress]
+//!                [--checkpoint-every N] [--checkpoint-dir D] [--checkpoint-keep K]
+//!                [--resume ckpt.hckpt]
 //! hasfl scenario [--preset ...|--spec spec.json] [--devices N] [--rounds R]
 //!                [--seed S] [--model vgg16|resnet18] [--strategy ...]
 //!                [--out trace.csv]
@@ -18,6 +20,7 @@
 
 use std::path::PathBuf;
 
+use hasfl::checkpoint::CheckpointObserver;
 use hasfl::config::{Config, StrategyKind};
 use hasfl::convergence::BoundParams;
 use hasfl::experiment::{CsvHistory, EarlyStop, Experiment, FleetTraceCsv, Preset, ProgressLogger};
@@ -57,6 +60,25 @@ fn profile_arg(name: &str, artifacts: &std::path::Path) -> hasfl::Result<ModelPr
 }
 
 fn cmd_train(args: &Args) -> hasfl::Result<()> {
+    // `--resume` makes the checkpoint's embedded config authoritative.
+    // Flags that would alter the training numerics are rejected loudly
+    // instead of being silently ignored; only the round budget
+    // (`--rounds`) and runtime-only knobs (`--pool`, `--concurrent`,
+    // observers) apply on top.
+    if args.get("resume").is_some() {
+        for flag in ["config", "preset", "strategy", "devices", "seed", "scenario"] {
+            anyhow::ensure!(
+                args.get(flag).is_none(),
+                "--{flag} conflicts with --resume (the checkpoint's embedded config is \
+                 authoritative; only --rounds and runtime knobs like --pool apply)"
+            );
+        }
+        anyhow::ensure!(
+            !args.flag("non-iid"),
+            "--non-iid conflicts with --resume (the checkpoint's embedded config is \
+             authoritative)"
+        );
+    }
     let mut builder = match args.get("config") {
         Some(path) => Experiment::builder().config(Config::load(std::path::Path::new(path))?),
         None => Experiment::builder().preset(Preset::parse(args.get("preset").unwrap_or("small"))?),
@@ -81,6 +103,29 @@ fn cmd_train(args: &Args) -> hasfl::Result<()> {
     }
     if let Some(s) = args.get("scenario") {
         builder = builder.scenario(scenario_arg(s)?);
+    }
+    // Crash-safe checkpointing (DESIGN.md §10): periodic snapshots of the
+    // complete training state, and bit-identical warm restarts from them.
+    // `--resume` makes the checkpoint's embedded config authoritative
+    // (an explicit `--rounds` still extends the budget).
+    if let Some(path) = args.get("resume") {
+        builder = builder.resume_from(path);
+    }
+    match args.get_opt::<usize>("checkpoint-every")? {
+        Some(every) => {
+            anyhow::ensure!(every >= 1, "--checkpoint-every must be >= 1");
+            let dir = args.get("checkpoint-dir").unwrap_or("checkpoints");
+            let keep = args.get_or("checkpoint-keep", 3usize)?;
+            builder = builder.observe(CheckpointObserver::new(dir, every).keep_last(keep));
+        }
+        None => {
+            // A typo'd cadence must not silently run 1000 rounds with no
+            // crash protection.
+            anyhow::ensure!(
+                args.get("checkpoint-dir").is_none() && args.get("checkpoint-keep").is_none(),
+                "--checkpoint-dir/--checkpoint-keep require --checkpoint-every"
+            );
+        }
     }
     builder = builder
         .artifacts(args.get("artifacts").unwrap_or("artifacts"))

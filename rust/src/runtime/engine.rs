@@ -45,9 +45,27 @@ impl BufKey {
     pub const SYNC_SET: u64 = u64::MAX - 1;
     /// Set id for the evaluation-time global-average model.
     pub const EVAL_SET: u64 = u64::MAX - 2;
+    /// Floor of the reserved set-id space: every id in
+    /// `RESERVED_FLOOR..=u64::MAX` is reserved for the shared sets above
+    /// (plus headroom for future ones). Device indices must stay below —
+    /// [`BufKey::device_set`] guards the boundary, and fleet sizes are
+    /// validated against it up front (`ExperimentBuilder`).
+    pub const RESERVED_FLOOR: u64 = u64::MAX - 15;
     /// Slot id for the per-device input batch (parameters use their global
     /// tensor index as the slot).
     pub const SLOT_X: u32 = u32::MAX;
+
+    /// The per-device buffer set id for device index `i`, guarded against
+    /// collision with the reserved shared sets (a collision would silently
+    /// serve one device's packed literals to another).
+    pub fn device_set(i: usize) -> u64 {
+        let set = i as u64;
+        debug_assert!(
+            set < Self::RESERVED_FLOOR,
+            "device index {i} collides with the reserved buffer-set ids"
+        );
+        set
+    }
 }
 
 /// One engine input: either a transient tensor packed fresh on every call,

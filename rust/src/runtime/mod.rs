@@ -134,6 +134,28 @@ mod tests {
     }
 
     #[test]
+    fn reserved_buf_set_values_are_pinned() {
+        // The reserved ids are part of the buffer-cache keying contract:
+        // moving any of them silently aliases cached literals across
+        // devices, so their exact values are pinned here.
+        assert_eq!(BufKey::COMMON_SET, u64::MAX);
+        assert_eq!(BufKey::SYNC_SET, u64::MAX - 1);
+        assert_eq!(BufKey::EVAL_SET, u64::MAX - 2);
+        assert_eq!(BufKey::RESERVED_FLOOR, u64::MAX - 15);
+        assert!(BufKey::RESERVED_FLOOR <= BufKey::EVAL_SET);
+        assert_eq!(BufKey::SLOT_X, u32::MAX);
+    }
+
+    #[test]
+    fn device_sets_never_collide_with_reserved_sets() {
+        // Any realistic fleet index maps far below the reserved floor.
+        for i in [0usize, 1, 1_000, 1_000_000, 1 << 40] {
+            assert_eq!(BufKey::device_set(i), i as u64);
+            assert!(BufKey::device_set(i) < BufKey::RESERVED_FLOOR);
+        }
+    }
+
+    #[test]
     fn engine_stats_merge_sums_lanes() {
         let mut a = EngineStats {
             executions: 2,

@@ -24,6 +24,32 @@ struct DeviceState {
     phase: f64,
 }
 
+/// Serializable snapshot of one roster member's evolution state (the
+/// checkpoint subsystem persists the full roster so a resumed run replays
+/// the exact fleet trajectory of the uninterrupted one).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceEvoState {
+    pub base: Device,
+    pub channel_mult: f64,
+    pub compute_mult: f64,
+    pub active: bool,
+    pub phase: f64,
+}
+
+/// Complete serializable state of a [`ScenarioEngine`]: RNG cursor, round
+/// counter, roster evolution, and the drift reference. The spec itself is
+/// not included — it travels with the embedded `Config`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioEngineState {
+    /// Raw PCG state `(state, inc)`.
+    pub rng: (u64, u64),
+    pub round: usize,
+    pub roster: Vec<DeviceEvoState>,
+    pub effective: Vec<Device>,
+    pub reference: Vec<Device>,
+    pub reference_active: Vec<bool>,
+}
+
 /// One round's fleet state, as consumed by the latency model, the
 /// coordinator, and the round report.
 #[derive(Debug, Clone, PartialEq)]
@@ -173,6 +199,56 @@ impl ScenarioEngine {
         self.reference_active = self.roster.iter().map(|s| s.active).collect();
     }
 
+    /// Full engine state for checkpointing.
+    pub fn to_state(&self) -> ScenarioEngineState {
+        ScenarioEngineState {
+            rng: self.rng.state_parts(),
+            round: self.round,
+            roster: self
+                .roster
+                .iter()
+                .map(|s| DeviceEvoState {
+                    base: s.base.clone(),
+                    channel_mult: s.channel_mult,
+                    compute_mult: s.compute_mult,
+                    active: s.active,
+                    phase: s.phase,
+                })
+                .collect(),
+            effective: self.effective.clone(),
+            reference: self.reference.clone(),
+            reference_active: self.reference_active.clone(),
+        }
+    }
+
+    /// Restore a freshly-built engine (same spec + base fleet) to
+    /// checkpointed state, so the next [`ScenarioEngine::advance`] emits
+    /// exactly the snapshot the uninterrupted run would have seen.
+    pub fn restore_state(&mut self, s: &ScenarioEngineState) -> crate::Result<()> {
+        anyhow::ensure!(
+            s.roster.len() == self.roster.len()
+                && s.effective.len() == self.roster.len()
+                && s.reference.len() == self.roster.len()
+                && s.reference_active.len() == self.roster.len(),
+            "scenario checkpoint covers {} roster members, engine has {}",
+            s.roster.len(),
+            self.roster.len()
+        );
+        self.rng = Pcg32::from_state_parts(s.rng.0, s.rng.1);
+        self.round = s.round;
+        for (st, evo) in self.roster.iter_mut().zip(&s.roster) {
+            st.base = evo.base.clone();
+            st.channel_mult = evo.channel_mult;
+            st.compute_mult = evo.compute_mult;
+            st.active = evo.active;
+            st.phase = evo.phase;
+        }
+        self.effective = s.effective.clone();
+        self.reference = s.reference.clone();
+        self.reference_active = s.reference_active.clone();
+        Ok(())
+    }
+
     /// Evolve the fleet one round and return its snapshot.
     pub fn advance(&mut self) -> FleetSnapshot {
         self.round += 1;
@@ -294,6 +370,36 @@ mod tests {
         cfg.fleet.n_devices = n;
         cfg.seed = seed;
         ScenarioEngine::new(preset.scenario(), cfg.sample_fleet(), seed).unwrap()
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_the_snapshot_stream() {
+        // An engine restored from round-k state must emit the same
+        // snapshots as the uninterrupted engine — for every preset.
+        for preset in ScenarioPreset::ALL {
+            let mut live = engine(preset, 10, 77);
+            for _ in 0..12 {
+                live.advance();
+            }
+            let state = live.to_state();
+            let mut resumed = engine(preset, 10, 77);
+            resumed.restore_state(&state).unwrap();
+            for t in 0..20 {
+                assert_eq!(
+                    live.advance(),
+                    resumed.advance(),
+                    "preset '{}' round {t} after resume",
+                    preset.as_str()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn restore_rejects_roster_size_mismatch() {
+        let small = engine(ScenarioPreset::ChurnHeavy, 4, 1).to_state();
+        let mut big = engine(ScenarioPreset::ChurnHeavy, 8, 1);
+        assert!(big.restore_state(&small).is_err());
     }
 
     #[test]

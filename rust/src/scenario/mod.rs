@@ -35,7 +35,7 @@
 pub mod engine;
 pub mod sim;
 
-pub use engine::{FleetSnapshot, ScenarioEngine};
+pub use engine::{DeviceEvoState, FleetSnapshot, ScenarioEngine, ScenarioEngineState};
 pub use sim::{ScenarioSim, SimRound};
 
 use crate::config::{Range, StrategyKind};

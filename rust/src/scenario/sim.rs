@@ -54,6 +54,10 @@ impl ScenarioSim {
     /// model must be one of the profile-backed kinds (`vgg16`/`resnet18`).
     pub fn new(cfg: Config, scenario: Scenario) -> crate::Result<ScenarioSim> {
         scenario.validate(cfg.fleet.n_devices)?;
+        // Zero-rate guard: the latency model divides by every fleet/server
+        // resource, so reject configs that could sample a zero rate.
+        cfg.fleet.validate()?;
+        cfg.server.validate()?;
         anyhow::ensure!(
             cfg.model != ModelKind::Splitcnn8,
             "ScenarioSim is analytic; model '{}' requires the PJRT runtime \
@@ -236,6 +240,33 @@ mod tests {
         cfg.strategy = strategy;
         cfg.seed = seed;
         ScenarioSim::new(cfg, preset.scenario()).unwrap()
+    }
+
+    #[test]
+    fn zero_rate_fleet_is_rejected_before_the_optimizer_runs() {
+        // Regression for the latency-kernel division guard: a config that
+        // could sample a zero uplink must be rejected up front, not
+        // surface as inf/NaN objectives inside the BS/MS solve.
+        let mut cfg = Config::table1();
+        cfg.fleet.up_bps = crate::config::Range::new(0.0, 0.0);
+        let err = ScenarioSim::new(cfg, ScenarioPreset::Static.scenario()).unwrap_err();
+        assert!(err.to_string().contains("up_bps"), "{err}");
+
+        let mut cfg = Config::table1();
+        cfg.server.flops = 0.0;
+        assert!(ScenarioSim::new(cfg, ScenarioPreset::Static.scenario()).is_err());
+
+        // A valid config keeps every solved round latency finite (the
+        // optimizer path the guard protects).
+        let mut cfg = Config::table1();
+        cfg.fleet.n_devices = 8;
+        cfg.strategy = StrategyKind::Hasfl;
+        let mut sim = ScenarioSim::new(cfg, ScenarioPreset::ChurnHeavy.scenario()).unwrap();
+        sim.run(10);
+        for r in &sim.trace().rounds {
+            assert!(r.t_split.is_finite(), "round {}: t_split {}", r.round, r.t_split);
+            assert!(r.t_agg.is_finite(), "round {}: t_agg {}", r.round, r.t_agg);
+        }
     }
 
     #[test]

@@ -1,0 +1,353 @@
+//! Interrupted-vs-uninterrupted resume determinism suite.
+//!
+//! A run checkpointed at round k and resumed must produce bit-identical
+//! `Params`, `RoundReport` history, and fleet traces to the uninterrupted
+//! run — under a static fleet (with a random strategy, so the strategy RNG
+//! stream is exercised) and under the churn-heavy and mega-fleet scenario
+//! presets (sampler + scenario RNG streams, partial aggregation, drift
+//! state). Engine-backed tests self-skip without AOT artifacts, like the
+//! other integration suites; the file-format error paths (truncation,
+//! corruption, version skew) run everywhere.
+
+use std::path::{Path, PathBuf};
+
+use hasfl::checkpoint::{CheckpointObserver, CheckpointState, FORMAT_VERSION, MAGIC};
+use hasfl::config::{Config, Device, StrategyKind};
+use hasfl::convergence::EstimatorState;
+use hasfl::experiment::{Experiment, RoundReport};
+use hasfl::latency::Decisions;
+use hasfl::metrics::{History, Record};
+use hasfl::model::{Params, Tensor};
+use hasfl::scenario::{DeviceEvoState, Scenario, ScenarioEngineState, ScenarioPreset};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hasfl_ckpt_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn session_config(seed: u64, strategy: StrategyKind) -> Config {
+    let mut cfg = Config::small();
+    cfg.fleet.n_devices = 4;
+    cfg.seed = seed;
+    cfg.train.rounds = 8;
+    cfg.train.agg_interval = 3;
+    cfg.train.eval_every = 4;
+    cfg.train.train_samples = 256;
+    cfg.train.test_samples = 64;
+    cfg.train.batch_cap = 16;
+    cfg.strategy = strategy;
+    cfg.fixed_batch = 8;
+    cfg.fixed_cut = 3;
+    cfg
+}
+
+type RunResult = (Vec<RoundReport>, History, Vec<Params>);
+
+/// Straight 8-round run that also checkpoints every 4 rounds into
+/// `ckpt_dir` — both the uninterrupted reference and the checkpoint
+/// producer.
+fn run_straight(
+    dir: &Path,
+    cfg: Config,
+    spec: Option<Scenario>,
+    ckpt_dir: &Path,
+) -> RunResult {
+    let mut builder = Experiment::builder()
+        .config(cfg)
+        .artifacts(dir)
+        .observe(CheckpointObserver::new(ckpt_dir, 4));
+    if let Some(s) = spec {
+        builder = builder.scenario(s);
+    }
+    let mut session = builder.build().expect("straight session");
+    let mut reports = Vec::new();
+    while !session.is_done() {
+        reports.push(session.step().expect("step"));
+    }
+    let params = session.trainer().params().to_vec();
+    let history = session.finish().expect("finish");
+    (reports, history, params)
+}
+
+/// Resume from `ckpt` and run to completion.
+fn run_resumed(dir: &Path, ckpt: &Path) -> RunResult {
+    let mut session = Experiment::builder()
+        .resume_from(ckpt)
+        .artifacts(dir)
+        .build()
+        .expect("resumed session");
+    assert_eq!(session.round(), 4, "resume restores the round counter");
+    let mut reports = Vec::new();
+    while !session.is_done() {
+        reports.push(session.step().expect("step"));
+    }
+    let params = session.trainer().params().to_vec();
+    let history = session.finish().expect("finish");
+    (reports, history, params)
+}
+
+fn assert_reports_identical(a: &[RoundReport], b: &[RoundReport], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: round count");
+    for (ra, rb) in a.iter().zip(b) {
+        assert_eq!(ra.round, rb.round, "{what}");
+        assert_eq!(ra.outcome.mean_loss, rb.outcome.mean_loss, "{what}: round {}", ra.round);
+        assert_eq!(ra.outcome.train_acc, rb.outcome.train_acc, "{what}: round {}", ra.round);
+        assert_eq!(
+            ra.outcome.participants,
+            rb.outcome.participants,
+            "{what}: round {}",
+            ra.round
+        );
+        assert_eq!(ra.sim_time, rb.sim_time, "{what}: round {}", ra.round);
+        assert_eq!(ra.aggregated, rb.aggregated, "{what}: round {}", ra.round);
+        assert_eq!(ra.reoptimized, rb.reoptimized, "{what}: round {}", ra.round);
+        assert_eq!(ra.test_acc, rb.test_acc, "{what}: round {}", ra.round);
+        assert_eq!(ra.decisions.batch, rb.decisions.batch, "{what}: round {}", ra.round);
+        assert_eq!(ra.decisions.cut, rb.decisions.cut, "{what}: round {}", ra.round);
+        // The fleet trace: bit-exact snapshot equality (rates, membership,
+        // dropouts, drift).
+        assert_eq!(ra.fleet, rb.fleet, "{what}: round {}", ra.round);
+    }
+}
+
+/// The core acceptance check: interrupted-at-4 + resumed == uninterrupted,
+/// bit for bit.
+fn assert_resume_is_bit_identical(tag: &str, cfg: Config, spec: Option<Scenario>) {
+    let Some(dir) = artifacts_dir() else { return };
+    let ckpt_dir = temp_dir(tag);
+
+    let (straight_reports, straight_hist, straight_params) =
+        run_straight(&dir, cfg, spec, &ckpt_dir);
+    let ckpt = ckpt_dir.join("ckpt_round_000004.hckpt");
+    assert!(ckpt.exists(), "{tag}: checkpoint at round 4 missing");
+
+    let (resumed_reports, resumed_hist, resumed_params) = run_resumed(&dir, &ckpt);
+
+    // Rounds 5..=8 replay identically...
+    assert_reports_identical(&straight_reports[4..], &resumed_reports, tag);
+    // ...the restored+appended history equals the uninterrupted one...
+    assert_eq!(straight_hist.records, resumed_hist.records, "{tag}: history");
+    // ...and the final model state matches bit-for-bit on every device
+    // (Params derives PartialEq over raw f32 data — no tolerance).
+    assert_eq!(straight_params, resumed_params, "{tag}: params");
+
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+}
+
+#[test]
+fn static_fleet_resume_is_bit_identical() {
+    // Random BS + random MS exercises the strategy RNG stream across the
+    // checkpoint boundary (a lost cursor would diverge at the round-6
+    // re-solve).
+    assert_resume_is_bit_identical(
+        "static",
+        session_config(11, StrategyKind::RbsRms),
+        None,
+    );
+}
+
+#[test]
+fn churn_heavy_resume_is_bit_identical() {
+    // Churn + dropout + stragglers: scenario RNG, partial aggregation,
+    // and participation masks all cross the checkpoint boundary.
+    assert_resume_is_bit_identical(
+        "churn",
+        session_config(23, StrategyKind::Fixed),
+        Some(ScenarioPreset::ChurnHeavy.scenario()),
+    );
+}
+
+#[test]
+fn mega_fleet_resume_is_bit_identical() {
+    // The mega-fleet preset spec at a test-sized fleet (min_active clamps
+    // to the roster): gentle drift + churn + aggressive stragglers. The
+    // aggregation window is aligned with the checkpoint cadence so the
+    // checkpoint lands on a forged-sync round and the `fleet_synced`
+    // restore path (shared buffer-set keying) is exercised.
+    let mut cfg = session_config(37, StrategyKind::Fixed);
+    cfg.train.agg_interval = 4;
+    assert_resume_is_bit_identical("mega", cfg, Some(ScenarioPreset::MegaFleet.scenario()));
+}
+
+#[test]
+fn resume_can_extend_the_round_budget() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ckpt_dir = temp_dir("extend");
+    let cfg = session_config(5, StrategyKind::Fixed);
+    run_straight(&dir, cfg, None, &ckpt_dir);
+    let ckpt = ckpt_dir.join("ckpt_round_000004.hckpt");
+
+    // Shrinking the budget to the checkpointed round makes the session
+    // immediately done; the override reaches the resumed config.
+    let session = Experiment::builder()
+        .resume_from(&ckpt)
+        .rounds(4)
+        .artifacts(&dir)
+        .build()
+        .expect("resumed session");
+    assert_eq!(session.config().train.rounds, 4);
+    assert_eq!(session.round(), 4);
+    assert!(session.is_done());
+    session.finish().expect("finish");
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+}
+
+#[test]
+fn scenario_mismatch_is_rejected_on_resume() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ckpt_dir = temp_dir("mismatch");
+    let cfg = session_config(7, StrategyKind::Fixed);
+    run_straight(&dir, cfg, Some(ScenarioPreset::ChurnHeavy.scenario()), &ckpt_dir);
+    let ckpt = ckpt_dir.join("ckpt_round_000004.hckpt");
+
+    // Strip the engine state but keep the scenario in the embedded config:
+    // the restore must refuse instead of silently replaying a fresh fleet.
+    let mut state = CheckpointState::load(&ckpt).unwrap();
+    assert!(state.scenario.is_some());
+    state.scenario = None;
+    let tampered = ckpt_dir.join("tampered.hckpt");
+    state.save(&tampered).unwrap();
+    let err = Experiment::builder()
+        .resume_from(&tampered)
+        .artifacts(&dir)
+        .build()
+        .unwrap_err();
+    assert!(err.to_string().contains("no engine state"), "{err}");
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+}
+
+// ---- file-format error paths (no engine needed) --------------------------
+
+fn device() -> Device {
+    Device {
+        flops: 1e12,
+        up_bps: 7.5e7,
+        down_bps: 3.6e8,
+        fed_up_bps: 7.5e7,
+        fed_down_bps: 3.6e8,
+        mem_bytes: 1e9,
+    }
+}
+
+fn synthetic_state() -> CheckpointState {
+    let tensor = Tensor { shape: vec![2, 2], data: vec![0.5, -1.0, 3.25, 0.0] };
+    let params = Params { tensors: vec![tensor], n_blocks: 1, version: 7 };
+    CheckpointState {
+        config_json: Config::small().to_json().dump(),
+        round: 3,
+        rounds_run: 3,
+        eval_epoch: 1,
+        common_version: 3,
+        sync_version: 1,
+        fleet_synced: false,
+        sim_time: 12.5,
+        params: vec![params.clone(), params],
+        dec: Decisions { batch: vec![8, 4], cut: vec![2, 3] },
+        history: vec![
+            Record { round: 1, sim_time: 1.0, loss: 2.25, test_acc: Some(0.5) },
+            Record { round: 2, sim_time: 2.0, loss: 2.0, test_acc: None },
+        ],
+        estimator: EstimatorState {
+            n_blocks: 1,
+            alpha: 0.2,
+            gsq: vec![1.5],
+            sigma_sq: vec![0.25],
+            beta: 0.0,
+            rounds_seen: 2,
+            prev_flat_grad: None,
+            prev_flat_param: Some(vec![1.0, 2.0]),
+        },
+        strategy_rng: (0x1234_5678_9abc_def0, 0x1111),
+        sampler_rngs: vec![(1, 3), (2, 5)],
+        scenario: Some(ScenarioEngineState {
+            rng: (9, 11),
+            round: 3,
+            roster: vec![DeviceEvoState {
+                base: device(),
+                channel_mult: 1.1,
+                compute_mult: 0.9,
+                active: true,
+                phase: 0.25,
+            }],
+            effective: vec![device()],
+            reference: vec![device()],
+            reference_active: vec![true],
+        }),
+    }
+}
+
+#[test]
+fn state_roundtrips_through_bytes_and_files() {
+    let state = synthetic_state();
+    let bytes = state.to_bytes();
+    assert_eq!(&bytes[..8], MAGIC.as_slice());
+    assert_eq!(CheckpointState::from_bytes(&bytes).unwrap(), state);
+
+    let dir = temp_dir("roundtrip");
+    let path = dir.join("state.hckpt");
+    state.save(&path).unwrap();
+    assert_eq!(CheckpointState::load(&path).unwrap(), state);
+    // The atomic-write temp sibling is gone after a successful save.
+    let leftovers: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+    assert_eq!(leftovers.len(), 1, "temp file left behind: {leftovers:?}");
+    // Overwriting an existing checkpoint also succeeds (rename semantics).
+    state.save(&path).unwrap();
+    assert_eq!(CheckpointState::load(&path).unwrap(), state);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_files_are_rejected() {
+    let bytes = synthetic_state().to_bytes();
+    for cut in [0, 5, 19, bytes.len() / 2, bytes.len() - 1] {
+        let err = CheckpointState::from_bytes(&bytes[..cut]).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "cut {cut}: {err}");
+    }
+    // Trailing garbage is a length mismatch, not silently ignored.
+    let mut long = bytes.clone();
+    long.extend_from_slice(b"junk");
+    assert!(CheckpointState::from_bytes(&long).is_err());
+}
+
+#[test]
+fn corrupted_payload_fails_the_checksum() {
+    let mut bytes = synthetic_state().to_bytes();
+    let mid = 20 + (bytes.len() - 28) / 2; // somewhere inside the payload
+    bytes[mid] ^= 0x40;
+    let err = CheckpointState::from_bytes(&bytes).unwrap_err();
+    assert!(err.to_string().contains("checksum"), "{err}");
+}
+
+#[test]
+fn version_mismatch_is_a_clear_error() {
+    let mut bytes = synthetic_state().to_bytes();
+    // The format version lives at bytes 8..12 (after the 8-byte magic).
+    bytes[8] = (FORMAT_VERSION + 1) as u8;
+    let err = CheckpointState::from_bytes(&bytes).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("version"), "{msg}");
+    assert!(msg.contains(&format!("{}", FORMAT_VERSION + 1)), "{msg}");
+}
+
+#[test]
+fn foreign_files_are_rejected_by_magic() {
+    let mut bytes = synthetic_state().to_bytes();
+    bytes[0] = b'X';
+    let err = CheckpointState::from_bytes(&bytes).unwrap_err();
+    assert!(err.to_string().contains("not a HASFL checkpoint"), "{err}");
+
+    let err = CheckpointState::from_bytes(b"round,sim_time,loss\n1,0.5,2.3\n").unwrap_err();
+    assert!(err.to_string().contains("not a HASFL checkpoint"), "{err}");
+}
