@@ -1,10 +1,29 @@
 # Top-level targets. `make check` is the tier-1 gate (see ROADMAP.md);
-# hosted CI (.github/workflows/ci.yml) runs the same ./ci.sh battery.
+# hosted CI (.github/workflows/ci.yml) runs the same ./ci.sh battery on
+# the native backend with HASFL_REQUIRE_ENGINE=1 (no skip paths).
 
-.PHONY: check check-deps artifacts artifacts100 test bench-smoke
+.PHONY: check check-native check-pjrt check-deps artifacts artifacts100 test bench-smoke
 
+# Full battery on the locally-sensible backend: pjrt when AOT artifacts
+# exist, the artifact-free native backend otherwise (so a fresh checkout
+# with no Python/JAX still runs the *complete* gate, nothing skipped).
 check:
-	./ci.sh
+	@if [ -f rust/artifacts/manifest.json ]; then \
+		./ci.sh --backend auto; \
+	else \
+		echo "no AOT artifacts: running the artifact-free native battery"; \
+		HASFL_REQUIRE_ENGINE=1 ./ci.sh --backend native; \
+	fi
+
+# Artifact-free full battery (what hosted CI's gate of record runs):
+# every engine-backed suite, the e2e bench, and the resume smoke on the
+# pure-Rust backend, with skips promoted to failures.
+check-native:
+	HASFL_REQUIRE_ENGINE=1 ./ci.sh --backend native
+
+# Full battery pinned to PJRT (requires `make artifacts` first).
+check-pjrt:
+	./ci.sh --backend pjrt
 
 # License/advisory gate over the dependency graph (rust/deny.toml). Skips
 # with a notice when cargo-deny is not installed (the offline dev image);

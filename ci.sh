@@ -1,22 +1,56 @@
 #!/usr/bin/env bash
 # Tier-1 verification gate (also available as `make check`). Hosted CI
 # (.github/workflows/ci.yml) runs this exact script on push + PR — it is
-# the gate of record.
+# the gate of record, on the *native* backend with HASFL_REQUIRE_ENGINE=1
+# so no step and no engine-backed test can silently skip.
+#
+# Usage: ./ci.sh [--backend auto|native|pjrt]
+#   auto   (default) pjrt when rust/artifacts/manifest.json exists, else native
+#   native pure-Rust engine: the full battery runs with no AOT artifacts,
+#          no Python, no XLA toolchain (DESIGN.md §11)
+#   pjrt   AOT artifacts required (build with `make artifacts`)
+# The choice is exported as HASFL_BACKEND, which every test, bench, and
+# example honours. HASFL_REQUIRE_ENGINE=1 additionally turns any
+# engine-backed test skip into a hard failure (PJRT-specific parity halves
+# still skip without artifacts — the non-blocking `pjrt-parity` CI job
+# covers those).
 #
 # Runs the full local CI battery over the Rust workspace:
 #   1. release build        (binaries + examples + benches must compile)
-#   2. test suite           (engine-backed tests self-skip without artifacts;
-#                            includes the scenario-determinism suite)
+#   2. test suite           (engine-backed suites run on the selected
+#                            backend — never skipped; includes the
+#                            scenario-determinism + backend-parity suites)
 #   3. formatting           (cargo fmt --check)
 #   4. lints                (cargo clippy -D warnings)
 #   5. dependency gate      (cargo deny check; skipped if not installed)
-#   6. bench smoke          (1 iteration: e2e_round + mega-fleet scenario)
+#   6. bench smoke          (1 iteration: e2e_round + mega-fleet scenario;
+#                            BENCH_e2e.json and BENCH_scenario.json must
+#                            both be emitted — the perf trajectory is
+#                            never silently empty)
 #   7. example smoke        (churn_fleet end-to-end under HASFL_BENCH_SMOKE)
 #   8. resume smoke         (train 3 rounds -> checkpoint -> resume 2 more;
 #                            history must be byte-identical to 5 straight
-#                            rounds; skipped without AOT artifacts)
+#                            rounds; runs on every backend)
 set -euo pipefail
-cd "$(dirname "$0")/rust"
+
+BACKEND=auto
+while [ $# -gt 0 ]; do
+  case "$1" in
+    --backend) BACKEND="$2"; shift 2 ;;
+    --backend=*) BACKEND="${1#--backend=}"; shift ;;
+    *) echo "usage: ./ci.sh [--backend auto|native|pjrt]" >&2; exit 2 ;;
+  esac
+done
+case "$BACKEND" in
+  auto|native|pjrt) ;;
+  *) echo "unknown backend '$BACKEND' (expected auto|native|pjrt)" >&2; exit 2 ;;
+esac
+
+ROOT=$(cd "$(dirname "$0")" && pwd)
+cd "$ROOT/rust"
+export HASFL_BACKEND="$BACKEND"
+
+echo "== backend: $BACKEND | HASFL_REQUIRE_ENGINE=${HASFL_REQUIRE_ENGINE:-unset} =="
 
 echo "== cargo build --release =="
 cargo build --release --all-targets
@@ -34,27 +68,31 @@ echo "== dependency gate (make check-deps) =="
 make -C .. check-deps
 
 echo "== bench smoke (1 iteration, no timing assertions) =="
+export HASFL_BENCH_JSON="$ROOT/BENCH_e2e.json"
+export HASFL_SCENARIO_BENCH_JSON="$ROOT/BENCH_scenario.json"
+rm -f "$HASFL_BENCH_JSON" "$HASFL_SCENARIO_BENCH_JSON"
 make -C .. bench-smoke
+test -f "$HASFL_BENCH_JSON" || { echo "FAIL: e2e bench emitted no BENCH_e2e.json"; exit 1; }
+test -f "$HASFL_SCENARIO_BENCH_JSON" || { echo "FAIL: scenario bench emitted no BENCH_scenario.json"; exit 1; }
+echo "perf trajectory OK: BENCH_e2e.json + BENCH_scenario.json"
 
 echo "== churn_fleet example smoke (determinism + liveness asserts) =="
 HASFL_BENCH_SMOKE=1 cargo run --release --example churn_fleet
 
 echo "== checkpoint resume smoke (train 3 + resume 2 == straight 5) =="
-if [ -f artifacts/manifest.json ]; then
-  CKPT_TMP=$(mktemp -d)
-  # Straight 5-round run, checkpointing at round 3 along the way.
-  ./target/release/hasfl train --preset small --rounds 5 --seed 1234 \
-    --checkpoint-every 3 --checkpoint-dir "$CKPT_TMP/ck" \
-    --out "$CKPT_TMP/straight.csv"
-  # Warm restart from the round-3 checkpoint; the CSV holds the restored
-  # rounds 1-3 plus the replayed rounds 4-5 and must be byte-identical.
-  ./target/release/hasfl train --resume "$CKPT_TMP/ck/ckpt_round_000003.hckpt" \
-    --out "$CKPT_TMP/resumed.csv"
-  cmp "$CKPT_TMP/straight.csv" "$CKPT_TMP/resumed.csv"
-  rm -rf "$CKPT_TMP"
-  echo "resume smoke OK (bit-identical histories)"
-else
-  echo "no AOT artifacts; resume smoke skipped (run 'make artifacts')"
-fi
+CKPT_TMP=$(mktemp -d)
+# Straight 5-round run, checkpointing at round 3 along the way.
+./target/release/hasfl train --preset small --rounds 5 --seed 1234 \
+  --backend "$BACKEND" \
+  --checkpoint-every 3 --checkpoint-dir "$CKPT_TMP/ck" \
+  --out "$CKPT_TMP/straight.csv"
+# Warm restart from the round-3 checkpoint; the checkpoint embeds the
+# resolved backend, so no --backend flag here. The CSV holds the restored
+# rounds 1-3 plus the replayed rounds 4-5 and must be byte-identical.
+./target/release/hasfl train --resume "$CKPT_TMP/ck/ckpt_round_000003.hckpt" \
+  --out "$CKPT_TMP/resumed.csv"
+cmp "$CKPT_TMP/straight.csv" "$CKPT_TMP/resumed.csv"
+rm -rf "$CKPT_TMP"
+echo "resume smoke OK (bit-identical histories)"
 
-echo "CI OK"
+echo "CI OK (backend: $BACKEND)"

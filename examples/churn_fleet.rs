@@ -6,9 +6,10 @@
 //! Two halves:
 //! 1. Analytic (always runs): `ScenarioSim` over the `churn-heavy` preset —
 //!    fleet evolution + drift-triggered BS/MS re-solves + Eqn-38 latency.
-//! 2. Executable (when AOT artifacts exist): a real SplitCNN-8 training
-//!    session with the same scenario attached — dropped devices skipped,
-//!    partial Eqn-39-weighted aggregation, per-round fleet snapshots.
+//! 2. Executable (always runs — PJRT with AOT artifacts, the native
+//!    backend without): a real SplitCNN-8 training session with the same
+//!    scenario attached — dropped devices skipped, partial
+//!    Eqn-39-weighted aggregation, per-round fleet snapshots.
 //!
 //! ```bash
 //! cargo run --release --example churn_fleet -- [rounds]
@@ -65,13 +66,8 @@ fn main() -> hasfl::Result<()> {
     assert!(churn_events > 0, "churn-heavy produced no churn in {rounds} rounds");
     println!("  ok: deterministic replay, {churn_events} churn events, fleet never empty");
 
-    // ---- executable half (skips gracefully without artifacts) ------------
+    // ---- executable half (resolved backend; never skips) -----------------
     let artifacts = std::path::Path::new("artifacts");
-    if !artifacts.join("manifest.json").exists() {
-        println!("(no AOT artifacts: skipping the executable half; run `make artifacts`)");
-        return Ok(());
-    }
-
     let exec_rounds = if smoke { 6 } else { 20 };
     let trace_csv = std::env::temp_dir().join("churn_fleet_trace.csv");
     let mut session = Experiment::builder()
@@ -84,7 +80,10 @@ fn main() -> hasfl::Result<()> {
         .observe(FleetTraceCsv::new(&trace_csv))
         .artifacts(artifacts)
         .build()?;
-    println!("churn-heavy executable session: N=4 rounds={exec_rounds}");
+    println!(
+        "churn-heavy executable session: N=4 rounds={exec_rounds} backend={}",
+        session.config().backend.as_str()
+    );
     while !session.is_done() {
         let report = session.step()?;
         let snap = report.fleet.as_ref().expect("scenario sessions carry snapshots");

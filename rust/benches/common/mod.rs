@@ -80,14 +80,28 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     res
 }
 
-/// Locate the artifacts dir, or None (benches degrade gracefully).
-#[allow(dead_code)] // not every bench needs artifacts
-pub fn artifacts_dir() -> Option<std::path::PathBuf> {
-    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
-        println!("SKIP (no artifacts; run `make artifacts`)");
-        None
-    }
+/// The artifacts directory (may or may not hold an AOT manifest).
+#[allow(dead_code)] // not every bench needs an engine
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// The backend this bench run resolves to: `HASFL_BACKEND` if set, else
+/// PJRT when artifacts exist, else native. Engine benches never skip —
+/// the native backend runs on any machine (DESIGN.md §11), which is what
+/// keeps `BENCH_e2e.json` flowing from artifact-less CI runners.
+#[allow(dead_code)]
+pub fn backend() -> hasfl::backend::BackendKind {
+    hasfl::backend::BackendKind::from_env()
+        .unwrap_or(hasfl::backend::BackendKind::Auto)
+        .resolve(&artifacts_dir())
+}
+
+/// Spawn a single-lane engine + manifest on the resolved backend.
+#[allow(dead_code)]
+pub fn engine_setup() -> (hasfl::runtime::EngineHandle, hasfl::model::Manifest) {
+    let spec = hasfl::runtime::EngineSpec::resolve(backend(), &artifacts_dir(), 10);
+    let manifest = spec.manifest().expect("manifest");
+    let engine = hasfl::runtime::EngineHandle::spawn_backend(spec, 1).expect("engine");
+    (engine, manifest)
 }

@@ -75,7 +75,8 @@ fn bench_json_path() -> std::path::PathBuf {
 }
 
 fn main() {
-    let Some(dir) = common::artifacts_dir() else { return };
+    let dir = common::artifacts_dir();
+    println!("backend: {}", common::backend().as_str());
 
     // Sequential baseline (single lane, the seed data path).
     let mut seq = build_session(&dir, 1);
@@ -113,6 +114,7 @@ fn main() {
 
     let mut j = Json::obj();
     j.set("bench", Json::Str("e2e_round".into()))
+        .set("backend", Json::Str(common::backend().as_str().into()))
         .set("smoke", Json::Bool(common::smoke()))
         .set("fleet", Json::Num(FLEET as f64))
         .set("fixed_batch", Json::Num(BATCH as f64))

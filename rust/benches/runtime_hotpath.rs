@@ -1,7 +1,7 @@
-//! PJRT runtime hot path: executable-cache hit cost, literal marshalling
-//! (fresh vs buffer-cached parameters), and the three split-step
-//! executions at several (cut, bucket) points. This is the L3 perf target:
-//! the engine boundary must not dominate the actual XLA compute.
+//! Runtime hot path: executable-cache hit cost, input marshalling (fresh
+//! vs buffer-cached parameters), and the three split-step executions at
+//! several (cut, bucket) points, on the resolved backend. This is the L3
+//! perf target: the engine boundary must not dominate the actual compute.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -10,12 +10,11 @@ use std::sync::Arc;
 
 use hasfl::model::{Manifest, Params};
 use hasfl::rng::Pcg32;
-use hasfl::runtime::{tensor_to_shared, BufKey, EngineHandle, ExecInput, HostTensor, StepArtifacts};
+use hasfl::runtime::{tensor_to_shared, BufKey, ExecInput, HostTensor, StepArtifacts};
 
 fn main() {
-    let Some(dir) = common::artifacts_dir() else { return };
-    let engine = EngineHandle::spawn(dir.clone()).expect("engine");
-    let manifest = Manifest::load(&dir).expect("manifest");
+    let (engine, manifest) = common::engine_setup();
+    println!("backend: {}", engine.backend().as_str());
     let params = Params::init(&manifest, 1);
     let classes = manifest.num_classes;
     let mut rng = Pcg32::seeded(5);

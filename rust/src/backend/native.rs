@@ -1,0 +1,618 @@
+//! The native execution backend: SplitCNN-8's five step functions
+//! (`client_fwd`, `server_step`, `client_bwd`, `full_step`, `full_fwd`)
+//! implemented in plain Rust over the kernels in [`super::ops`].
+//!
+//! [`NativeEngine`] serves the exact artifact-name contract of the PJRT
+//! engine — same names, same argument/output specs, same bucket-padding
+//! semantics (weighted reductions make padded numerics equal true-batch
+//! numerics) — so the runtime, coordinator, and every driver run unchanged
+//! on a machine with no AOT artifacts and no XLA toolchain. Within the
+//! native backend all reductions run in a fixed sequential order, making
+//! results bit-deterministic across runs, engine lanes, and resumes;
+//! against PJRT the agreement is within float tolerance (DESIGN.md §11).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use super::ops;
+use super::spec::{BlockKind, BlockSpec, ModelSpec};
+use crate::model::Manifest;
+use crate::runtime::{BufKey, EngineStats, ExecInput, HostTensor};
+
+/// Per-block forward residuals needed by the backward pass.
+enum Cache {
+    Conv {
+        /// im2col of the block input, `[b*hw*hw, 9*cin]`.
+        cols: Vec<f32>,
+        /// Post-bias post-ReLU pre-pool activations, `[b*hw*hw, cout]`.
+        z: Vec<f32>,
+        /// Winning input index per pooled element (empty when `!pool`).
+        pool_idx: Vec<u32>,
+        /// Input spatial side (pre-pool).
+        hw: usize,
+        cin: usize,
+        cout: usize,
+        pool: bool,
+        relu: bool,
+    },
+    Dense {
+        /// Flattened block input, `[b, cin]`.
+        x2d: Vec<f32>,
+        /// Post-bias post-activation output, `[b, cout]`.
+        z: Vec<f32>,
+        /// Shape of the (possibly unflattened) block input.
+        in_shape: Vec<usize>,
+        cin: usize,
+        cout: usize,
+        relu: bool,
+    },
+}
+
+/// Activation tensor moving between blocks.
+struct Act {
+    data: Vec<f32>,
+    shape: Vec<usize>,
+}
+
+/// Pure-Rust SplitCNN-8 engine. Lives on one pool lane, like the PJRT
+/// engine; the type itself is `Send`, but lane threads keep the two
+/// backends symmetric (and per-lane stats meaningful).
+pub struct NativeEngine {
+    spec: ModelSpec,
+    manifest: Manifest,
+    /// Buffer-cache bookkeeping: the native backend has no device literals
+    /// to pack, but it tracks `(version, shape)` per [`BufKey`] so the
+    /// hit/miss/byte statistics — and their invalidation semantics — stay
+    /// identical to the PJRT backend's.
+    buffers: HashMap<BufKey, (u64, Vec<usize>)>,
+    stats: EngineStats,
+}
+
+impl NativeEngine {
+    /// Build a native engine for `classes`-way SplitCNN-8.
+    pub fn new(spec: ModelSpec) -> NativeEngine {
+        let manifest = spec.manifest();
+        NativeEngine {
+            spec,
+            manifest,
+            buffers: HashMap::new(),
+            stats: EngineStats { pool_width: 1, ..EngineStats::default() },
+        }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+
+    /// Name-contract analogue of the PJRT compile warm-up. Nothing is
+    /// compiled natively, so this only validates the artifact name and
+    /// never reports a cache miss.
+    pub fn warm(&mut self, name: &str) -> crate::Result<bool> {
+        anyhow::ensure!(self.manifest.get(name).is_some(), "unknown artifact {name}");
+        Ok(false)
+    }
+
+    /// Live entries in the buffer-cache bookkeeping (parity with
+    /// [`crate::runtime::Engine::buffer_len`]).
+    pub fn buffer_len(&self) -> usize {
+        self.buffers.len()
+    }
+
+    /// Execute an artifact with the given inputs; returns all outputs in
+    /// manifest order. The input contract (count, shapes, cached-input
+    /// versioning) is checked exactly like the PJRT engine's.
+    pub fn execute(&mut self, name: &str, inputs: &[ExecInput]) -> crate::Result<Vec<HostTensor>> {
+        let entry = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {name}"))?;
+        if inputs.len() != entry.args.len() {
+            anyhow::bail!("{name}: {} inputs given, {} expected", inputs.len(), entry.args.len());
+        }
+        for (inp, spec) in inputs.iter().zip(&entry.args) {
+            let t = inp.tensor();
+            if t.shape != spec.shape {
+                anyhow::bail!(
+                    "{name}: arg {} shape {:?} != spec {:?}",
+                    spec.name,
+                    t.shape,
+                    spec.shape
+                );
+            }
+            if t.data.len() != spec.numel() {
+                anyhow::bail!("{name}: arg {} data len mismatch", spec.name);
+            }
+        }
+        let (func, cut, bucket) = (entry.func.clone(), entry.cut, entry.bucket);
+
+        // Buffer-cache accounting: a versioned input whose (version, shape)
+        // matches the bookkeeping is a hit (the PJRT backend would serve
+        // its packed literal); anything else is a miss/upload.
+        for inp in inputs {
+            match inp {
+                ExecInput::Fresh(t) => {
+                    self.stats.upload_bytes += (t.data.len() * 4) as u64;
+                }
+                ExecInput::Cached { key, version, tensor } => {
+                    let nbytes = (tensor.data.len() * 4) as u64;
+                    match self.buffers.get(key) {
+                        Some((v, shape)) if v == version && *shape == tensor.shape => {
+                            self.stats.buffer_hits += 1;
+                            self.stats.buffer_hit_bytes += nbytes;
+                        }
+                        _ => {
+                            self.stats.buffer_misses += 1;
+                            self.stats.upload_bytes += nbytes;
+                            self.buffers.insert(*key, (*version, tensor.shape.clone()));
+                        }
+                    }
+                }
+            }
+        }
+
+        let t0 = Instant::now();
+        let outputs = self.dispatch(&func, cut, bucket as usize, inputs)?;
+        self.stats.executions += 1;
+        self.stats.exec_secs += t0.elapsed().as_secs_f64();
+        for o in &outputs {
+            self.stats.download_bytes += (o.data.len() * 4) as u64;
+        }
+        Ok(outputs)
+    }
+
+    fn dispatch(
+        &self,
+        func: &str,
+        cut: usize,
+        bucket: usize,
+        inputs: &[ExecInput],
+    ) -> crate::Result<Vec<HostTensor>> {
+        let l = self.spec.n_blocks();
+        match func {
+            "client_fwd" => {
+                let x = inputs[0].tensor();
+                let params = tensors(&inputs[1..]);
+                let blocks = &self.spec.blocks[..cut];
+                let (act, _) = forward(blocks, &params, x.data.clone(), x.shape.clone(), false);
+                Ok(vec![HostTensor { shape: act.shape, data: act.data }])
+            }
+            "server_step" => {
+                let a = inputs[0].tensor();
+                let onehot = inputs[1].tensor();
+                let weights = inputs[2].tensor();
+                let params = tensors(&inputs[3..]);
+                let blocks = &self.spec.blocks[cut..];
+                let (logits, caches) =
+                    forward(blocks, &params, a.data.clone(), a.shape.clone(), true);
+                let (loss, correct, dlogits) = ops::softmax_xent(
+                    &logits.data,
+                    &onehot.data,
+                    &weights.data,
+                    bucket,
+                    self.spec.classes,
+                );
+                let (dx, grads) = backward(blocks, &params, &caches, dlogits);
+                let mut out = vec![
+                    HostTensor::scalar(loss),
+                    HostTensor::scalar(correct),
+                    HostTensor { shape: a.shape.clone(), data: dx },
+                ];
+                out.extend(grads);
+                Ok(out)
+            }
+            "client_bwd" => {
+                let x = inputs[0].tensor();
+                let ga = inputs[1].tensor();
+                let params = tensors(&inputs[2..]);
+                let blocks = &self.spec.blocks[..cut];
+                let (_, caches) = forward(blocks, &params, x.data.clone(), x.shape.clone(), true);
+                let (_, grads) = backward(blocks, &params, &caches, ga.data.clone());
+                Ok(grads)
+            }
+            "full_step" => {
+                let x = inputs[0].tensor();
+                let onehot = inputs[1].tensor();
+                let weights = inputs[2].tensor();
+                let params = tensors(&inputs[3..]);
+                let blocks = &self.spec.blocks[..l];
+                let (logits, caches) =
+                    forward(blocks, &params, x.data.clone(), x.shape.clone(), true);
+                let (loss, correct, dlogits) = ops::softmax_xent(
+                    &logits.data,
+                    &onehot.data,
+                    &weights.data,
+                    bucket,
+                    self.spec.classes,
+                );
+                let (_, grads) = backward(blocks, &params, &caches, dlogits);
+                let mut out = vec![HostTensor::scalar(loss), HostTensor::scalar(correct)];
+                out.extend(grads);
+                Ok(out)
+            }
+            "full_fwd" => {
+                let x = inputs[0].tensor();
+                let params = tensors(&inputs[1..]);
+                let blocks = &self.spec.blocks[..l];
+                let (act, _) = forward(blocks, &params, x.data.clone(), x.shape.clone(), false);
+                Ok(vec![HostTensor { shape: act.shape, data: act.data }])
+            }
+            other => anyhow::bail!("native backend: unknown function '{other}'"),
+        }
+    }
+}
+
+/// Borrow the tensors out of a parameter input slice.
+fn tensors(inputs: &[ExecInput]) -> Vec<&HostTensor> {
+    inputs.iter().map(|i| i.tensor()).collect()
+}
+
+/// Run `blocks` forward from activation `(data, shape)`. With `keep`, the
+/// per-block residuals for the backward pass are retained.
+fn forward(
+    blocks: &[BlockSpec],
+    params: &[&HostTensor],
+    data: Vec<f32>,
+    shape: Vec<usize>,
+    keep: bool,
+) -> (Act, Vec<Cache>) {
+    debug_assert_eq!(params.len(), 2 * blocks.len());
+    let mut act = Act { data, shape };
+    let mut caches = Vec::with_capacity(if keep { blocks.len() } else { 0 });
+    for (i, blk) in blocks.iter().enumerate() {
+        let (w, bias) = (params[2 * i], params[2 * i + 1]);
+        match blk.kind {
+            BlockKind::Conv { pool } => {
+                let (b, hw) = (act.shape[0], act.shape[1]);
+                debug_assert_eq!(act.shape, vec![b, hw, hw, blk.cin]);
+                let m = b * hw * hw;
+                let cols = ops::im2col3x3(&act.data, b, hw, hw, blk.cin);
+                let mut z = ops::mm(&cols, &w.data, m, 9 * blk.cin, blk.cout);
+                ops::add_bias_act(&mut z, &bias.data, blk.cout, blk.relu);
+                let cache = |z: Vec<f32>, pool_idx: Vec<u32>| Cache::Conv {
+                    cols,
+                    z,
+                    pool_idx,
+                    hw,
+                    cin: blk.cin,
+                    cout: blk.cout,
+                    pool,
+                    relu: blk.relu,
+                };
+                let ohw = if pool { hw / 2 } else { hw };
+                let out = if pool {
+                    let (p, idx) = ops::maxpool2(&z, b, hw, hw, blk.cout);
+                    if keep {
+                        caches.push(cache(z, idx));
+                    }
+                    p
+                } else {
+                    if keep {
+                        caches.push(cache(z.clone(), Vec::new()));
+                    }
+                    z
+                };
+                act = Act { data: out, shape: vec![b, ohw, ohw, blk.cout] };
+            }
+            BlockKind::Dense => {
+                let b = act.shape[0];
+                let in_shape = act.shape.clone();
+                debug_assert_eq!(act.data.len(), b * blk.cin);
+                let x2d = act.data;
+                let mut z = ops::mm(&x2d, &w.data, b, blk.cin, blk.cout);
+                ops::add_bias_act(&mut z, &bias.data, blk.cout, blk.relu);
+                if keep {
+                    caches.push(Cache::Dense {
+                        x2d,
+                        z: z.clone(),
+                        in_shape,
+                        cin: blk.cin,
+                        cout: blk.cout,
+                        relu: blk.relu,
+                    });
+                }
+                act = Act { data: z, shape: vec![b, blk.cout] };
+            }
+        }
+    }
+    (act, caches)
+}
+
+/// Pull `dout` (gradient at the final activation of `blocks`) back through
+/// the cached forward pass. Returns the gradient at the block-range input
+/// and the parameter gradients `[dw1, db1, ...]` in block order.
+fn backward(
+    blocks: &[BlockSpec],
+    params: &[&HostTensor],
+    caches: &[Cache],
+    dout: Vec<f32>,
+) -> (Vec<f32>, Vec<HostTensor>) {
+    debug_assert_eq!(caches.len(), blocks.len());
+    let mut grads: Vec<HostTensor> = Vec::with_capacity(2 * blocks.len());
+    let mut d = dout;
+    for (i, blk) in blocks.iter().enumerate().rev() {
+        let w = params[2 * i];
+        match &caches[i] {
+            Cache::Conv { cols, z, pool_idx, hw, cin, cout, pool, relu } => {
+                let m = z.len() / cout;
+                let b = m / (hw * hw);
+                let mut dz = if *pool { ops::maxpool2_bwd(&d, pool_idx, z.len()) } else { d };
+                if *relu {
+                    for (g, &v) in dz.iter_mut().zip(z) {
+                        if v <= 0.0 {
+                            *g = 0.0;
+                        }
+                    }
+                }
+                let db = ops::col_sum(&dz, *cout);
+                let dw = ops::mm_at_b(cols, &dz, m, 9 * cin, *cout);
+                let dcols = ops::mm_a_bt(&dz, &w.data, m, *cout, 9 * cin);
+                d = ops::col2im3x3_add(&dcols, b, *hw, *hw, *cin);
+                grads.push(HostTensor { shape: vec![*cout], data: db });
+                grads.push(HostTensor { shape: vec![3, 3, *cin, *cout], data: dw });
+            }
+            Cache::Dense { x2d, z, in_shape, cin, cout, relu } => {
+                let b = z.len() / cout;
+                let mut dz = d;
+                if *relu {
+                    for (g, &v) in dz.iter_mut().zip(z) {
+                        if v <= 0.0 {
+                            *g = 0.0;
+                        }
+                    }
+                }
+                let db = ops::col_sum(&dz, *cout);
+                let dw = ops::mm_at_b(x2d, &dz, b, *cin, *cout);
+                d = ops::mm_a_bt(&dz, &w.data, b, *cout, *cin);
+                debug_assert_eq!(d.len(), in_shape.iter().product::<usize>());
+                grads.push(HostTensor { shape: vec![*cout], data: db });
+                grads.push(HostTensor { shape: vec![*cin, *cout], data: dw });
+            }
+        }
+    }
+    // Pushed (db, dw) per block in reverse; flip to [dw1, db1, dw2, ...].
+    grads.reverse();
+    (d, grads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Params;
+
+    fn engine() -> NativeEngine {
+        NativeEngine::new(ModelSpec::splitcnn8(10))
+    }
+
+    /// Deterministic pseudo-batch (mirrors the integration-test helper).
+    fn fake_batch(
+        bucket: usize,
+        classes: usize,
+        true_b: usize,
+    ) -> (HostTensor, HostTensor, HostTensor) {
+        let mut rng = crate::rng::Pcg32::seeded(99);
+        let px = 32 * 32 * 3;
+        let x: Vec<f32> = (0..bucket * px).map(|_| rng.normal() as f32 * 0.5).collect();
+        let mut onehot = vec![0.0f32; bucket * classes];
+        let mut weights = vec![0.0f32; bucket];
+        for r in 0..bucket {
+            onehot[r * classes + (r % classes)] = 1.0;
+            if r < true_b {
+                weights[r] = 1.0;
+            }
+        }
+        (
+            HostTensor { shape: vec![bucket, 32, 32, 3], data: x },
+            HostTensor { shape: vec![bucket, classes], data: onehot },
+            HostTensor { shape: vec![bucket], data: weights },
+        )
+    }
+
+    fn fresh(ts: &[HostTensor]) -> Vec<ExecInput> {
+        ts.iter().cloned().map(ExecInput::Fresh).collect()
+    }
+
+    fn param_inputs(p: &Params) -> Vec<ExecInput> {
+        p.tensors
+            .iter()
+            .map(|t| ExecInput::Fresh(HostTensor { shape: t.shape.clone(), data: t.data.clone() }))
+            .collect()
+    }
+
+    #[test]
+    fn full_fwd_produces_finite_logits() {
+        let mut e = engine();
+        let params = Params::init(e.manifest(), 1);
+        let (x, _, _) = fake_batch(8, 10, 8);
+        let mut inputs = fresh(&[x]);
+        inputs.extend(param_inputs(&params));
+        let out = e.execute("full_fwd_b8", &inputs).expect("exec");
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape, vec![8, 10]);
+        assert!(out[0].data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn full_step_loss_near_ln10_at_init() {
+        let mut e = engine();
+        let params = Params::init(e.manifest(), 2);
+        let (x, y, w) = fake_batch(16, 10, 16);
+        let mut inputs = fresh(&[x, y, w]);
+        inputs.extend(param_inputs(&params));
+        let out = e.execute("full_step_b16", &inputs).expect("exec");
+        let loss = out[0].data[0];
+        assert!((1.5..4.0).contains(&loss), "init loss {loss}");
+        assert_eq!(out.len(), 2 + params.tensors.len());
+        for g in &out[2..] {
+            assert!(g.data.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn split_equals_full_natively() {
+        // The core SFL invariant inside the native backend:
+        // client_fwd -> server_step -> client_bwd == full_step.
+        let mut e = engine();
+        let params = Params::init(e.manifest(), 3);
+        let (x, y, w) = fake_batch(8, 10, 8);
+
+        let mut inputs = fresh(&[x.clone(), y.clone(), w.clone()]);
+        inputs.extend(param_inputs(&params));
+        let full = e.execute("full_step_b8", &inputs).expect("full");
+
+        for cut in [1usize, 3, 5, 7] {
+            let mut cf_in = fresh(&[x.clone()]);
+            cf_in.extend(param_inputs(&params)[..2 * cut].to_vec());
+            let a = e
+                .execute(&Manifest::split_name("client_fwd", cut, 8), &cf_in)
+                .expect("cf")
+                .remove(0);
+            let mut ss_in = fresh(&[a, y.clone(), w.clone()]);
+            ss_in.extend(param_inputs(&params)[2 * cut..].to_vec());
+            let mut ss_out =
+                e.execute(&Manifest::split_name("server_step", cut, 8), &ss_in).expect("ss");
+            let loss = ss_out.remove(0).data[0];
+            let _correct = ss_out.remove(0);
+            let ga = ss_out.remove(0);
+            let mut cb_in = fresh(&[x.clone(), ga]);
+            cb_in.extend(param_inputs(&params)[..2 * cut].to_vec());
+            let cb_out =
+                e.execute(&Manifest::split_name("client_bwd", cut, 8), &cb_in).expect("cb");
+
+            assert!((loss - full[0].data[0]).abs() < 1e-5, "cut {cut} loss");
+            let split_grads: Vec<&HostTensor> = cb_out.iter().chain(ss_out.iter()).collect();
+            assert_eq!(split_grads.len(), full.len() - 2);
+            for (k, (sg, fg)) in split_grads.iter().zip(&full[2..]).enumerate() {
+                assert_eq!(sg.shape, fg.shape, "cut {cut} grad tensor {k} shape");
+                for (a, b) in sg.data.iter().zip(&fg.data) {
+                    assert!(
+                        (a - b).abs() < 1e-5 + 1e-4 * b.abs(),
+                        "cut {cut} grad tensor {k}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn padded_bucket_matches_unpadded_batch() {
+        // Zero-weighted padding rows must contribute nothing, even with
+        // garbage pixels (the exactness contract bucket padding relies on).
+        let mut e = engine();
+        let params = Params::init(e.manifest(), 4);
+        let (x, y, w) = fake_batch(8, 10, 5);
+
+        let mut inputs = fresh(&[x.clone(), y.clone(), w.clone()]);
+        inputs.extend(param_inputs(&params));
+        let base = e.execute("full_step_b8", &inputs).expect("base");
+
+        let mut x2 = x.clone();
+        let px = 32 * 32 * 3;
+        for v in x2.data[5 * px..].iter_mut() {
+            *v = 123.456;
+        }
+        let mut inputs = fresh(&[x2, y, w]);
+        inputs.extend(param_inputs(&params));
+        let scrambled = e.execute("full_step_b8", &inputs).expect("scrambled");
+
+        assert!((base[0].data[0] - scrambled[0].data[0]).abs() < 1e-6, "loss differs");
+        for (a, b) in base[2..].iter().zip(&scrambled[2..]) {
+            for (x1, x2) in a.data.iter().zip(&b.data) {
+                assert!((x1 - x2).abs() < 1e-6, "padded rows leaked into grads");
+            }
+        }
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        // Spot-check the hand-written backward pass against central
+        // differences on a few parameters of every block.
+        let mut e = engine();
+        let mut params = Params::init(e.manifest(), 5);
+        let (x, y, w) = fake_batch(2, 10, 2);
+
+        let run_loss = |e: &mut NativeEngine, p: &Params| -> f64 {
+            let mut inputs = fresh(&[x.clone(), y.clone(), w.clone()]);
+            inputs.extend(param_inputs(p));
+            e.execute("full_step_b2", &inputs).unwrap()[0].data[0] as f64
+        };
+        let mut inputs = fresh(&[x.clone(), y.clone(), w.clone()]);
+        inputs.extend(param_inputs(&params));
+        let out = e.execute("full_step_b2", &inputs).unwrap();
+
+        let eps = 1e-2f32;
+        for ti in (0..params.tensors.len()).step_by(3) {
+            let idx = params.tensors[ti].data.len() / 2;
+            let analytic = out[2 + ti].data[idx] as f64;
+            let orig = params.tensors[ti].data[idx];
+            params.tensors[ti].data[idx] = orig + eps;
+            let hi = run_loss(&mut e, &params);
+            params.tensors[ti].data[idx] = orig - eps;
+            let lo = run_loss(&mut e, &params);
+            params.tensors[ti].data[idx] = orig;
+            let numeric = (hi - lo) / (2.0 * eps as f64);
+            assert!(
+                (analytic - numeric).abs() < 2e-3 + 0.05 * numeric.abs(),
+                "tensor {ti}: analytic {analytic} vs numeric {numeric}"
+            );
+        }
+    }
+
+    #[test]
+    fn execution_is_bit_deterministic() {
+        let mut e1 = engine();
+        let mut e2 = engine();
+        let params = Params::init(e1.manifest(), 6);
+        let (x, y, w) = fake_batch(4, 10, 4);
+        let mut inputs = fresh(&[x, y, w]);
+        inputs.extend(param_inputs(&params));
+        let a = e1.execute("full_step_b4", &inputs).unwrap();
+        let b = e2.execute("full_step_b4", &inputs).unwrap();
+        for (ta, tb) in a.iter().zip(&b) {
+            assert_eq!(ta.data, tb.data, "native execution must be bit-deterministic");
+        }
+    }
+
+    #[test]
+    fn engine_rejects_bad_shapes_and_names() {
+        let mut e = engine();
+        let bad = HostTensor { shape: vec![4, 32, 32, 3], data: vec![0.0; 4 * 32 * 32 * 3] };
+        assert!(e.execute("full_fwd_b8", &[ExecInput::Fresh(bad)]).is_err());
+        assert!(e.execute("nonexistent_artifact", &[]).is_err());
+        assert!(!e.warm("client_fwd_c3_b8").unwrap());
+        assert!(e.warm("nonexistent_artifact").is_err());
+    }
+
+    #[test]
+    fn buffer_bookkeeping_counts_hits_and_misses() {
+        use std::sync::Arc;
+        let mut e = engine();
+        let params = Params::init(e.manifest(), 7);
+        let (x, _, _) = fake_batch(4, 10, 4);
+        let cached = |version: u64| -> Vec<ExecInput> {
+            let mut inputs = vec![ExecInput::Fresh(x.clone())];
+            inputs.extend(params.tensors.iter().enumerate().map(|(s, t)| {
+                ExecInput::cached(
+                    BufKey { set: 0, slot: s as u32 },
+                    version,
+                    Arc::new(HostTensor { shape: t.shape.clone(), data: t.data.clone() }),
+                )
+            }));
+            inputs
+        };
+        let n = params.tensors.len() as u64;
+        e.execute("full_fwd_b4", &cached(1)).unwrap();
+        e.execute("full_fwd_b4", &cached(1)).unwrap();
+        assert_eq!(e.stats().buffer_misses, n);
+        assert_eq!(e.stats().buffer_hits, n);
+        e.execute("full_fwd_b4", &cached(2)).unwrap();
+        assert_eq!(e.stats().buffer_misses, 2 * n);
+        assert_eq!(e.stats().buffer_hits, n);
+        assert_eq!(e.buffer_len(), n as usize);
+        assert_eq!(e.stats().executions, 3);
+        assert_eq!(e.stats().compiles, 0);
+    }
+}

@@ -1,0 +1,403 @@
+//! Numeric kernels for the native backend: row-major f32 GEMMs, SAME-padded
+//! im2col/col2im, 2x2 maxpool, and weighted softmax cross-entropy — the
+//! same building blocks the L1 Pallas kernels provide to the JAX model.
+//!
+//! Every reduction runs in a fixed sequential order, so the native backend
+//! is bit-deterministic across runs, engine lanes, and resume boundaries
+//! (`rust/tests/backend_parity.rs`). Agreement with the PJRT backend is
+//! within float tolerance only: XLA fuses and reorders f32 reductions, so
+//! the two backends accumulate in different orders (DESIGN.md §11).
+
+/// `C[m,n] = A[m,k] · B[k,n]` (row-major). i-k-j loop order: the inner
+/// loop is a contiguous axpy over a row of B, which the compiler
+/// vectorizes, and the k-accumulation order is fixed.
+pub fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += aik * bv;
+            }
+        }
+    }
+    c
+}
+
+/// `C[k,n] = A[m,k]ᵀ · B[m,n]` (row-major) — the `dW = Xᵀ·dY` shape.
+pub fn mm_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    let mut c = vec![0.0f32; k * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            let crow = &mut c[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    c
+}
+
+/// `C[m,k] = A[m,n] · B[k,n]ᵀ` (row-major) — the `dX = dY·Wᵀ` shape.
+pub fn mm_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * k];
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        let crow = &mut c[i * k..(i + 1) * k];
+        for (kk, cv) in crow.iter_mut().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *cv = acc;
+        }
+    }
+    c
+}
+
+/// Add bias `b[n]` to every row of `z[m,n]`, optionally applying ReLU.
+pub fn add_bias_act(z: &mut [f32], bias: &[f32], n: usize, relu: bool) {
+    debug_assert_eq!(z.len() % n, 0);
+    debug_assert_eq!(bias.len(), n);
+    for row in z.chunks_mut(n) {
+        for (v, &bv) in row.iter_mut().zip(bias) {
+            *v += bv;
+            if relu && *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+/// SAME-padded 3x3 im2col over NHWC input: output `[b*h*w, 9*c]` with
+/// feature order `(i, j, c)` — matching `model._im2col` in Python, so the
+/// `[3,3,cin,cout] -> [9*cin, cout]` weight reshape lines up row-major.
+pub fn im2col3x3(x: &[f32], b: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), b * h * w * c);
+    let kdim = 9 * c;
+    let mut cols = vec![0.0f32; b * h * w * kdim];
+    for bi in 0..b {
+        for y in 0..h {
+            for xx in 0..w {
+                let out_base = ((bi * h + y) * w + xx) * kdim;
+                for i in 0..3usize {
+                    let sy = y + i;
+                    if sy < 1 || sy > h {
+                        continue; // zero padding row
+                    }
+                    for j in 0..3usize {
+                        let sx = xx + j;
+                        if sx < 1 || sx > w {
+                            continue; // zero padding column
+                        }
+                        let src = ((bi * h + (sy - 1)) * w + (sx - 1)) * c;
+                        let dst = out_base + (i * 3 + j) * c;
+                        cols[dst..dst + c].copy_from_slice(&x[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    cols
+}
+
+/// Scatter-add transpose of [`im2col3x3`]: fold `dcols[b*h*w, 9*c]` back
+/// into an NHWC gradient `[b,h,w,c]`.
+pub fn col2im3x3_add(dcols: &[f32], b: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let kdim = 9 * c;
+    debug_assert_eq!(dcols.len(), b * h * w * kdim);
+    let mut dx = vec![0.0f32; b * h * w * c];
+    for bi in 0..b {
+        for y in 0..h {
+            for xx in 0..w {
+                let col_base = ((bi * h + y) * w + xx) * kdim;
+                for i in 0..3usize {
+                    let sy = y + i;
+                    if sy < 1 || sy > h {
+                        continue;
+                    }
+                    for j in 0..3usize {
+                        let sx = xx + j;
+                        if sx < 1 || sx > w {
+                            continue;
+                        }
+                        let dst = ((bi * h + (sy - 1)) * w + (sx - 1)) * c;
+                        let src = col_base + (i * 3 + j) * c;
+                        for (dv, &gv) in dx[dst..dst + c].iter_mut().zip(&dcols[src..src + c]) {
+                            *dv += gv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// 2x2 maxpool over NHWC input `[b,h,w,c]` (h, w even): returns the pooled
+/// tensor `[b,h/2,w/2,c]` and, per pooled element, the flat index of the
+/// winning input element (first maximum in row-major window order — the
+/// tie-break only matters on exactly-equal activations).
+pub fn maxpool2(x: &[f32], b: usize, h: usize, w: usize, c: usize) -> (Vec<f32>, Vec<u32>) {
+    debug_assert_eq!(x.len(), b * h * w * c);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![0.0f32; b * oh * ow * c];
+    let mut idx = vec![0u32; b * oh * ow * c];
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let out_base = ((bi * oh + oy) * ow + ox) * c;
+                for ch in 0..c {
+                    // Seed from the window's first element (not -inf/0):
+                    // an all-NaN window then propagates NaN and routes its
+                    // gradient inside the window instead of to index 0.
+                    let first = ((bi * h + 2 * oy) * w + 2 * ox) * c + ch;
+                    let mut best = x[first];
+                    let mut best_at = first as u32;
+                    for dy in 0..2usize {
+                        for dx in 0..2usize {
+                            let src = ((bi * h + (2 * oy + dy)) * w + (2 * ox + dx)) * c + ch;
+                            let v = x[src];
+                            if v > best {
+                                best = v;
+                                best_at = src as u32;
+                            }
+                        }
+                    }
+                    out[out_base + ch] = best;
+                    idx[out_base + ch] = best_at;
+                }
+            }
+        }
+    }
+    (out, idx)
+}
+
+/// Backward of [`maxpool2`]: route each pooled gradient to its winning
+/// input position.
+pub fn maxpool2_bwd(dout: &[f32], idx: &[u32], in_len: usize) -> Vec<f32> {
+    debug_assert_eq!(dout.len(), idx.len());
+    let mut dx = vec![0.0f32; in_len];
+    for (&g, &at) in dout.iter().zip(idx) {
+        dx[at as usize] += g;
+    }
+    dx
+}
+
+/// Weighted softmax cross-entropy over `logits[b, classes]`: returns
+/// `(loss, correct, dlogits)` where
+/// `loss = Σ_r w_r·(lse_r - Σ_c onehot·logits) / max(Σ w, 1)`,
+/// `correct = Σ_r w_r·[argmax logits == argmax onehot]`, and
+/// `dlogits[r] = (w_r / max(Σ w, 1)) · (softmax(logits_r) - onehot_r)` —
+/// the exact forward/VJP pair of the Pallas `softmax_xent` kernel under
+/// the model's weighted-mean reduction.
+pub fn softmax_xent(
+    logits: &[f32],
+    onehot: &[f32],
+    weights: &[f32],
+    b: usize,
+    classes: usize,
+) -> (f32, f32, Vec<f32>) {
+    debug_assert_eq!(logits.len(), b * classes);
+    debug_assert_eq!(onehot.len(), b * classes);
+    debug_assert_eq!(weights.len(), b);
+    let wsum: f32 = weights.iter().sum();
+    let denom = wsum.max(1.0);
+    let mut loss = 0.0f32;
+    let mut correct = 0.0f32;
+    let mut dlogits = vec![0.0f32; b * classes];
+    for r in 0..b {
+        let lrow = &logits[r * classes..(r + 1) * classes];
+        let yrow = &onehot[r * classes..(r + 1) * classes];
+        let wr = weights[r];
+
+        let maxv = lrow.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut expsum = 0.0f32;
+        for &v in lrow {
+            expsum += (v - maxv).exp();
+        }
+        let lse = maxv + expsum.ln();
+        let dot: f32 = lrow.iter().zip(yrow).map(|(&l, &y)| l * y).sum();
+        loss += wr * (lse - dot);
+
+        let scale = wr / denom;
+        let drow = &mut dlogits[r * classes..(r + 1) * classes];
+        for ((dv, &lv), &yv) in drow.iter_mut().zip(lrow).zip(yrow) {
+            let p = (lv - maxv).exp() / expsum;
+            *dv = scale * (p - yv);
+        }
+
+        let pred = argmax(lrow);
+        let truth = argmax(yrow);
+        if pred == truth {
+            correct += wr;
+        }
+    }
+    (loss / denom, correct, dlogits)
+}
+
+/// First index of the maximum value (the `jnp.argmax` tie-break).
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Column-wise sum of `g[m,n]` — the bias gradient.
+pub fn col_sum(g: &[f32], n: usize) -> Vec<f32> {
+    debug_assert_eq!(g.len() % n, 0);
+    let mut out = vec![0.0f32; n];
+    for row in g.chunks(n) {
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mm_matches_hand_result() {
+        // [2,3] x [3,2]
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [7.0, 8.0, 9.0, 10.0, 11.0, 12.0];
+        let c = mm(&a, &b, 2, 3, 2);
+        assert_eq!(c, vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn transposed_gemms_agree_with_plain_mm() {
+        let mut rng = crate::rng::Pcg32::seeded(7);
+        let (m, k, n) = (5, 4, 3);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
+        // A^T B via explicit transpose + mm.
+        let mut at = vec![0.0f32; k * m];
+        for i in 0..m {
+            for j in 0..k {
+                at[j * m + i] = a[i * k + j];
+            }
+        }
+        let want = mm(&at, &b, k, m, n);
+        let got = mm_at_b(&a, &b, m, k, n);
+        for (x, y) in got.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-5);
+        }
+        // A B^T via explicit transpose + mm.
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mut wt = vec![0.0f32; n * k];
+        for i in 0..k {
+            for j in 0..n {
+                wt[j * k + i] = w[i * n + j];
+            }
+        }
+        let want = mm(&b, &wt, m, n, k);
+        let got = mm_a_bt(&b, &w, m, n, k);
+        for (x, y) in got.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn im2col_identity_kernel_center_tap() {
+        // With a single channel, the center tap (i=1, j=1) of each output
+        // row is the input pixel itself.
+        let (b, h, w, c) = (1, 4, 4, 1);
+        let x: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let cols = im2col3x3(&x, b, h, w, c);
+        for p in 0..16 {
+            assert_eq!(cols[p * 9 + 4], x[p]);
+        }
+        // Top-left output pixel: taps above/left are zero padding.
+        assert_eq!(cols[0], 0.0); // (i=0, j=0)
+        assert_eq!(cols[1], 0.0); // (i=0, j=1)
+        assert_eq!(cols[3], 0.0); // (i=1, j=0)
+        assert_eq!(cols[5], x[1]); // (i=1, j=2) -> right neighbour
+        assert_eq!(cols[7], x[4]); // (i=2, j=1) -> below neighbour
+    }
+
+    #[test]
+    fn col2im_is_the_transpose_of_im2col() {
+        // <im2col(x), g> == <x, col2im(g)> for random x, g — the defining
+        // property of an adjoint pair.
+        let mut rng = crate::rng::Pcg32::seeded(3);
+        let (b, h, w, c) = (2, 4, 4, 3);
+        let x: Vec<f32> = (0..b * h * w * c).map(|_| rng.normal() as f32).collect();
+        let g: Vec<f32> = (0..b * h * w * 9 * c).map(|_| rng.normal() as f32).collect();
+        let cols = im2col3x3(&x, b, h, w, c);
+        let folded = col2im3x3_add(&g, b, h, w, c);
+        let lhs: f64 = cols.iter().zip(&g).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let rhs: f64 = x.iter().zip(&folded).map(|(&a, &b)| a as f64 * b as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn maxpool_picks_window_maxima_and_routes_gradients() {
+        let (b, h, w, c) = (1, 2, 2, 1);
+        let x = [1.0, 3.0, 2.0, 0.5];
+        let (out, idx) = maxpool2(&x, b, h, w, c);
+        assert_eq!(out, vec![3.0]);
+        assert_eq!(idx, vec![1]);
+        let dx = maxpool2_bwd(&[2.5], &idx, 4);
+        assert_eq!(dx, vec![0.0, 2.5, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_xent_uniform_logits_is_ln_classes() {
+        let (b, classes) = (2, 10);
+        let logits = vec![0.0f32; b * classes];
+        let mut onehot = vec![0.0f32; b * classes];
+        onehot[3] = 1.0;
+        onehot[classes + 7] = 1.0;
+        let weights = vec![1.0f32; b];
+        let (loss, _, dlogits) = softmax_xent(&logits, &onehot, &weights, b, classes);
+        assert!((loss - (10.0f32).ln()).abs() < 1e-5);
+        // Gradient sums to zero per row (softmax minus onehot).
+        let s: f32 = dlogits[..classes].iter().sum();
+        assert!(s.abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_weight_rows_contribute_nothing() {
+        let (b, classes) = (2, 4);
+        let mut logits = vec![0.5f32; b * classes];
+        logits[classes..].copy_from_slice(&[9.0, -3.0, 1.0, 4.0]); // padded row
+        let mut onehot = vec![0.0f32; b * classes];
+        onehot[1] = 1.0;
+        onehot[classes + 2] = 1.0;
+        let (loss_pad, correct_pad, d_pad) =
+            softmax_xent(&logits, &onehot, &[1.0, 0.0], b, classes);
+        let (loss_solo, correct_solo, d_solo) =
+            softmax_xent(&logits[..classes], &onehot[..classes], &[1.0], 1, classes);
+        assert!((loss_pad - loss_solo).abs() < 1e-6);
+        assert!((correct_pad - correct_solo).abs() < 1e-6);
+        for (a, b) in d_pad[..classes].iter().zip(&d_solo) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert!(d_pad[classes..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn argmax_first_max_wins() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+}

@@ -1,0 +1,388 @@
+//! In-Rust SplitCNN-8 model specification.
+//!
+//! The PJRT backend learns the model's shape contract from
+//! `manifest.json`, written at AOT-export time by `python/compile/aot.py`.
+//! The native backend has no build step, so this module *synthesizes* the
+//! same [`Manifest`] — identical artifact names, tensor specs, parameter
+//! shapes, and per-block cost table — directly from the architecture
+//! definition. Everything downstream (`model/profiles.rs`,
+//! `StepArtifacts`, the optimizer's block costs) is backend-agnostic as a
+//! result: it consumes a `Manifest` and never cares whether the entries
+//! are backed by HLO files on disk or by native Rust kernels.
+//!
+//! The two definitions must stay in lockstep with
+//! `python/compile/model.py`; `rust/tests/backend_parity.rs` cross-checks
+//! the synthesized manifest against an on-disk `manifest.json` whenever
+//! AOT artifacts are present.
+
+use crate::model::{ArtifactEntry, BlockRow, Manifest, ParamShape, TensorSpec};
+
+/// Input image side (CIFAR-scale).
+pub const IMG: usize = 32;
+/// Input channels.
+pub const IN_CH: usize = 3;
+/// Batch buckets exported by the AOT step; the native backend keeps the
+/// same power-of-two set so bucket padding (zero-weighted rows) and every
+/// downstream decision about batch sizes are identical across backends.
+pub const BUCKETS: [u32; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+/// The layer type of one cuttable block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockKind {
+    /// 3x3 SAME conv + bias (+ ReLU), optionally followed by 2x2 maxpool.
+    Conv { pool: bool },
+    /// Dense (flattening its input) + bias (+ ReLU).
+    Dense,
+}
+
+/// One cuttable block of SplitCNN-8 (mirrors `model.Block` in Python).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockSpec {
+    pub name: &'static str,
+    pub kind: BlockKind,
+    pub cin: usize,
+    pub cout: usize,
+    pub relu: bool,
+    /// Spatial side of the *output* feature map (1 for dense blocks).
+    pub out_hw: usize,
+}
+
+impl BlockSpec {
+    /// Spatial side of the *input* feature map (conv blocks pool after
+    /// the conv, so a pooling block's input is twice its output side).
+    pub fn in_hw(&self) -> usize {
+        match self.kind {
+            BlockKind::Conv { pool } => {
+                if pool {
+                    self.out_hw * 2
+                } else {
+                    self.out_hw
+                }
+            }
+            BlockKind::Dense => 1,
+        }
+    }
+
+    /// Parameter tensor shapes `(w, b)`.
+    pub fn param_shape(&self) -> ParamShape {
+        match self.kind {
+            BlockKind::Conv { .. } => ParamShape {
+                w: vec![3, 3, self.cin, self.cout],
+                b: vec![self.cout],
+            },
+            BlockKind::Dense => ParamShape { w: vec![self.cin, self.cout], b: vec![self.cout] },
+        }
+    }
+
+    fn n_params(&self) -> usize {
+        match self.kind {
+            BlockKind::Conv { .. } => 9 * self.cin * self.cout + self.cout,
+            BlockKind::Dense => self.cin * self.cout + self.cout,
+        }
+    }
+
+    /// Cost row matching `model.block_table` in Python exactly (the
+    /// optimizer's decisions must not depend on the backend).
+    fn block_row(&self) -> BlockRow {
+        let (macs, act_elems) = match self.kind {
+            BlockKind::Conv { .. } => {
+                let in_hw = self.in_hw();
+                (
+                    (9 * self.cin * self.cout * in_hw * in_hw) as f64,
+                    self.out_hw * self.out_hw * self.cout,
+                )
+            }
+            BlockKind::Dense => ((self.cin * self.cout) as f64, self.cout),
+        };
+        BlockRow {
+            name: self.name.to_string(),
+            kind: match self.kind {
+                BlockKind::Conv { .. } => "conv".to_string(),
+                BlockKind::Dense => "dense".to_string(),
+            },
+            fwd_flops: 2.0 * macs,
+            bwd_flops: 4.0 * macs,
+            act_bytes: 4.0 * act_elems as f64,
+            param_bytes: 4.0 * self.n_params() as f64,
+            n_params: self.n_params(),
+        }
+    }
+}
+
+/// The executable SplitCNN-8 architecture, parameterized by class count.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub classes: usize,
+    pub blocks: Vec<BlockSpec>,
+}
+
+impl ModelSpec {
+    /// SplitCNN-8 (mirrors `model._build_arch` in Python).
+    pub fn splitcnn8(classes: usize) -> ModelSpec {
+        let conv = |name, cin, cout, pool, out_hw| BlockSpec {
+            name,
+            kind: BlockKind::Conv { pool },
+            cin,
+            cout,
+            relu: true,
+            out_hw,
+        };
+        let dense = |name, cin, cout, relu| BlockSpec {
+            name,
+            kind: BlockKind::Dense,
+            cin,
+            cout,
+            relu,
+            out_hw: 1,
+        };
+        ModelSpec {
+            classes,
+            blocks: vec![
+                conv("conv1", IN_CH, 16, false, 32),
+                conv("conv2", 16, 16, true, 16),
+                conv("conv3", 16, 32, false, 16),
+                conv("conv4", 32, 32, true, 8),
+                conv("conv5", 32, 64, true, 4),
+                dense("fc1", 4 * 4 * 64, 128, true),
+                dense("fc2", 128, 64, true),
+                dense("fc3", 64, classes, false),
+            ],
+        }
+    }
+
+    /// Number of blocks L (= 8).
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Valid cut layers (1-based; cut `c` keeps blocks `1..=c` on-device).
+    pub fn valid_cuts(&self) -> Vec<usize> {
+        (1..self.n_blocks()).collect()
+    }
+
+    /// Per-block parameter shapes, in block order.
+    pub fn param_shapes(&self) -> Vec<ParamShape> {
+        self.blocks.iter().map(|b| b.param_shape()).collect()
+    }
+
+    /// Shape of the smashed data at cut `cut` for batch `bucket`.
+    pub fn activation_shape(&self, cut: usize, bucket: usize) -> Vec<usize> {
+        let blk = &self.blocks[cut - 1];
+        match blk.kind {
+            BlockKind::Conv { .. } => vec![bucket, blk.out_hw, blk.out_hw, blk.cout],
+            BlockKind::Dense => vec![bucket, blk.cout],
+        }
+    }
+
+    /// Synthesize the full artifact manifest: one entry per exported
+    /// (function, cut, bucket), exactly as `python/compile/aot.py` writes
+    /// it, so the native backend serves the same artifact-name contract.
+    pub fn manifest(&self) -> Manifest {
+        let spec = |name: &str, shape: &[usize]| TensorSpec {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            dtype: "f32".to_string(),
+        };
+        let shapes = self.param_shapes();
+        let param_entries = |prefix: &str, blocks: std::ops::Range<usize>| -> Vec<TensorSpec> {
+            let mut out = Vec::with_capacity(2 * blocks.len());
+            for bi in blocks {
+                out.push(spec(&format!("{prefix}.block{}.w", bi + 1), &shapes[bi].w));
+                out.push(spec(&format!("{prefix}.block{}.b", bi + 1), &shapes[bi].b));
+            }
+            out
+        };
+        let grad_entries = |blocks: std::ops::Range<usize>| -> Vec<TensorSpec> {
+            let mut out = Vec::with_capacity(2 * blocks.len());
+            for bi in blocks {
+                out.push(spec(&format!("grad.block{}.w", bi + 1), &shapes[bi].w));
+                out.push(spec(&format!("grad.block{}.b", bi + 1), &shapes[bi].b));
+            }
+            out
+        };
+        fn entry(
+            name: String,
+            func: &str,
+            cut: usize,
+            bucket: u32,
+            args: Vec<TensorSpec>,
+            outputs: Vec<TensorSpec>,
+        ) -> ArtifactEntry {
+            ArtifactEntry {
+                path: format!("<native:{name}>"),
+                name,
+                args,
+                outputs,
+                sha256: "native".to_string(),
+                func: func.to_string(),
+                cut,
+                bucket,
+            }
+        }
+
+        let l = self.n_blocks();
+        let mut artifacts = Vec::new();
+        for &bucket in &BUCKETS {
+            let b = bucket as usize;
+            let x = spec("x", &[b, IMG, IMG, IN_CH]);
+            let onehot = spec("onehot", &[b, self.classes]);
+            let weights = spec("weights", &[b]);
+            for cut in self.valid_cuts() {
+                let a_shape = self.activation_shape(cut, b);
+
+                let mut args = vec![x.clone()];
+                args.extend(param_entries("client", 0..cut));
+                artifacts.push(entry(
+                    Manifest::split_name("client_fwd", cut, bucket),
+                    "client_fwd",
+                    cut,
+                    bucket,
+                    args,
+                    vec![spec("a", &a_shape)],
+                ));
+
+                let mut args = vec![spec("a", &a_shape), onehot.clone(), weights.clone()];
+                args.extend(param_entries("server", cut..l));
+                let mut outputs =
+                    vec![spec("loss", &[]), spec("correct", &[]), spec("grad_a", &a_shape)];
+                outputs.extend(grad_entries(cut..l));
+                artifacts.push(entry(
+                    Manifest::split_name("server_step", cut, bucket),
+                    "server_step",
+                    cut,
+                    bucket,
+                    args,
+                    outputs,
+                ));
+
+                let mut args = vec![x.clone(), spec("grad_a", &a_shape)];
+                args.extend(param_entries("client", 0..cut));
+                artifacts.push(entry(
+                    Manifest::split_name("client_bwd", cut, bucket),
+                    "client_bwd",
+                    cut,
+                    bucket,
+                    args,
+                    grad_entries(0..cut),
+                ));
+            }
+
+            let mut args = vec![x.clone(), onehot.clone(), weights.clone()];
+            args.extend(param_entries("model", 0..l));
+            let mut outputs = vec![spec("loss", &[]), spec("correct", &[])];
+            outputs.extend(grad_entries(0..l));
+            artifacts.push(entry(
+                Manifest::full_name("full_step", bucket),
+                "full_step",
+                0,
+                bucket,
+                args,
+                outputs,
+            ));
+
+            let mut args = vec![x.clone()];
+            args.extend(param_entries("model", 0..l));
+            artifacts.push(entry(
+                Manifest::full_name("full_fwd", bucket),
+                "full_fwd",
+                0,
+                bucket,
+                args,
+                vec![spec("logits", &[b, self.classes])],
+            ));
+        }
+
+        let mut m = Manifest {
+            model: "splitcnn8".to_string(),
+            num_classes: self.classes,
+            img: IMG,
+            in_ch: IN_CH,
+            num_blocks: l,
+            valid_cuts: self.valid_cuts(),
+            buckets: BUCKETS.to_vec(),
+            param_shapes: shapes,
+            block_table: self.blocks.iter().map(|b| b.block_row()).collect(),
+            artifacts,
+            dir: std::path::PathBuf::new(),
+            index: Default::default(),
+        };
+        m.reindex();
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitcnn8_matches_the_python_architecture() {
+        let s = ModelSpec::splitcnn8(10);
+        assert_eq!(s.n_blocks(), 8);
+        assert_eq!(s.valid_cuts(), vec![1, 2, 3, 4, 5, 6, 7]);
+        let shapes = s.param_shapes();
+        assert_eq!(shapes[0].w, vec![3, 3, 3, 16]);
+        assert_eq!(shapes[4].w, vec![3, 3, 32, 64]);
+        assert_eq!(shapes[5].w, vec![1024, 128]);
+        assert_eq!(shapes[7].w, vec![64, 10]);
+        assert_eq!(shapes[7].b, vec![10]);
+    }
+
+    #[test]
+    fn activation_shapes_track_pooling() {
+        let s = ModelSpec::splitcnn8(10);
+        assert_eq!(s.activation_shape(1, 8), vec![8, 32, 32, 16]);
+        assert_eq!(s.activation_shape(2, 8), vec![8, 16, 16, 16]);
+        assert_eq!(s.activation_shape(5, 8), vec![8, 4, 4, 64]);
+        assert_eq!(s.activation_shape(6, 8), vec![8, 128]);
+        assert_eq!(s.activation_shape(7, 8), vec![8, 64]);
+    }
+
+    #[test]
+    fn synthesized_manifest_has_the_full_artifact_set() {
+        let m = ModelSpec::splitcnn8(10).manifest();
+        // 7 buckets x (7 cuts x 3 split fns + 2 full fns) = 7 x 23 = 161.
+        assert_eq!(m.artifacts.len(), 161);
+        assert_eq!(m.num_blocks, 8);
+        assert_eq!(m.buckets, vec![1, 2, 4, 8, 16, 32, 64]);
+        let e = m.get("server_step_c3_b16").expect("entry");
+        assert_eq!(e.func, "server_step");
+        assert_eq!(e.args[0].shape, vec![16, 16, 16, 32]);
+        assert_eq!(e.args[1].shape, vec![16, 10]);
+        // loss, correct, grad_a + 2 tensors per server block (5 blocks).
+        assert_eq!(e.outputs.len(), 3 + 2 * 5);
+        assert_eq!(e.outputs[2].shape, vec![16, 16, 16, 32]);
+        let e = m.get("full_fwd_b64").expect("entry");
+        assert_eq!(e.outputs[0].shape, vec![64, 10]);
+    }
+
+    #[test]
+    fn block_table_matches_the_manifest_contract() {
+        // Spot-check against the numbers `python/compile/model.block_table`
+        // exports (and `rust/artifacts/manifest.json` carries): conv1 at
+        // 32x32 with 3 -> 16 channels.
+        let m = ModelSpec::splitcnn8(10).manifest();
+        let r = &m.block_table[0];
+        assert_eq!(r.fwd_flops, 884736.0);
+        assert_eq!(r.bwd_flops, 1769472.0);
+        assert_eq!(r.act_bytes, 65536.0);
+        assert_eq!(r.param_bytes, 1792.0);
+        assert_eq!(r.n_params, 448);
+        // fc3 head tracks the class count.
+        let r = &m.block_table[7];
+        assert_eq!(r.n_params, 64 * 10 + 10);
+        let m100 = ModelSpec::splitcnn8(100).manifest();
+        assert_eq!(m100.block_table[7].n_params, 64 * 100 + 100);
+    }
+
+    #[test]
+    fn profile_from_synthesized_manifest_works() {
+        let m = ModelSpec::splitcnn8(10).manifest();
+        let p = crate::model::ModelProfile::from_manifest(&m);
+        assert_eq!(p.n_layers(), 8);
+        assert!(p.rho_total() > 0.0);
+        // The communication trade-off the paper exploits survives: early
+        // cuts emit larger activations than the bottleneck.
+        assert!(p.psi(1) > p.psi(5));
+    }
+}

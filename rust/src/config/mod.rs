@@ -8,6 +8,7 @@
 mod presets;
 
 
+use crate::backend::BackendKind;
 use crate::rng::Pcg32;
 use crate::util::Json;
 
@@ -308,10 +309,16 @@ pub struct Config {
     /// Fixed decisions used when `strategy` is one of the fixed variants.
     pub fixed_batch: u32,
     pub fixed_cut: usize,
-    /// PJRT engine-pool width: lanes that execute devices concurrently.
+    /// Engine-pool width: lanes that execute devices concurrently.
     /// 0 = auto (min of fleet size, host parallelism, and 8). Numerics are
     /// identical at any width (verified by `rust/tests/parity_modes.rs`).
     pub engine_pool: usize,
+    /// Execution backend (DESIGN.md §11). `Auto` resolves at session build
+    /// time — PJRT when AOT artifacts exist, native otherwise — and the
+    /// *resolved* kind is what sessions carry (and checkpoints embed), so
+    /// resumes stay on the backend that produced the state. Numerics
+    /// differ across backends within float tolerance, never within one.
+    pub backend: BackendKind,
     /// Dynamic-fleet scenario evolving channels/compute/membership over
     /// rounds (`None` = the historical static fleet). See
     /// [`crate::scenario`].
@@ -356,7 +363,8 @@ impl Config {
             .set("strategy", Json::Str(self.strategy.as_str().into()))
             .set("fixed_batch", Json::Num(self.fixed_batch as f64))
             .set("fixed_cut", Json::Num(self.fixed_cut as f64))
-            .set("engine_pool", Json::Num(self.engine_pool as f64));
+            .set("engine_pool", Json::Num(self.engine_pool as f64))
+            .set("backend", Json::Str(self.backend.as_str().into()));
         if let Some(s) = &self.scenario {
             root.set("scenario", s.to_json());
         }
@@ -407,6 +415,14 @@ impl Config {
             engine_pool: match j.get("engine_pool") {
                 Some(v) => v.as_usize()?,
                 None => 0,
+            },
+            // Absent in configs (and checkpoints) saved before the backend
+            // abstraction existed: auto. Those all ran PJRT, and auto
+            // resolves to PJRT wherever they could run at all (resuming a
+            // pre-backend checkpoint requires its artifacts anyway).
+            backend: match j.get("backend") {
+                Some(v) => BackendKind::parse(v.as_str()?)?,
+                None => BackendKind::Auto,
             },
             // Absent in configs saved before the scenario engine existed
             // (and in static-fleet configs): no dynamic scenario.

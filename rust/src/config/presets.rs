@@ -43,6 +43,7 @@ impl Config {
             fixed_batch: 16,
             fixed_cut: 4,
             engine_pool: 0,
+            backend: BackendKind::Auto,
             scenario: None,
         }
     }

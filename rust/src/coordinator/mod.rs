@@ -35,7 +35,9 @@ use crate::metrics::{History, Record};
 use crate::model::{profile_for, Manifest, ModelProfile, Params};
 use crate::optimizer::{decide, OptContext, StrategyInputs};
 use crate::rng::Pcg32;
-use crate::runtime::{tensor_to_shared, BufKey, EngineHandle, ExecInput, HostTensor, StepArtifacts};
+use crate::runtime::{
+    tensor_to_shared, BufKey, EngineHandle, EngineSpec, ExecInput, HostTensor, StepArtifacts,
+};
 use crate::scenario::{FleetSnapshot, ScenarioEngine};
 
 /// Post-round bookkeeping result (latency + aggregation events), consumed
@@ -120,8 +122,12 @@ impl Trainer {
     pub(crate) fn new(cfg: Config, artifacts_dir: &Path) -> crate::Result<Trainer> {
         debug_assert_eq!(cfg.model, ModelKind::Splitcnn8, "builder admits only the executable model");
         let width = resolve_pool_width(cfg.engine_pool, cfg.fleet.n_devices);
-        let engine = EngineHandle::spawn_pool(artifacts_dir.to_path_buf(), width)?;
-        let manifest = Manifest::load(artifacts_dir)?;
+        // Backend selection (DESIGN.md §11): the builder resolved `Auto`
+        // into a concrete kind already; resolving again here is a no-op
+        // for concrete kinds and keeps direct `Trainer` construction safe.
+        let spec = EngineSpec::resolve(cfg.backend, artifacts_dir, cfg.train.classes);
+        let manifest = spec.manifest()?;
+        let engine = EngineHandle::spawn_backend(spec, width)?;
         anyhow::ensure!(
             manifest.num_classes == cfg.train.classes,
             "artifacts built for {} classes, config wants {}",
@@ -214,7 +220,7 @@ impl Trainer {
         &self.cfg
     }
 
-    /// Handle to the PJRT engine thread.
+    /// Handle to the engine pool (PJRT or native lanes).
     pub fn engine(&self) -> &EngineHandle {
         &self.engine
     }

@@ -50,6 +50,7 @@ pub use session::{RoundReport, Session};
 
 use std::path::{Path, PathBuf};
 
+use crate::backend::{BackendKind, ModelSpec};
 use crate::config::{Config, ModelKind, Partition, StrategyKind};
 use crate::coordinator::Trainer;
 use crate::model::Manifest;
@@ -118,6 +119,7 @@ impl Experiment {
             resume: None,
             rounds_override: None,
             pool_override: None,
+            backend_override: None,
         }
     }
 }
@@ -139,6 +141,11 @@ pub struct ExperimentBuilder {
     /// at any width, `rust/tests/parity_modes.rs`), so resuming on a
     /// differently-sized machine may retune it.
     pool_override: Option<usize>,
+    /// Explicit `.backend(..)` value. Unlike pool width this is a
+    /// numerics-affecting knob (backends agree within float tolerance
+    /// only), so it conflicts with [`ExperimentBuilder::resume_from`] —
+    /// the checkpoint's embedded backend is authoritative there.
+    backend_override: Option<BackendKind>,
 }
 
 impl ExperimentBuilder {
@@ -266,6 +273,19 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Execution backend (DESIGN.md §11): [`BackendKind::Native`] (pure
+    /// Rust, runs anywhere), [`BackendKind::Pjrt`] (AOT artifacts through
+    /// XLA), or [`BackendKind::Auto`] (PJRT when artifacts exist, native
+    /// otherwise). Without an explicit choice the builder honours the
+    /// `HASFL_BACKEND` environment variable, then falls back to auto. The
+    /// *resolved* kind is stored in the session config, so checkpoints
+    /// embed it and resumes stay on the producing backend.
+    pub fn backend(mut self, kind: BackendKind) -> Self {
+        self.cfg.backend = kind;
+        self.backend_override = Some(kind);
+        self
+    }
+
     /// Attach a dynamic-fleet scenario (channel drift, churn, stragglers;
     /// see [`crate::scenario`]). Rounds then run over the evolving fleet:
     /// dropped devices are skipped with partial aggregation, and drift can
@@ -344,15 +364,35 @@ impl ExperimentBuilder {
         Ok(self.cfg)
     }
 
-    /// Checks against the AOT artifact manifest (artifact compatibility +
-    /// cut/bucket bounds).
+    /// Resolve the effective backend for `cfg`: an explicit
+    /// [`ExperimentBuilder::backend`] choice wins, then a concrete
+    /// `cfg.backend` (e.g. from a loaded config file), then the
+    /// `HASFL_BACKEND` environment variable, then auto — and `Auto`
+    /// resolves against the artifacts directory.
+    fn resolve_backend(&self, cfg: &Config) -> BackendKind {
+        self.backend_override
+            .or((cfg.backend != BackendKind::Auto).then_some(cfg.backend))
+            .or_else(BackendKind::from_env)
+            .unwrap_or(BackendKind::Auto)
+            .resolve(&self.artifacts)
+    }
+
+    /// Checks against the manifest of the resolved backend (artifact
+    /// compatibility + cut/bucket bounds). The native backend synthesizes
+    /// its manifest in-process; PJRT loads `manifest.json` from disk.
     fn validate_against_manifest(cfg: &Config, artifacts: &Path) -> crate::Result<Manifest> {
-        anyhow::ensure!(
-            artifacts.join("manifest.json").exists(),
-            "no AOT artifacts at '{}' (run `make artifacts`)",
-            artifacts.display()
-        );
-        let manifest = Manifest::load(artifacts)?;
+        let manifest = match cfg.backend {
+            BackendKind::Native => ModelSpec::splitcnn8(cfg.train.classes).manifest(),
+            _ => {
+                anyhow::ensure!(
+                    artifacts.join("manifest.json").exists(),
+                    "no AOT artifacts at '{}' (run `make artifacts`, or use the \
+                     artifact-free native backend: --backend native)",
+                    artifacts.display()
+                );
+                Manifest::load(artifacts)?
+            }
+        };
         anyhow::ensure!(
             manifest.num_classes == cfg.train.classes,
             "artifacts built for {} classes, config wants {}",
@@ -400,6 +440,22 @@ impl ExperimentBuilder {
             if let Some(pool) = self.pool_override {
                 cfg.engine_pool = pool;
             }
+            // The embedded backend is authoritative: switching backends
+            // changes numerics, which would silently break the
+            // bit-identical-resume contract.
+            anyhow::ensure!(
+                self.backend_override.is_none(),
+                "backend() conflicts with resume_from() (the checkpoint's embedded \
+                 backend '{}' is authoritative; numerics differ across backends)",
+                cfg.backend.as_str()
+            );
+            // New checkpoints embed a concrete backend. Pre-backend
+            // checkpoints load as `Auto` and all ran PJRT, so pin them to
+            // PJRT outright — auto-resolving by artifact presence could
+            // silently resume a PJRT run on native numerics.
+            if cfg.backend == BackendKind::Auto {
+                cfg.backend = BackendKind::Pjrt;
+            }
             Self::validate_config(&cfg)?;
             anyhow::ensure!(
                 cfg.model == ModelKind::Splitcnn8,
@@ -424,6 +480,7 @@ impl ExperimentBuilder {
              (use build_config() for latency-model studies)",
             self.cfg.model.as_str()
         );
+        self.cfg.backend = self.resolve_backend(&self.cfg);
         Self::validate_against_manifest(&self.cfg, &self.artifacts)?;
         let trainer = Trainer::new(self.cfg, &self.artifacts)?;
         Ok(Session::new(trainer, self.observers, self.concurrent))

@@ -36,7 +36,8 @@ pub struct RoundReport {
     pub fleet: Option<FleetSnapshot>,
 }
 
-/// A live training session over the PJRT engine.
+/// A live training session over the execution engine (PJRT or native —
+/// DESIGN.md §11).
 ///
 /// Created by [`super::ExperimentBuilder::build`]. Call [`Session::step`]
 /// until [`Session::is_done`] (or use the [`Session::run_to_completion`] /
@@ -136,7 +137,7 @@ impl Session {
         self.trainer.engine().stats_blocking()
     }
 
-    /// Width of the PJRT engine pool backing this session.
+    /// Width of the engine pool backing this session.
     pub fn engine_width(&self) -> usize {
         self.trainer.engine().width()
     }

@@ -16,8 +16,10 @@
 //! - **L1 (python/compile/kernels/)** — Pallas GEMM + softmax-xent kernels
 //!   on the hot path of every layer.
 //!
-//! Python never runs at training time: [`runtime`] loads the AOT artifacts
-//! through the PJRT C API (`xla` crate) and executes them from Rust.
+//! Python never runs at training time: [`runtime`] executes the model on
+//! one of two interchangeable [`backend`]s — PJRT (loads the AOT
+//! artifacts through the `xla` crate) or the pure-Rust native engine,
+//! which needs no artifacts and no XLA toolchain at all (DESIGN.md §11).
 //!
 //! Drive the system through [`experiment`] — the builder/session/observer
 //! API that every CLI subcommand, figure generator, example, and bench
@@ -27,6 +29,7 @@
 //! root) for the paper-to-module map and the experiment index (§6).
 
 pub mod aggregation;
+pub mod backend;
 pub mod checkpoint;
 pub mod config;
 pub mod convergence;

@@ -4,6 +4,7 @@
 //! hasfl train    [--preset small|figure|table1] [--config cfg.json]
 //!                [--strategy hasfl|rbs_hams|habs_rms|rbs_rms|rbs_rhams|fixed]
 //!                [--rounds N] [--devices N] [--seed S] [--non-iid]
+//!                [--backend auto|native|pjrt]
 //!                [--scenario static|drifting-channels|diurnal|churn-heavy|mega-fleet|spec.json]
 //!                [--artifacts DIR] [--out history.csv] [--fleet-out trace.csv]
 //!                [--concurrent] [--pool N] [--early-stop] [--progress]
@@ -14,12 +15,19 @@
 //!                [--out trace.csv]
 //! hasfl optimize [--devices N] [--model vgg16|resnet18|splitcnn8] [--seed S]
 //! hasfl latency  [--batch B] [--cut C] [--model ...] [--devices N]
-//! hasfl info     [--artifacts DIR]
+//! hasfl info     [--artifacts DIR] [--backend auto|native|pjrt]
 //! hasfl config   [--preset small|figure|table1] [--out cfg.json]
 //! ```
+//!
+//! `--backend` picks the execution engine (DESIGN.md §11): `native` is the
+//! pure-Rust backend that needs no AOT artifacts and no Python/XLA
+//! toolchain; `pjrt` executes the AOT-lowered HLO artifacts; `auto` (the
+//! default, also settable via `HASFL_BACKEND`) uses pjrt when artifacts
+//! exist and native otherwise.
 
 use std::path::PathBuf;
 
+use hasfl::backend::{BackendKind, ModelSpec};
 use hasfl::checkpoint::CheckpointObserver;
 use hasfl::config::{Config, StrategyKind};
 use hasfl::convergence::BoundParams;
@@ -52,7 +60,19 @@ fn profile_arg(name: &str, artifacts: &std::path::Path) -> hasfl::Result<ModelPr
         "vgg16" => ModelProfile::vgg16(),
         "resnet18" => ModelProfile::resnet18(),
         "splitcnn8" => {
-            let manifest = Manifest::load(artifacts)?;
+            // The on-disk manifest when AOT artifacts exist, the in-Rust
+            // model spec otherwise — the cost tables are identical. Say
+            // so out loud: a user who built non-default artifacts (e.g.
+            // `make artifacts100`) must not silently get 10-class costs.
+            let manifest = if artifacts.join("manifest.json").exists() {
+                Manifest::load(artifacts)?
+            } else {
+                eprintln!(
+                    "no AOT artifacts at '{}'; using the native 10-class SplitCNN-8 spec",
+                    artifacts.display()
+                );
+                ModelSpec::splitcnn8(10).manifest()
+            };
             ModelProfile::from_manifest(&manifest)
         }
         _ => anyhow::bail!("unknown model '{name}'"),
@@ -66,7 +86,7 @@ fn cmd_train(args: &Args) -> hasfl::Result<()> {
     // (`--rounds`) and runtime-only knobs (`--pool`, `--concurrent`,
     // observers) apply on top.
     if args.get("resume").is_some() {
-        for flag in ["config", "preset", "strategy", "devices", "seed", "scenario"] {
+        for flag in ["config", "preset", "strategy", "devices", "seed", "scenario", "backend"] {
             anyhow::ensure!(
                 args.get(flag).is_none(),
                 "--{flag} conflicts with --resume (the checkpoint's embedded config is \
@@ -100,6 +120,9 @@ fn cmd_train(args: &Args) -> hasfl::Result<()> {
     }
     if let Some(p) = args.get_opt::<usize>("pool")? {
         builder = builder.engine_pool(p);
+    }
+    if let Some(b) = args.get("backend") {
+        builder = builder.backend(BackendKind::parse(b)?);
     }
     if let Some(s) = args.get("scenario") {
         builder = builder.scenario(scenario_arg(s)?);
@@ -148,11 +171,12 @@ fn cmd_train(args: &Args) -> hasfl::Result<()> {
     {
         let cfg = session.config();
         eprintln!(
-            "training: N={} rounds={} strategy={} partition={}",
+            "training: N={} rounds={} strategy={} partition={} backend={}",
             cfg.fleet.n_devices,
             cfg.train.rounds,
             cfg.strategy.as_str(),
-            cfg.partition.as_str()
+            cfg.partition.as_str(),
+            cfg.backend.as_str()
         );
     }
     session.run_to_completion()?;
@@ -299,26 +323,41 @@ fn cmd_latency(args: &Args) -> hasfl::Result<()> {
 
 fn cmd_info(args: &Args) -> hasfl::Result<()> {
     let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
-    let m = Manifest::load(&artifacts)?;
+    let kind = match args.get("backend") {
+        Some(b) => BackendKind::parse(b)?,
+        None => BackendKind::from_env().unwrap_or(BackendKind::Auto),
+    }
+    .resolve(&artifacts);
+    let m = match kind {
+        BackendKind::Pjrt => Manifest::load(&artifacts)?,
+        // `info` has no class flag; the native spec defaults to the
+        // 10-class model every preset trains.
+        _ => ModelSpec::splitcnn8(10).manifest(),
+    };
+    println!("backend: {}", kind.as_str());
     println!("model: {} ({} classes)", m.model, m.num_classes);
     println!(
         "blocks: {} | cuts: {:?} | buckets: {:?}",
         m.num_blocks, m.valid_cuts, m.buckets
     );
     println!("artifacts: {}", m.artifacts.len());
-    let total_bytes: u64 = m
-        .artifacts
-        .iter()
-        .filter_map(|a| std::fs::metadata(m.dir.join(&a.path)).ok())
-        .map(|md| md.len())
-        .sum();
-    println!("total HLO text: {:.1} MiB", total_bytes as f64 / (1024.0 * 1024.0));
+    if kind == BackendKind::Pjrt {
+        let total_bytes: u64 = m
+            .artifacts
+            .iter()
+            .filter_map(|a| std::fs::metadata(m.dir.join(&a.path)).ok())
+            .map(|md| md.len())
+            .sum();
+        println!("total HLO text: {:.1} MiB", total_bytes as f64 / (1024.0 * 1024.0));
+    } else {
+        println!("total HLO text: 0.0 MiB (native backend synthesizes the manifest)");
+    }
 
     // Runtime smoke (best-effort: `info` stays usable when the PJRT
     // runtime cannot initialize): spawn one engine lane, warm the smallest
     // monolithic artifact, and report the execution-statistics fields
     // (marshal split, buffer-cache counters, pool width).
-    match engine_smoke(&artifacts, &m) {
+    match engine_smoke(kind, &artifacts, &m) {
         Ok(stats) => {
             println!("engine pool width: {} (info uses 1 lane; training uses", stats.pool_width);
             println!("  `engine_pool` from the config, 0 = auto = min(fleet, cores, 8))");
@@ -332,16 +371,20 @@ fn cmd_info(args: &Args) -> hasfl::Result<()> {
                 stats.buffer_misses
             );
         }
-        Err(e) => eprintln!("engine smoke skipped (PJRT unavailable): {e}"),
+        Err(e) => eprintln!("engine smoke skipped (backend unavailable): {e}"),
     }
     Ok(())
 }
 
 fn engine_smoke(
+    kind: BackendKind,
     artifacts: &std::path::Path,
     m: &Manifest,
 ) -> hasfl::Result<hasfl::runtime::EngineStats> {
-    let engine = EngineHandle::spawn(artifacts.to_path_buf())?;
+    let engine = match kind {
+        BackendKind::Pjrt => EngineHandle::spawn(artifacts.to_path_buf())?,
+        _ => EngineHandle::spawn_native(m.num_classes)?,
+    };
     let smallest = m.buckets.iter().copied().min().unwrap_or(1);
     engine.warm_blocking(&Manifest::full_name("full_fwd", smallest))?;
     let stats = engine.stats_blocking()?;

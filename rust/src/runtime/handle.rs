@@ -1,17 +1,106 @@
-//! Thread-safe handle to a pool of dedicated engine threads.
+//! Thread-safe handle to a pool of dedicated engine threads, generic over
+//! the execution backend (DESIGN.md §11).
 //!
 //! PJRT wrapper types hold raw pointers and are not `Send`, so each engine
-//! lives on its own OS thread ("lane") that owns a PJRT CPU client, an
-//! executable cache, and a parameter-buffer cache; coordinator actors
-//! (device threads) talk to lanes through mpsc request channels with
-//! per-request reply channels. A single CPU PJRT client serializes compute,
-//! so concurrent rounds only overlap for real when the pool has width > 1
-//! (measured in rust/benches/e2e_round.rs).
+//! lives on its own OS thread ("lane") that owns its executable cache and
+//! parameter-buffer cache; coordinator actors (device threads) talk to
+//! lanes through mpsc request channels with per-request reply channels. A
+//! single CPU PJRT client serializes compute, so concurrent rounds only
+//! overlap for real when the pool has width > 1 (measured in
+//! rust/benches/e2e_round.rs). Native lanes follow the same shape: the
+//! pure-Rust engine is `Send`, but keeping it behind lane threads makes
+//! the two backends interchangeable and per-lane stats meaningful.
 
 use std::path::PathBuf;
 use std::sync::mpsc;
 
 use super::engine::{Engine, EngineStats, ExecInput, HostTensor};
+use crate::backend::{BackendKind, ModelSpec, NativeEngine};
+use crate::model::Manifest;
+
+/// What a lane thread should construct: the resolved backend plus the
+/// context it needs (artifacts directory for PJRT, model spec for native).
+#[derive(Debug, Clone)]
+pub enum EngineSpec {
+    /// PJRT over an AOT artifacts directory.
+    Pjrt { artifacts_dir: PathBuf },
+    /// Pure-Rust engine for `classes`-way SplitCNN-8.
+    Native { classes: usize },
+}
+
+impl EngineSpec {
+    /// Resolve a backend kind into a lane spec (`Auto` resolves against
+    /// the artifacts directory).
+    pub fn resolve(
+        kind: BackendKind,
+        artifacts_dir: &std::path::Path,
+        classes: usize,
+    ) -> EngineSpec {
+        match kind.resolve(artifacts_dir) {
+            BackendKind::Pjrt => EngineSpec::Pjrt { artifacts_dir: artifacts_dir.to_path_buf() },
+            _ => EngineSpec::Native { classes },
+        }
+    }
+
+    /// The concrete backend this spec builds.
+    pub fn kind(&self) -> BackendKind {
+        match self {
+            EngineSpec::Pjrt { .. } => BackendKind::Pjrt,
+            EngineSpec::Native { .. } => BackendKind::Native,
+        }
+    }
+
+    /// The manifest this spec's engine serves: loaded from disk for PJRT,
+    /// synthesized in-process for native. The single source of truth for
+    /// every caller that pairs an engine pool with its manifest.
+    pub fn manifest(&self) -> crate::Result<Manifest> {
+        match self {
+            EngineSpec::Pjrt { artifacts_dir } => Manifest::load(artifacts_dir),
+            EngineSpec::Native { classes } => Ok(ModelSpec::splitcnn8(*classes).manifest()),
+        }
+    }
+}
+
+/// One lane's engine: either backend behind the same execute/warm/stats
+/// surface.
+enum LaneEngine {
+    Pjrt(Box<Engine>),
+    Native(Box<NativeEngine>),
+}
+
+impl LaneEngine {
+    fn build(spec: &EngineSpec) -> crate::Result<LaneEngine> {
+        Ok(match spec {
+            EngineSpec::Pjrt { artifacts_dir } => {
+                LaneEngine::Pjrt(Box::new(Engine::load(artifacts_dir)?))
+            }
+            EngineSpec::Native { classes } => {
+                LaneEngine::Native(Box::new(NativeEngine::new(ModelSpec::splitcnn8(*classes))))
+            }
+        })
+    }
+
+    fn execute(&mut self, name: &str, inputs: &[ExecInput]) -> crate::Result<Vec<HostTensor>> {
+        match self {
+            LaneEngine::Pjrt(e) => e.execute(name, inputs),
+            LaneEngine::Native(e) => e.execute(name, inputs),
+        }
+    }
+
+    fn warm(&mut self, name: &str) -> crate::Result<bool> {
+        match self {
+            LaneEngine::Pjrt(e) => e.warm(name),
+            LaneEngine::Native(e) => e.warm(name),
+        }
+    }
+
+    fn stats(&self) -> EngineStats {
+        match self {
+            LaneEngine::Pjrt(e) => e.stats().clone(),
+            LaneEngine::Native(e) => e.stats().clone(),
+        }
+    }
+}
 
 enum Request {
     Execute {
@@ -34,15 +123,16 @@ enum Request {
 #[derive(Clone)]
 pub struct EngineHandle {
     lanes: Vec<mpsc::Sender<Request>>,
+    backend: BackendKind,
 }
 
-fn spawn_lane(artifacts_dir: PathBuf, lane: usize) -> crate::Result<mpsc::Sender<Request>> {
+fn spawn_lane(spec: EngineSpec, lane: usize) -> crate::Result<mpsc::Sender<Request>> {
     let (tx, rx) = mpsc::channel::<Request>();
     let (ready_tx, ready_rx) = mpsc::channel::<crate::Result<()>>();
     std::thread::Builder::new()
-        .name(format!("pjrt-engine-{lane}"))
+        .name(format!("{}-engine-{lane}", spec.kind().as_str()))
         .spawn(move || {
-            let mut engine = match Engine::load(&artifacts_dir) {
+            let mut engine = match LaneEngine::build(&spec) {
                 Ok(e) => {
                     let _ = ready_tx.send(Ok(()));
                     e
@@ -61,7 +151,7 @@ fn spawn_lane(artifacts_dir: PathBuf, lane: usize) -> crate::Result<mpsc::Sender
                         let _ = resp.send(engine.warm(&name));
                     }
                     Request::Stats { resp } => {
-                        let _ = resp.send(engine.stats().clone());
+                        let _ = resp.send(engine.stats());
                     }
                     Request::Shutdown => break,
                 }
@@ -73,20 +163,34 @@ fn spawn_lane(artifacts_dir: PathBuf, lane: usize) -> crate::Result<mpsc::Sender
 }
 
 impl EngineHandle {
-    /// Spawn a single-lane engine over an artifacts directory (the seed
-    /// behaviour; numerics are identical at any width).
+    /// Spawn a single-lane PJRT engine over an artifacts directory (the
+    /// seed behaviour; numerics are identical at any width).
     pub fn spawn(artifacts_dir: PathBuf) -> crate::Result<EngineHandle> {
         EngineHandle::spawn_pool(artifacts_dir, 1)
     }
 
-    /// Spawn an engine pool of `width` lanes (clamped to >= 1). Each lane
-    /// owns its own PJRT CPU client and compiles lazily, so lanes only pay
-    /// for the artifacts they actually execute.
+    /// Spawn a PJRT engine pool of `width` lanes over an artifacts
+    /// directory (backwards-compatible entry point; backend-aware callers
+    /// use [`EngineHandle::spawn_backend`]).
     pub fn spawn_pool(artifacts_dir: PathBuf, width: usize) -> crate::Result<EngineHandle> {
+        EngineHandle::spawn_backend(EngineSpec::Pjrt { artifacts_dir }, width)
+    }
+
+    /// Spawn a single-lane native engine (no artifacts needed).
+    pub fn spawn_native(classes: usize) -> crate::Result<EngineHandle> {
+        EngineHandle::spawn_backend(EngineSpec::Native { classes }, 1)
+    }
+
+    /// Spawn an engine pool of `width` lanes (clamped to >= 1) over the
+    /// given backend spec. Each lane owns its own engine and compiles (or,
+    /// natively, dispatches) lazily, so lanes only pay for the artifacts
+    /// they actually execute.
+    pub fn spawn_backend(spec: EngineSpec, width: usize) -> crate::Result<EngineHandle> {
         let width = width.max(1);
+        let backend = spec.kind();
         let mut lanes = Vec::with_capacity(width);
         for lane in 0..width {
-            match spawn_lane(artifacts_dir.clone(), lane) {
+            match spawn_lane(spec.clone(), lane) {
                 Ok(tx) => lanes.push(tx),
                 Err(e) => {
                     for tx in &lanes {
@@ -96,7 +200,12 @@ impl EngineHandle {
                 }
             }
         }
-        Ok(EngineHandle { lanes })
+        Ok(EngineHandle { lanes, backend })
+    }
+
+    /// The concrete backend this pool runs on.
+    pub fn backend(&self) -> BackendKind {
+        self.backend
     }
 
     /// Number of engine lanes in the pool.
@@ -133,7 +242,8 @@ impl EngineHandle {
     }
 
     /// Pre-compile an artifact on every lane (returns true if any lane had
-    /// a cache miss).
+    /// a cache miss; always false on native lanes, which have nothing to
+    /// compile).
     pub fn warm_blocking(&self, name: &str) -> crate::Result<bool> {
         let mut missed = false;
         for tx in &self.lanes {

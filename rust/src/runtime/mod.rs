@@ -1,14 +1,18 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them from the Rust training path.
+//! Execution runtime: runs SplitCNN-8 step functions by artifact name on
+//! one of two interchangeable backends (DESIGN.md §11) — the PJRT engine
+//! over AOT HLO-text artifacts produced by `python/compile/aot.py`, or the
+//! pure-Rust [`crate::backend::NativeEngine`] (no artifacts required).
 //!
 //! Two layers:
-//! - [`Engine`] — owns an `xla::PjRtClient`, a lazily-populated cache of
-//!   compiled executables keyed by artifact name, and a parameter-buffer
-//!   cache of packed literals keyed by [`BufKey`] + version. **Not `Send`**
-//!   (PJRT wrappers hold raw pointers), so each engine lives on one thread.
+//! - [`Engine`] — the PJRT backend: owns an `xla::PjRtClient`, a
+//!   lazily-populated cache of compiled executables keyed by artifact
+//!   name, and a parameter-buffer cache of packed literals keyed by
+//!   [`BufKey`] + version. **Not `Send`** (PJRT wrappers hold raw
+//!   pointers), so each engine lives on one thread.
 //! - [`EngineHandle`] — a cloneable, thread-safe handle that proxies
 //!   execution requests to a pool of dedicated engine threads ("lanes")
-//!   over channels. Devices are routed to `lane = idx % width`, so
+//!   over channels, each lane running the backend selected by
+//!   [`EngineSpec`]. Devices are routed to `lane = idx % width`, so
 //!   concurrent rounds overlap for real when the pool has width > 1.
 //!
 //! Inputs cross the boundary as [`ExecInput`]: `Fresh` tensors (packed into
@@ -20,7 +24,7 @@ mod engine;
 mod handle;
 
 pub use engine::{BufKey, Engine, EngineStats, ExecInput, HostTensor};
-pub use handle::EngineHandle;
+pub use handle::{EngineHandle, EngineSpec};
 
 use std::sync::Arc;
 

@@ -1,0 +1,303 @@
+//! Cross-backend parity suite (DESIGN.md §11).
+//!
+//! Always-runnable half: the native backend must be bit-deterministic
+//! across sequential, pooled-concurrent, and checkpoint-resumed modes.
+//! PJRT half (runs when AOT artifacts are present, standardized
+//! `SKIPPED:` line otherwise): the synthesized native manifest must match
+//! the on-disk one, and native-vs-PJRT outputs must agree within float
+//! tolerance — at the engine level for every step function and at the
+//! session level over several (cut, batch) pairs. Exact equality across
+//! backends is *not* expected: XLA fuses and reorders f32 reductions.
+
+use std::path::PathBuf;
+
+use hasfl::backend::{skip_pjrt_only, BackendKind, ModelSpec};
+use hasfl::config::{Config, StrategyKind};
+use hasfl::experiment::Experiment;
+use hasfl::model::{Manifest, Params};
+use hasfl::runtime::{tensor_to_host, EngineHandle, HostTensor, StepArtifacts};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// The artifacts dir when the PJRT half can run, else a standardized skip.
+fn pjrt_dir(what: &str) -> Option<PathBuf> {
+    let dir = artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        skip_pjrt_only(&format!(
+            "{what} needs on-disk AOT artifacts (run `make artifacts`); \
+             the native half of this suite still gates every machine"
+        ));
+        None
+    }
+}
+
+fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= atol + rtol * y.abs(),
+            "{what}[{i}]: native {x} vs pjrt {y}"
+        );
+    }
+}
+
+fn fake_batch(
+    bucket: usize,
+    classes: usize,
+    true_b: usize,
+) -> (HostTensor, HostTensor, HostTensor) {
+    let mut rng = hasfl::rng::Pcg32::seeded(4242);
+    let px = 32 * 32 * 3;
+    let x: Vec<f32> = (0..bucket * px).map(|_| rng.normal() as f32 * 0.5).collect();
+    let mut onehot = vec![0.0f32; bucket * classes];
+    let mut weights = vec![0.0f32; bucket];
+    for r in 0..bucket {
+        onehot[r * classes + (r % classes)] = 1.0;
+        if r < true_b {
+            weights[r] = 1.0;
+        }
+    }
+    (
+        HostTensor { shape: vec![bucket, 32, 32, 3], data: x },
+        HostTensor { shape: vec![bucket, classes], data: onehot },
+        HostTensor { shape: vec![bucket], data: weights },
+    )
+}
+
+// ---- native determinism (always runs) ------------------------------------
+
+fn native_config(rounds: usize) -> Config {
+    let mut cfg = Config::small();
+    cfg.fleet.n_devices = 3;
+    cfg.train.rounds = rounds;
+    cfg.train.agg_interval = 2;
+    cfg.train.eval_every = rounds;
+    cfg.train.train_samples = 192;
+    cfg.train.test_samples = 48;
+    cfg.train.batch_cap = 16;
+    cfg.strategy = StrategyKind::Fixed;
+    cfg.fixed_batch = 8;
+    cfg.fixed_cut = 4;
+    cfg
+}
+
+#[test]
+fn an_execution_engine_is_always_available() {
+    // The HASFL_REQUIRE_ENGINE tripwire, wired to a live call site:
+    // building a session must succeed on every machine (the native
+    // backend needs no artifacts, no Python, no XLA). If this ever stops
+    // holding, `skip_engine_test` reports it — as a standardized
+    // `SKIPPED:` line locally, and as a hard failure under the gate of
+    // record's HASFL_REQUIRE_ENGINE=1.
+    match Experiment::builder().config(native_config(1)).artifacts(artifacts_dir()).build() {
+        Ok(session) => {
+            session.finish().expect("finish");
+        }
+        Err(e) => hasfl::backend::skip_engine_test(&format!("no execution engine: {e}")),
+    }
+}
+
+#[test]
+fn native_is_bit_identical_across_sequential_pooled_and_resumed() {
+    let ckpt_dir = std::env::temp_dir()
+        .join(format!("hasfl_backend_parity_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+    std::fs::create_dir_all(&ckpt_dir).unwrap();
+    let ckpt = ckpt_dir.join("mid.hckpt");
+
+    // Sequential reference run, checkpointing at round 2.
+    let mut seq = Experiment::builder()
+        .config(native_config(4))
+        .backend(BackendKind::Native)
+        .artifacts(artifacts_dir())
+        .build()
+        .expect("sequential session");
+    let mut seq_losses = Vec::new();
+    while !seq.is_done() {
+        seq_losses.push(seq.step().expect("step").outcome.mean_loss);
+        if seq.round() == 2 {
+            seq.checkpoint(&ckpt).expect("checkpoint");
+        }
+    }
+    let seq_params = seq.trainer().params().to_vec();
+    let seq_hist = seq.finish().expect("finish");
+
+    // Pooled-concurrent run: same numerics, different execution shape.
+    let mut pooled = Experiment::builder()
+        .config(native_config(4))
+        .backend(BackendKind::Native)
+        .engine_pool(3)
+        .concurrent(true)
+        .artifacts(artifacts_dir())
+        .build()
+        .expect("pooled session");
+    pooled.run_to_completion().expect("run");
+    assert_eq!(seq_hist.records, pooled.history().records.clone(), "pooled history");
+    assert_eq!(seq_params, pooled.trainer().params().to_vec(), "pooled params");
+    pooled.finish().expect("finish");
+
+    // Warm restart from round 2: rounds 3..4 must replay bit-identically.
+    let mut resumed = Experiment::builder()
+        .resume_from(&ckpt)
+        .artifacts(artifacts_dir())
+        .build()
+        .expect("resumed session");
+    assert_eq!(resumed.config().backend, BackendKind::Native);
+    let mut resumed_losses = Vec::new();
+    while !resumed.is_done() {
+        resumed_losses.push(resumed.step().expect("step").outcome.mean_loss);
+    }
+    assert_eq!(&seq_losses[2..], &resumed_losses[..], "resumed losses");
+    assert_eq!(seq_params, resumed.trainer().params().to_vec(), "resumed params");
+    let resumed_hist = resumed.finish().expect("finish");
+    assert_eq!(seq_hist.records, resumed_hist.records, "resumed history");
+
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+}
+
+// ---- PJRT halves (standardized skip without artifacts) -------------------
+
+#[test]
+fn synthesized_manifest_matches_on_disk_manifest() {
+    let Some(dir) = pjrt_dir("manifest cross-check") else { return };
+    let disk = Manifest::load(&dir).expect("manifest");
+    let native = ModelSpec::splitcnn8(disk.num_classes).manifest();
+
+    assert_eq!(native.model, disk.model);
+    assert_eq!(native.num_classes, disk.num_classes);
+    assert_eq!(native.img, disk.img);
+    assert_eq!(native.in_ch, disk.in_ch);
+    assert_eq!(native.num_blocks, disk.num_blocks);
+    assert_eq!(native.valid_cuts, disk.valid_cuts);
+    assert_eq!(native.buckets, disk.buckets);
+    assert_eq!(native.param_shapes, disk.param_shapes);
+    assert_eq!(native.block_table, disk.block_table);
+
+    assert_eq!(native.artifacts.len(), disk.artifacts.len(), "artifact count");
+    for d in &disk.artifacts {
+        let n = native
+            .get(&d.name)
+            .unwrap_or_else(|| panic!("native manifest is missing artifact {}", d.name));
+        assert_eq!(n.func, d.func, "{}", d.name);
+        assert_eq!(n.cut, d.cut, "{}", d.name);
+        assert_eq!(n.bucket, d.bucket, "{}", d.name);
+        assert_eq!(n.args, d.args, "{}: args", d.name);
+        assert_eq!(n.outputs, d.outputs, "{}: outputs", d.name);
+    }
+}
+
+#[test]
+fn engine_outputs_agree_across_backends() {
+    let Some(dir) = pjrt_dir("engine-level parity") else { return };
+    let pjrt = EngineHandle::spawn(dir.clone()).expect("pjrt engine");
+    let native = EngineHandle::spawn_native(10).expect("native engine");
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let params = Params::init(&manifest, 77);
+    let classes = manifest.num_classes;
+
+    for (cut, bucket, true_b) in [(2usize, 8u32, 8usize), (5, 16, 11), (7, 4, 4)] {
+        let (x, y, w) = fake_batch(bucket as usize, classes, true_b);
+        let sa = StepArtifacts::resolve(&manifest, cut, true_b as u32).unwrap();
+        assert_eq!(sa.bucket, bucket);
+
+        // a1: activations at the cut.
+        let mut cf_in = vec![x.clone()];
+        cf_in.extend(params.client_slice(cut).iter().map(tensor_to_host));
+        let a_p = pjrt.execute_blocking(&sa.client_fwd, cf_in.clone()).expect("pjrt cf");
+        let a_n = native.execute_blocking(&sa.client_fwd, cf_in).expect("native cf");
+        assert_close(&a_n[0].data, &a_p[0].data, 1e-4, 1e-4, &sa.client_fwd);
+
+        // a3: loss, correct, grad_a, server grads (feed both the PJRT
+        // activations so the comparison isolates the server step).
+        let mut ss_in = vec![a_p[0].clone(), y.clone(), w.clone()];
+        ss_in.extend(params.server_slice(cut).iter().map(tensor_to_host));
+        let ss_p = pjrt.execute_blocking(&sa.server_step, ss_in.clone()).expect("pjrt ss");
+        let ss_n = native.execute_blocking(&sa.server_step, ss_in).expect("native ss");
+        assert_eq!(ss_n.len(), ss_p.len());
+        for (k, (n, p)) in ss_n.iter().zip(&ss_p).enumerate() {
+            assert_eq!(n.shape, p.shape, "{}: output {k} shape", sa.server_step);
+            assert_close(&n.data, &p.data, 1e-4, 2e-3, &format!("{} out {k}", sa.server_step));
+        }
+
+        // a5: client grads from the same upstream gradient.
+        let mut cb_in = vec![x.clone(), ss_p[2].clone()];
+        cb_in.extend(params.client_slice(cut).iter().map(tensor_to_host));
+        let cb_p = pjrt.execute_blocking(&sa.client_bwd, cb_in.clone()).expect("pjrt cb");
+        let cb_n = native.execute_blocking(&sa.client_bwd, cb_in).expect("native cb");
+        for (k, (n, p)) in cb_n.iter().zip(&cb_p).enumerate() {
+            assert_close(&n.data, &p.data, 1e-4, 2e-3, &format!("{} out {k}", sa.client_bwd));
+        }
+    }
+
+    // Monolithic oracle + eval path.
+    let (x, y, w) = fake_batch(8, classes, 8);
+    let name = Manifest::full_name("full_step", 8);
+    let mut inputs = vec![x.clone(), y, w];
+    inputs.extend(params.tensors.iter().map(tensor_to_host));
+    let fs_p = pjrt.execute_blocking(&name, inputs.clone()).expect("pjrt fs");
+    let fs_n = native.execute_blocking(&name, inputs).expect("native fs");
+    for (k, (n, p)) in fs_n.iter().zip(&fs_p).enumerate() {
+        assert_close(&n.data, &p.data, 1e-4, 2e-3, &format!("full_step out {k}"));
+    }
+    let name = Manifest::full_name("full_fwd", 8);
+    let mut inputs = vec![x];
+    inputs.extend(params.tensors.iter().map(tensor_to_host));
+    let ff_p = pjrt.execute_blocking(&name, inputs.clone()).expect("pjrt ff");
+    let ff_n = native.execute_blocking(&name, inputs).expect("native ff");
+    assert_close(&ff_n[0].data, &ff_p[0].data, 1e-4, 1e-4, "full_fwd logits");
+
+    pjrt.shutdown();
+    native.shutdown();
+}
+
+#[test]
+fn training_sessions_agree_across_backends() {
+    let Some(dir) = pjrt_dir("session-level parity") else { return };
+
+    // Fixed decisions pin (cut, batch) so the two runs stay structurally
+    // identical and only the engine numerics differ.
+    let run = |backend: BackendKind, cut: usize, batch: u32| {
+        let mut cfg = native_config(3);
+        cfg.fixed_cut = cut;
+        cfg.fixed_batch = batch;
+        let mut session = Experiment::builder()
+            .config(cfg)
+            .backend(backend)
+            .artifacts(&dir)
+            .build()
+            .expect("session");
+        let mut losses = Vec::new();
+        while !session.is_done() {
+            losses.push(session.step().expect("step").outcome.mean_loss);
+        }
+        let params = session.trainer().params().to_vec();
+        session.finish().expect("finish");
+        (losses, params)
+    };
+
+    for (cut, batch) in [(2usize, 4u32), (4, 8), (6, 16)] {
+        let (loss_n, params_n) = run(BackendKind::Native, cut, batch);
+        let (loss_p, params_p) = run(BackendKind::Pjrt, cut, batch);
+        for (r, (a, b)) in loss_n.iter().zip(&loss_p).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-3 + 1e-3 * b.abs(),
+                "cut {cut} batch {batch} round {r}: native loss {a} vs pjrt {b}"
+            );
+        }
+        for (i, (pn, pp)) in params_n.iter().zip(&params_p).enumerate() {
+            for (t, (tn, tp)) in pn.tensors.iter().zip(&pp.tensors).enumerate() {
+                assert_close(
+                    &tn.data,
+                    &tp.data,
+                    5e-4,
+                    1e-3,
+                    &format!("cut {cut} batch {batch} device {i} tensor {t}"),
+                );
+            }
+        }
+    }
+}

@@ -5,9 +5,9 @@
 //! run — under a static fleet (with a random strategy, so the strategy RNG
 //! stream is exercised) and under the churn-heavy and mega-fleet scenario
 //! presets (sampler + scenario RNG streams, partial aggregation, drift
-//! state). Engine-backed tests self-skip without AOT artifacts, like the
-//! other integration suites; the file-format error paths (truncation,
-//! corruption, version skew) run everywhere.
+//! state). Engine-backed tests run on the resolved backend (PJRT with
+//! artifacts, native without) and never skip; the file-format error paths
+//! (truncation, corruption, version skew) need no engine at all.
 
 use std::path::{Path, PathBuf};
 
@@ -20,14 +20,13 @@ use hasfl::metrics::{History, Record};
 use hasfl::model::{Params, Tensor};
 use hasfl::scenario::{DeviceEvoState, Scenario, ScenarioEngineState, ScenarioPreset};
 
-fn artifacts_dir() -> Option<PathBuf> {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
-        eprintln!("SKIP: no artifacts (run `make artifacts`)");
-        None
-    }
+/// Artifacts directory handed to the builder. The session resolves its
+/// backend from `HASFL_BACKEND` / auto, and the native backend keeps this
+/// suite fully runnable with no artifacts on disk — engine-backed tests
+/// never skip (`HASFL_REQUIRE_ENGINE=1` turns any regression of that into
+/// a hard failure, see `hasfl::backend::skip_engine_test`).
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
 fn temp_dir(tag: &str) -> PathBuf {
@@ -125,7 +124,7 @@ fn assert_reports_identical(a: &[RoundReport], b: &[RoundReport], what: &str) {
 /// The core acceptance check: interrupted-at-4 + resumed == uninterrupted,
 /// bit for bit.
 fn assert_resume_is_bit_identical(tag: &str, cfg: Config, spec: Option<Scenario>) {
-    let Some(dir) = artifacts_dir() else { return };
+    let dir = artifacts_dir();
     let ckpt_dir = temp_dir(tag);
 
     let (straight_reports, straight_hist, straight_params) =
@@ -183,7 +182,7 @@ fn mega_fleet_resume_is_bit_identical() {
 
 #[test]
 fn resume_can_extend_the_round_budget() {
-    let Some(dir) = artifacts_dir() else { return };
+    let dir = artifacts_dir();
     let ckpt_dir = temp_dir("extend");
     let cfg = session_config(5, StrategyKind::Fixed);
     run_straight(&dir, cfg, None, &ckpt_dir);
@@ -205,8 +204,38 @@ fn resume_can_extend_the_round_budget() {
 }
 
 #[test]
+fn resume_keeps_the_embedded_backend_and_rejects_overrides() {
+    let dir = artifacts_dir();
+    let ckpt_dir = temp_dir("backend");
+    let cfg = session_config(9, StrategyKind::Fixed);
+    run_straight(&dir, cfg, None, &ckpt_dir);
+    let ckpt = ckpt_dir.join("ckpt_round_000004.hckpt");
+
+    // The checkpoint embeds the *resolved* backend of the producing run;
+    // a plain resume comes back on exactly that backend.
+    let expected = hasfl::backend::BackendKind::from_env()
+        .unwrap_or(hasfl::backend::BackendKind::Auto)
+        .resolve(&dir);
+    let session =
+        Experiment::builder().resume_from(&ckpt).artifacts(&dir).build().expect("resume");
+    assert_eq!(session.config().backend, expected);
+    session.finish().expect("finish");
+
+    // Backends agree within float tolerance only, so switching one on
+    // resume would silently break bit-identical warm restarts: rejected.
+    let err = Experiment::builder()
+        .resume_from(&ckpt)
+        .backend(hasfl::backend::BackendKind::Native)
+        .artifacts(&dir)
+        .build()
+        .unwrap_err();
+    assert!(err.to_string().contains("backend"), "{err}");
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+}
+
+#[test]
 fn scenario_mismatch_is_rejected_on_resume() {
-    let Some(dir) = artifacts_dir() else { return };
+    let dir = artifacts_dir();
     let ckpt_dir = temp_dir("mismatch");
     let cfg = session_config(7, StrategyKind::Fixed);
     run_straight(&dir, cfg, Some(ScenarioPreset::ChurnHeavy.scenario()), &ckpt_dir);

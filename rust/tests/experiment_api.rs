@@ -1,23 +1,23 @@
 //! Tests for the `experiment` session API: builder validation, step/driver
-//! parity, and observer callback ordering. Engine-backed tests are skipped
-//! without artifacts (run `make artifacts`).
+//! parity, and observer callback ordering. Engine-backed tests run on the
+//! resolved backend (PJRT with artifacts, native without) and never skip.
 
 use std::cell::RefCell;
 use std::path::PathBuf;
 use std::rc::Rc;
 
+use hasfl::backend::BackendKind;
 use hasfl::config::{Config, ModelKind, StrategyKind};
 use hasfl::experiment::{Experiment, Observer, RoundReport};
 use hasfl::latency::Decisions;
 
-fn artifacts_dir() -> Option<PathBuf> {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
-        eprintln!("SKIP: no artifacts (run `make artifacts`)");
-        None
-    }
+/// Artifacts directory handed to the builder. The session resolves its
+/// backend from `HASFL_BACKEND` / auto, and the native backend keeps this
+/// suite fully runnable with no artifacts on disk — engine-backed tests
+/// never skip (`HASFL_REQUIRE_ENGINE=1` turns any regression of that into
+/// a hard failure, see `hasfl::backend::skip_engine_test`).
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
 fn tiny_config() -> Config {
@@ -64,12 +64,64 @@ fn build_rejects_bad_fixed_batch() {
 }
 
 #[test]
-fn build_rejects_missing_artifacts() {
+fn pjrt_build_rejects_missing_artifacts() {
+    // An explicit PJRT request must fail loudly without artifacts (auto
+    // would fall back to the native backend instead).
     let err = Experiment::builder()
+        .backend(BackendKind::Pjrt)
         .artifacts("definitely_not_an_artifacts_dir")
         .build()
         .unwrap_err();
     assert!(err.to_string().contains("artifacts"), "{err}");
+}
+
+#[test]
+fn native_build_needs_no_artifacts() {
+    // The native backend synthesizes its manifest: a session builds and
+    // trains with no artifacts directory at all.
+    let mut session = Experiment::builder()
+        .config(tiny_config())
+        .rounds(1)
+        .backend(BackendKind::Native)
+        .artifacts("definitely_not_an_artifacts_dir")
+        .build()
+        .expect("native session");
+    assert_eq!(session.config().backend, BackendKind::Native);
+    let report = session.step().expect("step");
+    assert!(report.outcome.mean_loss.is_finite());
+    session.finish().expect("finish");
+}
+
+#[test]
+fn auto_resolves_to_native_without_artifacts_and_is_recorded() {
+    let session = Experiment::builder()
+        .config(tiny_config())
+        .backend(BackendKind::Auto)
+        .artifacts("definitely_not_an_artifacts_dir")
+        .build()
+        .expect("auto session");
+    // The *resolved* kind lands in the session config (and would be
+    // embedded in any checkpoint).
+    assert_eq!(session.config().backend, BackendKind::Native);
+    session.finish().expect("finish");
+}
+
+#[test]
+fn native_backend_supports_any_class_count() {
+    // No shape-specialized artifacts means no class-count coupling: the
+    // native backend trains a 100-way head directly.
+    let mut session = Experiment::builder()
+        .config(tiny_config())
+        .tune(|c| c.train.classes = 100)
+        .rounds(1)
+        .backend(BackendKind::Native)
+        .artifacts(artifacts_dir())
+        .build()
+        .expect("100-class native session");
+    let report = session.step().expect("step");
+    // Random init over 100 classes: loss near ln(100) ~ 4.6.
+    assert!((3.0..7.0).contains(&report.outcome.mean_loss), "{}", report.outcome.mean_loss);
+    session.finish().expect("finish");
 }
 
 #[test]
@@ -90,7 +142,7 @@ fn build_config_skips_engine_checks() {
 
 #[test]
 fn build_rejects_out_of_range_cut() {
-    let Some(dir) = artifacts_dir() else { return };
+    let dir = artifacts_dir();
     let err = Experiment::builder()
         .config(tiny_config())
         .fixed_cut(99)
@@ -101,11 +153,18 @@ fn build_rejects_out_of_range_cut() {
 }
 
 #[test]
-fn build_rejects_class_mismatch() {
-    let Some(dir) = artifacts_dir() else { return };
+fn pjrt_build_rejects_class_mismatch() {
+    // Artifact-compatibility check is PJRT-specific: the on-disk manifest
+    // is shape-specialized to a class count, the native manifest is not.
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        hasfl::backend::skip_pjrt_only("class-mismatch check needs on-disk AOT artifacts");
+        return;
+    }
     let err = Experiment::builder()
         .config(tiny_config())
         .tune(|c| c.train.classes = 100)
+        .backend(BackendKind::Pjrt)
         .artifacts(&dir)
         .build()
         .unwrap_err();
@@ -116,7 +175,7 @@ fn build_rejects_class_mismatch() {
 fn manual_steps_match_run_to_completion() {
     // Step-driven parity: driving the session by hand produces exactly the
     // history the closed driver produces (same RNG stream, same records).
-    let Some(dir) = artifacts_dir() else { return };
+    let dir = artifacts_dir();
 
     let mut a = Experiment::builder().config(tiny_config()).artifacts(&dir).build().unwrap();
     let mut reports = Vec::new();
@@ -170,7 +229,7 @@ impl Observer for RecordingObserver {
 
 #[test]
 fn observer_callbacks_fire_in_order() {
-    let Some(dir) = artifacts_dir() else { return };
+    let dir = artifacts_dir();
     let events = Rc::new(RefCell::new(Vec::new()));
     let obs = RecordingObserver { events: Rc::clone(&events) };
     let mut session = Experiment::builder()
@@ -219,7 +278,7 @@ impl Observer for StopAfter {
 
 #[test]
 fn observer_can_stop_the_run_early() {
-    let Some(dir) = artifacts_dir() else { return };
+    let dir = artifacts_dir();
     let mut session = Experiment::builder()
         .config(tiny_config())
         .rounds(50)

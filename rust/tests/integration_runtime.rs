@@ -1,31 +1,40 @@
-//! Integration tests over the PJRT runtime + AOT artifacts.
-//!
-//! These tests REQUIRE `artifacts/manifest.json` (run `make artifacts`);
-//! they are skipped with a message otherwise so `cargo test` stays green in
-//! a fresh checkout.
+//! Integration tests over the execution runtime: the engine pool, the
+//! split/full step contract, bucket padding, and the parameter-buffer
+//! cache — on whichever backend the run resolves to (PJRT with AOT
+//! artifacts, native without). These tests never skip; the few
+//! PJRT-specific assertions (compile counters) adapt to the backend.
 
 use std::path::PathBuf;
 
+use hasfl::backend::BackendKind;
 use hasfl::model::{Manifest, Params};
 use hasfl::runtime::{
-    tensor_to_host, tensor_to_shared, BufKey, EngineHandle, ExecInput, HostTensor, StepArtifacts,
+    tensor_to_host, tensor_to_shared, BufKey, EngineHandle, EngineSpec, ExecInput, HostTensor,
+    StepArtifacts,
 };
 
-fn artifacts_dir() -> Option<PathBuf> {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
-        eprintln!("SKIP: no artifacts (run `make artifacts`)");
-        None
-    }
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-fn setup() -> Option<(EngineHandle, Manifest)> {
-    let dir = artifacts_dir()?;
-    let engine = EngineHandle::spawn(dir.clone()).expect("engine");
-    let manifest = Manifest::load(&dir).expect("manifest");
-    Some((engine, manifest))
+/// The backend this run resolves to: `HASFL_BACKEND` if set, else PJRT
+/// when artifacts exist, else native.
+fn backend() -> BackendKind {
+    BackendKind::from_env().unwrap_or(BackendKind::Auto).resolve(&artifacts_dir())
+}
+
+/// Spawn a `width`-lane engine pool on the resolved backend, plus its
+/// manifest and whether the PJRT compile counters apply.
+fn setup_pool(width: usize) -> (EngineHandle, Manifest, bool) {
+    let spec = EngineSpec::resolve(backend(), &artifacts_dir(), 10);
+    let pjrt = spec.kind() == BackendKind::Pjrt;
+    let manifest = spec.manifest().expect("manifest");
+    let engine = EngineHandle::spawn_backend(spec, width).expect("engine");
+    (engine, manifest, pjrt)
+}
+
+fn setup() -> (EngineHandle, Manifest, bool) {
+    setup_pool(1)
 }
 
 /// Deterministic pseudo-batch for tests.
@@ -50,7 +59,7 @@ fn fake_batch(bucket: usize, classes: usize, true_b: usize) -> (HostTensor, Host
 
 #[test]
 fn full_fwd_produces_logits() {
-    let Some((engine, manifest)) = setup() else { return };
+    let (engine, manifest, _) = setup();
     let params = Params::init(&manifest, 1);
     let (x, _, _) = fake_batch(8, manifest.num_classes, 8);
     let name = Manifest::full_name("full_fwd", 8);
@@ -66,7 +75,7 @@ fn full_fwd_produces_logits() {
 #[test]
 fn full_step_loss_near_ln10_at_init() {
     // Random init + balanced labels => loss ~ ln(10) ≈ 2.303.
-    let Some((engine, manifest)) = setup() else { return };
+    let (engine, manifest, _) = setup();
     let params = Params::init(&manifest, 2);
     let (x, y, w) = fake_batch(16, manifest.num_classes, 16);
     let name = Manifest::full_name("full_step", 16);
@@ -84,10 +93,10 @@ fn full_step_loss_near_ln10_at_init() {
 }
 
 #[test]
-fn split_equals_full_through_pjrt() {
-    // The core SFL invariant, across the PJRT boundary this time:
+fn split_equals_full_through_the_engine() {
+    // The core SFL invariant, across the engine boundary this time:
     // client_fwd -> server_step -> client_bwd == full_step.
-    let Some((engine, manifest)) = setup() else { return };
+    let (engine, manifest, _) = setup();
     let params = Params::init(&manifest, 3);
     let classes = manifest.num_classes;
     let (x, y, w) = fake_batch(8, classes, 8);
@@ -137,7 +146,7 @@ fn padded_bucket_matches_unpadded_batch() {
     // batch 5 on bucket 8 == batch 5 run with weights all ones on bucket
     // (well, compare loss+grads against an 8-batch where rows 5..8 have
     // zero weight vs the same rows replaced by garbage — results equal).
-    let Some((engine, manifest)) = setup() else { return };
+    let (engine, manifest, _) = setup();
     let params = Params::init(&manifest, 4);
     let classes = manifest.num_classes;
     let (x, y, w) = fake_batch(8, classes, 5);
@@ -168,7 +177,7 @@ fn padded_bucket_matches_unpadded_batch() {
 
 #[test]
 fn engine_rejects_bad_shapes() {
-    let Some((engine, manifest)) = setup() else { return };
+    let (engine, manifest, _) = setup();
     let name = Manifest::full_name("full_fwd", 8);
     let bad = HostTensor { shape: vec![4, 32, 32, 3], data: vec![0.0; 4 * 32 * 32 * 3] };
     let err = engine.execute_blocking(&name, vec![bad]);
@@ -179,7 +188,7 @@ fn engine_rejects_bad_shapes() {
 
 #[test]
 fn engine_stats_accumulate() {
-    let Some((engine, manifest)) = setup() else { return };
+    let (engine, manifest, pjrt) = setup();
     let params = Params::init(&manifest, 5);
     let (x, _, _) = fake_batch(4, manifest.num_classes, 4);
     let name = Manifest::full_name("full_fwd", 4);
@@ -189,7 +198,8 @@ fn engine_stats_accumulate() {
     engine.execute_blocking(&name, inputs).unwrap();
     let stats = engine.stats_blocking().unwrap();
     assert_eq!(stats.executions, 2);
-    assert_eq!(stats.compiles, 1); // cache hit on the second call
+    // PJRT compiles once and caches; native has nothing to compile.
+    assert_eq!(stats.compiles, if pjrt { 1 } else { 0 });
     assert_eq!(stats.pool_width, 1);
     assert!(stats.exec_secs > 0.0);
     assert!(stats.upload_bytes > 0);
@@ -210,7 +220,7 @@ fn cached_inputs(params: &Params, x: &HostTensor, version: u64) -> Vec<ExecInput
 
 #[test]
 fn buffer_cache_serves_stable_versions_and_invalidates_on_bump() {
-    let Some((engine, manifest)) = setup() else { return };
+    let (engine, manifest, _) = setup();
     let params = Params::init(&manifest, 6);
     let (x, _, _) = fake_batch(4, manifest.num_classes, 4);
     let name = Manifest::full_name("full_fwd", 4);
@@ -254,10 +264,8 @@ fn buffer_cache_serves_stable_versions_and_invalidates_on_bump() {
 
 #[test]
 fn engine_pool_lanes_execute_independently() {
-    let Some(dir) = artifacts_dir() else { return };
-    let engine = EngineHandle::spawn_pool(dir.clone(), 2).expect("pool");
+    let (engine, manifest, pjrt) = setup_pool(2);
     assert_eq!(engine.width(), 2);
-    let manifest = Manifest::load(&dir).expect("manifest");
     let params = Params::init(&manifest, 7);
     let (x, _, _) = fake_batch(4, manifest.num_classes, 4);
     let name = Manifest::full_name("full_fwd", 4);
@@ -278,7 +286,8 @@ fn engine_pool_lanes_execute_independently() {
     let stats = engine.stats_blocking().unwrap();
     assert_eq!(stats.pool_width, 2);
     assert_eq!(stats.executions, 3);
-    assert_eq!(stats.compiles, 2); // one compile per lane
+    // One compile per PJRT lane; native lanes compile nothing.
+    assert_eq!(stats.compiles, if pjrt { 2 } else { 0 });
     let n_params = params.tensors.len() as u64;
     assert_eq!(stats.buffer_misses, 2 * n_params); // one pack per lane
     assert_eq!(stats.buffer_hits, n_params); // the wrapped call hit lane 0

@@ -1,8 +1,8 @@
 //! Scenario-determinism suite: same seed + same `Scenario` spec must give
 //! bit-identical per-round fleet snapshots and round histories — on the
-//! analytic sim path always, and on the executable training path when AOT
-//! artifacts are present (engine-backed halves self-skip otherwise, like
-//! the other integration tests).
+//! analytic sim path and on the executable training path, which runs on
+//! the resolved backend (PJRT with artifacts, native without) and never
+//! skips.
 //!
 //! Also hosts the mega-fleet smoke: the >= 1000-device preset must
 //! complete a 5-round analytic run quickly (the full bench lives in
@@ -14,14 +14,13 @@ use hasfl::config::{Config, StrategyKind};
 use hasfl::experiment::{Experiment, FleetTraceCsv, RoundReport};
 use hasfl::scenario::{Scenario, ScenarioEngine, ScenarioPreset, ScenarioSim};
 
-fn artifacts_dir() -> Option<PathBuf> {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
-        eprintln!("SKIP: no artifacts (run `make artifacts`)");
-        None
-    }
+/// Artifacts directory handed to the builder. The session resolves its
+/// backend from `HASFL_BACKEND` / auto, and the native backend keeps this
+/// suite fully runnable with no artifacts on disk — engine-backed tests
+/// never skip (`HASFL_REQUIRE_ENGINE=1` turns any regression of that into
+/// a hard failure, see `hasfl::backend::skip_engine_test`).
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
 fn sim_config(n: usize, seed: u64) -> Config {
@@ -97,7 +96,7 @@ fn mega_fleet_five_round_smoke() {
     assert!(sim.sim_time().is_finite() && sim.sim_time() > 0.0);
 }
 
-// ---- executable path (self-skips without artifacts) ----------------------
+// ---- executable path (resolved backend; never skips) ---------------------
 
 fn scenario_session_config() -> Config {
     let mut cfg = Config::small();
@@ -143,7 +142,7 @@ fn run_scenario_session(
 
 #[test]
 fn executable_scenario_sessions_are_deterministic() {
-    let Some(dir) = artifacts_dir() else { return };
+    let dir = artifacts_dir();
     let spec = ScenarioPreset::ChurnHeavy.scenario();
     let (rep_a, hist_a) = run_scenario_session(&dir, spec.clone());
     let (rep_b, hist_b) = run_scenario_session(&dir, spec);
@@ -164,7 +163,7 @@ fn executable_scenario_handles_dropouts_and_trains() {
     // Churn-heavy end-to-end through the real engine: dropped devices are
     // skipped, partial aggregation keeps the fleet consistent, and the
     // model still trains (finite losses all the way).
-    let Some(dir) = artifacts_dir() else { return };
+    let dir = artifacts_dir();
     let mut spec = ScenarioPreset::ChurnHeavy.scenario();
     // Crank dropout so a 8-round run reliably sees partial rounds.
     if let Some(churn) = &mut spec.churn {
@@ -184,7 +183,7 @@ fn executable_scenario_handles_dropouts_and_trains() {
 fn static_scenario_matches_plain_session() {
     // The `static` preset must reproduce the historical fixed-fleet run
     // bit-for-bit: same per-round losses, same sim clock, same history.
-    let Some(dir) = artifacts_dir() else { return };
+    let dir = artifacts_dir();
 
     let mut plain = Experiment::builder()
         .config(scenario_session_config())
