@@ -2,7 +2,7 @@
 # hosted CI (.github/workflows/ci.yml) runs the same ./ci.sh battery on
 # the native backend with HASFL_REQUIRE_ENGINE=1 (no skip paths).
 
-.PHONY: check check-native check-pjrt check-deps artifacts artifacts100 test bench-smoke
+.PHONY: check check-native check-pjrt check-deps artifacts artifacts100 test bench-smoke bench-diff serve
 
 # Full battery on the locally-sensible backend: pjrt when AOT artifacts
 # exist, the artifact-free native backend otherwise (so a fresh checkout
@@ -42,6 +42,20 @@ check-deps:
 bench-smoke:
 	cd rust && HASFL_BENCH_SMOKE=1 cargo bench --bench e2e_round
 	cd rust && HASFL_BENCH_SMOKE=1 cargo bench --bench scenario_fleet
+
+# Compare two bench reports (the BENCH_*.json files ci.sh's bench smoke
+# emits) and fail when a p50/p95 leaf regressed beyond MAX_REGRESS percent:
+#   make bench-diff BASE=BENCH_e2e.base.json HEAD=BENCH_e2e.json
+MAX_REGRESS ?= 25
+bench-diff:
+	@test -n "$(BASE)" -a -n "$(HEAD)" || \
+		{ echo "usage: make bench-diff BASE=a.json HEAD=b.json [MAX_REGRESS=25]"; exit 2; }
+	cd rust && cargo run --release --bin hasfl -- bench-diff \
+		--base "$(abspath $(BASE))" --head "$(abspath $(HEAD))" --max-regress "$(MAX_REGRESS)"
+
+# Run the training daemon on its defaults (127.0.0.1:4780, ./serve-state).
+serve:
+	cd rust && cargo run --release --bin hasfl -- serve
 
 # AOT-lower the SplitCNN-8 fwd/bwd artifacts consumed by the PJRT runtime.
 artifacts:

@@ -31,6 +31,13 @@
 #   8. resume smoke         (train 3 rounds -> checkpoint -> resume 2 more;
 #                            history must be byte-identical to 5 straight
 #                            rounds; runs on every backend)
+#   9. serve smoke          (hasfl serve: create a session over HTTP, run 3
+#                            rounds, SIGTERM the daemon, restart it on the
+#                            same state dir, run the rest; the served
+#                            history.csv must be byte-identical to a solo
+#                            run — DESIGN.md §12)
+#  10. json/bench-diff smoke (hasfl info --json parses; hasfl bench-diff
+#                            gates BENCH_*.json tail-latency regressions)
 set -euo pipefail
 
 BACKEND=auto
@@ -94,5 +101,48 @@ CKPT_TMP=$(mktemp -d)
 cmp "$CKPT_TMP/straight.csv" "$CKPT_TMP/resumed.csv"
 rm -rf "$CKPT_TMP"
 echo "resume smoke OK (bit-identical histories)"
+
+echo "== serve smoke (create/run over HTTP -> SIGTERM -> adopt -> byte-identical) =="
+SERVE_TMP=$(mktemp -d)
+# The reference: an uninterrupted 5-round solo run of the same config.
+./target/release/hasfl train --preset small --rounds 5 --seed 4242 \
+  --backend "$BACKEND" --out "$SERVE_TMP/solo.csv"
+serve_start() {
+  rm -f "$SERVE_TMP/state/daemon.addr"
+  ./target/release/hasfl serve --addr 127.0.0.1:0 \
+    --state-dir "$SERVE_TMP/state" --workers 2 &
+  SERVE_PID=$!
+  ADDR=""
+  for _ in $(seq 1 100); do
+    if [ -f "$SERVE_TMP/state/daemon.addr" ]; then
+      ADDR=$(cat "$SERVE_TMP/state/daemon.addr"); break
+    fi
+    sleep 0.1
+  done
+  [ -n "$ADDR" ] || { echo "FAIL: serve daemon did not come up"; exit 1; }
+}
+serve_start
+curl -sf "http://$ADDR/healthz" > /dev/null
+curl -sf -X POST "http://$ADDR/sessions" \
+  -d '{"preset":"small","rounds":5,"seed":4242,"checkpoint_every":3,"run":3}' > /dev/null
+curl -sf "http://$ADDR/sessions/1/wait?round=3&timeout_ms=300000" > /dev/null
+# SIGTERM mid-experiment: the daemon checkpoints the live session on the
+# way down; the restarted daemon adopts it from the state dir at round 3.
+kill -TERM "$SERVE_PID"; wait "$SERVE_PID"
+serve_start
+curl -sf -X POST "http://$ADDR/sessions/1/run" -d '{}' > /dev/null
+curl -sf "http://$ADDR/sessions/1/wait?round=5&timeout_ms=300000" > /dev/null
+curl -sf "http://$ADDR/sessions/1/history.csv" -o "$SERVE_TMP/served.csv"
+kill -TERM "$SERVE_PID"; wait "$SERVE_PID"
+cmp "$SERVE_TMP/solo.csv" "$SERVE_TMP/served.csv"
+rm -rf "$SERVE_TMP"
+echo "serve smoke OK (adopted history byte-identical to the solo run)"
+
+echo "== info --json + bench-diff smoke =="
+./target/release/hasfl info --json --backend "$BACKEND" | python3 -c \
+  'import json,sys; d=json.load(sys.stdin); assert d["service"] == "hasfl", d'
+# Self-comparison: every shared leaf has delta 0, so the gate must pass.
+./target/release/hasfl bench-diff --base "$HASFL_BENCH_JSON" --head "$HASFL_BENCH_JSON"
+echo "json/bench-diff smoke OK"
 
 echo "CI OK (backend: $BACKEND)"

@@ -499,6 +499,13 @@ impl Observer for CheckpointObserver {
     }
 
     fn on_checkpoint(&mut self, _report: &RoundReport, path: &Path) {
+        // Checkpoint writes are announced to every observer; this one only
+        // manages retention for its own directory, so announcements of
+        // writes elsewhere (another observer's request, an explicit
+        // `Session::checkpoint` path) must not enter the pruning window.
+        if path.parent() != Some(self.dir.as_path()) {
+            return;
+        }
         if !self.seeded {
             self.seeded = true;
             self.seed_from_disk(path);

@@ -372,48 +372,81 @@ impl Config {
     }
 
     pub fn from_json(j: &Json) -> crate::Result<Config> {
-        let f = j.req("fleet")?;
-        let s = j.req("server")?;
-        let t = j.req("train")?;
-        let seed = match j.req("seed")? {
-            Json::Str(s) => s.parse::<u64>()?,
-            other => other.as_u64()?,
-        };
+        // Every decode error names the offending JSON path ('fleet.flops',
+        // 'train.lr', ...): the serve daemon surfaces these verbatim as
+        // HTTP 400 bodies, so clients get a pointer, not a bare type error.
+        fn at<T>(path: &str, r: crate::Result<T>) -> crate::Result<T> {
+            r.map_err(|e| anyhow::anyhow!("config field '{path}': {e}"))
+        }
+        let f = j.req("fleet").map_err(|e| anyhow::anyhow!("config section 'fleet': {e}"))?;
+        let s = j.req("server").map_err(|e| anyhow::anyhow!("config section 'server': {e}"))?;
+        let t = j.req("train").map_err(|e| anyhow::anyhow!("config section 'train': {e}"))?;
+        let seed = at(
+            "seed",
+            j.req("seed").and_then(|v| match v {
+                Json::Str(s) => s.parse::<u64>().map_err(|e| anyhow::anyhow!(e)),
+                other => other.as_u64(),
+            }),
+        )?;
         Ok(Config {
             seed,
             fleet: FleetConfig {
-                n_devices: f.req("n_devices")?.as_usize()?,
-                flops: Range::from_json(f.req("flops")?)?,
-                up_bps: Range::from_json(f.req("up_bps")?)?,
-                down_bps: Range::from_json(f.req("down_bps")?)?,
-                fed_up_bps: Range::from_json(f.req("fed_up_bps")?)?,
-                fed_down_bps: Range::from_json(f.req("fed_down_bps")?)?,
-                mem_bytes: f.req("mem_bytes")?.as_f64()?,
+                n_devices: at("fleet.n_devices", f.req("n_devices").and_then(|v| v.as_usize()))?,
+                flops: at("fleet.flops", f.req("flops").and_then(Range::from_json))?,
+                up_bps: at("fleet.up_bps", f.req("up_bps").and_then(Range::from_json))?,
+                down_bps: at("fleet.down_bps", f.req("down_bps").and_then(Range::from_json))?,
+                fed_up_bps: at(
+                    "fleet.fed_up_bps",
+                    f.req("fed_up_bps").and_then(Range::from_json),
+                )?,
+                fed_down_bps: at(
+                    "fleet.fed_down_bps",
+                    f.req("fed_down_bps").and_then(Range::from_json),
+                )?,
+                mem_bytes: at("fleet.mem_bytes", f.req("mem_bytes").and_then(|v| v.as_f64()))?,
             },
             server: Server {
-                flops: s.req("flops")?.as_f64()?,
-                to_fed_bps: s.req("to_fed_bps")?.as_f64()?,
-                from_fed_bps: s.req("from_fed_bps")?.as_f64()?,
+                flops: at("server.flops", s.req("flops").and_then(|v| v.as_f64()))?,
+                to_fed_bps: at("server.to_fed_bps", s.req("to_fed_bps").and_then(|v| v.as_f64()))?,
+                from_fed_bps: at(
+                    "server.from_fed_bps",
+                    s.req("from_fed_bps").and_then(|v| v.as_f64()),
+                )?,
             },
             train: TrainConfig {
-                lr: t.req("lr")?.as_f64()?,
-                agg_interval: t.req("agg_interval")?.as_usize()?,
-                rounds: t.req("rounds")?.as_usize()?,
-                eval_every: t.req("eval_every")?.as_usize()?,
-                batch_cap: t.req("batch_cap")?.as_u32()?,
-                epsilon: t.req("epsilon")?.as_f64()?,
-                classes: t.req("classes")?.as_usize()?,
-                train_samples: t.req("train_samples")?.as_usize()?,
-                test_samples: t.req("test_samples")?.as_usize()?,
+                lr: at("train.lr", t.req("lr").and_then(|v| v.as_f64()))?,
+                agg_interval: at(
+                    "train.agg_interval",
+                    t.req("agg_interval").and_then(|v| v.as_usize()),
+                )?,
+                rounds: at("train.rounds", t.req("rounds").and_then(|v| v.as_usize()))?,
+                eval_every: at("train.eval_every", t.req("eval_every").and_then(|v| v.as_usize()))?,
+                batch_cap: at("train.batch_cap", t.req("batch_cap").and_then(|v| v.as_u32()))?,
+                epsilon: at("train.epsilon", t.req("epsilon").and_then(|v| v.as_f64()))?,
+                classes: at("train.classes", t.req("classes").and_then(|v| v.as_usize()))?,
+                train_samples: at(
+                    "train.train_samples",
+                    t.req("train_samples").and_then(|v| v.as_usize()),
+                )?,
+                test_samples: at(
+                    "train.test_samples",
+                    t.req("test_samples").and_then(|v| v.as_usize()),
+                )?,
             },
-            model: ModelKind::parse(j.req("model")?.as_str()?)?,
-            partition: Partition::parse(j.req("partition")?.as_str()?)?,
-            strategy: StrategyKind::parse(j.req("strategy")?.as_str()?)?,
-            fixed_batch: j.req("fixed_batch")?.as_u32()?,
-            fixed_cut: j.req("fixed_cut")?.as_usize()?,
+            model: at("model", j.req("model").and_then(|v| v.as_str()).and_then(ModelKind::parse))?,
+            partition: at(
+                "partition",
+                j.req("partition").and_then(|v| v.as_str()).and_then(Partition::parse),
+            )?,
+            strategy: at(
+                "strategy",
+                j.req("strategy").and_then(|v| v.as_str()).and_then(StrategyKind::parse),
+            )?,
+            fixed_batch: at("fixed_batch", j.req("fixed_batch").and_then(|v| v.as_u32()))?,
+            fixed_cut: at("fixed_cut", j.req("fixed_cut").and_then(|v| v.as_usize()))?,
             // Absent in configs saved before the engine pool existed: auto.
             engine_pool: match j.get("engine_pool") {
-                Some(v) => v.as_usize()?,
+                Some(v) => at("engine_pool", v.as_usize())?,
                 None => 0,
             },
             // Absent in configs (and checkpoints) saved before the backend
@@ -421,13 +454,13 @@ impl Config {
             // resolves to PJRT wherever they could run at all (resuming a
             // pre-backend checkpoint requires its artifacts anyway).
             backend: match j.get("backend") {
-                Some(v) => BackendKind::parse(v.as_str()?)?,
+                Some(v) => at("backend", v.as_str().and_then(BackendKind::parse))?,
                 None => BackendKind::Auto,
             },
             // Absent in configs saved before the scenario engine existed
             // (and in static-fleet configs): no dynamic scenario.
             scenario: match j.get("scenario") {
-                Some(v) => Some(crate::scenario::Scenario::from_json(v)?),
+                Some(v) => Some(at("scenario", crate::scenario::Scenario::from_json(v))?),
                 None => None,
             },
         })
@@ -605,6 +638,36 @@ mod tests {
         cfg.scenario = Some(crate::scenario::ScenarioPreset::ChurnHeavy.scenario());
         let back = Config::from_json(&Json::parse(&cfg.to_json().dump()).unwrap()).unwrap();
         assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn from_json_errors_name_the_field_path() {
+        // Serve-daemon contract: a bad config field comes back as a 400
+        // whose body names the offending JSON path.
+        let mut j = Config::small().to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(t)) = m.get_mut("train") {
+                t.insert("lr".into(), Json::Str("fast".into()));
+            }
+        }
+        let err = Config::from_json(&j).unwrap_err();
+        assert!(err.to_string().contains("train.lr"), "{err}");
+
+        let mut j = Config::small().to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(f)) = m.get_mut("fleet") {
+                f.remove("flops");
+            }
+        }
+        let err = Config::from_json(&j).unwrap_err();
+        assert!(err.to_string().contains("fleet.flops"), "{err}");
+
+        let mut j = Config::small().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("strategy".into(), Json::Str("warp-speed".into()));
+        }
+        let err = Config::from_json(&j).unwrap_err();
+        assert!(err.to_string().contains("'strategy'"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,328 @@
+//! The ownable session driver: a non-blocking command loop over a
+//! [`Session`], built for callers that multiplex many sessions through a
+//! bounded worker pool (the `hasfl serve` daemon, `crate::serve`).
+//!
+//! A [`SessionDriver`] owns its [`Session`] and pulls [`DriverCommand`]s
+//! from a caller-supplied source *between* rounds: [`SessionDriver::pump`]
+//! drains every queued command, then advances at most one training round,
+//! so control traffic (checkpoint now, pause, close) interleaves with a
+//! long `Run` without waiting for it to finish. Everything the driver does
+//! is announced through a [`SessionEvent`] sink — the same sink an
+//! [`EventBridge`] observer feeds from inside the session, so periodic
+//! [`crate::checkpoint::CheckpointObserver`] writes surface as
+//! [`SessionEvent::Checkpointed`] events too.
+//!
+//! The driver never blocks waiting for commands: an idle driver simply
+//! returns [`Pump::Idle`] and the caller decides when to poll again (the
+//! serve worker pool re-schedules a driver only when new commands arrive).
+
+use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+use crate::metrics::Record;
+
+use super::{Observer, RoundReport, Session};
+
+/// A control message for a [`SessionDriver`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum DriverCommand {
+    /// Run `n` more rounds (additive with rounds still pending).
+    Run(usize),
+    /// Drop all pending rounds; the driver goes idle after the current one.
+    Pause,
+    /// Checkpoint now. `None` writes `ckpt_round_NNNNNN.hckpt` into the
+    /// driver's checkpoint directory ([`SessionDriver::checkpoint_dir`]);
+    /// `Some(path)` writes exactly there.
+    Checkpoint(Option<PathBuf>),
+    /// Finish the session: optionally checkpoint first, flush observers,
+    /// shut the engine down. The driver is closed afterwards.
+    Close { checkpoint: bool },
+}
+
+/// Everything a driver announces through its event sink.
+#[derive(Debug, Clone)]
+pub enum SessionEvent {
+    /// A training round completed.
+    Round(Box<RoundReport>),
+    /// A checkpoint was written (on-demand or by a periodic
+    /// [`crate::checkpoint::CheckpointObserver`] through [`EventBridge`]).
+    Checkpointed { round: usize, path: PathBuf },
+    /// The command queue and pending rounds are drained. `done` is true
+    /// when the session's round budget is exhausted (or an observer
+    /// requested an early stop).
+    Idle { round: usize, done: bool },
+    /// A command failed; the driver stays alive, pending rounds are
+    /// dropped.
+    Error { round: usize, message: String },
+    /// The session finished and the engine shut down; terminal.
+    Closed { round: usize },
+}
+
+/// What a single [`SessionDriver::pump`] call did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pump {
+    /// A round was stepped (or a command executed); call again.
+    Worked,
+    /// Nothing to do until more commands arrive.
+    Idle,
+    /// The session is closed; the driver is spent.
+    Closed,
+}
+
+/// Shared event sink: both the driver and any [`EventBridge`] observer
+/// inside the session publish through it.
+pub type EventSink = Arc<dyn Fn(SessionEvent) + Send + Sync>;
+
+/// Bridges [`Observer`] callbacks out of the session into a driver's
+/// event sink. Attach it alongside a
+/// [`crate::checkpoint::CheckpointObserver`] so its periodic writes are
+/// announced as [`SessionEvent::Checkpointed`] — the driver only sees its
+/// own on-demand checkpoints otherwise.
+pub struct EventBridge {
+    sink: EventSink,
+}
+
+impl EventBridge {
+    pub fn new(sink: EventSink) -> EventBridge {
+        EventBridge { sink }
+    }
+}
+
+impl Observer for EventBridge {
+    fn on_checkpoint(&mut self, report: &RoundReport, path: &std::path::Path) {
+        (self.sink)(SessionEvent::Checkpointed {
+            round: report.round,
+            path: path.to_path_buf(),
+        });
+    }
+}
+
+/// Owns a [`Session`] and drives it one round at a time under external
+/// command flow. See the [module docs](self).
+pub struct SessionDriver {
+    /// `None` after [`DriverCommand::Close`] consumed the session.
+    session: Option<Session>,
+    commands: Receiver<DriverCommand>,
+    sink: EventSink,
+    /// Where parameterless [`DriverCommand::Checkpoint`] requests (and
+    /// close-time checkpoints) land.
+    checkpoint_dir: Option<PathBuf>,
+    /// Rounds still to run.
+    pending: usize,
+    /// Suppresses repeated `Idle` events while nothing changes.
+    announced_idle: bool,
+}
+
+impl SessionDriver {
+    /// Wrap `session`; returns the driver and the command sender feeding
+    /// it. Events go to `sink`.
+    pub fn new(session: Session, sink: EventSink) -> (SessionDriver, Sender<DriverCommand>) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        (
+            SessionDriver {
+                session: Some(session),
+                commands: rx,
+                sink,
+                checkpoint_dir: None,
+                pending: 0,
+                announced_idle: false,
+            },
+            tx,
+        )
+    }
+
+    /// Directory for parameterless checkpoint commands; files are named
+    /// `ckpt_round_NNNNNN.hckpt` (the
+    /// [`crate::checkpoint::CheckpointObserver`] naming, so retention and
+    /// adoption treat both kinds uniformly).
+    pub fn checkpoint_dir(mut self, dir: impl Into<PathBuf>) -> SessionDriver {
+        self.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    /// The wrapped session, while it lives.
+    pub fn session(&self) -> Option<&Session> {
+        self.session.as_ref()
+    }
+
+    /// Rounds queued but not yet run.
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    /// Whether [`DriverCommand::Close`] already consumed the session.
+    pub fn is_closed(&self) -> bool {
+        self.session.is_none()
+    }
+
+    fn emit(&self, event: SessionEvent) {
+        (self.sink)(event);
+    }
+
+    fn checkpoint_path(&self, round: usize, explicit: Option<PathBuf>) -> crate::Result<PathBuf> {
+        match explicit {
+            Some(p) => Ok(p),
+            None => match &self.checkpoint_dir {
+                Some(dir) => Ok(dir.join(format!("ckpt_round_{round:06}.hckpt"))),
+                None => anyhow::bail!(
+                    "checkpoint command without a path, and the driver has no checkpoint_dir"
+                ),
+            },
+        }
+    }
+
+    fn do_checkpoint(&mut self, explicit: Option<PathBuf>) {
+        let round = self.round();
+        match self
+            .checkpoint_path(round, explicit)
+            .and_then(|path| match &self.session {
+                Some(s) => s.checkpoint(&path).map(|()| path),
+                None => anyhow::bail!("session already closed"),
+            }) {
+            Ok(path) => self.emit(SessionEvent::Checkpointed { round, path }),
+            Err(e) => {
+                self.pending = 0;
+                self.emit(SessionEvent::Error { round, message: format!("checkpoint: {e}") });
+            }
+        }
+    }
+
+    fn round(&self) -> usize {
+        self.session.as_ref().map_or(0, |s| s.round())
+    }
+
+    /// Drain queued commands (non-blocking), then advance at most one
+    /// round. Call repeatedly while it returns [`Pump::Worked`].
+    pub fn pump(&mut self) -> Pump {
+        if self.session.is_none() {
+            return Pump::Closed;
+        }
+        // Absorb every queued command first: a `Checkpoint` or `Close`
+        // issued mid-`Run` executes before the next round, not after the
+        // whole run.
+        while let Ok(cmd) = self.commands.try_recv() {
+            match cmd {
+                DriverCommand::Run(n) => {
+                    self.pending = self.pending.saturating_add(n);
+                    self.announced_idle = false;
+                }
+                DriverCommand::Pause => self.pending = 0,
+                DriverCommand::Checkpoint(path) => self.do_checkpoint(path),
+                DriverCommand::Close { checkpoint } => {
+                    if checkpoint {
+                        self.do_checkpoint(None);
+                    }
+                    let round = self.round();
+                    let session = self.session.take().expect("checked non-closed above");
+                    if let Err(e) = session.finish() {
+                        self.emit(SessionEvent::Error {
+                            round,
+                            message: format!("finish: {e}"),
+                        });
+                    }
+                    self.emit(SessionEvent::Closed { round });
+                    return Pump::Closed;
+                }
+            }
+        }
+        let session = self.session.as_mut().expect("checked non-closed above");
+        if self.pending > 0 {
+            if session.is_done() || session.stop_requested() {
+                self.pending = 0;
+            } else {
+                match session.step() {
+                    Ok(report) => {
+                        self.pending -= 1;
+                        self.emit(SessionEvent::Round(Box::new(report)));
+                    }
+                    Err(e) => {
+                        self.pending = 0;
+                        let round = self.round();
+                        self.emit(SessionEvent::Error {
+                            round,
+                            message: format!("step: {e}"),
+                        });
+                    }
+                }
+                return Pump::Worked;
+            }
+        }
+        if !self.announced_idle {
+            self.announced_idle = true;
+            let session = self.session.as_ref().expect("checked non-closed above");
+            self.emit(SessionEvent::Idle {
+                round: session.round(),
+                done: session.is_done() || session.stop_requested(),
+            });
+        }
+        Pump::Idle
+    }
+
+    /// Pump until idle or closed (the standalone, single-session way to
+    /// use a driver; the serve worker pool calls [`SessionDriver::pump`]
+    /// directly so it can interleave other sessions).
+    pub fn run_until_idle(&mut self) -> Pump {
+        loop {
+            match self.pump() {
+                Pump::Worked => continue,
+                outcome => return outcome,
+            }
+        }
+    }
+
+    /// Per-round history records of the live session (restored rounds
+    /// included on resumed sessions).
+    pub fn records(&self) -> Vec<Record> {
+        self.session.as_ref().map_or_else(Vec::new, |s| s.history().records.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    fn collecting_sink() -> (EventSink, Arc<Mutex<Vec<SessionEvent>>>) {
+        let log: Arc<Mutex<Vec<SessionEvent>>> = Arc::new(Mutex::new(Vec::new()));
+        let log2 = log.clone();
+        (Arc::new(move |e| log2.lock().unwrap().push(e)), log)
+    }
+
+    fn fake_report(round: usize) -> RoundReport {
+        RoundReport {
+            round,
+            sim_time: round as f64,
+            outcome: crate::coordinator::RoundOutcome {
+                mean_loss: 1.0,
+                train_acc: 0.5,
+                participants: 1,
+            },
+            latency: crate::latency::RoundLatency {
+                per_device: vec![],
+                server_fwd: 0.0,
+                server_bwd: 0.0,
+                t_split: 1.0,
+                t_agg: 0.0,
+            },
+            aggregated: false,
+            reoptimized: false,
+            decisions: crate::latency::Decisions::uniform(1, 8, 4),
+            test_acc: None,
+            fleet: None,
+        }
+    }
+
+    #[test]
+    fn event_bridge_forwards_checkpoints() {
+        let (sink, log) = collecting_sink();
+        let mut bridge = EventBridge::new(sink);
+        let report = fake_report(7);
+        bridge.on_checkpoint(&report, std::path::Path::new("ck/x.hckpt"));
+        let log = log.lock().unwrap();
+        assert!(matches!(
+            &log[..],
+            [SessionEvent::Checkpointed { round: 7, path }] if path.ends_with("x.hckpt")
+        ));
+    }
+}

@@ -42,9 +42,11 @@
 //! `Trainer::run()` loop: same RNG stream order, same history records
 //! (verified by `rust/tests/experiment_api.rs`).
 
+mod driver;
 mod observer;
 mod session;
 
+pub use driver::{DriverCommand, EventBridge, EventSink, Pump, SessionDriver, SessionEvent};
 pub use observer::{CsvHistory, EarlyStop, FleetTraceCsv, Observer, ProgressLogger};
 pub use session::{RoundReport, Session};
 
@@ -129,7 +131,7 @@ pub struct ExperimentBuilder {
     cfg: Config,
     artifacts: PathBuf,
     concurrent: bool,
-    observers: Vec<Box<dyn Observer>>,
+    observers: Vec<Box<dyn Observer + Send>>,
     /// Checkpoint file to resume from; its embedded config is then
     /// authoritative (only the round budget may be overridden on top).
     resume: Option<PathBuf>,
@@ -300,58 +302,81 @@ impl ExperimentBuilder {
         self.scenario(preset.scenario())
     }
 
-    /// Attach a boxed observer.
-    pub fn observer(mut self, obs: Box<dyn Observer>) -> Self {
+    /// Attach a boxed observer. Observers are `Send` so a built
+    /// [`Session`] can move into a worker thread (the serve daemon's
+    /// session-worker pool does exactly that).
+    pub fn observer(mut self, obs: Box<dyn Observer + Send>) -> Self {
         self.observers.push(obs);
         self
     }
 
     /// Attach an observer by value.
-    pub fn observe(self, obs: impl Observer + 'static) -> Self {
+    pub fn observe(self, obs: impl Observer + Send + 'static) -> Self {
         self.observer(Box::new(obs))
     }
 
     /// Pure configuration checks that need no filesystem access.
+    ///
+    /// Error messages name the offending JSON config path
+    /// (`fleet.n_devices`, `train.lr`, ...) so machine clients — the
+    /// serve daemon turns these into HTTP 400 bodies — get an actionable
+    /// pointer instead of a bare validation string.
     fn validate_config(cfg: &Config) -> crate::Result<()> {
-        anyhow::ensure!(cfg.fleet.n_devices >= 1, "fleet needs at least 1 device");
+        anyhow::ensure!(
+            cfg.fleet.n_devices >= 1,
+            "config field 'fleet.n_devices': fleet needs at least 1 device"
+        );
         anyhow::ensure!(
             (cfg.fleet.n_devices as u64) < crate::runtime::BufKey::RESERVED_FLOOR,
-            "fleet of {} devices collides with the reserved buffer-set ids \
-             (device indices must stay below {})",
+            "config field 'fleet.n_devices': fleet of {} devices collides with the \
+             reserved buffer-set ids (device indices must stay below {})",
             cfg.fleet.n_devices,
             crate::runtime::BufKey::RESERVED_FLOOR
         );
-        cfg.fleet.validate()?;
-        cfg.server.validate()?;
-        anyhow::ensure!(cfg.train.rounds >= 1, "round budget must be >= 1");
-        anyhow::ensure!(cfg.train.eval_every >= 1, "eval_every must be >= 1");
-        anyhow::ensure!(cfg.train.agg_interval >= 1, "agg_interval must be >= 1");
-        anyhow::ensure!(cfg.train.batch_cap >= 1, "batch_cap must be >= 1");
+        cfg.fleet.validate().map_err(|e| anyhow::anyhow!("config section 'fleet': {e}"))?;
+        cfg.server.validate().map_err(|e| anyhow::anyhow!("config section 'server': {e}"))?;
+        anyhow::ensure!(
+            cfg.train.rounds >= 1,
+            "config field 'train.rounds': round budget must be >= 1"
+        );
+        anyhow::ensure!(
+            cfg.train.eval_every >= 1,
+            "config field 'train.eval_every': must be >= 1"
+        );
+        anyhow::ensure!(
+            cfg.train.agg_interval >= 1,
+            "config field 'train.agg_interval': must be >= 1"
+        );
+        anyhow::ensure!(cfg.train.batch_cap >= 1, "config field 'train.batch_cap': must be >= 1");
         anyhow::ensure!(
             cfg.train.lr.is_finite() && cfg.train.lr > 0.0,
-            "learning rate must be positive, got {}",
+            "config field 'train.lr': learning rate must be positive, got {}",
             cfg.train.lr
         );
         anyhow::ensure!(
             cfg.train.epsilon > 0.0,
-            "target epsilon must be positive, got {}",
+            "config field 'train.epsilon': target epsilon must be positive, got {}",
             cfg.train.epsilon
         );
         anyhow::ensure!(
             cfg.train.train_samples >= cfg.fleet.n_devices,
-            "{} train samples cannot cover {} devices",
+            "config field 'train.train_samples': {} train samples cannot cover {} devices",
             cfg.train.train_samples,
             cfg.fleet.n_devices
         );
-        anyhow::ensure!(cfg.fixed_cut >= 1, "fixed_cut must be >= 1 (1-based layer index)");
+        anyhow::ensure!(
+            cfg.fixed_cut >= 1,
+            "config field 'fixed_cut': must be >= 1 (1-based layer index)"
+        );
         anyhow::ensure!(
             cfg.fixed_batch >= 1 && cfg.fixed_batch <= cfg.train.batch_cap,
-            "fixed_batch {} outside 1..={}",
+            "config field 'fixed_batch': {} outside 1..={}",
             cfg.fixed_batch,
             cfg.train.batch_cap
         );
         if let Some(s) = &cfg.scenario {
-            s.validate(cfg.fleet.n_devices)?;
+            s.validate(cfg.fleet.n_devices)
+                .map_err(|e| anyhow::anyhow!("config section 'scenario': {e}"))?;
         }
         Ok(())
     }

@@ -36,6 +36,53 @@ pub struct RoundReport {
     pub fleet: Option<FleetSnapshot>,
 }
 
+impl RoundReport {
+    /// Machine-readable form of the report (the serve daemon's
+    /// `/sessions/:id/reports` and NDJSON event-stream payload). Floats
+    /// print in Rust's shortest round-trip form, so two bit-identical
+    /// runs serialize to byte-identical JSON.
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        // Empty scenario rounds are NaN-marked (no fake 0.0 loss); JSON
+        // has no NaN, so non-finite metrics serialize as null.
+        fn num(v: f64) -> Json {
+            if v.is_finite() {
+                Json::Num(v)
+            } else {
+                Json::Null
+            }
+        }
+        let mut dec = Json::obj();
+        dec.set("batch", Json::Arr(self.decisions.batch.iter().map(|&b| Json::Num(b as f64)).collect()))
+            .set("cut", Json::from_usizes(&self.decisions.cut));
+        let mut j = Json::obj();
+        j.set("round", Json::Num(self.round as f64))
+            .set("sim_time", num(self.sim_time))
+            .set("loss", num(self.outcome.mean_loss))
+            .set("train_acc", num(self.outcome.train_acc))
+            .set("participants", Json::Num(self.outcome.participants as f64))
+            .set("t_split", Json::Num(self.latency.t_split))
+            .set("t_agg", Json::Num(self.latency.t_agg))
+            .set("aggregated", Json::Bool(self.aggregated))
+            .set("reoptimized", Json::Bool(self.reoptimized))
+            .set("decisions", dec);
+        match self.test_acc {
+            Some(a) => j.set("test_acc", Json::Num(a)),
+            None => j.set("test_acc", Json::Null),
+        };
+        if let Some(fleet) = &self.fleet {
+            let mut f = Json::obj();
+            f.set("n_active", Json::Num(fleet.active.len() as f64))
+                .set("n_dropped", Json::Num(fleet.dropped.len() as f64))
+                .set("n_joined", Json::Num(fleet.joined.len() as f64))
+                .set("n_left", Json::Num(fleet.left.len() as f64))
+                .set("drift", Json::Num(fleet.drift));
+            j.set("fleet", f);
+        }
+        j
+    }
+}
+
 /// A live training session over the execution engine (PJRT or native —
 /// DESIGN.md §11).
 ///
@@ -45,13 +92,17 @@ pub struct RoundReport {
 /// observers and shut the engine down.
 pub struct Session {
     trainer: Trainer,
-    observers: Vec<Box<dyn Observer>>,
+    observers: Vec<Box<dyn Observer + Send>>,
     round: usize,
     concurrent: bool,
 }
 
 impl Session {
-    pub(super) fn new(trainer: Trainer, observers: Vec<Box<dyn Observer>>, concurrent: bool) -> Session {
+    pub(super) fn new(
+        trainer: Trainer,
+        observers: Vec<Box<dyn Observer + Send>>,
+        concurrent: bool,
+    ) -> Session {
         Session { trainer, observers, round: 0, concurrent }
     }
 
@@ -197,15 +248,20 @@ impl Session {
         // Checkpoint requests fire last, after every observer booked the
         // round, so the captured state is the complete between-rounds
         // state (collect first: writing borrows the trainer).
-        let mut requests: Vec<(usize, PathBuf)> = Vec::new();
-        for (i, obs) in self.observers.iter_mut().enumerate() {
+        let mut requests: Vec<PathBuf> = Vec::new();
+        for obs in self.observers.iter_mut() {
             if let Some(path) = obs.checkpoint_request(&report) {
-                requests.push((i, path));
+                requests.push(path);
             }
         }
-        for (i, path) in requests {
+        for path in requests {
             self.checkpoint(&path)?;
-            self.observers[i].on_checkpoint(&report, &path);
+            // Every observer hears about every write, not just the one
+            // that asked: event bridges forward checkpoint announcements
+            // without being the retention manager themselves.
+            for obs in self.observers.iter_mut() {
+                obs.on_checkpoint(&report, &path);
+            }
         }
         Ok(report)
     }
@@ -250,5 +306,19 @@ impl Session {
             Some(e) => Err(e),
             None => Ok(history),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    /// The serve daemon moves sessions between worker-pool threads; this
+    /// pins the `Send` bound at compile time (observers are
+    /// `Box<dyn Observer + Send>`, every other field is owned data or
+    /// channel senders).
+    #[test]
+    fn session_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<super::Session>();
+        assert_send::<super::super::SessionDriver>();
     }
 }

@@ -25,8 +25,11 @@
 //! API that every CLI subcommand, figure generator, example, and bench
 //! uses. Long runs survive crashes through [`checkpoint`] — versioned,
 //! atomic on-disk snapshots of the complete training state with
-//! bit-identical warm restarts (DESIGN.md §10). See `DESIGN.md` (repo
-//! root) for the paper-to-module map and the experiment index (§6).
+//! bit-identical warm restarts (DESIGN.md §10). [`serve`] hosts that API
+//! as a long-running multi-tenant daemon (`hasfl serve`): sessions over
+//! HTTP, NDJSON event streams, and checkpoint-on-shutdown restart
+//! adoption (DESIGN.md §12). See `DESIGN.md` (repo root) for the
+//! paper-to-module map and the experiment index (§6).
 
 pub mod aggregation;
 pub mod backend;
@@ -44,6 +47,7 @@ pub mod optimizer;
 pub mod rng;
 pub mod runtime;
 pub mod scenario;
+pub mod serve;
 pub mod util;
 
 pub use config::Config;

@@ -15,8 +15,12 @@
 //!                [--out trace.csv]
 //! hasfl optimize [--devices N] [--model vgg16|resnet18|splitcnn8] [--seed S]
 //! hasfl latency  [--batch B] [--cut C] [--model ...] [--devices N]
-//! hasfl info     [--artifacts DIR] [--backend auto|native|pjrt]
+//! hasfl info     [--artifacts DIR] [--backend auto|native|pjrt] [--json]
 //! hasfl config   [--preset small|figure|table1] [--out cfg.json]
+//! hasfl serve    [--addr HOST:PORT] [--state-dir DIR] [--workers N]
+//!                [--artifacts DIR]
+//! hasfl bench-diff --base BENCH_A.json --head BENCH_B.json
+//!                [--max-regress PCT]
 //! ```
 //!
 //! `--backend` picks the execution engine (DESIGN.md §11): `native` is the
@@ -37,11 +41,11 @@ use hasfl::metrics::{CONVERGENCE_ACC_THRESHOLD, CONVERGENCE_WINDOW};
 use hasfl::model::{Manifest, ModelProfile};
 use hasfl::optimizer::{solve_joint, OptContext};
 use hasfl::rng::Pcg32;
-use hasfl::runtime::EngineHandle;
 use hasfl::scenario::{Scenario, ScenarioPreset, ScenarioSim};
 use hasfl::util::Args;
 
-const USAGE: &str = "usage: hasfl <train|scenario|optimize|latency|info|config> [options]";
+const USAGE: &str =
+    "usage: hasfl <train|scenario|optimize|latency|info|config|serve|bench-diff> [options]";
 
 /// Resolve a `--scenario` value: a path to a spec JSON (anything that
 /// exists on disk) or a preset name.
@@ -328,6 +332,12 @@ fn cmd_info(args: &Args) -> hasfl::Result<()> {
         None => BackendKind::from_env().unwrap_or(BackendKind::Auto),
     }
     .resolve(&artifacts);
+    if args.flag("json") {
+        // The same document the serve daemon answers on GET /info and
+        // /healthz, so probes parse one schema either way.
+        println!("{}", hasfl::serve::info_json(kind, &artifacts)?.dump());
+        return Ok(());
+    }
     let m = match kind {
         BackendKind::Pjrt => Manifest::load(&artifacts)?,
         // `info` has no class flag; the native spec defaults to the
@@ -357,7 +367,7 @@ fn cmd_info(args: &Args) -> hasfl::Result<()> {
     // runtime cannot initialize): spawn one engine lane, warm the smallest
     // monolithic artifact, and report the execution-statistics fields
     // (marshal split, buffer-cache counters, pool width).
-    match engine_smoke(kind, &artifacts, &m) {
+    match hasfl::serve::engine_smoke(kind, &artifacts, &m) {
         Ok(stats) => {
             println!("engine pool width: {} (info uses 1 lane; training uses", stats.pool_width);
             println!("  `engine_pool` from the config, 0 = auto = min(fleet, cores, 8))");
@@ -374,22 +384,6 @@ fn cmd_info(args: &Args) -> hasfl::Result<()> {
         Err(e) => eprintln!("engine smoke skipped (backend unavailable): {e}"),
     }
     Ok(())
-}
-
-fn engine_smoke(
-    kind: BackendKind,
-    artifacts: &std::path::Path,
-    m: &Manifest,
-) -> hasfl::Result<hasfl::runtime::EngineStats> {
-    let engine = match kind {
-        BackendKind::Pjrt => EngineHandle::spawn(artifacts.to_path_buf())?,
-        _ => EngineHandle::spawn_native(m.num_classes)?,
-    };
-    let smallest = m.buckets.iter().copied().min().unwrap_or(1);
-    engine.warm_blocking(&Manifest::full_name("full_fwd", smallest))?;
-    let stats = engine.stats_blocking()?;
-    engine.shutdown();
-    Ok(stats)
 }
 
 fn cmd_config(args: &Args) -> hasfl::Result<()> {
@@ -412,6 +406,95 @@ fn cmd_config(args: &Args) -> hasfl::Result<()> {
     Ok(())
 }
 
+/// SIGINT/SIGTERM flag for `hasfl serve` (set from the handler, polled by
+/// the main loop). No libc crate in the no-new-deps world, so the handler
+/// is registered through `signal(2)` directly.
+#[cfg(unix)]
+static SERVE_SHUTDOWN: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_shutdown_signals() {
+    extern "C" fn on_signal(_sig: i32) {
+        SERVE_SHUTDOWN.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(sig: i32, handler: usize) -> usize;
+    }
+    unsafe {
+        signal(2, on_signal as usize); // SIGINT
+        signal(15, on_signal as usize); // SIGTERM
+    }
+}
+
+#[cfg(unix)]
+fn shutdown_signalled() -> bool {
+    SERVE_SHUTDOWN.load(std::sync::atomic::Ordering::SeqCst)
+}
+
+#[cfg(not(unix))]
+fn install_shutdown_signals() {}
+
+#[cfg(not(unix))]
+fn shutdown_signalled() -> bool {
+    false
+}
+
+fn cmd_serve(args: &Args) -> hasfl::Result<()> {
+    let cfg = hasfl::serve::ServeConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1:4780").to_string(),
+        state_dir: PathBuf::from(args.get("state-dir").unwrap_or("serve-state")),
+        workers: args.get_or("workers", 2usize)?,
+        artifacts: PathBuf::from(args.get("artifacts").unwrap_or("artifacts")),
+    };
+    install_shutdown_signals();
+    let daemon = hasfl::serve::Daemon::start(cfg)?;
+    eprintln!(
+        "hasfl serve: listening on http://{} ({} live session{})",
+        daemon.addr(),
+        daemon.live_sessions(),
+        if daemon.live_sessions() == 1 { "" } else { "s" }
+    );
+    while !shutdown_signalled() && !daemon.shutdown_requested() {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    eprintln!("hasfl serve: shutting down (checkpointing live sessions)");
+    daemon.stop()
+}
+
+fn cmd_bench_diff(args: &Args) -> hasfl::Result<()> {
+    let base_path = args.get("base").ok_or_else(|| anyhow::anyhow!("--base is required"))?;
+    let head_path = args.get("head").ok_or_else(|| anyhow::anyhow!("--head is required"))?;
+    let max_regress = args.get_or("max-regress", 25.0f64)?;
+    let load = |p: &str| -> hasfl::Result<hasfl::util::Json> {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| anyhow::anyhow!("cannot read '{p}': {e}"))?;
+        hasfl::util::Json::parse(&text).map_err(|e| anyhow::anyhow!("'{p}': {e}"))
+    };
+    let base = load(base_path)?;
+    let head = load(head_path)?;
+    let deltas = hasfl::metrics::bench_diff(&base, &head);
+    anyhow::ensure!(
+        !deltas.is_empty(),
+        "'{base_path}' and '{head_path}' share no numeric fields — not comparable bench reports"
+    );
+    println!("{:<40} {:>14} {:>14} {:>9}", "metric", "base", "head", "delta");
+    for d in &deltas {
+        println!("{:<40} {:>14.6} {:>14.6} {:>+8.2}%", d.path, d.base, d.head, d.delta_pct);
+    }
+    let regressions = hasfl::metrics::bench_regressions(&deltas, max_regress);
+    if !regressions.is_empty() {
+        for d in &regressions {
+            eprintln!("REGRESSION: {} {:+.2}% (limit {max_regress}%)", d.path, d.delta_pct);
+        }
+        anyhow::bail!(
+            "{} tail-latency metric(s) regressed beyond {max_regress}%",
+            regressions.len()
+        );
+    }
+    eprintln!("ok: no p50/p95 regression beyond {max_regress}%");
+    Ok(())
+}
+
 fn main() -> hasfl::Result<()> {
     let args = Args::from_env()?;
     match args.subcommand.as_deref() {
@@ -421,6 +504,8 @@ fn main() -> hasfl::Result<()> {
         Some("latency") => cmd_latency(&args),
         Some("info") => cmd_info(&args),
         Some("config") => cmd_config(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("bench-diff") => cmd_bench_diff(&args),
         _ => {
             eprintln!("{USAGE}");
             std::process::exit(2);
@@ -436,7 +521,9 @@ mod tests {
     fn usage_names_every_subcommand() {
         // The doc comment, USAGE string, and main() dispatch must stay in
         // sync; this guards the USAGE half.
-        for sub in ["train", "scenario", "optimize", "latency", "info", "config"] {
+        for sub in
+            ["train", "scenario", "optimize", "latency", "info", "config", "serve", "bench-diff"]
+        {
             assert!(USAGE.contains(sub), "USAGE is missing '{sub}'");
         }
     }

@@ -152,23 +152,33 @@ impl History {
             .or_else(|| self.eval_points().last().copied())
     }
 
+    /// The `round,sim_time,loss,test_acc` CSV as a string — the one
+    /// rendering shared by [`History::write_csv`] and the serve daemon's
+    /// `/history.csv` endpoint, so a streamed history is byte-identical to
+    /// a written file.
+    pub fn to_csv_string(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::from("round,sim_time,loss,test_acc\n");
+        for r in &self.records {
+            let _ = writeln!(
+                out,
+                "{},{:.6},{:.6},{}",
+                r.round,
+                r.sim_time,
+                r.loss,
+                r.test_acc.map_or(String::new(), |a| format!("{a:.6}"))
+            );
+        }
+        out
+    }
+
     /// Write `round,sim_time,loss,test_acc` CSV.
     pub fn write_csv(&self, path: &std::path::Path) -> crate::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::fs::File::create(path)?;
-        writeln!(f, "round,sim_time,loss,test_acc")?;
-        for r in &self.records {
-            writeln!(
-                f,
-                "{},{:.6},{:.6},{}",
-                r.round,
-                r.sim_time,
-                r.loss,
-                r.test_acc.map_or(String::new(), |a| format!("{a:.6}"))
-            )?;
-        }
+        f.write_all(self.to_csv_string().as_bytes())?;
         Ok(())
     }
 }
@@ -306,6 +316,65 @@ impl CsvTable {
     }
 }
 
+/// One numeric leaf shared by two benchmark JSON documents (see
+/// [`bench_diff`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchDelta {
+    /// Dotted path of the leaf, e.g. `latency.p95_ms`.
+    pub path: String,
+    pub base: f64,
+    pub head: f64,
+    /// Relative change in percent; 0 when the base is 0 (no meaningful
+    /// relative measure).
+    pub delta_pct: f64,
+}
+
+/// Compare two benchmark JSON documents (`BENCH_*.json` as emitted by the
+/// bench binaries via [`LatencySummary::to_json`]) by walking every
+/// numeric leaf both share. Leaves present on only one side are skipped:
+/// benches gain and lose fields across commits, and `hasfl bench-diff`
+/// must keep working across that skew.
+pub fn bench_diff(base: &Json, head: &Json) -> Vec<BenchDelta> {
+    fn walk(base: &Json, head: &Json, path: &str, out: &mut Vec<BenchDelta>) {
+        match (base, head) {
+            (Json::Obj(b), Json::Obj(h)) => {
+                for (key, bv) in b {
+                    if let Some(hv) = h.get(key) {
+                        let sub = if path.is_empty() {
+                            key.clone()
+                        } else {
+                            format!("{path}.{key}")
+                        };
+                        walk(bv, hv, &sub, out);
+                    }
+                }
+            }
+            (Json::Num(b), Json::Num(h)) => {
+                let delta_pct = if *b != 0.0 { (h - b) / b * 100.0 } else { 0.0 };
+                out.push(BenchDelta { path: path.to_string(), base: *b, head: *h, delta_pct });
+            }
+            _ => {}
+        }
+    }
+    let mut out = Vec::new();
+    walk(base, head, "", &mut out);
+    out
+}
+
+/// The deltas that count as regressions for CI gating: tail-latency leaves
+/// (`p50*`/`p95*`) that grew by more than `max_regress_pct` percent.
+/// Throughput-ish counters (bytes, hits) swing with environment noise and
+/// never gate.
+pub fn bench_regressions(deltas: &[BenchDelta], max_regress_pct: f64) -> Vec<&BenchDelta> {
+    deltas
+        .iter()
+        .filter(|d| {
+            let leaf = d.path.rsplit('.').next().unwrap_or(&d.path);
+            (leaf.starts_with("p50") || leaf.starts_with("p95")) && d.delta_pct > max_regress_pct
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -420,5 +489,39 @@ mod tests {
         let j = ms.to_json("ms");
         assert!(j.get("p95_ms").is_some());
         assert!(j.get("samples").is_some());
+    }
+
+    #[test]
+    fn bench_diff_walks_shared_numeric_leaves() {
+        let base = Json::parse(
+            r#"{"latency": {"p50_ms": 10.0, "p95_ms": 20.0, "samples": 100},
+                "gone": 1.0, "label": "a"}"#,
+        )
+        .unwrap();
+        let head = Json::parse(
+            r#"{"latency": {"p50_ms": 11.0, "p95_ms": 18.0, "samples": 100},
+                "new": 2.0, "label": "b"}"#,
+        )
+        .unwrap();
+        let deltas = bench_diff(&base, &head);
+        let paths: Vec<&str> = deltas.iter().map(|d| d.path.as_str()).collect();
+        // Shared numeric leaves only: no `gone`, no `new`, no strings.
+        assert_eq!(paths, vec!["latency.p50_ms", "latency.p95_ms", "latency.samples"]);
+        let p50 = &deltas[0];
+        assert!((p50.delta_pct - 10.0).abs() < 1e-9, "{}", p50.delta_pct);
+
+        // Only p50/p95 growth beyond the threshold gates.
+        let regressions = bench_regressions(&deltas, 5.0);
+        assert_eq!(regressions.len(), 1);
+        assert_eq!(regressions[0].path, "latency.p50_ms");
+        assert!(bench_regressions(&deltas, 15.0).is_empty());
+    }
+
+    #[test]
+    fn bench_diff_zero_base_has_no_relative_delta() {
+        let base = Json::parse(r#"{"p95_ms": 0.0}"#).unwrap();
+        let head = Json::parse(r#"{"p95_ms": 5.0}"#).unwrap();
+        let deltas = bench_diff(&base, &head);
+        assert_eq!(deltas[0].delta_pct, 0.0);
     }
 }

@@ -1,0 +1,116 @@
+//! Machine-readable payload builders shared by the CLI and the daemon.
+//!
+//! `hasfl info --json`, the daemon's `GET /info`, and `GET /healthz` all
+//! serve the same [`info_json`] document, so probes and scripts parse one
+//! schema regardless of which door they knock on.
+
+use std::path::Path;
+
+use crate::backend::{BackendKind, ModelSpec};
+use crate::model::Manifest;
+use crate::runtime::{EngineHandle, EngineStats};
+use crate::util::Json;
+
+/// Backend/model/engine info as one JSON document. `kind` must already be
+/// resolved (never [`BackendKind::Auto`]). The engine block is best-effort:
+/// it spawns one engine lane, warms the smallest artifact, and reports the
+/// execution statistics; when the backend cannot initialize the block is
+/// replaced by an `engine_error` string so `info` stays usable.
+pub fn info_json(kind: BackendKind, artifacts: &Path) -> crate::Result<Json> {
+    let m = match kind {
+        BackendKind::Pjrt => Manifest::load(artifacts)?,
+        // No class flag here; the native spec defaults to the 10-class
+        // model every preset trains.
+        _ => ModelSpec::splitcnn8(10).manifest(),
+    };
+    let hlo_bytes: u64 = if kind == BackendKind::Pjrt {
+        m.artifacts
+            .iter()
+            .filter_map(|a| std::fs::metadata(m.dir.join(&a.path)).ok())
+            .map(|md| md.len())
+            .sum()
+    } else {
+        0
+    };
+
+    let mut model = Json::obj();
+    model
+        .set("name", Json::Str(m.model.clone()))
+        .set("classes", Json::Num(m.num_classes as f64))
+        .set("blocks", Json::Num(m.num_blocks as f64))
+        .set("cuts", Json::from_usizes(&m.valid_cuts))
+        .set(
+            "buckets",
+            Json::Arr(m.buckets.iter().map(|&b| Json::Num(b as f64)).collect()),
+        )
+        .set("artifacts", Json::Num(m.artifacts.len() as f64))
+        .set("hlo_bytes", Json::Num(hlo_bytes as f64));
+
+    let mut j = Json::obj();
+    j.set("service", Json::Str("hasfl".into()))
+        .set("backend", Json::Str(kind.as_str().into()))
+        .set("model", model);
+    match engine_smoke(kind, artifacts, &m) {
+        Ok(stats) => {
+            j.set("engine", engine_stats_json(&stats));
+        }
+        Err(e) => {
+            j.set("engine_error", Json::Str(e.to_string()));
+        }
+    }
+    Ok(j)
+}
+
+/// Engine execution statistics as JSON.
+pub fn engine_stats_json(stats: &EngineStats) -> Json {
+    let mut j = Json::obj();
+    j.set("pool_width", Json::Num(stats.pool_width as f64))
+        .set("executions", Json::Num(stats.executions as f64))
+        .set("compiles", Json::Num(stats.compiles as f64))
+        .set("upload_bytes", Json::Num(stats.upload_bytes as f64))
+        .set("download_bytes", Json::Num(stats.download_bytes as f64))
+        .set("buffer_hits", Json::Num(stats.buffer_hits as f64))
+        .set("buffer_misses", Json::Num(stats.buffer_misses as f64))
+        .set("buffer_hit_bytes", Json::Num(stats.buffer_hit_bytes as f64));
+    j
+}
+
+/// Spawn one engine lane, warm the smallest monolithic artifact, and
+/// return its execution statistics (the `info` runtime smoke).
+pub fn engine_smoke(
+    kind: BackendKind,
+    artifacts: &Path,
+    m: &Manifest,
+) -> crate::Result<EngineStats> {
+    let engine = match kind {
+        BackendKind::Pjrt => EngineHandle::spawn(artifacts.to_path_buf())?,
+        _ => EngineHandle::spawn_native(m.num_classes)?,
+    };
+    let smallest = m.buckets.iter().copied().min().unwrap_or(1);
+    engine.warm_blocking(&Manifest::full_name("full_fwd", smallest))?;
+    let stats = engine.stats_blocking()?;
+    engine.shutdown();
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_info_json_shape() {
+        let j = info_json(BackendKind::Native, Path::new("/nonexistent")).unwrap();
+        assert_eq!(j.get("service").unwrap().as_str().unwrap(), "hasfl");
+        assert_eq!(j.get("backend").unwrap().as_str().unwrap(), "native");
+        let model = j.get("model").unwrap();
+        assert_eq!(model.get("name").unwrap().as_str().unwrap(), "splitcnn8");
+        assert_eq!(model.get("classes").unwrap().as_usize().unwrap(), 10);
+        assert!(!model.get("cuts").unwrap().as_arr().unwrap().is_empty());
+        // The native backend always initializes, so the engine block is
+        // present with one warmed lane.
+        let engine = j.get("engine").unwrap();
+        assert_eq!(engine.get("pool_width").unwrap().as_usize().unwrap(), 1);
+        // And the document is valid JSON end to end.
+        assert_eq!(Json::parse(&j.dump()).unwrap(), j);
+    }
+}

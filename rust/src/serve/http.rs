@@ -1,0 +1,263 @@
+//! Minimal HTTP/1.1 substrate for the serve daemon.
+//!
+//! With no crates.io access there is no hyper/axum; the daemon speaks the
+//! subset of HTTP/1.1 it needs over [`std::net::TcpStream`] directly:
+//! request-line + headers + `Content-Length` bodies in, fixed responses or
+//! `Connection: close` NDJSON streams out. Every connection serves exactly
+//! one request (`Connection: close`), which keeps the state machine
+//! trivial and lets streaming endpoints delimit their body by EOF.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+use crate::util::Json;
+
+/// Largest request body the daemon accepts (configs are a few KiB; this
+/// bound stops a hostile `Content-Length` from ballooning memory).
+const MAX_BODY: usize = 4 * 1024 * 1024;
+
+/// A parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Decoded path without the query string, e.g. `/sessions/3/run`.
+    pub path: String,
+    /// Query parameters (`?from=4&follow=1`).
+    pub query: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Path split into non-empty segments: `/sessions/3/run` ->
+    /// `["sessions", "3", "run"]`.
+    pub fn segments(&self) -> Vec<&str> {
+        self.path.split('/').filter(|s| !s.is_empty()).collect()
+    }
+
+    /// A query parameter, parsed.
+    pub fn query_opt<T: std::str::FromStr>(&self, key: &str) -> crate::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.query.get(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("query parameter '{key}'='{s}': {e}")),
+        }
+    }
+
+    /// The body parsed as JSON; an empty body parses as an empty object so
+    /// `POST /sessions/3/checkpoint` needs no payload.
+    pub fn json_body(&self) -> crate::Result<Json> {
+        if self.body.is_empty() {
+            return Ok(Json::obj());
+        }
+        let text = std::str::from_utf8(&self.body)
+            .map_err(|e| anyhow::anyhow!("request body is not UTF-8: {e}"))?;
+        Json::parse(text).map_err(|e| anyhow::anyhow!("request body is not valid JSON: {e}"))
+    }
+}
+
+/// Read and parse one request from the stream.
+pub fn read_request(stream: &mut TcpStream) -> crate::Result<Request> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty request line"))?
+        .to_uppercase();
+    let target = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("request line has no target"))?;
+    let (path, query_str) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    let mut query = BTreeMap::new();
+    for pair in query_str.split('&').filter(|p| !p.is_empty()) {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        query.insert(percent_decode(k), percent_decode(v));
+    }
+    let path = percent_decode(path);
+
+    // Headers: we only need Content-Length.
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header)?;
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad Content-Length: {e}"))?;
+            }
+        }
+    }
+    anyhow::ensure!(content_length <= MAX_BODY, "request body too large ({content_length} bytes)");
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(Request { method, path, query, body })
+}
+
+fn percent_decode(s: &str) -> String {
+    fn hex(b: u8) -> Option<u8> {
+        match b {
+            b'0'..=b'9' => Some(b - b'0'),
+            b'a'..=b'f' => Some(b - b'a' + 10),
+            b'A'..=b'F' => Some(b - b'A' + 10),
+            _ => None,
+        }
+    }
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'%' if i + 2 < bytes.len() => match (hex(bytes[i + 1]), hex(bytes[i + 2])) {
+                (Some(hi), Some(lo)) => {
+                    out.push(hi << 4 | lo);
+                    i += 3;
+                }
+                _ => {
+                    out.push(b'%');
+                    i += 1;
+                }
+            },
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        409 => "Conflict",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete response with a body and close-delimited semantics.
+pub fn respond(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> crate::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        reason(status),
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Write a JSON response.
+pub fn respond_json(stream: &mut TcpStream, status: u16, json: &Json) -> crate::Result<()> {
+    respond(stream, status, "application/json", json.dump().as_bytes())
+}
+
+/// Write a JSON error body `{"error": message}`.
+pub fn respond_error(stream: &mut TcpStream, status: u16, message: &str) -> crate::Result<()> {
+    let mut j = Json::obj();
+    j.set("error", Json::Str(message.to_string()));
+    respond_json(stream, status, &j)
+}
+
+/// Start an EOF-delimited streaming response (NDJSON): writes the header
+/// block; the caller then writes newline-terminated JSON lines directly and
+/// simply drops the stream to finish.
+pub fn start_stream(stream: &mut TcpStream, content_type: &str) -> crate::Result<()> {
+    let head = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: {content_type}\r\nConnection: close\r\n\r\n"
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percent_decoding() {
+        assert_eq!(percent_decode("a%20b+c"), "a b c");
+        assert_eq!(percent_decode("plain"), "plain");
+        assert_eq!(percent_decode("%zz"), "%zz");
+        assert_eq!(percent_decode("trailing%2"), "trailing%2");
+    }
+
+    #[test]
+    fn request_over_a_socket_roundtrips() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(
+                b"POST /sessions/3/run?from=4&follow=1 HTTP/1.1\r\n\
+                  Host: x\r\nContent-Length: 13\r\n\r\n{\"rounds\": 2}",
+            )
+            .unwrap();
+            let mut out = String::new();
+            s.read_to_string(&mut out).unwrap();
+            out
+        });
+        let (mut conn, _) = listener.accept().unwrap();
+        let req = read_request(&mut conn).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.segments(), vec!["sessions", "3", "run"]);
+        assert_eq!(req.query.get("from").map(String::as_str), Some("4"));
+        assert_eq!(req.query_opt::<usize>("follow").unwrap(), Some(1));
+        assert_eq!(
+            req.json_body().unwrap().get("rounds").unwrap().as_usize().unwrap(),
+            2
+        );
+        let mut j = Json::obj();
+        j.set("ok", Json::Bool(true));
+        respond_json(&mut conn, 200, &j).unwrap();
+        drop(conn);
+        let reply = client.join().unwrap();
+        assert!(reply.starts_with("HTTP/1.1 200 OK"), "{reply}");
+        assert!(reply.ends_with("{\"ok\":true}"), "{reply}");
+    }
+
+    #[test]
+    fn empty_body_parses_as_empty_object() {
+        let r = Request {
+            method: "POST".into(),
+            path: "/x".into(),
+            query: BTreeMap::new(),
+            body: vec![],
+        };
+        assert_eq!(r.json_body().unwrap(), Json::obj());
+    }
+}

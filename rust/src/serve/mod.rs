@@ -1,0 +1,870 @@
+//! `hasfl serve` — the long-running multi-tenant training daemon
+//! (DESIGN.md §12).
+//!
+//! The daemon exposes the [`crate::experiment`] API over HTTP: create
+//! sessions from JSON configs, run/step them, stream their
+//! [`crate::experiment::RoundReport`]s as NDJSON, checkpoint on demand,
+//! and list/inspect/delete them — many experiments multiplexed through one
+//! process, one bounded worker pool, and one engine-lane budget.
+//!
+//! # Architecture
+//!
+//! ```text
+//!  HTTP conn threads ──commands──▶ per-session mpsc ──▶ SessionDriver
+//!        │                                                  │ owned by
+//!        │        job queue (session ids)                   ▼
+//!        └──kick──▶ [JobQueue] ──pop──▶ worker pool (N threads, pump loop)
+//!                                                           │
+//!        readers ◀──tail by offset── [EventLog] ◀──events───┘
+//! ```
+//!
+//! Every session lives in a [`SessionSlot`]: the driver sits in a mutexed
+//! `Option` that exactly one worker takes while pumping; commands enqueue
+//! onto the session's channel and *kick* the job queue, so an idle session
+//! costs nothing and a busy one absorbs new commands between rounds. The
+//! kick counter ([`SessionSlot::kicks`]) closes the classic lost-wakeup
+//! race: a worker about to park the driver re-checks it and re-enqueues
+//! the job if a command slipped in after its final drain.
+//!
+//! # Restart protocol
+//!
+//! Sessions survive daemon restarts. On graceful shutdown (SIGINT/SIGTERM
+//! or `POST /shutdown`) every live session is checkpointed into its state
+//! directory via the `HASFLCKP` machinery (DESIGN.md §10); a daemon
+//! started on the same `--state-dir` re-adopts each `session_*` directory
+//! by resuming its newest valid checkpoint (older ones are fallbacks
+//! against torn files), so resumed histories are bit-identical to
+//! uninterrupted runs.
+
+mod api;
+mod http;
+mod queue;
+
+pub use api::{engine_smoke, engine_stats_json, info_json};
+pub use queue::{event_json, EventLog, JobQueue, LogState};
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::backend::BackendKind;
+use crate::checkpoint::CheckpointObserver;
+use crate::config::Config;
+use crate::experiment::{
+    DriverCommand, EventBridge, EventSink, Experiment, ExperimentBuilder, Preset, Pump,
+    SessionDriver,
+};
+use crate::metrics::History;
+use crate::util::Json;
+
+/// How the daemon binds and where it keeps session state.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Listen address; port 0 picks a free port (the bound address is
+    /// written to `<state_dir>/daemon.addr` either way).
+    pub addr: String,
+    /// Session state root: one `session_NNNNNN/` directory per session
+    /// (meta.json + checkpoints), adopted on restart.
+    pub state_dir: PathBuf,
+    /// Session-worker pool size (sessions stepped concurrently).
+    pub workers: usize,
+    /// AOT-artifacts directory (PJRT backend; native needs none).
+    pub artifacts: PathBuf,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:4780".into(),
+            state_dir: PathBuf::from("serve-state"),
+            workers: 2,
+            artifacts: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+/// One hosted session: registry entry + driver parking spot + event log.
+struct SessionSlot {
+    id: u64,
+    name: String,
+    dir: PathBuf,
+    /// Command channel into the driver.
+    cmd: Mutex<Sender<DriverCommand>>,
+    /// The driver parks here while no worker is pumping it.
+    driver: Mutex<Option<SessionDriver>>,
+    /// Bumped on every enqueued command; workers compare before/after
+    /// parking the driver to close the lost-wakeup race.
+    kicks: AtomicU64,
+    log: Arc<EventLog>,
+    /// Canonical config of the built session (resolved backend included).
+    config: Json,
+    rounds_budget: usize,
+    checkpoint_every: Option<usize>,
+    keep_last: usize,
+    concurrent: bool,
+}
+
+impl SessionSlot {
+    /// Queue a command and kick the worker pool. Duplicate kicks are
+    /// harmless; a missing kick would strand the command, so every
+    /// enqueue kicks.
+    fn enqueue(&self, core: &Core, cmd: DriverCommand) {
+        let _ = self.cmd.lock().unwrap().send(cmd);
+        self.kicks.fetch_add(1, Ordering::SeqCst);
+        core.jobs.push(self.id);
+    }
+
+    fn summary(&self) -> Json {
+        self.log.with(|s| {
+            let mut j = Json::obj();
+            j.set("id", Json::Num(self.id as f64))
+                .set("name", Json::Str(self.name.clone()))
+                .set("round", Json::Num(s.round as f64))
+                .set("rounds", Json::Num(self.rounds_budget as f64))
+                .set("done", Json::Bool(s.done))
+                .set("closed", Json::Bool(s.closed))
+                .set("checkpoints", Json::Num(s.checkpoints.len() as f64))
+                .set("events", Json::Num(s.events.len() as f64));
+            match &s.last_error {
+                Some(e) => j.set("last_error", Json::Str(e.clone())),
+                None => j.set("last_error", Json::Null),
+            };
+            j
+        })
+    }
+}
+
+/// Shared daemon state.
+struct Core {
+    state_dir: PathBuf,
+    artifacts: PathBuf,
+    workers: usize,
+    sessions: Mutex<BTreeMap<u64, Arc<SessionSlot>>>,
+    next_id: AtomicU64,
+    jobs: JobQueue,
+    /// The daemon is tearing down: accept loop and workers exit, event
+    /// followers unblock.
+    shutdown: AtomicBool,
+    /// `POST /shutdown` was called; the owner (CLI loop or test) should
+    /// call [`Daemon::stop`].
+    shutdown_requested: AtomicBool,
+    /// Cached `info` payload (computed once at startup).
+    info: Json,
+}
+
+/// A running daemon. Dropping it (or calling [`Daemon::stop`]) performs
+/// the graceful shutdown: stop accepting, drain workers, checkpoint and
+/// close every live session.
+pub struct Daemon {
+    core: Arc<Core>,
+    addr: SocketAddr,
+    accept: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Daemon {
+    /// Bind, adopt any sessions left in the state directory, and start
+    /// the worker pool and accept loop.
+    pub fn start(cfg: ServeConfig) -> crate::Result<Daemon> {
+        std::fs::create_dir_all(&cfg.state_dir)?;
+        let kind = BackendKind::from_env()
+            .unwrap_or(BackendKind::Auto)
+            .resolve(&cfg.artifacts);
+        let info = api::info_json(kind, &cfg.artifacts)?;
+        let workers_n = cfg.workers.max(1);
+        let core = Arc::new(Core {
+            state_dir: cfg.state_dir.clone(),
+            artifacts: cfg.artifacts.clone(),
+            workers: workers_n,
+            sessions: Mutex::new(BTreeMap::new()),
+            next_id: AtomicU64::new(1),
+            jobs: JobQueue::new(),
+            shutdown: AtomicBool::new(false),
+            shutdown_requested: AtomicBool::new(false),
+            info,
+        });
+        adopt_sessions(&core);
+
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| anyhow::anyhow!("cannot bind '{}': {e}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        std::fs::write(cfg.state_dir.join("daemon.addr"), format!("{addr}\n"))?;
+        listener.set_nonblocking(true)?;
+
+        let workers = (0..workers_n)
+            .map(|_| {
+                let core = core.clone();
+                std::thread::spawn(move || worker_loop(&core))
+            })
+            .collect();
+        let accept = {
+            let core = core.clone();
+            Some(std::thread::spawn(move || accept_loop(&core, &listener)))
+        };
+        Ok(Daemon { core, addr, accept, workers })
+    }
+
+    /// The bound listen address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Whether a client asked the daemon to shut down (`POST /shutdown`).
+    pub fn shutdown_requested(&self) -> bool {
+        self.core.shutdown_requested.load(Ordering::SeqCst)
+    }
+
+    /// Live (non-closed) session count.
+    pub fn live_sessions(&self) -> usize {
+        let slots: Vec<_> = self.core.sessions.lock().unwrap().values().cloned().collect();
+        slots.iter().filter(|s| !s.log.with(|l| l.closed)).count()
+    }
+
+    /// Graceful shutdown: stop accepting, drain the worker pool, then
+    /// checkpoint and close every live session (the restart protocol's
+    /// write half).
+    pub fn stop(mut self) -> crate::Result<()> {
+        self.shutdown_impl();
+        Ok(())
+    }
+
+    fn shutdown_impl(&mut self) {
+        if self.accept.is_none() {
+            return;
+        }
+        self.core.shutdown.store(true, Ordering::SeqCst);
+        let slots: Vec<_> = self.core.sessions.lock().unwrap().values().cloned().collect();
+        for slot in &slots {
+            slot.log.nudge();
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for _ in 0..self.workers.len() {
+            self.core.jobs.push_stop();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        // Workers are gone, so every non-closed driver is parked. Close
+        // each one inline: checkpoint at the current round, flush
+        // observers, shut the engine down.
+        for slot in &slots {
+            if slot.log.with(|s| s.closed) {
+                continue;
+            }
+            let Some(mut driver) = slot.driver.lock().unwrap().take() else {
+                eprintln!("serve: session {} has no parked driver at shutdown", slot.id);
+                continue;
+            };
+            let _ = slot.cmd.lock().unwrap().send(DriverCommand::Close { checkpoint: true });
+            loop {
+                match driver.pump() {
+                    Pump::Worked => continue,
+                    Pump::Closed | Pump::Idle => break,
+                }
+            }
+        }
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        self.shutdown_impl();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker pool
+// ---------------------------------------------------------------------------
+
+fn worker_loop(core: &Arc<Core>) {
+    while let Some(id) = core.jobs.pop() {
+        let slot = core.sessions.lock().unwrap().get(&id).cloned();
+        let Some(slot) = slot else { continue };
+        // Another worker is already pumping this session: it will drain
+        // whatever command triggered this job (or re-kick on its way out).
+        let taken = slot.driver.lock().unwrap().take();
+        let Some(mut driver) = taken else { continue };
+        loop {
+            if core.shutdown.load(Ordering::SeqCst) {
+                *slot.driver.lock().unwrap() = Some(driver);
+                break;
+            }
+            let kicks_before = slot.kicks.load(Ordering::SeqCst);
+            match driver.pump() {
+                Pump::Worked => continue,
+                Pump::Closed => break, // terminal; the log got the Closed event
+                Pump::Idle => {
+                    if slot.kicks.load(Ordering::SeqCst) != kicks_before {
+                        continue; // a command landed during the pump
+                    }
+                    *slot.driver.lock().unwrap() = Some(driver);
+                    // A command may have slipped in between the check above
+                    // and parking the driver — and its job may already have
+                    // bounced off the empty slot. Re-kick to cover it.
+                    if slot.kicks.load(Ordering::SeqCst) != kicks_before {
+                        core.jobs.push(id);
+                    }
+                    break;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Session creation / adoption
+// ---------------------------------------------------------------------------
+
+/// Engine lanes for a session that didn't pick: share host parallelism
+/// across the worker pool (width is wall-clock-only; numerics are
+/// identical at any width — `rust/tests/parity_modes.rs`).
+fn default_lanes(workers: usize) -> usize {
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    (cores / workers.max(1)).max(1)
+}
+
+/// Build, register, and park a session. Shared by HTTP create and restart
+/// adoption; `builder` arrives preset with the config or resume source.
+fn register_slot(
+    core: &Arc<Core>,
+    id: u64,
+    name: String,
+    mut builder: ExperimentBuilder,
+    checkpoint_every: Option<usize>,
+    keep_last: usize,
+    concurrent: bool,
+) -> crate::Result<Arc<SessionSlot>> {
+    let dir = core.state_dir.join(format!("session_{id:06}"));
+    std::fs::create_dir_all(&dir)?;
+    let log = Arc::new(EventLog::default());
+    let sink: EventSink = {
+        let log = log.clone();
+        Arc::new(move |e| log.absorb(&e))
+    };
+    if let Some(every) = checkpoint_every {
+        builder = builder.observer(Box::new(CheckpointObserver::new(&dir, every).keep_last(keep_last)));
+    }
+    builder = builder
+        .observer(Box::new(EventBridge::new(sink.clone())))
+        .artifacts(&core.artifacts)
+        .concurrent(concurrent);
+    let session = builder.build()?;
+    let config = session.config().to_json();
+    let rounds_budget = session.config().train.rounds;
+    log.with(|s| {
+        // Adopted sessions restore mid-run: seed the live mirrors so
+        // /history.csv and /wait see the restored rounds.
+        s.records = session.history().records.clone();
+        s.round = session.round();
+        s.done = session.is_done();
+    });
+    let (driver, cmd) = SessionDriver::new(session, sink);
+    let driver = driver.checkpoint_dir(&dir);
+    let slot = Arc::new(SessionSlot {
+        id,
+        name,
+        dir,
+        cmd: Mutex::new(cmd),
+        driver: Mutex::new(Some(driver)),
+        kicks: AtomicU64::new(0),
+        log,
+        config,
+        rounds_budget,
+        checkpoint_every,
+        keep_last,
+        concurrent,
+    });
+    core.sessions.lock().unwrap().insert(id, slot.clone());
+    Ok(slot)
+}
+
+fn write_meta(slot: &SessionSlot) -> crate::Result<()> {
+    let mut meta = Json::obj();
+    meta.set("name", Json::Str(slot.name.clone()))
+        .set("config", slot.config.clone())
+        .set(
+            "checkpoint_every",
+            slot.checkpoint_every.map_or(Json::Null, |n| Json::Num(n as f64)),
+        )
+        .set("keep_last", Json::Num(slot.keep_last as f64))
+        .set("concurrent", Json::Bool(slot.concurrent));
+    std::fs::write(slot.dir.join("meta.json"), meta.dump())?;
+    Ok(())
+}
+
+/// Create a session from an HTTP request body.
+fn create_session(core: &Arc<Core>, body: &Json) -> crate::Result<Arc<SessionSlot>> {
+    fn opt_usize(body: &Json, key: &str) -> crate::Result<Option<usize>> {
+        match body.get(key) {
+            None | Some(Json::Null) => Ok(None),
+            Some(v) => v
+                .as_usize()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("request field '{key}': {e}")),
+        }
+    }
+    let id = core.next_id.fetch_add(1, Ordering::SeqCst);
+    let name = match body.get("name") {
+        Some(v) => v
+            .as_str()
+            .map_err(|e| anyhow::anyhow!("request field 'name': {e}"))?
+            .to_string(),
+        None => format!("session-{id:06}"),
+    };
+    let mut builder = match body.get("config") {
+        Some(cfg) => Experiment::builder().config(Config::from_json(cfg)?),
+        None => {
+            let preset = match body.get("preset") {
+                Some(v) => v.as_str().map_err(|e| anyhow::anyhow!("request field 'preset': {e}"))?,
+                None => "small",
+            };
+            Experiment::builder().preset(Preset::parse(preset)?)
+        }
+    };
+    if let Some(n) = opt_usize(body, "devices")? {
+        builder = builder.devices(n);
+    }
+    if let Some(n) = opt_usize(body, "rounds")? {
+        builder = builder.rounds(n);
+    }
+    if let Some(v) = body.get("seed") {
+        let seed = match v {
+            Json::Str(s) => s
+                .parse::<u64>()
+                .map_err(|e| anyhow::anyhow!("request field 'seed': {e}"))?,
+            other => other
+                .as_u64()
+                .map_err(|e| anyhow::anyhow!("request field 'seed': {e}"))?,
+        };
+        builder = builder.seed(seed);
+    }
+    if let Some(v) = body.get("strategy") {
+        let s = v.as_str().map_err(|e| anyhow::anyhow!("request field 'strategy': {e}"))?;
+        builder = builder.strategy(crate::config::StrategyKind::parse(s)?);
+    }
+    let concurrent = match body.get("concurrent") {
+        Some(v) => v
+            .as_bool()
+            .map_err(|e| anyhow::anyhow!("request field 'concurrent': {e}"))?,
+        None => false,
+    };
+    let checkpoint_every = opt_usize(body, "checkpoint_every")?;
+    if let Some(every) = checkpoint_every {
+        anyhow::ensure!(every >= 1, "request field 'checkpoint_every': must be >= 1");
+    }
+    let keep_last = opt_usize(body, "keep_last")?.unwrap_or(3);
+    // Engine-lane budget: an explicit request wins; a config that left the
+    // pool on auto gets the daemon's fair share instead of grabbing every
+    // core per session.
+    let lanes_req = opt_usize(body, "engine_pool")?;
+    let fair_share = default_lanes(core.workers);
+    builder = builder.tune(move |c| match lanes_req {
+        Some(p) => c.engine_pool = p,
+        None if c.engine_pool == 0 => c.engine_pool = fair_share,
+        None => {}
+    });
+
+    let slot = register_slot(core, id, name, builder, checkpoint_every, keep_last, concurrent)?;
+    write_meta(&slot)?;
+    if let Some(n) = opt_usize(body, "run")? {
+        slot.enqueue(core, DriverCommand::Run(n));
+    }
+    Ok(slot)
+}
+
+/// Re-adopt every `session_NNNNNN/` directory in the state dir.
+fn adopt_sessions(core: &Arc<Core>) {
+    let Ok(entries) = std::fs::read_dir(&core.state_dir) else { return };
+    for entry in entries.flatten() {
+        let file_name = entry.file_name().to_string_lossy().into_owned();
+        let Some(id_str) = file_name.strip_prefix("session_") else { continue };
+        let Ok(id) = id_str.parse::<u64>() else { continue };
+        if !entry.path().is_dir() {
+            continue;
+        }
+        match adopt_one(core, id, &entry.path()) {
+            Ok(slot) => {
+                let round = slot.log.with(|s| s.round);
+                eprintln!("serve: adopted session {id} '{}' at round {round}", slot.name);
+            }
+            Err(e) => eprintln!("serve: cannot adopt '{}': {e:#}", entry.path().display()),
+        }
+    }
+    let max_id = core.sessions.lock().unwrap().keys().max().copied().unwrap_or(0);
+    core.next_id.store(max_id + 1, Ordering::SeqCst);
+}
+
+/// Adopt one session directory: resume its newest valid checkpoint,
+/// falling back to older ones against torn files, then to a fresh build
+/// from the meta config (round 0) when no checkpoint is usable.
+fn adopt_one(core: &Arc<Core>, id: u64, dir: &std::path::Path) -> crate::Result<Arc<SessionSlot>> {
+    let meta_text = std::fs::read_to_string(dir.join("meta.json"))?;
+    let meta = Json::parse(&meta_text)?;
+    let name = meta.req("name")?.as_str()?.to_string();
+    let checkpoint_every = match meta.get("checkpoint_every") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(v.as_usize()?),
+    };
+    let keep_last = match meta.get("keep_last") {
+        Some(v) => v.as_usize()?,
+        None => 3,
+    };
+    let concurrent = match meta.get("concurrent") {
+        Some(v) => v.as_bool()?,
+        None => false,
+    };
+    let mut ckpts: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("ckpt_round_") && n.ends_with(".hckpt"))
+        })
+        .collect();
+    ckpts.sort(); // zero-padded round numbers sort chronologically
+    for ckpt in ckpts.iter().rev() {
+        let builder = Experiment::builder().resume_from(ckpt);
+        match register_slot(
+            core,
+            id,
+            name.clone(),
+            builder,
+            checkpoint_every,
+            keep_last,
+            concurrent,
+        ) {
+            Ok(slot) => return Ok(slot),
+            Err(e) => {
+                eprintln!("serve: checkpoint '{}' unusable: {e:#}", ckpt.display());
+            }
+        }
+    }
+    // No usable checkpoint: the session never progressed far enough to
+    // write one. Rebuild from the recorded config at round 0.
+    let cfg = Config::from_json(meta.req("config")?)?;
+    register_slot(
+        core,
+        id,
+        name,
+        Experiment::builder().config(cfg),
+        checkpoint_every,
+        keep_last,
+        concurrent,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// HTTP surface
+// ---------------------------------------------------------------------------
+
+fn accept_loop(core: &Arc<Core>, listener: &TcpListener) {
+    loop {
+        if core.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let core = core.clone();
+                std::thread::spawn(move || {
+                    let _ = stream.set_nonblocking(false);
+                    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+                    handle_conn(&core, stream);
+                });
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(25)),
+        }
+    }
+}
+
+fn handle_conn(core: &Arc<Core>, mut stream: TcpStream) {
+    let req = match http::read_request(&mut stream) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = http::respond_error(&mut stream, 400, &format!("bad request: {e:#}"));
+            return;
+        }
+    };
+    if let Err(e) = route(core, &req, &mut stream) {
+        // Best-effort: the response head may already be on the wire.
+        let _ = http::respond_error(&mut stream, 500, &format!("{e:#}"));
+    }
+}
+
+fn lookup(core: &Core, id_str: &str) -> Option<Arc<SessionSlot>> {
+    let id: u64 = id_str.parse().ok()?;
+    core.sessions.lock().unwrap().get(&id).cloned()
+}
+
+fn route(core: &Arc<Core>, req: &http::Request, stream: &mut TcpStream) -> crate::Result<()> {
+    let segments = req.segments();
+    match (req.method.as_str(), segments.as_slice()) {
+        ("GET", []) => {
+            let mut j = Json::obj();
+            j.set("service", Json::Str("hasfl".into())).set(
+                "endpoints",
+                Json::Arr(
+                    [
+                        "GET /healthz",
+                        "GET /info",
+                        "GET /sessions",
+                        "POST /sessions",
+                        "GET /sessions/:id",
+                        "DELETE /sessions/:id",
+                        "POST /sessions/:id/run",
+                        "POST /sessions/:id/step",
+                        "POST /sessions/:id/pause",
+                        "POST /sessions/:id/checkpoint",
+                        "GET /sessions/:id/reports",
+                        "GET /sessions/:id/events",
+                        "GET /sessions/:id/history.csv",
+                        "GET /sessions/:id/config",
+                        "GET /sessions/:id/wait",
+                        "POST /shutdown",
+                    ]
+                    .iter()
+                    .map(|s| Json::Str(s.to_string()))
+                    .collect(),
+                ),
+            );
+            http::respond_json(stream, 200, &j)
+        }
+        ("GET", ["healthz"]) => {
+            let mut j = core.info.clone();
+            let slots: Vec<_> = core.sessions.lock().unwrap().values().cloned().collect();
+            let live = slots.iter().filter(|s| !s.log.with(|l| l.closed)).count();
+            j.set("status", Json::Str("ok".into()))
+                .set("sessions", Json::Num(live as f64))
+                .set("workers", Json::Num(core.workers as f64));
+            http::respond_json(stream, 200, &j)
+        }
+        ("GET", ["info"]) => http::respond_json(stream, 200, &core.info),
+        ("GET", ["sessions"]) => {
+            let slots: Vec<_> = core.sessions.lock().unwrap().values().cloned().collect();
+            let list = Json::Arr(slots.iter().map(|s| s.summary()).collect());
+            let mut j = Json::obj();
+            j.set("sessions", list);
+            http::respond_json(stream, 200, &j)
+        }
+        ("POST", ["sessions"]) => {
+            let body = match req.json_body() {
+                Ok(b) => b,
+                Err(e) => return http::respond_error(stream, 400, &format!("{e:#}")),
+            };
+            match create_session(core, &body) {
+                Ok(slot) => http::respond_json(stream, 201, &slot.summary()),
+                Err(e) => http::respond_error(stream, 400, &format!("{e:#}")),
+            }
+        }
+        ("GET", ["sessions", id]) => match lookup(core, id) {
+            Some(slot) => http::respond_json(stream, 200, &slot.summary()),
+            None => http::respond_error(stream, 404, &format!("no session '{id}'")),
+        },
+        ("DELETE", ["sessions", id]) => {
+            let Some(slot) = lookup(core, id) else {
+                return http::respond_error(stream, 404, &format!("no session '{id}'"));
+            };
+            if !slot.log.with(|s| s.closed) {
+                slot.enqueue(core, DriverCommand::Close { checkpoint: false });
+                let closed = slot.log.wait_until(Duration::from_secs(60), |s| s.closed);
+                if !closed {
+                    return http::respond_error(
+                        stream,
+                        500,
+                        "session did not close within 60s; try again",
+                    );
+                }
+            }
+            core.sessions.lock().unwrap().remove(&slot.id);
+            let _ = std::fs::remove_dir_all(&slot.dir);
+            let mut j = Json::obj();
+            j.set("deleted", Json::Num(slot.id as f64));
+            http::respond_json(stream, 200, &j)
+        }
+        ("POST", ["sessions", id, "run"]) => {
+            let Some(slot) = lookup(core, id) else {
+                return http::respond_error(stream, 404, &format!("no session '{id}'"));
+            };
+            if slot.log.with(|s| s.closed) {
+                return http::respond_error(stream, 409, "session is closed");
+            }
+            let body = match req.json_body() {
+                Ok(b) => b,
+                Err(e) => return http::respond_error(stream, 400, &format!("{e:#}")),
+            };
+            let rounds = match body.get("rounds") {
+                Some(v) => match v.as_usize() {
+                    Ok(n) => n,
+                    Err(e) => {
+                        return http::respond_error(
+                            stream,
+                            400,
+                            &format!("request field 'rounds': {e}"),
+                        )
+                    }
+                },
+                // Default: run out the remaining budget.
+                None => {
+                    let round = slot.log.with(|s| s.round);
+                    slot.rounds_budget.saturating_sub(round)
+                }
+            };
+            slot.enqueue(core, DriverCommand::Run(rounds));
+            let mut j = slot.summary();
+            j.set("enqueued_rounds", Json::Num(rounds as f64));
+            http::respond_json(stream, 202, &j)
+        }
+        ("POST", ["sessions", id, "step"]) => {
+            let Some(slot) = lookup(core, id) else {
+                return http::respond_error(stream, 404, &format!("no session '{id}'"));
+            };
+            if slot.log.with(|s| s.closed) {
+                return http::respond_error(stream, 409, "session is closed");
+            }
+            slot.enqueue(core, DriverCommand::Run(1));
+            http::respond_json(stream, 202, &slot.summary())
+        }
+        ("POST", ["sessions", id, "pause"]) => {
+            let Some(slot) = lookup(core, id) else {
+                return http::respond_error(stream, 404, &format!("no session '{id}'"));
+            };
+            slot.enqueue(core, DriverCommand::Pause);
+            http::respond_json(stream, 202, &slot.summary())
+        }
+        ("POST", ["sessions", id, "checkpoint"]) => {
+            let Some(slot) = lookup(core, id) else {
+                return http::respond_error(stream, 404, &format!("no session '{id}'"));
+            };
+            if slot.log.with(|s| s.closed) {
+                return http::respond_error(stream, 409, "session is closed");
+            }
+            let before = slot.log.with(|s| s.events.len());
+            slot.enqueue(core, DriverCommand::Checkpoint(None));
+            // Wait for the write (or an error event) so the client gets the
+            // path back; checkpoints execute at the next round boundary.
+            let ok = slot.log.wait_until(Duration::from_secs(120), |s| {
+                s.events[before..].iter().any(|e| {
+                    matches!(
+                        e.get("type").and_then(|t| t.as_str().ok()),
+                        Some("checkpointed") | Some("error")
+                    )
+                })
+            });
+            if !ok {
+                return http::respond_error(stream, 408, "checkpoint did not complete in 120s");
+            }
+            let mut j = slot.summary();
+            let path = slot.log.with(|s| {
+                s.events[before..]
+                    .iter()
+                    .rev()
+                    .find(|e| {
+                        e.get("type").and_then(|t| t.as_str().ok()) == Some("checkpointed")
+                    })
+                    .and_then(|e| e.get("path").and_then(|p| p.as_str().ok()).map(String::from))
+            });
+            match path {
+                Some(p) => j.set("checkpoint", Json::Str(p)),
+                None => j.set("checkpoint", Json::Null),
+            };
+            http::respond_json(stream, 200, &j)
+        }
+        ("GET", ["sessions", id, "reports"]) => {
+            let Some(slot) = lookup(core, id) else {
+                return http::respond_error(stream, 404, &format!("no session '{id}'"));
+            };
+            let from = req.query_opt::<usize>("from")?.unwrap_or(0);
+            let reports =
+                slot.log.with(|s| s.reports.get(from..).unwrap_or(&[]).to_vec());
+            let mut j = Json::obj();
+            j.set("from", Json::Num(from as f64)).set("reports", Json::Arr(reports));
+            http::respond_json(stream, 200, &j)
+        }
+        ("GET", ["sessions", id, "events"]) => {
+            let Some(slot) = lookup(core, id) else {
+                return http::respond_error(stream, 404, &format!("no session '{id}'"));
+            };
+            stream_events(core, &slot, req, stream)
+        }
+        ("GET", ["sessions", id, "history.csv"]) => {
+            let Some(slot) = lookup(core, id) else {
+                return http::respond_error(stream, 404, &format!("no session '{id}'"));
+            };
+            let history = History { records: slot.log.with(|s| s.records.clone()) };
+            http::respond(stream, 200, "text/csv", history.to_csv_string().as_bytes())
+        }
+        ("GET", ["sessions", id, "config"]) => match lookup(core, id) {
+            Some(slot) => http::respond_json(stream, 200, &slot.config),
+            None => http::respond_error(stream, 404, &format!("no session '{id}'")),
+        },
+        ("GET", ["sessions", id, "wait"]) => {
+            let Some(slot) = lookup(core, id) else {
+                return http::respond_error(stream, 404, &format!("no session '{id}'"));
+            };
+            let target = req.query_opt::<usize>("round")?.unwrap_or(slot.rounds_budget);
+            let timeout_ms = req.query_opt::<u64>("timeout_ms")?.unwrap_or(60_000).min(600_000);
+            let satisfied = slot.log.wait_until(Duration::from_millis(timeout_ms), |s| {
+                s.round >= target || s.closed || s.done || s.last_error.is_some()
+            });
+            let mut j = slot.summary();
+            j.set("satisfied", Json::Bool(satisfied));
+            http::respond_json(stream, if satisfied { 200 } else { 408 }, &j)
+        }
+        ("POST", ["shutdown"]) => {
+            core.shutdown_requested.store(true, Ordering::SeqCst);
+            let mut j = Json::obj();
+            j.set("status", Json::Str("shutting-down".into()));
+            http::respond_json(stream, 200, &j)
+        }
+        (_, ["sessions", ..]) | (_, ["healthz"]) | (_, ["info"]) | (_, ["shutdown"]) => {
+            http::respond_error(stream, 405, "method not allowed")
+        }
+        _ => http::respond_error(stream, 404, &format!("no route for '{}'", req.path)),
+    }
+}
+
+/// `GET /sessions/:id/events[?from=K&follow=1]` — NDJSON event stream.
+/// Without `follow` it returns the backlog from `from` and closes; with
+/// `follow` it tails the log until the session closes, the daemon shuts
+/// down, or the client hangs up.
+fn stream_events(
+    core: &Arc<Core>,
+    slot: &Arc<SessionSlot>,
+    req: &http::Request,
+    stream: &mut TcpStream,
+) -> crate::Result<()> {
+    use std::io::Write as _;
+    let mut offset = req.query_opt::<usize>("from")?.unwrap_or(0);
+    let follow = req.query_opt::<usize>("follow")?.unwrap_or(0) != 0;
+    http::start_stream(stream, "application/x-ndjson")?;
+    loop {
+        let (tail, closed) = slot.log.events_from(offset);
+        offset += tail.len();
+        for event in &tail {
+            // A write error means the client hung up; stop quietly.
+            if stream.write_all(event.dump().as_bytes()).is_err()
+                || stream.write_all(b"\n").is_err()
+            {
+                return Ok(());
+            }
+        }
+        if stream.flush().is_err() {
+            return Ok(());
+        }
+        if !follow || closed || core.shutdown.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        slot.log.wait_until(Duration::from_millis(250), |s| {
+            s.events.len() > offset || s.closed
+        });
+    }
+}

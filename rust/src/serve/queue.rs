@@ -1,0 +1,250 @@
+//! The daemon's internal plumbing: a broadcastable per-session event log
+//! and the bounded worker-pool job queue.
+//!
+//! Shapes follow the exemplars named in ROADMAP.md: commands flow to each
+//! session over its own mpsc channel (the [`SessionDriver`] command
+//! sender); everything a session does is appended to an [`EventLog`] that
+//! any number of HTTP readers can tail by offset (Condvar broadcast), so
+//! `GET /sessions/:id/events?follow=1` is a plain log-follower and never
+//! perturbs training.
+//!
+//! [`SessionDriver`]: crate::experiment::SessionDriver
+
+use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::experiment::SessionEvent;
+use crate::metrics::Record;
+use crate::util::Json;
+
+/// Live, mutexed view of one session, fed exclusively by its event sink.
+#[derive(Default)]
+pub struct LogState {
+    /// Every event as its NDJSON line payload, append-only.
+    pub events: Vec<Json>,
+    /// Per-round reports as JSON, append-only (offset = round order).
+    pub reports: Vec<Json>,
+    /// History records mirrored from round events (seeded from the
+    /// restored history on adopted sessions) — rendered by
+    /// `/sessions/:id/history.csv` byte-identically to
+    /// [`crate::metrics::History::write_csv`].
+    pub records: Vec<Record>,
+    /// Checkpoint files announced so far (periodic and on-demand).
+    pub checkpoints: Vec<PathBuf>,
+    /// Rounds completed.
+    pub round: usize,
+    /// Round budget exhausted (or an observer asked to stop).
+    pub done: bool,
+    /// The session finished and its engine shut down; terminal.
+    pub closed: bool,
+    /// Most recent command/step error, if any.
+    pub last_error: Option<String>,
+}
+
+/// Append-only event log with Condvar broadcast, one per session.
+#[derive(Default)]
+pub struct EventLog {
+    state: Mutex<LogState>,
+    cond: Condvar,
+}
+
+/// A [`SessionEvent`] as its wire (NDJSON line) payload.
+pub fn event_json(event: &SessionEvent) -> Json {
+    let mut j = Json::obj();
+    match event {
+        SessionEvent::Round(report) => {
+            j.set("type", Json::Str("round".into()))
+                .set("report", report.to_json());
+        }
+        SessionEvent::Checkpointed { round, path } => {
+            j.set("type", Json::Str("checkpointed".into()))
+                .set("round", Json::Num(*round as f64))
+                .set("path", Json::Str(path.display().to_string()));
+        }
+        SessionEvent::Idle { round, done } => {
+            j.set("type", Json::Str("idle".into()))
+                .set("round", Json::Num(*round as f64))
+                .set("done", Json::Bool(*done));
+        }
+        SessionEvent::Error { round, message } => {
+            j.set("type", Json::Str("error".into()))
+                .set("round", Json::Num(*round as f64))
+                .set("message", Json::Str(message.clone()));
+        }
+        SessionEvent::Closed { round } => {
+            j.set("type", Json::Str("closed".into()))
+                .set("round", Json::Num(*round as f64));
+        }
+    }
+    j
+}
+
+impl EventLog {
+    /// Run `f` with the locked state (the one mutation/read entry point).
+    pub fn with<R>(&self, f: impl FnOnce(&mut LogState) -> R) -> R {
+        let mut state = self.state.lock().unwrap();
+        f(&mut state)
+    }
+
+    /// Absorb one session event: append its wire form, update the live
+    /// mirrors, wake every waiter.
+    pub fn absorb(&self, event: &SessionEvent) {
+        let line = event_json(event);
+        let mut state = self.state.lock().unwrap();
+        match event {
+            SessionEvent::Round(report) => {
+                state.round = report.round;
+                state.records.push(Record {
+                    round: report.round,
+                    sim_time: report.sim_time,
+                    loss: report.outcome.mean_loss,
+                    test_acc: report.test_acc,
+                });
+                state.reports.push(report.to_json());
+            }
+            SessionEvent::Checkpointed { path, .. } => {
+                // On-demand rewrites of a round already checkpointed
+                // replace in place (same path), keeping the list a set.
+                if !state.checkpoints.contains(path) {
+                    state.checkpoints.push(path.clone());
+                }
+            }
+            SessionEvent::Idle { round, done } => {
+                state.round = *round;
+                state.done = *done;
+            }
+            SessionEvent::Error { message, .. } => {
+                state.last_error = Some(message.clone());
+            }
+            SessionEvent::Closed { round } => {
+                state.round = *round;
+                state.closed = true;
+            }
+        }
+        state.events.push(line);
+        drop(state);
+        self.cond.notify_all();
+    }
+
+    /// Wake all waiters without a new event (daemon shutdown: followers
+    /// must re-check their exit conditions).
+    pub fn nudge(&self) {
+        self.cond.notify_all();
+    }
+
+    /// Block until `pred` holds or `timeout` elapses; returns whether the
+    /// predicate held.
+    pub fn wait_until(&self, timeout: Duration, pred: impl Fn(&LogState) -> bool) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut state = self.state.lock().unwrap();
+        loop {
+            if pred(&state) {
+                return true;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (next, _) = self.cond.wait_timeout(state, deadline - now).unwrap();
+            state = next;
+        }
+    }
+
+    /// Events from `offset` on (a follower's catch-up read), plus whether
+    /// the session is closed.
+    pub fn events_from(&self, offset: usize) -> (Vec<Json>, bool) {
+        let state = self.state.lock().unwrap();
+        let tail = state.events.get(offset..).unwrap_or(&[]).to_vec();
+        (tail, state.closed)
+    }
+}
+
+/// Job id a worker interprets as "exit now" (daemon shutdown).
+pub const STOP: u64 = u64::MAX;
+
+/// The worker pool's shared job queue: session ids, multiple producers
+/// (HTTP handlers, re-kicks), multiple consumers (the workers, sharing the
+/// receiver behind a mutex).
+pub struct JobQueue {
+    tx: Sender<u64>,
+    rx: Mutex<Receiver<u64>>,
+}
+
+impl JobQueue {
+    pub fn new() -> JobQueue {
+        let (tx, rx) = std::sync::mpsc::channel();
+        JobQueue { tx, rx: Mutex::new(rx) }
+    }
+
+    /// Enqueue a session for pumping. Duplicates are harmless: a worker
+    /// that finds the session already taken simply drops the job.
+    pub fn push(&self, id: u64) {
+        let _ = self.tx.send(id);
+    }
+
+    /// Ask one worker to exit.
+    pub fn push_stop(&self) {
+        let _ = self.tx.send(STOP);
+    }
+
+    /// Blocking pop; `None` means exit (stop sentinel or queue torn down).
+    pub fn pop(&self) -> Option<u64> {
+        let id = self.rx.lock().unwrap().recv().ok()?;
+        (id != STOP).then_some(id)
+    }
+}
+
+impl Default for JobQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn absorb_updates_mirrors_and_wakes_waiters() {
+        let log = Arc::new(EventLog::default());
+        let waiter = {
+            let log = log.clone();
+            std::thread::spawn(move || {
+                log.wait_until(Duration::from_secs(10), |s| s.closed)
+            })
+        };
+        log.absorb(&SessionEvent::Error { round: 3, message: "boom".into() });
+        log.absorb(&SessionEvent::Closed { round: 3 });
+        assert!(waiter.join().unwrap());
+        log.with(|s| {
+            assert_eq!(s.round, 3);
+            assert!(s.closed);
+            assert_eq!(s.last_error.as_deref(), Some("boom"));
+            assert_eq!(s.events.len(), 2);
+        });
+        let (tail, closed) = log.events_from(1);
+        assert_eq!(tail.len(), 1);
+        assert!(closed);
+        assert_eq!(tail[0].get("type").unwrap().as_str().unwrap(), "closed");
+    }
+
+    #[test]
+    fn wait_until_times_out() {
+        let log = EventLog::default();
+        assert!(!log.wait_until(Duration::from_millis(20), |s| s.round > 0));
+    }
+
+    #[test]
+    fn job_queue_delivers_in_order_and_stops() {
+        let q = JobQueue::new();
+        q.push(1);
+        q.push(2);
+        q.push_stop();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+}

@@ -1,0 +1,323 @@
+//! End-to-end suite for the `hasfl serve` daemon (`hasfl::serve`).
+//!
+//! Talks to a real [`Daemon`] over real TCP with a hand-rolled HTTP/1.1
+//! client (one request per connection, `Connection: close`), exactly like
+//! curl would. The two acceptance properties of the serve layer:
+//!
+//! 1. **Multi-tenancy is invisible**: two sessions trained through the
+//!    daemon's worker pool produce `history.csv` documents byte-identical
+//!    to the same configs run solo through the Experiment API.
+//! 2. **Restarts are invisible**: a daemon stopped mid-run checkpoints
+//!    every live session; a new daemon on the same `--state-dir` adopts
+//!    them, and the finished history is byte-identical to an
+//!    uninterrupted run.
+//!
+//! Engine-backed tests run on the resolved backend (PJRT with artifacts,
+//! native without) and never skip (`HASFL_REQUIRE_ENGINE=1` hard-fails
+//! any skip path).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+
+use hasfl::config::{Config, StrategyKind};
+use hasfl::experiment::Experiment;
+use hasfl::serve::{Daemon, ServeConfig};
+use hasfl::util::Json;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hasfl_serve_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn start_daemon(state_dir: &std::path::Path, workers: usize) -> Daemon {
+    Daemon::start(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        state_dir: state_dir.to_path_buf(),
+        workers,
+        artifacts: artifacts_dir(),
+    })
+    .expect("daemon start")
+}
+
+/// One-shot HTTP request; returns (status, body). The daemon closes the
+/// connection after each response, so the body is read to EOF.
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).expect("send");
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).expect("recv");
+    let text = String::from_utf8_lossy(&raw).into_owned();
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .unwrap_or_else(|| panic!("no status line in: {text}"))
+        .parse()
+        .expect("status code");
+    let body_at = text.find("\r\n\r\n").expect("header/body separator") + 4;
+    (status, text[body_at..].to_string())
+}
+
+fn http_json(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Json) {
+    let (status, text) = http(addr, method, path, body);
+    let json = Json::parse(&text).unwrap_or_else(|e| panic!("bad JSON ({e}) in: {text}"));
+    (status, json)
+}
+
+/// A small config whose native-engine run finishes in seconds.
+fn quick_config(seed: u64, rounds: usize, strategy: StrategyKind) -> Config {
+    let mut cfg = Config::small();
+    cfg.fleet.n_devices = 4;
+    cfg.seed = seed;
+    cfg.train.rounds = rounds;
+    cfg.train.agg_interval = 3;
+    cfg.train.eval_every = 4;
+    cfg.train.train_samples = 256;
+    cfg.train.test_samples = 64;
+    cfg.train.batch_cap = 16;
+    cfg.strategy = strategy;
+    cfg.fixed_batch = 8;
+    cfg.fixed_cut = 3;
+    cfg
+}
+
+/// The reference: the same config run solo through the Experiment API.
+fn solo_history_csv(cfg: Config) -> String {
+    let mut session = Experiment::builder()
+        .config(cfg)
+        .artifacts(artifacts_dir())
+        .build()
+        .expect("solo session");
+    while !session.is_done() {
+        session.step().expect("solo step");
+    }
+    session.finish().expect("solo finish").to_csv_string()
+}
+
+fn create_session(addr: SocketAddr, cfg: &Config, extra: &[(&str, Json)]) -> u64 {
+    let mut body = Json::obj();
+    body.set("config", cfg.to_json());
+    for (k, v) in extra {
+        body.set(k, v.clone());
+    }
+    let (status, j) = http_json(addr, "POST", "/sessions", &body.dump());
+    assert_eq!(status, 201, "create failed: {}", j.dump());
+    j.get("id").unwrap().as_usize().unwrap() as u64
+}
+
+/// Block until the session reaches `round` (or is done/closed/errored).
+fn wait_for_round(addr: SocketAddr, id: u64, round: usize) -> Json {
+    let (status, j) = http_json(
+        addr,
+        "GET",
+        &format!("/sessions/{id}/wait?round={round}&timeout_ms=300000"),
+        "",
+    );
+    assert_eq!(status, 200, "wait failed: {}", j.dump());
+    assert_eq!(j.get("last_error").unwrap(), &Json::Null, "session errored: {}", j.dump());
+    j
+}
+
+#[test]
+fn two_tenants_match_their_solo_runs_byte_for_byte() {
+    let state = temp_dir("tenants");
+    let daemon = start_daemon(&state, 2);
+    let addr = daemon.addr();
+
+    // Two different experiments sharing the worker pool: seeds, budgets,
+    // and strategies all differ, so any cross-session state bleed (RNG,
+    // engine buffers, history mix-ups) breaks at least one comparison.
+    let cfg_a = quick_config(7, 6, StrategyKind::Hasfl);
+    let cfg_b = quick_config(99, 5, StrategyKind::RbsRms);
+
+    let id_a = create_session(addr, &cfg_a, &[("run", Json::Num(6.0))]);
+    let id_b = create_session(addr, &cfg_b, &[("run", Json::Num(5.0))]);
+    assert_ne!(id_a, id_b);
+
+    wait_for_round(addr, id_a, 6);
+    wait_for_round(addr, id_b, 5);
+
+    let (status, served_a) = http(addr, "GET", &format!("/sessions/{id_a}/history.csv"), "");
+    assert_eq!(status, 200);
+    let (status, served_b) = http(addr, "GET", &format!("/sessions/{id_b}/history.csv"), "");
+    assert_eq!(status, 200);
+
+    assert_eq!(served_a, solo_history_csv(cfg_a), "session A diverged from its solo run");
+    assert_eq!(served_b, solo_history_csv(cfg_b), "session B diverged from its solo run");
+
+    // The registry sees both, done and never errored.
+    let (_, list) = http_json(addr, "GET", "/sessions", "");
+    let sessions = list.get("sessions").unwrap().as_arr().unwrap();
+    assert_eq!(sessions.len(), 2);
+    for s in sessions {
+        assert!(s.get("done").unwrap().as_bool().unwrap(), "{}", s.dump());
+        assert_eq!(s.get("last_error").unwrap(), &Json::Null);
+    }
+
+    // Round reports stream with offsets: the tail after round 4 of A.
+    let (_, reports) = http_json(addr, "GET", &format!("/sessions/{id_a}/reports?from=4"), "");
+    assert_eq!(reports.get("reports").unwrap().as_arr().unwrap().len(), 2);
+
+    daemon.stop().expect("stop");
+}
+
+#[test]
+fn restart_adoption_resumes_bit_identical_and_prunes_checkpoints() {
+    let state = temp_dir("restart");
+    let cfg = quick_config(2025, 8, StrategyKind::Hasfl);
+
+    // Phase 1: run 5 of 8 rounds, then stop the daemon mid-experiment.
+    // Stopping checkpoints the live session (round 5) into its state dir.
+    let daemon = start_daemon(&state, 2);
+    let addr = daemon.addr();
+    let id = create_session(
+        addr,
+        &cfg,
+        &[("checkpoint_every", Json::Num(4.0)), ("keep_last", Json::Num(2.0))],
+    );
+    let (status, _) = http_json(addr, "POST", &format!("/sessions/{id}/run"), r#"{"rounds": 5}"#);
+    assert_eq!(status, 202);
+    wait_for_round(addr, id, 5);
+    daemon.stop().expect("stop mid-run");
+
+    let session_dir = state.join(format!("session_{id:06}"));
+    let ckpts = |dir: &std::path::Path| -> Vec<String> {
+        let mut names: Vec<String> = std::fs::read_dir(dir)
+            .unwrap()
+            .flatten()
+            .filter_map(|e| e.file_name().into_string().ok())
+            .filter(|n| n.starts_with("ckpt_round_") && n.ends_with(".hckpt"))
+            .collect();
+        names.sort();
+        names
+    };
+    // Periodic write at round 4 plus the shutdown checkpoint at round 5.
+    assert_eq!(ckpts(&session_dir), vec!["ckpt_round_000004.hckpt", "ckpt_round_000005.hckpt"]);
+
+    // Phase 2: a new daemon on the same state dir adopts the session at
+    // round 5 and runs out the remaining budget.
+    let daemon = start_daemon(&state, 2);
+    let addr = daemon.addr();
+    let (_, list) = http_json(addr, "GET", "/sessions", "");
+    let sessions = list.get("sessions").unwrap().as_arr().unwrap();
+    assert_eq!(sessions.len(), 1, "adopted exactly the one session");
+    let adopted = &sessions[0];
+    assert_eq!(adopted.get("id").unwrap().as_usize().unwrap() as u64, id);
+    assert_eq!(adopted.get("round").unwrap().as_usize().unwrap(), 5);
+    assert!(!adopted.get("closed").unwrap().as_bool().unwrap());
+
+    // No body: run defaults to the remaining budget (8 - 5 = 3).
+    let (status, j) = http_json(addr, "POST", &format!("/sessions/{id}/run"), "");
+    assert_eq!(status, 202);
+    assert_eq!(j.get("enqueued_rounds").unwrap().as_usize().unwrap(), 3);
+    wait_for_round(addr, id, 8);
+
+    // The acceptance bar: the interrupted-and-adopted history is
+    // byte-identical to the uninterrupted solo run.
+    let (status, served) = http(addr, "GET", &format!("/sessions/{id}/history.csv"), "");
+    assert_eq!(status, 200);
+    assert_eq!(served, solo_history_csv(cfg), "adopted run diverged from the straight run");
+
+    daemon.stop().expect("final stop");
+    // Retention across the restart: the observer re-seeded from disk and
+    // pruned to keep_last=2 (rounds 4 and 5 give way to newer writes; the
+    // final-stop checkpoint at round 8 rewrites the periodic round-8 file).
+    assert_eq!(ckpts(&session_dir), vec!["ckpt_round_000005.hckpt", "ckpt_round_000008.hckpt"]);
+}
+
+#[test]
+fn http_surface_errors_and_introspection() {
+    let state = temp_dir("errors");
+    let daemon = start_daemon(&state, 1);
+    let addr = daemon.addr();
+
+    // /healthz and /info serve the `hasfl info --json` document.
+    let (status, health) = http_json(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200);
+    assert_eq!(health.get("status").unwrap().as_str().unwrap(), "ok");
+    assert_eq!(health.get("service").unwrap().as_str().unwrap(), "hasfl");
+    assert_eq!(health.get("sessions").unwrap().as_usize().unwrap(), 0);
+    let (status, info) = http_json(addr, "GET", "/info", "");
+    assert_eq!(status, 200);
+    assert!(info.get("model").unwrap().get("name").is_some());
+
+    // Config validation failures carry the offending JSON field path.
+    let mut bad = quick_config(1, 2, StrategyKind::Hasfl).to_json();
+    if let Json::Obj(map) = &mut bad {
+        if let Some(Json::Obj(train)) = map.get_mut("train") {
+            train.insert("lr".into(), Json::Str("fast".into()));
+        }
+    }
+    let mut body = Json::obj();
+    body.set("config", bad);
+    let (status, err) = http_json(addr, "POST", "/sessions", &body.dump());
+    assert_eq!(status, 400);
+    let msg = err.get("error").unwrap().as_str().unwrap().to_string();
+    assert!(msg.contains("train.lr"), "error lacks the field path: {msg}");
+
+    // Malformed body, unknown session, unknown route, wrong method.
+    let (status, err) = http_json(addr, "POST", "/sessions", "{not json");
+    assert_eq!(status, 400);
+    assert!(err.get("error").unwrap().as_str().unwrap().contains("JSON"));
+    let (status, _) = http_json(addr, "GET", "/sessions/999", "");
+    assert_eq!(status, 404);
+    let (status, _) = http_json(addr, "GET", "/no/such/route", "");
+    assert_eq!(status, 404);
+    let (status, _) = http_json(addr, "DELETE", "/healthz", "");
+    assert_eq!(status, 405);
+
+    // A live session: step, on-demand checkpoint, NDJSON event log,
+    // delete.
+    let cfg = quick_config(5, 2, StrategyKind::Hasfl);
+    let id = create_session(addr, &cfg, &[]);
+    let (status, _) = http_json(addr, "POST", &format!("/sessions/{id}/step"), "");
+    assert_eq!(status, 202);
+    wait_for_round(addr, id, 1);
+    let (status, j) = http_json(addr, "POST", &format!("/sessions/{id}/checkpoint"), "");
+    assert_eq!(status, 200, "{}", j.dump());
+    let ckpt = j.get("checkpoint").unwrap().as_str().unwrap().to_string();
+    assert!(ckpt.ends_with("ckpt_round_000001.hckpt"), "{ckpt}");
+    assert!(std::path::Path::new(&ckpt).exists());
+
+    let (status, events) = http(addr, "GET", &format!("/sessions/{id}/events"), "");
+    assert_eq!(status, 200);
+    let lines: Vec<&str> = events.lines().collect();
+    assert!(lines.len() >= 3, "expected round+idle+checkpointed, got: {events}");
+    let types: Vec<String> = lines
+        .iter()
+        .map(|l| {
+            Json::parse(l)
+                .expect("each event line is JSON")
+                .get("type")
+                .unwrap()
+                .as_str()
+                .unwrap()
+                .to_string()
+        })
+        .collect();
+    assert!(types.contains(&"round".to_string()), "{types:?}");
+    assert!(types.contains(&"checkpointed".to_string()), "{types:?}");
+
+    let (status, j) = http_json(addr, "DELETE", &format!("/sessions/{id}"), "");
+    assert_eq!(status, 200, "{}", j.dump());
+    assert!(!state.join(format!("session_{id:06}")).exists(), "session dir not removed");
+    let (status, _) = http_json(addr, "GET", &format!("/sessions/{id}"), "");
+    assert_eq!(status, 404);
+
+    // /shutdown flips the flag the CLI loop polls; the daemon object is
+    // still ours to stop.
+    let (status, _) = http_json(addr, "POST", "/shutdown", "");
+    assert_eq!(status, 200);
+    assert!(daemon.shutdown_requested());
+    daemon.stop().expect("stop");
+}
