@@ -38,6 +38,11 @@
 #                            run — DESIGN.md §12)
 #  10. json/bench-diff smoke (hasfl info --json parses; hasfl bench-diff
 #                            gates BENCH_*.json tail-latency regressions)
+#  11. chaos smoke          (the same seeded --faults chaos run twice must
+#                            be byte-identical; then slow-loris + mid-body
+#                            disconnect probes against a tightly-capped
+#                            daemon must leave /healthz responsive —
+#                            DESIGN.md §13)
 set -euo pipefail
 
 BACKEND=auto
@@ -144,5 +149,64 @@ echo "== info --json + bench-diff smoke =="
 # Self-comparison: every shared leaf has delta 0, so the gate must pass.
 ./target/release/hasfl bench-diff --base "$HASFL_BENCH_JSON" --head "$HASFL_BENCH_JSON"
 echo "json/bench-diff smoke OK"
+
+echo "== chaos smoke (seeded faults deterministic + hostile-client probes) =="
+CHAOS_TMP=$(mktemp -d)
+# The same seeded chaos run twice must be byte-identical: retries,
+# abandonments, quarantines, and lane respawns are pure functions of
+# (seed, round) — DESIGN.md §13.
+./target/release/hasfl train --preset small --rounds 4 --seed 77 \
+  --backend "$BACKEND" --faults chaos --out "$CHAOS_TMP/a.csv"
+./target/release/hasfl train --preset small --rounds 4 --seed 77 \
+  --backend "$BACKEND" --faults chaos --out "$CHAOS_TMP/b.csv"
+cmp "$CHAOS_TMP/a.csv" "$CHAOS_TMP/b.csv"
+# Hostile-client probes against a tightly-capped daemon: a slow-loris
+# sender and a mid-body disconnect must both be shed by the socket
+# timeouts while /healthz keeps answering, and the daemon must still
+# shut down cleanly afterwards (no unwrap panics anywhere in serve).
+rm -f "$CHAOS_TMP/state/daemon.addr"
+./target/release/hasfl serve --addr 127.0.0.1:0 --state-dir "$CHAOS_TMP/state" \
+  --workers 1 --max-conns 8 --io-timeout-ms 500 &
+CHAOS_PID=$!
+ADDR=""
+for _ in $(seq 1 100); do
+  if [ -f "$CHAOS_TMP/state/daemon.addr" ]; then
+    ADDR=$(cat "$CHAOS_TMP/state/daemon.addr"); break
+  fi
+  sleep 0.1
+done
+[ -n "$ADDR" ] || { echo "FAIL: chaos serve daemon did not come up"; exit 1; }
+python3 - "$ADDR" <<'PY'
+import socket, sys, time
+host, port = sys.argv[1].rsplit(":", 1)
+
+def healthz():
+    s = socket.create_connection((host, int(port)), timeout=5)
+    s.sendall(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n")
+    data = b""
+    while True:
+        chunk = s.recv(4096)
+        if not chunk:
+            break
+        data += chunk
+    s.close()
+    assert data.startswith(b"HTTP/1.1 200"), data[:200]
+
+# Slow-loris: trickle a few bytes of request line, then stall.
+loris = socket.create_connection((host, int(port)), timeout=5)
+loris.sendall(b"GET /hea")
+healthz()  # the daemon answers around the stalled connection
+# Mid-body disconnect: promise 64 body bytes, send 9, hang up.
+torn = socket.create_connection((host, int(port)), timeout=5)
+torn.sendall(b"POST /sessions HTTP/1.1\r\nContent-Length: 64\r\n\r\n{\"name\": ")
+torn.close()
+time.sleep(0.8)  # past --io-timeout-ms: the loris thread is reclaimed
+healthz()
+loris.close()
+print("hostile-client probes OK")
+PY
+kill -TERM "$CHAOS_PID"; wait "$CHAOS_PID"
+rm -rf "$CHAOS_TMP"
+echo "chaos smoke OK (deterministic faults; daemon survived hostile clients)"
 
 echo "CI OK (backend: $BACKEND)"

@@ -89,6 +89,11 @@ pub struct CheckpointState {
     pub sampler_rngs: Vec<(u64, u64)>,
     /// Scenario-engine state (`None` on static-fleet runs).
     pub scenario: Option<ScenarioEngineState>,
+    /// Fault-layer state — strike counts and the quarantine roster
+    /// (`None` when the run has no fault spec). Serialized as a trailing
+    /// optional field, so fault-less checkpoints stay byte-identical to
+    /// the pre-fault format and still load.
+    pub fault: Option<crate::fault::FaultState>,
 }
 
 fn write_device(w: &mut ByteWriter, d: &Device) {
@@ -270,6 +275,15 @@ fn write_state(w: &mut ByteWriter, s: &CheckpointState) {
         }
         None => w.bool(false),
     }
+    // Trailing optional field, present only when the run has a fault
+    // spec: readers consume it iff payload bytes remain, so fault-less
+    // checkpoints (and ones written before the fault layer existed)
+    // parse unchanged under the same FORMAT_VERSION.
+    if let Some(f) = &s.fault {
+        w.bool(true);
+        w.u32s(&f.strikes);
+        w.bools(&f.quarantined);
+    }
 }
 
 fn read_state(r: &mut ByteReader) -> crate::Result<CheckpointState> {
@@ -293,6 +307,15 @@ fn read_state(r: &mut ByteReader) -> crate::Result<CheckpointState> {
         .map(|_| -> crate::Result<(u64, u64)> { Ok((r.u64()?, r.u64()?)) })
         .collect::<crate::Result<Vec<_>>>()?;
     let scenario = if r.bool()? { Some(read_scenario(r)?) } else { None };
+    let fault = if r.remaining() > 0 {
+        anyhow::ensure!(
+            r.bool()?,
+            "corrupt checkpoint: unexpected trailing field marker"
+        );
+        Some(crate::fault::FaultState { strikes: r.u32s()?, quarantined: r.bools()? })
+    } else {
+        None
+    };
     Ok(CheckpointState {
         config_json,
         round,
@@ -309,6 +332,7 @@ fn read_state(r: &mut ByteReader) -> crate::Result<CheckpointState> {
         strategy_rng,
         sampler_rngs,
         scenario,
+        fault,
     })
 }
 
@@ -547,6 +571,8 @@ mod tests {
             decisions: Decisions::uniform(1, 8, 4),
             test_acc: None,
             fleet: None,
+            abandoned: vec![],
+            quarantined: vec![],
         }
     }
 

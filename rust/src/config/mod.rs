@@ -323,6 +323,10 @@ pub struct Config {
     /// rounds (`None` = the historical static fleet). See
     /// [`crate::scenario`].
     pub scenario: Option<crate::scenario::Scenario>,
+    /// Seeded fault-injection spec (`None` = no injection and no fault
+    /// tolerance: a device error fails the round, exactly the historical
+    /// behaviour). See [`crate::fault`] and DESIGN.md §13.
+    pub faults: Option<crate::fault::FaultSpec>,
 }
 
 impl Config {
@@ -367,6 +371,9 @@ impl Config {
             .set("backend", Json::Str(self.backend.as_str().into()));
         if let Some(s) = &self.scenario {
             root.set("scenario", s.to_json());
+        }
+        if let Some(f) = &self.faults {
+            root.set("faults", f.to_json());
         }
         root
     }
@@ -461,6 +468,12 @@ impl Config {
             // (and in static-fleet configs): no dynamic scenario.
             scenario: match j.get("scenario") {
                 Some(v) => Some(at("scenario", crate::scenario::Scenario::from_json(v))?),
+                None => None,
+            },
+            // Absent in configs saved before the fault layer existed: no
+            // injection, no tolerance.
+            faults: match j.get("faults") {
+                Some(v) => Some(at("faults", crate::fault::FaultSpec::from_json(v))?),
                 None => None,
             },
         })
@@ -636,6 +649,21 @@ mod tests {
 
         let mut cfg = Config::table1();
         cfg.scenario = Some(crate::scenario::ScenarioPreset::ChurnHeavy.scenario());
+        let back = Config::from_json(&Json::parse(&cfg.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn faults_field_roundtrips_and_defaults_to_none() {
+        // Configs saved before the fault layer existed have no "faults"
+        // key; they must load as None (no injection, no tolerance).
+        let cfg = Config::table1();
+        assert!(cfg.faults.is_none());
+        let back = Config::from_json(&Json::parse(&cfg.to_json().dump()).unwrap()).unwrap();
+        assert!(back.faults.is_none());
+
+        let mut cfg = Config::table1();
+        cfg.faults = Some(crate::fault::FaultPreset::Chaos.spec());
         let back = Config::from_json(&Json::parse(&cfg.to_json().dump()).unwrap()).unwrap();
         assert_eq!(back, cfg);
     }

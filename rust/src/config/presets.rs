@@ -45,6 +45,7 @@ impl Config {
             engine_pool: 0,
             backend: BackendKind::Auto,
             scenario: None,
+            faults: None,
         }
     }
 

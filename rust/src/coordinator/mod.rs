@@ -30,6 +30,7 @@ use crate::checkpoint::CheckpointState;
 use crate::config::{Config, Device, ModelKind};
 use crate::convergence::{BoundParams, GradStatsEstimator};
 use crate::data::{partition, BatchSampler, Dataset};
+use crate::fault::{FaultInjector, FaultState};
 use crate::latency::{round_latency, round_latency_subset, Decisions, RoundLatency};
 use crate::metrics::{History, Record};
 use crate::model::{profile_for, Manifest, ModelProfile, Params};
@@ -101,6 +102,15 @@ pub struct Trainer {
     /// aggregation under churn.
     round_participants: Vec<usize>,
     round_weights: Vec<f64>,
+    /// Seeded fault injector (`None` = no injection and no tolerance: a
+    /// device error fails the round, the historical behaviour).
+    pub(crate) faults: Option<FaultInjector>,
+    /// Strike counts + quarantine roster — the only fault bookkeeping
+    /// that affects numerics, so the only part checkpointed.
+    pub(crate) fault_state: FaultState,
+    /// Devices abandoned by the round that just executed (ascending ids;
+    /// transient, rebuilt every round).
+    pub(crate) round_abandoned: Vec<usize>,
 }
 
 /// Resolve the configured engine-pool width: 0 = auto (fleet size capped by
@@ -166,6 +176,10 @@ impl Trainer {
             Some(spec) => Some(ScenarioEngine::new(spec.clone(), devices.clone(), cfg.seed)?),
             None => None,
         };
+        // The fault injector shares the experiment seed: every injected
+        // failure is a pure function of (seed, round), so two runs of the
+        // same spec break identically (DESIGN.md §13).
+        let faults = cfg.faults.as_ref().map(|s| FaultInjector::new(s.clone(), cfg.seed));
 
         let mut t = Trainer {
             cfg,
@@ -195,6 +209,9 @@ impl Trainer {
             participation: vec![true; n],
             round_participants: Vec::new(),
             round_weights: Vec::new(),
+            faults,
+            fault_state: FaultState::new(n),
+            round_abandoned: Vec::new(),
         };
         t.dec = t.next_decisions();
         t.refresh_step_artifacts()?;
@@ -273,14 +290,29 @@ impl Trainer {
 
     /// Advance the dynamic scenario (if any) at the top of a round:
     /// refresh effective device resources from the engine and rebuild the
-    /// participation mask (active members minus mid-round dropouts). A
-    /// no-op — no RNG draws, no state changes — on static fleets.
+    /// participation mask (active members minus mid-round dropouts), then
+    /// subtract the fault layer's exclusions (blacked-out devices and the
+    /// quarantine roster). A no-op — no RNG draws, no state changes — on
+    /// static fleets without fault injection.
     pub(crate) fn begin_round(&mut self) {
-        let Some(engine) = self.scenario.as_mut() else { return };
-        let snap = engine.advance();
-        self.devices = engine.effective_roster().to_vec();
-        self.participation = snap.participation(self.devices.len());
-        self.last_snapshot = Some(snap);
+        if let Some(engine) = self.scenario.as_mut() {
+            let snap = engine.advance();
+            self.devices = engine.effective_roster().to_vec();
+            self.participation = snap.participation(self.devices.len());
+            self.last_snapshot = Some(snap);
+        } else if self.faults.is_some() {
+            // Static fleets only rebuild the mask when the fault layer
+            // can shrink it (last round's abandonments cleared bits).
+            self.participation = vec![true; self.devices.len()];
+        }
+        if let Some(inj) = &self.faults {
+            for i in 0..self.participation.len() {
+                if inj.spec().blacked_out(i) || self.fault_state.quarantined[i] {
+                    self.participation[i] = false;
+                }
+            }
+        }
+        self.round_abandoned.clear();
     }
 
     /// Hand the current round's fleet snapshot to the round report.
@@ -322,6 +354,7 @@ impl Trainer {
             strategy_rng: self.strategy_rng.state_parts(),
             sampler_rngs: self.samplers.iter().map(|s| s.rng_state()).collect(),
             scenario: self.scenario.as_ref().map(|e| e.to_state()),
+            fault: self.faults.as_ref().map(|_| self.fault_state.clone()),
         }
     }
 
@@ -377,6 +410,23 @@ impl Trainer {
                 anyhow::bail!("checkpoint carries scenario state but the config has no scenario")
             }
         }
+        match (&self.faults, &state.fault) {
+            (Some(_), Some(f)) => {
+                anyhow::ensure!(
+                    f.strikes.len() == n && f.quarantined.len() == n,
+                    "checkpoint fault state covers {} devices, fleet has {n}",
+                    f.strikes.len()
+                );
+                self.fault_state = f.clone();
+            }
+            (None, None) => {}
+            (Some(_), None) => {
+                anyhow::bail!("config has a fault spec but the checkpoint carries no fault state")
+            }
+            (None, Some(_)) => {
+                anyhow::bail!("checkpoint carries fault state but the config has no fault spec")
+            }
+        }
         self.params = state.params;
         self.dec = state.dec;
         self.refresh_step_artifacts()?;
@@ -398,6 +448,7 @@ impl Trainer {
         self.participation = vec![true; n];
         self.round_participants.clear();
         self.round_weights.clear();
+        self.round_abandoned.clear();
         Ok(())
     }
 
@@ -436,13 +487,18 @@ impl Trainer {
                 let sub = Decisions { batch, cut };
                 round_latency(&self.profile, &devices, &self.cfg.server, &sub)
             }
-            None if self.scenario.is_some() => round_latency_subset(
-                &self.profile,
-                &self.devices,
-                &self.cfg.server,
-                &self.dec,
-                &self.participation,
-            ),
+            None if self.scenario.is_some() || !self.participation.iter().all(|&p| p) => {
+                // Partial participation without a snapshot: a scenario run
+                // priced between rounds, or a static fleet whose mask the
+                // fault layer shrank (blackout / quarantine / abandonment).
+                round_latency_subset(
+                    &self.profile,
+                    &self.devices,
+                    &self.cfg.server,
+                    &self.dec,
+                    &self.participation,
+                )
+            }
             None => round_latency(&self.profile, &self.devices, &self.cfg.server, &self.dec),
         }
     }
@@ -560,14 +616,14 @@ impl Trainer {
         // `prepare_device` key those tensors under `BufKey::COMMON_SET`.
         // Full-participation rounds use the paper's unweighted mean (so a
         // `static` scenario is bit-identical to a plain session); rounds
-        // with offline/dropped members aggregate partially.
-        let partial =
-            self.scenario.is_some() && self.round_participants.len() < self.params.len();
+        // with offline/dropped/abandoned members — scenario churn or the
+        // fault layer's exclusions — aggregate partially.
+        let partial = self.round_participants.len() < self.params.len();
         // A round where every participant dropped moves no parameters:
         // skip the Eqn-4 aggregation entirely and keep `common_version`
         // stable, so the COMMON_SET cache keys stay valid and the next
         // non-empty round is not forced into a spurious repack.
-        let empty_round = self.scenario.is_some() && self.round_participants.is_empty();
+        let empty_round = self.round_participants.is_empty();
         if !empty_round {
             if partial {
                 aggregate_common_partial(
@@ -629,5 +685,27 @@ impl Trainer {
 
     pub fn n_devices(&self) -> usize {
         self.devices.len()
+    }
+
+    /// Ascending ids of devices the fault layer has quarantined (repeat
+    /// abandonment past the spec's `quarantine_after` threshold). Empty
+    /// when faults are off.
+    pub fn quarantined_devices(&self) -> Vec<usize> {
+        self.fault_state.quarantined_ids()
+    }
+
+    /// Devices abandoned by the round that just executed (ascending ids;
+    /// cleared at the top of the next round).
+    pub fn last_abandoned(&self) -> &[usize] {
+        &self.round_abandoned
+    }
+
+    /// Fault hook for `Session::checkpoint`: whether the write after
+    /// completed round `round` must be torn mid-file. A pure draw of
+    /// (seed, round) — never consults the wall clock.
+    pub(crate) fn tear_checkpoint(&self, round: usize) -> bool {
+        self.faults
+            .as_ref()
+            .map_or(false, |inj| inj.tear_checkpoint(round as u64))
     }
 }

@@ -7,13 +7,24 @@
 //! threads, the engine channel, the cf/cb double use — clones handles, not
 //! data. The engine's buffer cache then packs each versioned tensor into a
 //! PJRT literal at most once per lane per version (DESIGN.md §8).
+//!
+//! Fault tolerance (DESIGN.md §13): with [`crate::fault`] armed, each
+//! device's step runs under `catch_unwind` with a per-round deadline and
+//! bounded retry-with-backoff; a device that exhausts its attempts is
+//! *abandoned* — excluded from this round's participant set so Eqn-39
+//! partial aggregation prices the round over the survivors — never
+//! failing the round. With faults off (`Config::faults == None`) the
+//! paths below are byte-identical to the historical behaviour: a single
+//! attempt per device, and any error fails the round.
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use super::Trainer;
+use crate::fault::{AttemptFault, RoundPlan};
 use crate::model::Tensor;
 use crate::runtime::{
-    host_to_tensor, tensor_to_shared, BufKey, ExecInput, HostTensor, StepArtifacts,
+    host_to_tensor, tensor_to_shared, BufKey, EngineHandle, ExecInput, HostTensor, StepArtifacts,
 };
 
 /// Aggregate result of one round.
@@ -68,6 +79,82 @@ struct DeviceResult {
     loss: f64,
     correct: f64,
     true_batch: u32,
+}
+
+/// Outcome of one device's round under fault tolerance.
+enum DeviceRound {
+    Done(DeviceResult),
+    /// Every attempt failed: the device sits this round out. The round
+    /// carries on without it (Eqn-39 partial aggregation).
+    Abandoned { idx: usize },
+}
+
+/// Run one device's step under the fault layer: consult the pre-drawn
+/// per-attempt plan, catch injected and genuine panics, honour the device
+/// deadline, and back off (exponentially, capped at 1 s) between attempts.
+///
+/// The plan guarantees the final attempt of a non-`kill` device draws
+/// clean (see `FaultInjector::round_plan`), so randomly injected faults
+/// exercise this machinery without ever abandoning a healthy device —
+/// only `kill` membership, genuine engine errors, and real deadline
+/// overruns reach [`DeviceRound::Abandoned`].
+fn run_device_with_faults(
+    engine: &EngineHandle,
+    work: &DeviceWork,
+    plan: &[AttemptFault],
+    deadline_ms: u64,
+    backoff_ms: u64,
+) -> DeviceRound {
+    let deadline = (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms));
+    for (attempt, fault) in plan.iter().enumerate() {
+        if attempt > 0 && backoff_ms > 0 {
+            let wait = backoff_ms.saturating_mul(1u64 << (attempt - 1).min(10)).min(1000);
+            std::thread::sleep(Duration::from_millis(wait));
+        }
+        // AssertUnwindSafe: on an unwind we retry from the same immutable
+        // `work` (failed attempts mutate no trainer state) or abandon the
+        // device entirely — no broken invariant can be observed.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || -> crate::Result<DeviceResult> {
+                match fault {
+                    AttemptFault::Error => anyhow::bail!(
+                        "injected step error (device {}, attempt {attempt})",
+                        work.idx
+                    ),
+                    AttemptFault::Panic => panic!(
+                        "injected step panic (device {}, attempt {attempt})",
+                        work.idx
+                    ),
+                    AttemptFault::Delay(ms) => {
+                        if deadline_ms > 0 && *ms > deadline_ms {
+                            // The injected stall provably overruns the
+                            // deadline: fail the attempt by arithmetic,
+                            // without actually sleeping it out — keeps
+                            // chaos runs fast *and* deterministic.
+                            anyhow::bail!(
+                                "injected {ms}ms stall exceeds the {deadline_ms}ms device \
+                                 deadline (device {})",
+                                work.idx
+                            );
+                        }
+                        // In-budget stall: sleep a bounded slice so the
+                        // delay path really runs, then execute normally.
+                        std::thread::sleep(Duration::from_millis((*ms).min(100)));
+                        Trainer::exec_device_blocking(engine, work, deadline)
+                    }
+                    AttemptFault::None => Trainer::exec_device_blocking(engine, work, deadline),
+                }
+            },
+        ));
+        match outcome {
+            Ok(Ok(res)) => return DeviceRound::Done(res),
+            // Failed attempt (error or panic): fall through to the next
+            // one. The specific cause is deliberately not propagated —
+            // abandonment is the only caller-visible signal.
+            Ok(Err(_)) | Err(_) => {}
+        }
+    }
+    DeviceRound::Abandoned { idx: work.idx }
 }
 
 impl Trainer {
@@ -178,40 +265,60 @@ impl Trainer {
     }
 
     /// Execute steps a1–a5 for one device through the engine (blocking).
+    ///
+    /// Borrows the work so a fault-layer retry replays the *same*
+    /// mini-batch — the device's sampler stream is never re-advanced by a
+    /// failed attempt. Input clones are handle clones (Arc bumps) except
+    /// the small fresh label/weight tensors. `deadline`, when set, is the
+    /// budget for the whole three-call step; each engine call gets what
+    /// remains of it.
     fn exec_device_blocking(
-        engine: &crate::runtime::EngineHandle,
-        work: DeviceWork,
+        engine: &EngineHandle,
+        work: &DeviceWork,
+        deadline: Option<Duration>,
     ) -> crate::Result<DeviceResult> {
-        let DeviceWork {
-            idx,
-            lane,
-            artifacts,
-            x,
-            onehot,
-            weights,
-            client_params,
-            server_params,
-            true_batch,
-            ..
-        } = work;
+        let started = Instant::now();
+        let remaining = |started: Instant| -> crate::Result<Option<Duration>> {
+            match deadline {
+                None => Ok(None),
+                Some(d) => match d.checked_sub(started.elapsed()) {
+                    Some(left) => Ok(Some(left)),
+                    None => anyhow::bail!(
+                        "device {} exceeded its {}ms round deadline",
+                        work.idx,
+                        d.as_millis()
+                    ),
+                },
+            }
+        };
 
         // a1) client-side forward propagation. `x` and the client params
-        // are needed again in a5, so clone the handles (Arc bumps).
-        let mut cf_in = Vec::with_capacity(1 + client_params.len());
-        cf_in.push(x.clone());
-        cf_in.extend(client_params.iter().cloned());
-        let mut cf_out = engine.execute_inputs_blocking(lane, &artifacts.client_fwd, cf_in)?;
+        // are needed again in a5 (and on retries), so clone the handles.
+        let mut cf_in = Vec::with_capacity(1 + work.client_params.len());
+        cf_in.push(work.x.clone());
+        cf_in.extend(work.client_params.iter().cloned());
+        let mut cf_out = engine.execute_inputs_deadline(
+            work.lane,
+            &work.artifacts.client_fwd,
+            cf_in,
+            remaining(started)?,
+        )?;
         let activations = cf_out.remove(0);
 
         // a2) activations + labels to the edge server (message passing is
         // simulated by the latency model; data moves via this call).
         // a3) server-side FP + BP.
-        let mut ss_in = Vec::with_capacity(3 + server_params.len());
+        let mut ss_in = Vec::with_capacity(3 + work.server_params.len());
         ss_in.push(ExecInput::Fresh(activations));
-        ss_in.push(onehot);
-        ss_in.push(weights);
-        ss_in.extend(server_params);
-        let mut ss_out = engine.execute_inputs_blocking(lane, &artifacts.server_step, ss_in)?;
+        ss_in.push(work.onehot.clone());
+        ss_in.push(work.weights.clone());
+        ss_in.extend(work.server_params.iter().cloned());
+        let mut ss_out = engine.execute_inputs_deadline(
+            work.lane,
+            &work.artifacts.server_step,
+            ss_in,
+            remaining(started)?,
+        )?;
         let loss = ss_out.remove(0).data[0] as f64;
         let correct = ss_out.remove(0).data[0] as f64;
         let grad_a = ss_out.remove(0);
@@ -219,15 +326,26 @@ impl Trainer {
 
         // a4) activations' gradients back to the device.
         // a5) client-side backward pass (recompute-based VJP).
-        let mut cb_in = Vec::with_capacity(2 + client_params.len());
-        cb_in.push(x);
+        let mut cb_in = Vec::with_capacity(2 + work.client_params.len());
+        cb_in.push(work.x.clone());
         cb_in.push(ExecInput::Fresh(grad_a));
-        cb_in.extend(client_params);
-        let cb_out = engine.execute_inputs_blocking(lane, &artifacts.client_bwd, cb_in)?;
+        cb_in.extend(work.client_params.iter().cloned());
+        let cb_out = engine.execute_inputs_deadline(
+            work.lane,
+            &work.artifacts.client_bwd,
+            cb_in,
+            remaining(started)?,
+        )?;
         let mut grads: Vec<Tensor> = cb_out.into_iter().map(host_to_tensor).collect();
         grads.extend(server_grads);
 
-        Ok(DeviceResult { idx, grads, loss, correct, true_batch })
+        Ok(DeviceResult {
+            idx: work.idx,
+            grads,
+            loss,
+            correct,
+            true_batch: work.true_batch,
+        })
     }
 
     fn apply_results(&mut self, results: Vec<DeviceResult>) -> RoundOutcome {
@@ -280,6 +398,39 @@ impl Trainer {
         }
     }
 
+    /// Fault hook at the top of a round: deliver the round's lane crash
+    /// (if any) and pre-draw the whole roster's device fault plan. `None`
+    /// when faults are off.
+    fn inject_round_faults(&self, round: u64) -> Option<RoundPlan> {
+        let inj = self.faults.as_ref()?;
+        if let Some(lane) = inj.lane_crash(round, self.engine.width()) {
+            self.engine.inject_lane_crash(lane);
+        }
+        Some(inj.round_plan(round, self.n_devices()))
+    }
+
+    /// The retry knobs from the armed fault spec: (deadline_ms, backoff_ms).
+    fn fault_knobs(&self) -> (u64, u64) {
+        match &self.faults {
+            Some(inj) => (inj.spec().deadline_ms, inj.spec().backoff_ms),
+            None => (0, 0),
+        }
+    }
+
+    /// Post-execution bookkeeping for abandoned devices: drop them from
+    /// the round's participation mask (so latency pricing matches a run
+    /// where they never took part), count strikes, and quarantine repeat
+    /// offenders.
+    fn finish_abandoned(&mut self, mut abandoned: Vec<usize>) {
+        abandoned.sort_unstable();
+        let quarantine_after = self.faults.as_ref().map_or(0, |i| i.spec().quarantine_after);
+        for &idx in &abandoned {
+            self.participation[idx] = false;
+            self.fault_state.note_abandoned(idx, quarantine_after);
+        }
+        self.round_abandoned = abandoned;
+    }
+
     /// Sequential round: steps a1–a5 for every participating device, then
     /// SGD updates. All traffic routes to engine lane 0 — extra pool lanes
     /// stay cold (no compiles, no buffer copies) for sequential sessions.
@@ -288,16 +439,32 @@ impl Trainer {
     pub(crate) fn run_round(&mut self) -> crate::Result<RoundOutcome> {
         self.begin_round();
         self.rounds_run += 1;
+        let plan = self.inject_round_faults(self.rounds_run);
+        let (deadline_ms, backoff_ms) = self.fault_knobs();
         let n = self.n_devices();
         let shared = self.shared_param_arcs();
         let mut results = Vec::with_capacity(n);
+        let mut abandoned = Vec::new();
         for i in 0..n {
             if !self.participation()[i] {
                 continue;
             }
             let work = self.prepare_device(i, 0, &shared)?;
-            results.push(Self::exec_device_blocking(&self.engine, work)?);
+            match &plan {
+                None => results.push(Self::exec_device_blocking(&self.engine, &work, None)?),
+                Some(p) => match run_device_with_faults(
+                    &self.engine,
+                    &work,
+                    &p.attempts[i],
+                    deadline_ms,
+                    backoff_ms,
+                ) {
+                    DeviceRound::Done(r) => results.push(r),
+                    DeviceRound::Abandoned { idx } => abandoned.push(idx),
+                },
+            }
         }
+        self.finish_abandoned(abandoned);
         Ok(self.apply_results(results))
     }
 
@@ -311,6 +478,8 @@ impl Trainer {
     pub(crate) fn run_round_concurrent(&mut self) -> crate::Result<RoundOutcome> {
         self.begin_round();
         self.rounds_run += 1;
+        let plan = self.inject_round_faults(self.rounds_run);
+        let (deadline_ms, backoff_ms) = self.fault_knobs();
         let n = self.n_devices();
         let width = self.engine.width();
         let shared = self.shared_param_arcs();
@@ -324,8 +493,9 @@ impl Trainer {
         let n_works = works.len();
         let workers = width.min(n_works);
         let engine = self.engine.clone();
+        let plan_ref = &plan;
         let queue = std::sync::Mutex::new(works);
-        let done: std::sync::Mutex<Vec<crate::Result<DeviceResult>>> =
+        let done: std::sync::Mutex<Vec<crate::Result<DeviceRound>>> =
             std::sync::Mutex::new(Vec::with_capacity(n_works));
         let panicked = std::thread::scope(|scope| {
             let handles: Vec<_> = (0..workers)
@@ -336,7 +506,17 @@ impl Trainer {
                     scope.spawn(move || loop {
                         let work = queue.lock().unwrap().pop_front();
                         let Some(work) = work else { break };
-                        let res = Self::exec_device_blocking(&engine, work);
+                        let res = match plan_ref {
+                            None => Self::exec_device_blocking(&engine, &work, None)
+                                .map(DeviceRound::Done),
+                            Some(p) => Ok(run_device_with_faults(
+                                &engine,
+                                &work,
+                                &p.attempts[work.idx],
+                                deadline_ms,
+                                backoff_ms,
+                            )),
+                        };
                         done.lock().unwrap().push(res);
                     })
                 })
@@ -344,11 +524,18 @@ impl Trainer {
             handles.into_iter().map(|h| h.join()).filter(|r| r.is_err()).count()
         });
         anyhow::ensure!(panicked == 0, "{panicked} device worker thread(s) panicked");
-        let results = done
+        let mut results = Vec::with_capacity(n_works);
+        let mut abandoned = Vec::new();
+        for res in done
             .into_inner()
             .map_err(|_| anyhow::anyhow!("device result store poisoned"))?
-            .into_iter()
-            .collect::<crate::Result<Vec<_>>>()?;
+        {
+            match res? {
+                DeviceRound::Done(r) => results.push(r),
+                DeviceRound::Abandoned { idx } => abandoned.push(idx),
+            }
+        }
+        self.finish_abandoned(abandoned);
         Ok(self.apply_results(results))
     }
 }

@@ -310,6 +310,8 @@ mod tests {
             decisions: crate::latency::Decisions::uniform(1, 8, 4),
             test_acc: None,
             fleet: None,
+            abandoned: vec![],
+            quarantined: vec![],
         }
     }
 

@@ -55,6 +55,7 @@ use std::path::{Path, PathBuf};
 use crate::backend::{BackendKind, ModelSpec};
 use crate::config::{Config, ModelKind, Partition, StrategyKind};
 use crate::coordinator::Trainer;
+use crate::fault::{FaultPreset, FaultSpec};
 use crate::model::Manifest;
 use crate::scenario::{Scenario, ScenarioPreset};
 
@@ -302,6 +303,21 @@ impl ExperimentBuilder {
         self.scenario(preset.scenario())
     }
 
+    /// Arm seeded fault injection + graceful degradation (see
+    /// [`crate::fault`] and DESIGN.md §13). Devices that exhaust their
+    /// retries are abandoned for the round (Eqn-39 partial aggregation
+    /// over the survivors) instead of failing the run; crashed engine
+    /// lanes are respawned and their in-flight job replayed.
+    pub fn faults(mut self, spec: FaultSpec) -> Self {
+        self.cfg.faults = Some(spec);
+        self
+    }
+
+    /// [`ExperimentBuilder::faults`] from a named preset.
+    pub fn faults_preset(self, preset: FaultPreset) -> Self {
+        self.faults(preset.spec())
+    }
+
     /// Attach a boxed observer. Observers are `Send` so a built
     /// [`Session`] can move into a worker thread (the serve daemon's
     /// session-worker pool does exactly that).
@@ -377,6 +393,10 @@ impl ExperimentBuilder {
         if let Some(s) = &cfg.scenario {
             s.validate(cfg.fleet.n_devices)
                 .map_err(|e| anyhow::anyhow!("config section 'scenario': {e}"))?;
+        }
+        if let Some(f) = &cfg.faults {
+            f.validate(cfg.fleet.n_devices)
+                .map_err(|e| anyhow::anyhow!("config section 'faults': {e}"))?;
         }
         Ok(())
     }
@@ -579,6 +599,21 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(err.to_string().contains("cannot read checkpoint"), "{err}");
+    }
+
+    #[test]
+    fn builder_accepts_and_validates_fault_specs() {
+        let cfg = Experiment::builder()
+            .faults_preset(FaultPreset::Flaky)
+            .build_config()
+            .unwrap();
+        assert_eq!(cfg.faults.as_ref().unwrap().name, "flaky");
+
+        // Out-of-roster device ids are rejected up front.
+        let mut bad = FaultPreset::Chaos.spec();
+        bad.kill = vec![999];
+        let err = Experiment::builder().faults(bad).build_config().unwrap_err();
+        assert!(err.to_string().contains("config section 'faults'"), "{err}");
     }
 
     #[test]

@@ -228,6 +228,8 @@ mod tests {
             decisions: Decisions::uniform(1, 8, 4),
             test_acc,
             fleet: None,
+            abandoned: vec![],
+            quarantined: vec![],
         }
     }
 

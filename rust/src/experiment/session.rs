@@ -34,6 +34,12 @@ pub struct RoundReport {
     /// The round's fleet snapshot (membership, effective rates, drift).
     /// Present only when the session runs under a dynamic scenario.
     pub fleet: Option<FleetSnapshot>,
+    /// Devices the fault layer abandoned this round — every retry failed,
+    /// the round carried on without them (empty without fault injection).
+    pub abandoned: Vec<usize>,
+    /// Devices quarantined by the fault layer as of this round
+    /// (cumulative; empty without fault injection).
+    pub quarantined: Vec<usize>,
 }
 
 impl RoundReport {
@@ -70,13 +76,24 @@ impl RoundReport {
             Some(a) => j.set("test_acc", Json::Num(a)),
             None => j.set("test_acc", Json::Null),
         };
-        if let Some(fleet) = &self.fleet {
+        // The fleet block carries both the scenario snapshot and the
+        // fault layer's casualty lists. Fault keys appear only when
+        // non-empty, so scenario-only and fault-less reports keep their
+        // historical byte layout.
+        let faulted = !self.abandoned.is_empty() || !self.quarantined.is_empty();
+        if self.fleet.is_some() || faulted {
             let mut f = Json::obj();
-            f.set("n_active", Json::Num(fleet.active.len() as f64))
-                .set("n_dropped", Json::Num(fleet.dropped.len() as f64))
-                .set("n_joined", Json::Num(fleet.joined.len() as f64))
-                .set("n_left", Json::Num(fleet.left.len() as f64))
-                .set("drift", Json::Num(fleet.drift));
+            if let Some(fleet) = &self.fleet {
+                f.set("n_active", Json::Num(fleet.active.len() as f64))
+                    .set("n_dropped", Json::Num(fleet.dropped.len() as f64))
+                    .set("n_joined", Json::Num(fleet.joined.len() as f64))
+                    .set("n_left", Json::Num(fleet.left.len() as f64))
+                    .set("drift", Json::Num(fleet.drift));
+            }
+            if faulted {
+                f.set("abandoned", Json::from_usizes(&self.abandoned))
+                    .set("quarantined", Json::from_usizes(&self.quarantined));
+            }
             j.set("fleet", f);
         }
         j
@@ -128,7 +145,17 @@ impl Session {
     /// with [`super::ExperimentBuilder::resume_from`], which reproduces
     /// the uninterrupted run bit-for-bit.
     pub fn checkpoint(&self, path: impl AsRef<Path>) -> crate::Result<()> {
-        self.trainer.capture(self.round).save(path.as_ref())
+        let state = self.trainer.capture(self.round);
+        if self.trainer.tear_checkpoint(self.round) {
+            // Injected torn write (`crate::fault`): land a truncated file
+            // at the final path, bypassing the temp+rename dance — models
+            // a machine that died mid-write or a partial copy. Loaders
+            // must reject it loudly (`CheckpointState::from_bytes`).
+            let bytes = state.to_bytes();
+            std::fs::write(path.as_ref(), &bytes[..bytes.len() * 2 / 3])?;
+            return Ok(());
+        }
+        state.save(path.as_ref())
     }
 
     /// Rounds completed so far.
@@ -228,6 +255,8 @@ impl Session {
             decisions: self.trainer.decisions().clone(),
             test_acc,
             fleet: self.trainer.take_snapshot(),
+            abandoned: self.trainer.last_abandoned().to_vec(),
+            quarantined: self.trainer.quarantined_devices(),
         };
         for obs in &mut self.observers {
             obs.on_round(&report);

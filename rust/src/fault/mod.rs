@@ -1,0 +1,581 @@
+//! Seeded fault injection and the degradation contract it exercises.
+//!
+//! HASFL's premise is that edge devices fail, stall, and straggle — this
+//! module turns that premise into an executable test surface. A
+//! [`FaultSpec`] (carried in `Config.faults`, serde-round-trippable through
+//! the in-repo JSON codec exactly like `Scenario`) describes what to break;
+//! a [`FaultInjector`] turns spec + experiment seed into *pure-function*
+//! per-round fault plans, injected at real system boundaries:
+//!
+//! - device step errors / panics / delays inside the round loop
+//!   (`coordinator::round`), bounded by a per-device deadline and
+//!   retry-with-backoff budget;
+//! - engine-lane crashes in `runtime::handle` (the lane thread exits
+//!   mid-round; supervision respawns it and replays the in-flight job);
+//! - torn checkpoint writes in `experiment::Session::checkpoint`
+//!   (simulating file corruption the `HASFLCKP` checksum must catch).
+//!
+//! Connection-level faults against the serve daemon (slow-loris reads,
+//! mid-body disconnects) are client-side behaviours and live in
+//! `tests/chaos.rs` / `ci.sh` — the daemon's caps and socket deadlines are
+//! configuration (`serve::ServeConfig`), not injection.
+//!
+//! # Determinism contract (DESIGN.md §13)
+//!
+//! Every draw is a pure function of `(seed, round)`: plans are pre-drawn
+//! for the whole roster in device order from `Pcg32::new(seed ^ stream,
+//! round)` before any worker thread runs, so worker scheduling cannot
+//! reorder draws and no fault-RNG cursor needs checkpointing. Two runs of
+//! the same seeded spec are bit-identical.
+//!
+//! Randomly drawn attempt faults are *transient by construction*: the
+//! final retry attempt of a non-[`kill`](FaultSpec::kill) device is always
+//! drawn clean, so random faults exercise retry/backoff/deadline paths
+//! without ever abandoning a healthy device. Only `kill` membership,
+//! genuine engine errors, and real deadline overruns abandon a device —
+//! which is what makes the survivor-equivalence guarantee hold: a run with
+//! `kill = [j]` produces byte-identical surviving-device history to a run
+//! with `blackout = [j]` (same roster size, device `j` never scheduled).
+//! `tests/chaos.rs` asserts exactly that.
+
+use crate::rng::Pcg32;
+use crate::util::Json;
+
+/// Stream-id salts separating the three independent fault-draw streams
+/// from each other and from every training stream.
+const STREAM_DEVICE: u64 = 0xFA17_0D01;
+const STREAM_LANE: u64 = 0xFA17_1A4E;
+const STREAM_TEAR: u64 = 0xFA17_7EA2;
+
+/// What the injector does to one device-step attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttemptFault {
+    /// Execute normally.
+    None,
+    /// Fail the attempt with an injected error before executing.
+    Error,
+    /// Panic inside the attempt (caught by the round loop's unwind guard,
+    /// converted into a retryable failure).
+    Panic,
+    /// Sleep `ms` before executing; if `ms` exceeds the per-device
+    /// deadline the attempt is abandoned deterministically *without*
+    /// sleeping (the violation is decided by arithmetic, not wall clock).
+    Delay(u64),
+}
+
+/// Pre-drawn fault plan for one round: `attempts[device][attempt]`.
+/// Drawn for the whole roster (participating or not) so the draw protocol
+/// is independent of participation.
+#[derive(Debug, Clone)]
+pub struct RoundPlan {
+    pub attempts: Vec<Vec<AttemptFault>>,
+}
+
+/// Declarative fault-injection spec, carried in `Config.faults`.
+///
+/// All rates are per-draw probabilities in `[0, 1]`. Rounds are 1-based
+/// (the first executed round is round 1, matching `Trainer::rounds_run`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    pub name: String,
+    /// Devices that never participate in any round — the clean baseline
+    /// the survivor-equivalence tests compare against. Excluded at
+    /// `begin_round`, before any sampling or scheduling.
+    pub blackout: Vec<usize>,
+    /// Devices whose every step attempt fails (all rounds): the
+    /// deterministic fatal-fault targets. They burn their retry budget,
+    /// accumulate strikes, and end up quarantined.
+    pub kill: Vec<usize>,
+    /// Per-attempt probability of an injected step error.
+    pub error_rate: f64,
+    /// Per-attempt probability of an injected step panic.
+    pub panic_rate: f64,
+    /// Per-attempt probability of an injected step delay of `delay_ms`.
+    pub delay_rate: f64,
+    /// Injected delay length (milliseconds).
+    pub delay_ms: u64,
+    /// Per-device round deadline in milliseconds (0 = no deadline). Also
+    /// bounds *real* engine stalls via `recv_timeout` on the lane reply.
+    pub deadline_ms: u64,
+    /// Retries per device step after the first attempt.
+    pub max_retries: u32,
+    /// Base backoff between attempts (milliseconds, doubled per retry,
+    /// capped at 1 s).
+    pub backoff_ms: u64,
+    /// Abandonments before a device is quarantined — excluded from all
+    /// later rounds and surfaced in `RoundReport` (0 = never quarantine).
+    pub quarantine_after: u32,
+    /// Per-round probability that one engine lane crashes at round start.
+    pub lane_crash_rate: f64,
+    /// Per-checkpoint probability the write is torn (truncated bytes land
+    /// at the final path, as if the writer died mid-write).
+    pub torn_checkpoint_rate: f64,
+    /// Last round (1-based, inclusive) the random injections are active;
+    /// 0 = forever. `blackout`/`kill` membership is structural and is not
+    /// gated by this window.
+    pub until_round: usize,
+}
+
+impl Default for FaultSpec {
+    fn default() -> FaultSpec {
+        FaultSpec {
+            name: "none".to_string(),
+            blackout: Vec::new(),
+            kill: Vec::new(),
+            error_rate: 0.0,
+            panic_rate: 0.0,
+            delay_rate: 0.0,
+            delay_ms: 0,
+            deadline_ms: 0,
+            max_retries: 2,
+            backoff_ms: 5,
+            quarantine_after: 0,
+            lane_crash_rate: 0.0,
+            torn_checkpoint_rate: 0.0,
+            until_round: 0,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Validate against a fleet of `n_devices` roster members.
+    pub fn validate(&self, n_devices: usize) -> crate::Result<()> {
+        anyhow::ensure!(
+            n_devices >= 1,
+            "fault spec '{}' needs a non-empty fleet (n_devices >= 1)",
+            self.name
+        );
+        for (what, ids) in [("blackout", &self.blackout), ("kill", &self.kill)] {
+            for &i in ids.iter() {
+                anyhow::ensure!(
+                    i < n_devices,
+                    "fault {what} device {i} outside the roster (n_devices = {n_devices})"
+                );
+            }
+        }
+        anyhow::ensure!(
+            self.blackout.len() < n_devices,
+            "fault blackout covers the whole fleet ({n_devices} devices): nothing would train"
+        );
+        for (name, p) in [
+            ("error_rate", self.error_rate),
+            ("panic_rate", self.panic_rate),
+            ("delay_rate", self.delay_rate),
+            ("lane_crash_rate", self.lane_crash_rate),
+            ("torn_checkpoint_rate", self.torn_checkpoint_rate),
+        ] {
+            anyhow::ensure!((0.0..=1.0).contains(&p), "fault {name} {p} outside [0, 1]");
+        }
+        anyhow::ensure!(
+            self.error_rate + self.panic_rate + self.delay_rate <= 1.0,
+            "fault attempt rates sum to {} > 1",
+            self.error_rate + self.panic_rate + self.delay_rate
+        );
+        if self.delay_rate > 0.0 {
+            anyhow::ensure!(self.delay_ms > 0, "fault delay_rate > 0 needs delay_ms > 0");
+        }
+        Ok(())
+    }
+
+    /// True for device ids that must never be scheduled in any round.
+    pub fn blacked_out(&self, device: usize) -> bool {
+        self.blackout.contains(&device)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", Json::Str(self.name.clone()))
+            .set("blackout", Json::from_usizes(&self.blackout))
+            .set("kill", Json::from_usizes(&self.kill))
+            .set("error_rate", Json::Num(self.error_rate))
+            .set("panic_rate", Json::Num(self.panic_rate))
+            .set("delay_rate", Json::Num(self.delay_rate))
+            .set("delay_ms", Json::Num(self.delay_ms as f64))
+            .set("deadline_ms", Json::Num(self.deadline_ms as f64))
+            .set("max_retries", Json::Num(self.max_retries as f64))
+            .set("backoff_ms", Json::Num(self.backoff_ms as f64))
+            .set("quarantine_after", Json::Num(self.quarantine_after as f64))
+            .set("lane_crash_rate", Json::Num(self.lane_crash_rate))
+            .set("torn_checkpoint_rate", Json::Num(self.torn_checkpoint_rate))
+            .set("until_round", Json::Num(self.until_round as f64));
+        j
+    }
+
+    /// Parse from JSON. Every field except `name` is optional and defaults
+    /// to [`FaultSpec::default`], so a spec file only states what it breaks.
+    pub fn from_json(j: &Json) -> crate::Result<FaultSpec> {
+        let d = FaultSpec::default();
+        let opt_f64 = |key: &str, dv: f64| -> crate::Result<f64> {
+            match j.get(key) {
+                Some(v) => v.as_f64(),
+                None => Ok(dv),
+            }
+        };
+        let opt_u64 = |key: &str, dv: u64| -> crate::Result<u64> {
+            match j.get(key) {
+                Some(v) => v.as_u64(),
+                None => Ok(dv),
+            }
+        };
+        let opt_ids = |key: &str| -> crate::Result<Vec<usize>> {
+            match j.get(key) {
+                Some(v) => v.usize_vec(),
+                None => Ok(Vec::new()),
+            }
+        };
+        Ok(FaultSpec {
+            name: j.req("name")?.as_str()?.to_string(),
+            blackout: opt_ids("blackout")?,
+            kill: opt_ids("kill")?,
+            error_rate: opt_f64("error_rate", d.error_rate)?,
+            panic_rate: opt_f64("panic_rate", d.panic_rate)?,
+            delay_rate: opt_f64("delay_rate", d.delay_rate)?,
+            delay_ms: opt_u64("delay_ms", d.delay_ms)?,
+            deadline_ms: opt_u64("deadline_ms", d.deadline_ms)?,
+            max_retries: opt_u64("max_retries", d.max_retries as u64)? as u32,
+            backoff_ms: opt_u64("backoff_ms", d.backoff_ms)?,
+            quarantine_after: opt_u64("quarantine_after", d.quarantine_after as u64)? as u32,
+            lane_crash_rate: opt_f64("lane_crash_rate", d.lane_crash_rate)?,
+            torn_checkpoint_rate: opt_f64("torn_checkpoint_rate", d.torn_checkpoint_rate)?,
+            until_round: opt_u64("until_round", d.until_round as u64)? as usize,
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> crate::Result<FaultSpec> {
+        let text = std::fs::read_to_string(path)?;
+        FaultSpec::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_json().dump())?;
+        Ok(())
+    }
+}
+
+/// Named fault presets for `hasfl train --faults <preset>` and ci.sh's
+/// chaos smoke: roster-size-agnostic (no device ids), so they validate
+/// against any fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPreset {
+    /// Transient-only noise: errors, panics, and sub-deadline delays that
+    /// retries always absorb. Survivor set = full roster.
+    Flaky,
+    /// Everything at once: heavy transient step faults, a lane crash
+    /// roughly every other round, and occasional torn checkpoints.
+    Chaos,
+}
+
+impl FaultPreset {
+    pub const ALL: [FaultPreset; 2] = [FaultPreset::Flaky, FaultPreset::Chaos];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultPreset::Flaky => "flaky",
+            FaultPreset::Chaos => "chaos",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<FaultPreset> {
+        Ok(match s {
+            "flaky" => FaultPreset::Flaky,
+            "chaos" => FaultPreset::Chaos,
+            _ => anyhow::bail!("unknown fault preset '{s}' (expected flaky|chaos)"),
+        })
+    }
+
+    pub fn spec(&self) -> FaultSpec {
+        let name = self.as_str().to_string();
+        match self {
+            FaultPreset::Flaky => FaultSpec {
+                name,
+                error_rate: 0.2,
+                panic_rate: 0.05,
+                delay_rate: 0.1,
+                delay_ms: 2,
+                deadline_ms: 60_000,
+                max_retries: 3,
+                backoff_ms: 1,
+                ..FaultSpec::default()
+            },
+            FaultPreset::Chaos => FaultSpec {
+                name,
+                error_rate: 0.25,
+                panic_rate: 0.1,
+                delay_rate: 0.15,
+                delay_ms: 2,
+                deadline_ms: 60_000,
+                max_retries: 3,
+                backoff_ms: 1,
+                quarantine_after: 3,
+                lane_crash_rate: 0.5,
+                torn_checkpoint_rate: 0.25,
+                ..FaultSpec::default()
+            },
+        }
+    }
+}
+
+/// Mutable per-run fault bookkeeping: strike counts and the quarantine
+/// roster. This is the only injector state that affects numerics, so it is
+/// the only part persisted in checkpoints (as a trailing optional field of
+/// the `HASFLCKP` payload — legacy checkpoints simply lack it).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultState {
+    /// Cumulative abandonments per roster device.
+    pub strikes: Vec<u32>,
+    /// Devices excluded from all future rounds (repeat offenders).
+    pub quarantined: Vec<bool>,
+}
+
+impl FaultState {
+    pub fn new(n_devices: usize) -> FaultState {
+        FaultState { strikes: vec![0; n_devices], quarantined: vec![false; n_devices] }
+    }
+
+    /// Record an abandonment; returns true when the device just crossed
+    /// the quarantine threshold.
+    pub fn note_abandoned(&mut self, device: usize, quarantine_after: u32) -> bool {
+        self.strikes[device] = self.strikes[device].saturating_add(1);
+        if quarantine_after > 0
+            && self.strikes[device] >= quarantine_after
+            && !self.quarantined[device]
+        {
+            self.quarantined[device] = true;
+            return true;
+        }
+        false
+    }
+
+    /// Ascending ids of quarantined devices.
+    pub fn quarantined_ids(&self) -> Vec<usize> {
+        self.quarantined
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &q)| q.then_some(i))
+            .collect()
+    }
+}
+
+/// Turns spec + experiment seed into per-round fault decisions. Stateless:
+/// every method is a pure function of its arguments, so plans survive
+/// checkpoint/resume and worker-pool scheduling unchanged.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    spec: FaultSpec,
+    seed: u64,
+}
+
+impl FaultInjector {
+    pub fn new(spec: FaultSpec, seed: u64) -> FaultInjector {
+        FaultInjector { spec, seed }
+    }
+
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Whether the random injections apply to (1-based) `round`.
+    fn active(&self, round: u64) -> bool {
+        self.spec.until_round == 0 || round <= self.spec.until_round as u64
+    }
+
+    /// Pre-draw the round's device fault plan: one uniform draw per
+    /// (device, attempt) in device order, whole roster, so the protocol is
+    /// independent of participation and scheduling. The final attempt of a
+    /// non-`kill` device is always clean (see the module docs).
+    pub fn round_plan(&self, round: u64, n_devices: usize) -> RoundPlan {
+        let mut rng = Pcg32::new(self.seed ^ STREAM_DEVICE, round);
+        let active = self.active(round);
+        let n_attempts = self.spec.max_retries as usize + 1;
+        let mut attempts = Vec::with_capacity(n_devices);
+        for device in 0..n_devices {
+            let killed = self.spec.kill.contains(&device);
+            let mut plan = Vec::with_capacity(n_attempts);
+            for attempt in 0..n_attempts {
+                // Always consume the draw: fixed draw count per round
+                // keeps the stream layout independent of spec details.
+                let u = rng.next_f64();
+                let fault = if killed {
+                    AttemptFault::Error
+                } else if !active || attempt + 1 == n_attempts {
+                    AttemptFault::None
+                } else if u < self.spec.panic_rate {
+                    AttemptFault::Panic
+                } else if u < self.spec.panic_rate + self.spec.error_rate {
+                    AttemptFault::Error
+                } else if u < self.spec.panic_rate + self.spec.error_rate + self.spec.delay_rate {
+                    AttemptFault::Delay(self.spec.delay_ms)
+                } else {
+                    AttemptFault::None
+                };
+                plan.push(fault);
+            }
+            attempts.push(plan);
+        }
+        RoundPlan { attempts }
+    }
+
+    /// Which engine lane (if any) crashes at the start of `round`.
+    pub fn lane_crash(&self, round: u64, n_lanes: usize) -> Option<usize> {
+        if n_lanes == 0 || self.spec.lane_crash_rate <= 0.0 || !self.active(round) {
+            return None;
+        }
+        let mut rng = Pcg32::new(self.seed ^ STREAM_LANE, round);
+        (rng.next_f64() < self.spec.lane_crash_rate)
+            .then(|| rng.below(n_lanes as u32) as usize)
+    }
+
+    /// Whether the checkpoint written after `round` is torn.
+    pub fn tear_checkpoint(&self, round: u64) -> bool {
+        if self.spec.torn_checkpoint_rate <= 0.0 || !self.active(round) {
+            return false;
+        }
+        let mut rng = Pcg32::new(self.seed ^ STREAM_TEAR, round);
+        rng.next_f64() < self.spec.torn_checkpoint_rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec_with_everything() -> FaultSpec {
+        FaultSpec {
+            name: "everything".into(),
+            blackout: vec![0],
+            kill: vec![2],
+            error_rate: 0.2,
+            panic_rate: 0.1,
+            delay_rate: 0.1,
+            delay_ms: 500,
+            deadline_ms: 100,
+            max_retries: 3,
+            backoff_ms: 2,
+            quarantine_after: 2,
+            lane_crash_rate: 0.5,
+            torn_checkpoint_rate: 0.3,
+            until_round: 10,
+        }
+    }
+
+    #[test]
+    fn spec_roundtrips_through_json() {
+        let s = spec_with_everything();
+        let back = FaultSpec::from_json(&Json::parse(&s.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn sparse_json_fills_defaults() {
+        let j = Json::parse(r#"{"name":"minimal","kill":[1]}"#).unwrap();
+        let s = FaultSpec::from_json(&j).unwrap();
+        assert_eq!(s.kill, vec![1]);
+        assert_eq!(s.max_retries, FaultSpec::default().max_retries);
+        assert_eq!(s.error_rate, 0.0);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let s = spec_with_everything();
+        let path = std::env::temp_dir().join("hasfl_fault_rt.json");
+        s.save(&path).unwrap();
+        assert_eq!(FaultSpec::load(&path).unwrap(), s);
+    }
+
+    #[test]
+    fn presets_parse_validate_and_roundtrip() {
+        for p in FaultPreset::ALL {
+            assert_eq!(FaultPreset::parse(p.as_str()).unwrap(), p);
+            let s = p.spec();
+            s.validate(4).unwrap();
+            let back = FaultSpec::from_json(&Json::parse(&s.to_json().dump()).unwrap()).unwrap();
+            assert_eq!(s, back, "preset '{}'", p.as_str());
+        }
+        assert!(FaultPreset::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        let mut s = spec_with_everything();
+        s.error_rate = 1.5;
+        assert!(s.validate(4).is_err());
+
+        let mut s = spec_with_everything();
+        s.kill = vec![9];
+        assert!(s.validate(4).is_err());
+
+        let mut s = spec_with_everything();
+        s.blackout = vec![0, 1, 2, 3];
+        assert!(s.validate(4).is_err());
+
+        let mut s = spec_with_everything();
+        s.error_rate = 0.6;
+        s.panic_rate = 0.5;
+        assert!(s.validate(4).is_err());
+
+        let mut s = spec_with_everything();
+        s.delay_rate = 0.1;
+        s.delay_ms = 0;
+        assert!(s.validate(4).is_err());
+    }
+
+    #[test]
+    fn plans_are_pure_functions_of_seed_and_round() {
+        let inj = FaultInjector::new(spec_with_everything(), 77);
+        let a = inj.round_plan(3, 6);
+        let b = inj.round_plan(3, 6);
+        assert_eq!(a.attempts, b.attempts);
+        assert_eq!(inj.lane_crash(3, 4), inj.lane_crash(3, 4));
+        assert_eq!(inj.tear_checkpoint(3), inj.tear_checkpoint(3));
+        // Different rounds draw from different streams.
+        let c = inj.round_plan(4, 6);
+        assert_ne!(a.attempts, c.attempts);
+    }
+
+    #[test]
+    fn killed_devices_fail_every_attempt_and_survivors_end_clean() {
+        let inj = FaultInjector::new(spec_with_everything(), 77);
+        for round in 1..=10 {
+            let plan = inj.round_plan(round, 6);
+            assert!(plan.attempts[2].iter().all(|f| *f == AttemptFault::Error));
+            for (d, attempts) in plan.attempts.iter().enumerate() {
+                if d != 2 {
+                    assert_eq!(
+                        *attempts.last().unwrap(),
+                        AttemptFault::None,
+                        "transient guarantee: final attempt of device {d} must be clean"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn until_round_silences_random_faults_but_not_kill() {
+        let inj = FaultInjector::new(spec_with_everything(), 77);
+        let plan = inj.round_plan(11, 6);
+        for (d, attempts) in plan.attempts.iter().enumerate() {
+            if d == 2 {
+                assert!(attempts.iter().all(|f| *f == AttemptFault::Error));
+            } else {
+                assert!(attempts.iter().all(|f| *f == AttemptFault::None));
+            }
+        }
+        assert_eq!(inj.lane_crash(11, 4), None);
+        assert!(!inj.tear_checkpoint(11));
+    }
+
+    #[test]
+    fn fault_state_quarantines_after_threshold() {
+        let mut st = FaultState::new(4);
+        assert!(!st.note_abandoned(1, 2));
+        assert!(st.note_abandoned(1, 2));
+        assert!(!st.note_abandoned(1, 2)); // already quarantined
+        assert_eq!(st.quarantined_ids(), vec![1]);
+        // Threshold 0 never quarantines.
+        for _ in 0..10 {
+            assert!(!st.note_abandoned(2, 0));
+        }
+        assert_eq!(st.quarantined_ids(), vec![1]);
+    }
+}

@@ -39,6 +39,7 @@ pub mod convergence;
 pub mod coordinator;
 pub mod data;
 pub mod experiment;
+pub mod fault;
 pub mod figures;
 pub mod latency;
 pub mod metrics;

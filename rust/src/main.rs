@@ -6,6 +6,7 @@
 //!                [--rounds N] [--devices N] [--seed S] [--non-iid]
 //!                [--backend auto|native|pjrt]
 //!                [--scenario static|drifting-channels|diurnal|churn-heavy|mega-fleet|spec.json]
+//!                [--faults flaky|chaos|spec.json]
 //!                [--artifacts DIR] [--out history.csv] [--fleet-out trace.csv]
 //!                [--concurrent] [--pool N] [--early-stop] [--progress]
 //!                [--checkpoint-every N] [--checkpoint-dir D] [--checkpoint-keep K]
@@ -18,7 +19,8 @@
 //! hasfl info     [--artifacts DIR] [--backend auto|native|pjrt] [--json]
 //! hasfl config   [--preset small|figure|table1] [--out cfg.json]
 //! hasfl serve    [--addr HOST:PORT] [--state-dir DIR] [--workers N]
-//!                [--artifacts DIR]
+//!                [--artifacts DIR] [--max-conns N] [--io-timeout-ms MS]
+//!                [--queue-cap N]
 //! hasfl bench-diff --base BENCH_A.json --head BENCH_B.json
 //!                [--max-regress PCT]
 //! ```
@@ -41,6 +43,7 @@ use hasfl::metrics::{CONVERGENCE_ACC_THRESHOLD, CONVERGENCE_WINDOW};
 use hasfl::model::{Manifest, ModelProfile};
 use hasfl::optimizer::{solve_joint, OptContext};
 use hasfl::rng::Pcg32;
+use hasfl::fault::{FaultPreset, FaultSpec};
 use hasfl::scenario::{Scenario, ScenarioPreset, ScenarioSim};
 use hasfl::util::Args;
 
@@ -57,6 +60,18 @@ fn scenario_arg(value: &str) -> hasfl::Result<Scenario> {
     ScenarioPreset::parse(value)
         .map(|p| p.scenario())
         .map_err(|e| anyhow::anyhow!("--scenario '{value}': no such spec file, and {e}"))
+}
+
+/// Resolve a `--faults` value: a path to a fault-spec JSON (anything that
+/// exists on disk) or a preset name (`flaky`, `chaos`).
+fn faults_arg(value: &str) -> hasfl::Result<FaultSpec> {
+    let path = std::path::Path::new(value);
+    if path.exists() {
+        return FaultSpec::load(path);
+    }
+    FaultPreset::parse(value)
+        .map(|p| p.spec())
+        .map_err(|e| anyhow::anyhow!("--faults '{value}': no such spec file, and {e}"))
 }
 
 fn profile_arg(name: &str, artifacts: &std::path::Path) -> hasfl::Result<ModelProfile> {
@@ -90,7 +105,9 @@ fn cmd_train(args: &Args) -> hasfl::Result<()> {
     // (`--rounds`) and runtime-only knobs (`--pool`, `--concurrent`,
     // observers) apply on top.
     if args.get("resume").is_some() {
-        for flag in ["config", "preset", "strategy", "devices", "seed", "scenario", "backend"] {
+        for flag in
+            ["config", "preset", "strategy", "devices", "seed", "scenario", "faults", "backend"]
+        {
             anyhow::ensure!(
                 args.get(flag).is_none(),
                 "--{flag} conflicts with --resume (the checkpoint's embedded config is \
@@ -130,6 +147,10 @@ fn cmd_train(args: &Args) -> hasfl::Result<()> {
     }
     if let Some(s) = args.get("scenario") {
         builder = builder.scenario(scenario_arg(s)?);
+    }
+    // Seeded fault injection + graceful degradation (DESIGN.md §13).
+    if let Some(f) = args.get("faults") {
+        builder = builder.faults(faults_arg(f)?);
     }
     // Crash-safe checkpointing (DESIGN.md §10): periodic snapshots of the
     // complete training state, and bit-identical warm restarts from them.
@@ -445,6 +466,9 @@ fn cmd_serve(args: &Args) -> hasfl::Result<()> {
         state_dir: PathBuf::from(args.get("state-dir").unwrap_or("serve-state")),
         workers: args.get_or("workers", 2usize)?,
         artifacts: PathBuf::from(args.get("artifacts").unwrap_or("artifacts")),
+        max_conns: args.get_or("max-conns", hasfl::serve::DEFAULT_MAX_CONNS)?,
+        io_timeout: std::time::Duration::from_millis(args.get_or("io-timeout-ms", 10_000u64)?),
+        queue_cap: args.get_or("queue-cap", hasfl::serve::DEFAULT_QUEUE_CAP)?,
     };
     install_shutdown_signals();
     let daemon = hasfl::serve::Daemon::start(cfg)?;

@@ -12,7 +12,8 @@
 //! the two backends interchangeable and per-lane stats meaningful.
 
 use std::path::PathBuf;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
+use std::time::Duration;
 
 use super::engine::{Engine, EngineStats, ExecInput, HostTensor};
 use crate::backend::{BackendKind, ModelSpec, NativeEngine};
@@ -105,7 +106,10 @@ impl LaneEngine {
 enum Request {
     Execute {
         name: String,
-        inputs: Vec<ExecInput>,
+        /// `Arc`-shared so the handle keeps a zero-copy replay reference:
+        /// if the lane dies mid-job, supervision respawns it and resends
+        /// the same inputs without ever cloning tensor data.
+        inputs: Arc<Vec<ExecInput>>,
         resp: mpsc::Sender<crate::Result<Vec<HostTensor>>>,
     },
     Warm {
@@ -115,14 +119,42 @@ enum Request {
     Stats {
         resp: mpsc::Sender<EngineStats>,
     },
+    /// Fault injection (`crate::fault`): the lane thread exits abruptly —
+    /// no reply, no drain — exactly like a lane that segfaulted or was
+    /// OOM-killed. Queued and in-flight requests observe a disconnected
+    /// channel and flow into the supervision path.
+    Crash,
     Shutdown,
 }
 
-/// Cloneable handle to the engine pool. Each clone carries its own channel
-/// senders, so handles can move freely into device threads.
+/// One supervised lane: the live channel sender plus a generation counter
+/// so concurrent callers that both observe a dead lane respawn it exactly
+/// once (the loser of the lock race sees a bumped generation and just
+/// retries on the fresh sender).
+struct LaneSlot {
+    gen: u64,
+    tx: mpsc::Sender<Request>,
+}
+
+fn lock_slot(m: &Mutex<LaneSlot>) -> MutexGuard<'_, LaneSlot> {
+    // A poisoned slot mutex only means another thread panicked while
+    // holding it; the slot data (sender + generation) is always coherent.
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// How many times one execute call will respawn a dead lane before giving
+/// up. Each attempt rebuilds the engine from the retained [`EngineSpec`],
+/// so repeated failures here mean the backend itself cannot come up.
+const LANE_RESPAWN_ATTEMPTS: usize = 3;
+
+/// Cloneable handle to the engine pool. Each clone shares the supervised
+/// lane slots, so a respawn performed by any caller is visible to all.
 #[derive(Clone)]
 pub struct EngineHandle {
-    lanes: Vec<mpsc::Sender<Request>>,
+    lanes: Arc<Vec<Mutex<LaneSlot>>>,
+    /// Retained for lane supervision: a crashed lane is rebuilt from the
+    /// same spec (fresh caches, identical numerics).
+    spec: EngineSpec,
     backend: BackendKind,
 }
 
@@ -153,6 +185,8 @@ fn spawn_lane(spec: EngineSpec, lane: usize) -> crate::Result<mpsc::Sender<Reque
                     Request::Stats { resp } => {
                         let _ = resp.send(engine.stats());
                     }
+                    // Injected crash: die without replying or draining.
+                    Request::Crash => return,
                     Request::Shutdown => break,
                 }
             }
@@ -191,16 +225,16 @@ impl EngineHandle {
         let mut lanes = Vec::with_capacity(width);
         for lane in 0..width {
             match spawn_lane(spec.clone(), lane) {
-                Ok(tx) => lanes.push(tx),
+                Ok(tx) => lanes.push(Mutex::new(LaneSlot { gen: 0, tx })),
                 Err(e) => {
-                    for tx in &lanes {
-                        let _ = tx.send(Request::Shutdown);
+                    for slot in &lanes {
+                        let _ = lock_slot(slot).tx.send(Request::Shutdown);
                     }
                     return Err(e);
                 }
             }
         }
-        Ok(EngineHandle { lanes, backend })
+        Ok(EngineHandle { lanes: Arc::new(lanes), spec, backend })
     }
 
     /// The concrete backend this pool runs on.
@@ -226,19 +260,103 @@ impl EngineHandle {
 
     /// Execute an artifact on a specific lane (`lane % width`), blocking
     /// the calling thread until done. Versioned inputs hit that lane's
-    /// parameter-buffer cache.
+    /// parameter-buffer cache. Equivalent to
+    /// [`EngineHandle::execute_inputs_deadline`] with no deadline.
     pub fn execute_inputs_blocking(
         &self,
         lane: usize,
         name: &str,
         inputs: Vec<ExecInput>,
     ) -> crate::Result<Vec<HostTensor>> {
-        let lane = lane % self.lanes.len();
-        let (resp, rx) = mpsc::channel();
-        self.lanes[lane]
-            .send(Request::Execute { name: name.to_string(), inputs, resp })
-            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("engine dropped reply"))?
+        self.execute_inputs_deadline(lane, name, inputs, None)
+    }
+
+    /// Execute with lane supervision and an optional reply deadline.
+    ///
+    /// Supervision: a dead lane (crashed thread, injected or genuine) is
+    /// respawned from the retained spec — at most [`LANE_RESPAWN_ATTEMPTS`]
+    /// times per call — and the in-flight job replayed from its
+    /// `Arc`-shared inputs. The fresh lane starts with cold caches;
+    /// numerics are unaffected (the buffer cache is a packing
+    /// optimisation, not state).
+    ///
+    /// Deadline: bounds the wait for the lane's reply. On expiry the call
+    /// fails (the lane is *not* respawned — it is busy, not dead) and the
+    /// eventual reply is discarded by the dropped channel.
+    pub fn execute_inputs_deadline(
+        &self,
+        lane: usize,
+        name: &str,
+        inputs: Vec<ExecInput>,
+        deadline: Option<Duration>,
+    ) -> crate::Result<Vec<HostTensor>> {
+        let idx = lane % self.lanes.len();
+        let inputs = Arc::new(inputs);
+        let mut respawn_err: Option<anyhow::Error> = None;
+        for _ in 0..=LANE_RESPAWN_ATTEMPTS {
+            let (gen, tx) = {
+                let slot = lock_slot(&self.lanes[idx]);
+                (slot.gen, slot.tx.clone())
+            };
+            let (resp, rx) = mpsc::channel();
+            let sent = tx
+                .send(Request::Execute {
+                    name: name.to_string(),
+                    inputs: Arc::clone(&inputs),
+                    resp,
+                })
+                .is_ok();
+            if sent {
+                match deadline {
+                    Some(d) => match rx.recv_timeout(d) {
+                        Ok(res) => return res,
+                        Err(mpsc::RecvTimeoutError::Timeout) => anyhow::bail!(
+                            "engine lane {idx} exceeded the {}ms deadline for '{name}'",
+                            d.as_millis()
+                        ),
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {}
+                    },
+                    None => {
+                        if let Ok(res) = rx.recv() {
+                            return res;
+                        }
+                    }
+                }
+            }
+            // Send failed or the lane died mid-job: respawn and replay.
+            if let Err(e) = self.respawn(idx, gen) {
+                respawn_err = Some(e);
+                break;
+            }
+        }
+        Err(match respawn_err {
+            Some(e) => e.context(format!("engine lane {idx} died and could not be respawned")),
+            None => anyhow::anyhow!(
+                "engine lane {idx} kept dying: gave up after {LANE_RESPAWN_ATTEMPTS} respawns"
+            ),
+        })
+    }
+
+    /// Respawn lane `idx` if its generation still matches `seen_gen`
+    /// (another caller may have already done it — the generation counter
+    /// makes the respawn idempotent across racing threads).
+    fn respawn(&self, idx: usize, seen_gen: u64) -> crate::Result<()> {
+        let mut slot = lock_slot(&self.lanes[idx]);
+        if slot.gen != seen_gen {
+            return Ok(());
+        }
+        slot.tx = spawn_lane(self.spec.clone(), idx)?;
+        slot.gen += 1;
+        Ok(())
+    }
+
+    /// Fault-injection surface (`crate::fault`): make lane `lane % width`
+    /// exit abruptly, as if its thread died. The next execute routed there
+    /// flows through the supervision path (respawn + replay).
+    pub fn inject_lane_crash(&self, lane: usize) {
+        let idx = lane % self.lanes.len();
+        let tx = lock_slot(&self.lanes[idx]).tx.clone();
+        let _ = tx.send(Request::Crash);
     }
 
     /// Pre-compile an artifact on every lane (returns true if any lane had
@@ -246,7 +364,8 @@ impl EngineHandle {
     /// compile).
     pub fn warm_blocking(&self, name: &str) -> crate::Result<bool> {
         let mut missed = false;
-        for tx in &self.lanes {
+        for slot in self.lanes.iter() {
+            let tx = lock_slot(slot).tx.clone();
             let (resp, rx) = mpsc::channel();
             tx.send(Request::Warm { name: name.to_string(), resp })
                 .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
@@ -259,7 +378,8 @@ impl EngineHandle {
     /// reporting the number of lanes.
     pub fn stats_blocking(&self) -> crate::Result<EngineStats> {
         let mut total = EngineStats::default();
-        for tx in &self.lanes {
+        for slot in self.lanes.iter() {
+            let tx = lock_slot(slot).tx.clone();
             let (resp, rx) = mpsc::channel();
             tx.send(Request::Stats { resp })
                 .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
@@ -270,8 +390,8 @@ impl EngineHandle {
     }
 
     pub fn shutdown(&self) {
-        for tx in &self.lanes {
-            let _ = tx.send(Request::Shutdown);
+        for slot in self.lanes.iter() {
+            let _ = lock_slot(slot).tx.send(Request::Shutdown);
         }
     }
 }

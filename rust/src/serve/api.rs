@@ -94,6 +94,7 @@ pub fn engine_smoke(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests may unwrap; the deny covers the daemon
 mod tests {
     use super::*;
 

@@ -205,6 +205,7 @@ pub fn start_stream(stream: &mut TcpStream, content_type: &str) -> crate::Result
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests may unwrap; the deny covers the daemon
 mod tests {
     use super::*;
 

@@ -35,6 +35,22 @@
 //! by resuming its newest valid checkpoint (older ones are fallbacks
 //! against torn files), so resumed histories are bit-identical to
 //! uninterrupted runs.
+//!
+//! # Overload and fault posture (DESIGN.md §13)
+//!
+//! The daemon assumes hostile or broken clients: connections are capped
+//! ([`ServeConfig::max_conns`], excess answered `503` at the door), every
+//! socket gets read *and* write timeouts ([`ServeConfig::io_timeout`], so
+//! a slow-loris sender or a non-reading receiver cannot pin a thread),
+//! and run/step kicks shed with `503` once the job queue reaches
+//! [`ServeConfig::queue_cap`]. Request handling never unwraps: the whole
+//! module denies `clippy::unwrap_used`, and lock poisoning (a panicking
+//! holder) is recovered via [`lock`] instead of cascading.
+
+// A panicking connection thread must never take the daemon with it, and a
+// poisoned mutex must not cascade: every fallible path returns an HTTP
+// error or recovers instead of unwrapping.
+#![deny(clippy::unwrap_used)]
 
 mod api;
 mod http;
@@ -46,9 +62,9 @@ pub use queue::{event_json, EventLog, JobQueue, LogState};
 use std::collections::BTreeMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
 
 use crate::backend::BackendKind;
@@ -60,6 +76,22 @@ use crate::experiment::{
 };
 use crate::metrics::History;
 use crate::util::Json;
+
+/// Default cap on simultaneously open HTTP connections (`--max-conns`).
+pub const DEFAULT_MAX_CONNS: usize = 64;
+
+/// Default job-queue depth at which run/step kicks are refused with `503`
+/// (`--queue-cap`).
+pub const DEFAULT_QUEUE_CAP: usize = 256;
+
+/// Lock a mutex, recovering the data from a poisoned lock. Serve mutexes
+/// guard plain registry data (session maps, parked drivers, command
+/// senders) that stays structurally consistent even if a holder panicked,
+/// and the daemon must keep serving after any one connection or worker
+/// thread dies — so poison is survivable, not fatal.
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// How the daemon binds and where it keeps session state.
 #[derive(Debug, Clone)]
@@ -74,6 +106,18 @@ pub struct ServeConfig {
     pub workers: usize,
     /// AOT-artifacts directory (PJRT backend; native needs none).
     pub artifacts: PathBuf,
+    /// Cap on simultaneously open HTTP connections; excess connections
+    /// are answered `503` and closed at the door instead of piling up
+    /// threads under overload.
+    pub max_conns: usize,
+    /// Per-connection socket read *and* write timeout: a slow-loris
+    /// sender (or a client that stops reading its response) is cut off
+    /// after this long instead of pinning a connection thread forever.
+    /// Zero disables both timeouts.
+    pub io_timeout: Duration,
+    /// Job-queue depth at which run/step kicks are refused with `503`
+    /// (control commands — pause, checkpoint, close — always enqueue).
+    pub queue_cap: usize,
 }
 
 impl Default for ServeConfig {
@@ -83,6 +127,9 @@ impl Default for ServeConfig {
             state_dir: PathBuf::from("serve-state"),
             workers: 2,
             artifacts: PathBuf::from("artifacts"),
+            max_conns: DEFAULT_MAX_CONNS,
+            io_timeout: Duration::from_secs(10),
+            queue_cap: DEFAULT_QUEUE_CAP,
         }
     }
 }
@@ -113,9 +160,26 @@ impl SessionSlot {
     /// harmless; a missing kick would strand the command, so every
     /// enqueue kicks.
     fn enqueue(&self, core: &Core, cmd: DriverCommand) {
-        let _ = self.cmd.lock().unwrap().send(cmd);
+        let _ = lock(&self.cmd).send(cmd);
         self.kicks.fetch_add(1, Ordering::SeqCst);
         core.jobs.push(self.id);
+    }
+
+    /// [`SessionSlot::enqueue`] with backpressure: refuses (returns
+    /// `false`) when the job queue already holds [`Core::queue_cap`]
+    /// unclaimed kicks, so run/step traffic sheds with `503` instead of
+    /// growing the queue without bound. Control commands (pause,
+    /// checkpoint, close) keep using plain `enqueue` — refusing those
+    /// could strand a session. The depth check races benignly with
+    /// concurrent pushes: the cap is a shed threshold, not an exact
+    /// bound, and the kick invariant (command sent ⟹ job pushed) holds
+    /// on both sides of it.
+    fn try_enqueue(&self, core: &Core, cmd: DriverCommand) -> bool {
+        if core.jobs.depth() >= core.queue_cap {
+            return false;
+        }
+        self.enqueue(core, cmd);
+        true
     }
 
     fn summary(&self) -> Json {
@@ -154,6 +218,14 @@ struct Core {
     shutdown_requested: AtomicBool,
     /// Cached `info` payload (computed once at startup).
     info: Json,
+    /// Connection cap ([`ServeConfig::max_conns`]).
+    max_conns: usize,
+    /// Socket read/write timeout ([`ServeConfig::io_timeout`]).
+    io_timeout: Duration,
+    /// Job-queue shed threshold ([`ServeConfig::queue_cap`]).
+    queue_cap: usize,
+    /// HTTP connections currently open (sheds at `max_conns`).
+    live_conns: AtomicUsize,
 }
 
 /// A running daemon. Dropping it (or calling [`Daemon::stop`]) performs
@@ -186,6 +258,10 @@ impl Daemon {
             shutdown: AtomicBool::new(false),
             shutdown_requested: AtomicBool::new(false),
             info,
+            max_conns: cfg.max_conns.max(1),
+            io_timeout: cfg.io_timeout,
+            queue_cap: cfg.queue_cap.max(1),
+            live_conns: AtomicUsize::new(0),
         });
         adopt_sessions(&core);
 
@@ -220,7 +296,7 @@ impl Daemon {
 
     /// Live (non-closed) session count.
     pub fn live_sessions(&self) -> usize {
-        let slots: Vec<_> = self.core.sessions.lock().unwrap().values().cloned().collect();
+        let slots: Vec<_> = lock(&self.core.sessions).values().cloned().collect();
         slots.iter().filter(|s| !s.log.with(|l| l.closed)).count()
     }
 
@@ -237,7 +313,7 @@ impl Daemon {
             return;
         }
         self.core.shutdown.store(true, Ordering::SeqCst);
-        let slots: Vec<_> = self.core.sessions.lock().unwrap().values().cloned().collect();
+        let slots: Vec<_> = lock(&self.core.sessions).values().cloned().collect();
         for slot in &slots {
             slot.log.nudge();
         }
@@ -257,11 +333,11 @@ impl Daemon {
             if slot.log.with(|s| s.closed) {
                 continue;
             }
-            let Some(mut driver) = slot.driver.lock().unwrap().take() else {
+            let Some(mut driver) = lock(&slot.driver).take() else {
                 eprintln!("serve: session {} has no parked driver at shutdown", slot.id);
                 continue;
             };
-            let _ = slot.cmd.lock().unwrap().send(DriverCommand::Close { checkpoint: true });
+            let _ = lock(&slot.cmd).send(DriverCommand::Close { checkpoint: true });
             loop {
                 match driver.pump() {
                     Pump::Worked => continue,
@@ -284,15 +360,15 @@ impl Drop for Daemon {
 
 fn worker_loop(core: &Arc<Core>) {
     while let Some(id) = core.jobs.pop() {
-        let slot = core.sessions.lock().unwrap().get(&id).cloned();
+        let slot = lock(&core.sessions).get(&id).cloned();
         let Some(slot) = slot else { continue };
         // Another worker is already pumping this session: it will drain
         // whatever command triggered this job (or re-kick on its way out).
-        let taken = slot.driver.lock().unwrap().take();
+        let taken = lock(&slot.driver).take();
         let Some(mut driver) = taken else { continue };
         loop {
             if core.shutdown.load(Ordering::SeqCst) {
-                *slot.driver.lock().unwrap() = Some(driver);
+                *lock(&slot.driver) = Some(driver);
                 break;
             }
             let kicks_before = slot.kicks.load(Ordering::SeqCst);
@@ -303,7 +379,7 @@ fn worker_loop(core: &Arc<Core>) {
                     if slot.kicks.load(Ordering::SeqCst) != kicks_before {
                         continue; // a command landed during the pump
                     }
-                    *slot.driver.lock().unwrap() = Some(driver);
+                    *lock(&slot.driver) = Some(driver);
                     // A command may have slipped in between the check above
                     // and parking the driver — and its job may already have
                     // bounced off the empty slot. Re-kick to cover it.
@@ -359,10 +435,28 @@ fn register_slot(
     let rounds_budget = session.config().train.rounds;
     log.with(|s| {
         // Adopted sessions restore mid-run: seed the live mirrors so
-        // /history.csv and /wait see the restored rounds.
+        // /history.csv and /wait see the restored rounds, and rebuild the
+        // report backlog so `GET /reports?from=K` never silently loses
+        // rounds a client saw before the restart. Full RoundReports are
+        // not checkpointed, so restored entries carry the per-round
+        // history fields plus `"restored": true` to tell them apart; the
+        // report list and history.csv stay index-aligned either way.
         s.records = session.history().records.clone();
         s.round = session.round();
         s.done = session.is_done();
+        s.reports = s
+            .records
+            .iter()
+            .map(|r| {
+                let mut j = Json::obj();
+                j.set("round", Json::Num(r.round as f64))
+                    .set("sim_time", Json::Num(r.sim_time))
+                    .set("loss", Json::Num(r.loss))
+                    .set("test_acc", r.test_acc.map_or(Json::Null, Json::Num))
+                    .set("restored", Json::Bool(true));
+                j
+            })
+            .collect();
     });
     let (driver, cmd) = SessionDriver::new(session, sink);
     let driver = driver.checkpoint_dir(&dir);
@@ -380,7 +474,7 @@ fn register_slot(
         keep_last,
         concurrent,
     });
-    core.sessions.lock().unwrap().insert(id, slot.clone());
+    lock(&core.sessions).insert(id, slot.clone());
     Ok(slot)
 }
 
@@ -398,8 +492,13 @@ fn write_meta(slot: &SessionSlot) -> crate::Result<()> {
     Ok(())
 }
 
-/// Create a session from an HTTP request body.
-fn create_session(core: &Arc<Core>, body: &Json) -> crate::Result<Arc<SessionSlot>> {
+/// Create a session from an HTTP request body. Returns the registered
+/// slot plus the requested initial run kick (the `run` field), which the
+/// caller enqueues subject to queue backpressure.
+fn create_session(
+    core: &Arc<Core>,
+    body: &Json,
+) -> crate::Result<(Arc<SessionSlot>, Option<usize>)> {
     fn opt_usize(body: &Json, key: &str) -> crate::Result<Option<usize>> {
         match body.get(key) {
             None | Some(Json::Null) => Ok(None),
@@ -470,12 +569,12 @@ fn create_session(core: &Arc<Core>, body: &Json) -> crate::Result<Arc<SessionSlo
         None => {}
     });
 
+    // Validate the run kick before building anything; the caller issues
+    // it (with backpressure) once the session is registered.
+    let run = opt_usize(body, "run")?;
     let slot = register_slot(core, id, name, builder, checkpoint_every, keep_last, concurrent)?;
     write_meta(&slot)?;
-    if let Some(n) = opt_usize(body, "run")? {
-        slot.enqueue(core, DriverCommand::Run(n));
-    }
-    Ok(slot)
+    Ok((slot, run))
 }
 
 /// Re-adopt every `session_NNNNNN/` directory in the state dir.
@@ -496,7 +595,7 @@ fn adopt_sessions(core: &Arc<Core>) {
             Err(e) => eprintln!("serve: cannot adopt '{}': {e:#}", entry.path().display()),
         }
     }
-    let max_id = core.sessions.lock().unwrap().keys().max().copied().unwrap_or(0);
+    let max_id = lock(&core.sessions).keys().max().copied().unwrap_or(0);
     core.next_id.store(max_id + 1, Ordering::SeqCst);
 }
 
@@ -570,11 +669,39 @@ fn accept_loop(core: &Arc<Core>, listener: &TcpListener) {
             return;
         }
         match listener.accept() {
-            Ok((stream, _)) => {
+            Ok((mut stream, _)) => {
+                let _ = stream.set_nonblocking(false);
+                if core.io_timeout > Duration::ZERO {
+                    // Read AND write timeouts: a slow-loris sender stalls
+                    // in read_request, a non-reading client stalls the
+                    // response write — both release the thread here.
+                    let _ = stream.set_read_timeout(Some(core.io_timeout));
+                    let _ = stream.set_write_timeout(Some(core.io_timeout));
+                }
+                let live = core.live_conns.fetch_add(1, Ordering::SeqCst) + 1;
+                if live > core.max_conns {
+                    // Shed at the door: answer 503 from the accept thread
+                    // (bounded by the write timeout) instead of spawning
+                    // yet another connection thread under overload.
+                    core.live_conns.fetch_sub(1, Ordering::SeqCst);
+                    let _ = http::respond_error(
+                        &mut stream,
+                        503,
+                        "connection limit reached; retry shortly",
+                    );
+                    continue;
+                }
                 let core = core.clone();
                 std::thread::spawn(move || {
-                    let _ = stream.set_nonblocking(false);
-                    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+                    // Decrement on every exit path, panics included, or a
+                    // single bad connection would leak a slot forever.
+                    struct ConnSlot(Arc<Core>);
+                    impl Drop for ConnSlot {
+                        fn drop(&mut self) {
+                            self.0.live_conns.fetch_sub(1, Ordering::SeqCst);
+                        }
+                    }
+                    let _slot = ConnSlot(core.clone());
                     handle_conn(&core, stream);
                 });
             }
@@ -602,7 +729,7 @@ fn handle_conn(core: &Arc<Core>, mut stream: TcpStream) {
 
 fn lookup(core: &Core, id_str: &str) -> Option<Arc<SessionSlot>> {
     let id: u64 = id_str.parse().ok()?;
-    core.sessions.lock().unwrap().get(&id).cloned()
+    lock(&core.sessions).get(&id).cloned()
 }
 
 fn route(core: &Arc<Core>, req: &http::Request, stream: &mut TcpStream) -> crate::Result<()> {
@@ -640,16 +767,19 @@ fn route(core: &Arc<Core>, req: &http::Request, stream: &mut TcpStream) -> crate
         }
         ("GET", ["healthz"]) => {
             let mut j = core.info.clone();
-            let slots: Vec<_> = core.sessions.lock().unwrap().values().cloned().collect();
+            let slots: Vec<_> = lock(&core.sessions).values().cloned().collect();
             let live = slots.iter().filter(|s| !s.log.with(|l| l.closed)).count();
             j.set("status", Json::Str("ok".into()))
                 .set("sessions", Json::Num(live as f64))
-                .set("workers", Json::Num(core.workers as f64));
+                .set("workers", Json::Num(core.workers as f64))
+                .set("jobs", Json::Num(core.jobs.depth() as f64))
+                .set("live_conns", Json::Num(core.live_conns.load(Ordering::SeqCst) as f64))
+                .set("max_conns", Json::Num(core.max_conns as f64));
             http::respond_json(stream, 200, &j)
         }
         ("GET", ["info"]) => http::respond_json(stream, 200, &core.info),
         ("GET", ["sessions"]) => {
-            let slots: Vec<_> = core.sessions.lock().unwrap().values().cloned().collect();
+            let slots: Vec<_> = lock(&core.sessions).values().cloned().collect();
             let list = Json::Arr(slots.iter().map(|s| s.summary()).collect());
             let mut j = Json::obj();
             j.set("sessions", list);
@@ -661,7 +791,17 @@ fn route(core: &Arc<Core>, req: &http::Request, stream: &mut TcpStream) -> crate
                 Err(e) => return http::respond_error(stream, 400, &format!("{e:#}")),
             };
             match create_session(core, &body) {
-                Ok(slot) => http::respond_json(stream, 201, &slot.summary()),
+                Ok((slot, run)) => {
+                    let mut j = slot.summary();
+                    if let Some(n) = run {
+                        // The session exists either way; a saturated queue
+                        // only refuses the initial kick, and the client
+                        // re-issues it via POST /sessions/:id/run.
+                        let queued = slot.try_enqueue(core, DriverCommand::Run(n));
+                        j.set("run_enqueued", Json::Bool(queued));
+                    }
+                    http::respond_json(stream, 201, &j)
+                }
                 Err(e) => http::respond_error(stream, 400, &format!("{e:#}")),
             }
         }
@@ -684,7 +824,7 @@ fn route(core: &Arc<Core>, req: &http::Request, stream: &mut TcpStream) -> crate
                     );
                 }
             }
-            core.sessions.lock().unwrap().remove(&slot.id);
+            lock(&core.sessions).remove(&slot.id);
             let _ = std::fs::remove_dir_all(&slot.dir);
             let mut j = Json::obj();
             j.set("deleted", Json::Num(slot.id as f64));
@@ -718,7 +858,9 @@ fn route(core: &Arc<Core>, req: &http::Request, stream: &mut TcpStream) -> crate
                     slot.rounds_budget.saturating_sub(round)
                 }
             };
-            slot.enqueue(core, DriverCommand::Run(rounds));
+            if !slot.try_enqueue(core, DriverCommand::Run(rounds)) {
+                return http::respond_error(stream, 503, "job queue is full; retry shortly");
+            }
             let mut j = slot.summary();
             j.set("enqueued_rounds", Json::Num(rounds as f64));
             http::respond_json(stream, 202, &j)
@@ -730,7 +872,9 @@ fn route(core: &Arc<Core>, req: &http::Request, stream: &mut TcpStream) -> crate
             if slot.log.with(|s| s.closed) {
                 return http::respond_error(stream, 409, "session is closed");
             }
-            slot.enqueue(core, DriverCommand::Run(1));
+            if !slot.try_enqueue(core, DriverCommand::Run(1)) {
+                return http::respond_error(stream, 503, "job queue is full; retry shortly");
+            }
             http::respond_json(stream, 202, &slot.summary())
         }
         ("POST", ["sessions", id, "pause"]) => {

@@ -11,9 +11,12 @@
 //! [`SessionDriver`]: crate::experiment::SessionDriver
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, PoisonError};
 use std::time::{Duration, Instant};
+
+use super::lock;
 
 use crate::experiment::SessionEvent;
 use crate::metrics::Record;
@@ -84,7 +87,7 @@ pub fn event_json(event: &SessionEvent) -> Json {
 impl EventLog {
     /// Run `f` with the locked state (the one mutation/read entry point).
     pub fn with<R>(&self, f: impl FnOnce(&mut LogState) -> R) -> R {
-        let mut state = self.state.lock().unwrap();
+        let mut state = lock(&self.state);
         f(&mut state)
     }
 
@@ -92,7 +95,7 @@ impl EventLog {
     /// mirrors, wake every waiter.
     pub fn absorb(&self, event: &SessionEvent) {
         let line = event_json(event);
-        let mut state = self.state.lock().unwrap();
+        let mut state = lock(&self.state);
         match event {
             SessionEvent::Round(report) => {
                 state.round = report.round;
@@ -138,7 +141,7 @@ impl EventLog {
     /// predicate held.
     pub fn wait_until(&self, timeout: Duration, pred: impl Fn(&LogState) -> bool) -> bool {
         let deadline = Instant::now() + timeout;
-        let mut state = self.state.lock().unwrap();
+        let mut state = lock(&self.state);
         loop {
             if pred(&state) {
                 return true;
@@ -147,7 +150,10 @@ impl EventLog {
             if now >= deadline {
                 return false;
             }
-            let (next, _) = self.cond.wait_timeout(state, deadline - now).unwrap();
+            let (next, _) = self
+                .cond
+                .wait_timeout(state, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner);
             state = next;
         }
     }
@@ -155,7 +161,7 @@ impl EventLog {
     /// Events from `offset` on (a follower's catch-up read), plus whether
     /// the session is closed.
     pub fn events_from(&self, offset: usize) -> (Vec<Json>, bool) {
-        let state = self.state.lock().unwrap();
+        let state = lock(&self.state);
         let tail = state.events.get(offset..).unwrap_or(&[]).to_vec();
         (tail, state.closed)
     }
@@ -170,29 +176,44 @@ pub const STOP: u64 = u64::MAX;
 pub struct JobQueue {
     tx: Sender<u64>,
     rx: Mutex<Receiver<u64>>,
+    /// Jobs pushed but not yet claimed — the backpressure signal
+    /// ([`JobQueue::depth`]); stop sentinels don't count.
+    depth: AtomicUsize,
 }
 
 impl JobQueue {
     pub fn new() -> JobQueue {
         let (tx, rx) = std::sync::mpsc::channel();
-        JobQueue { tx, rx: Mutex::new(rx) }
+        JobQueue { tx, rx: Mutex::new(rx), depth: AtomicUsize::new(0) }
     }
 
     /// Enqueue a session for pumping. Duplicates are harmless: a worker
     /// that finds the session already taken simply drops the job.
     pub fn push(&self, id: u64) {
-        let _ = self.tx.send(id);
+        if self.tx.send(id).is_ok() {
+            self.depth.fetch_add(1, Ordering::SeqCst);
+        }
     }
 
-    /// Ask one worker to exit.
+    /// Ask one worker to exit. Bypasses the depth accounting: shutdown
+    /// must never be subject to backpressure.
     pub fn push_stop(&self) {
         let _ = self.tx.send(STOP);
     }
 
     /// Blocking pop; `None` means exit (stop sentinel or queue torn down).
     pub fn pop(&self) -> Option<u64> {
-        let id = self.rx.lock().unwrap().recv().ok()?;
-        (id != STOP).then_some(id)
+        let id = lock(&self.rx).recv().ok()?;
+        if id == STOP {
+            return None;
+        }
+        self.depth.fetch_sub(1, Ordering::SeqCst);
+        Some(id)
+    }
+
+    /// Jobs enqueued but not yet claimed by a worker.
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::SeqCst)
     }
 }
 
@@ -203,6 +224,7 @@ impl Default for JobQueue {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests may unwrap; the deny covers the daemon
 mod tests {
     use super::*;
     use std::sync::Arc;
@@ -246,5 +268,21 @@ mod tests {
         assert_eq!(q.pop(), Some(1));
         assert_eq!(q.pop(), Some(2));
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn job_queue_depth_tracks_unclaimed_jobs_not_stops() {
+        let q = JobQueue::new();
+        assert_eq!(q.depth(), 0);
+        q.push(1);
+        q.push(2);
+        q.push_stop();
+        assert_eq!(q.depth(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.depth(), 1);
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.depth(), 0);
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.depth(), 0);
     }
 }

@@ -1,0 +1,397 @@
+//! Chaos suite: training and the serve daemon under injected faults
+//! (DESIGN.md §13).
+//!
+//! Three acceptance properties:
+//!
+//! 1. **Fault runs are deterministic**: with a seeded [`FaultSpec`] the
+//!    whole degraded run — retries, abandonments, quarantines, lane
+//!    respawns — is a pure function of the config, so two executions
+//!    produce byte-identical histories.
+//! 2. **Degradation is surgical**: killing a device changes *nothing*
+//!    for the survivors — their history is byte-identical to a run whose
+//!    spec excludes that device from the start (same roster size, so the
+//!    per-device RNG streams line up).
+//! 3. **The daemon outlives hostile clients**: slow-loris senders,
+//!    mid-body disconnects, and connection floods are shed with timeouts
+//!    and `503`s while `/healthz` keeps answering, and churn with
+//!    disconnecting clients never loses a run kick.
+//!
+//! Engine-backed tests run on the resolved backend (PJRT with artifacts,
+//! native without) and never skip.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+use hasfl::checkpoint::CheckpointState;
+use hasfl::config::{Config, StrategyKind};
+use hasfl::experiment::Experiment;
+use hasfl::fault::FaultSpec;
+use hasfl::serve::{Daemon, ServeConfig};
+use hasfl::util::Json;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hasfl_chaos_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A small config whose native-engine run finishes in seconds.
+fn quick_config(seed: u64, rounds: usize) -> Config {
+    let mut cfg = Config::small();
+    cfg.fleet.n_devices = 4;
+    cfg.seed = seed;
+    cfg.train.rounds = rounds;
+    cfg.train.agg_interval = 2;
+    cfg.train.eval_every = 3;
+    cfg.train.train_samples = 256;
+    cfg.train.test_samples = 64;
+    cfg.train.batch_cap = 16;
+    cfg.strategy = StrategyKind::Hasfl;
+    cfg.fixed_batch = 8;
+    cfg.fixed_cut = 3;
+    cfg
+}
+
+/// Heavy transient noise + one killed device + a lane crash every round:
+/// every layer of the degradation ladder fires in one run. The injected
+/// stall (5 s) exceeds the device deadline (1 s) so delay faults abandon
+/// by arithmetic without sleeping, and `backoff_ms: 0` keeps retries
+/// instant — the whole chaos run stays test-suite fast.
+fn chaos_spec() -> FaultSpec {
+    FaultSpec {
+        name: "test-chaos".into(),
+        kill: vec![2],
+        error_rate: 0.2,
+        panic_rate: 0.1,
+        delay_rate: 0.1,
+        delay_ms: 5_000,
+        deadline_ms: 1_000,
+        max_retries: 2,
+        backoff_ms: 0,
+        quarantine_after: 2,
+        lane_crash_rate: 1.0,
+        ..FaultSpec::default()
+    }
+}
+
+/// Run `cfg` + `spec` to completion; returns (history csv, per-round
+/// (abandoned, quarantined) pairs).
+#[allow(clippy::type_complexity)]
+fn run_faulted(
+    cfg: &Config,
+    spec: &FaultSpec,
+    concurrent: bool,
+) -> (String, Vec<(Vec<usize>, Vec<usize>)>) {
+    let mut session = Experiment::builder()
+        .config(cfg.clone())
+        .faults(spec.clone())
+        .artifacts(artifacts_dir())
+        .concurrent(concurrent)
+        .tune(|c| c.engine_pool = 2)
+        .build()
+        .expect("faulted session");
+    let mut fleet = Vec::new();
+    while !session.is_done() {
+        let report = session.step().expect("faulted step");
+        fleet.push((report.abandoned.clone(), report.quarantined.clone()));
+    }
+    (session.finish().expect("finish").to_csv_string(), fleet)
+}
+
+#[test]
+fn chaos_run_is_deterministic_and_surgical_for_survivors() {
+    let cfg = quick_config(41, 6);
+    let spec = chaos_spec();
+
+    // Property 1: the same chaos twice is byte-identical — in concurrent
+    // mode (lane supervision + worker threads) and against the
+    // sequential pump (fault handling must not fork the numerics).
+    let (csv_a, fleet_a) = run_faulted(&cfg, &spec, true);
+    let (csv_b, fleet_b) = run_faulted(&cfg, &spec, true);
+    assert_eq!(csv_a, csv_b, "two executions of the same chaos run diverged");
+    assert_eq!(fleet_a, fleet_b, "abandonment bookkeeping diverged between executions");
+    let (csv_seq, _) = run_faulted(&cfg, &spec, false);
+    assert_eq!(csv_a, csv_seq, "concurrent chaos run diverged from the sequential pump");
+
+    // The chaos actually happened: the killed device is abandoned every
+    // round it is scheduled, then quarantined for the rest of the run.
+    assert_eq!(fleet_a[0].0, vec![2], "round 1 must abandon the killed device");
+    assert_eq!(fleet_a[1].0, vec![2], "round 2 must abandon the killed device again");
+    let (_, last_quarantined) = fleet_a.last().unwrap();
+    assert_eq!(last_quarantined, &vec![2], "two strikes must quarantine the killed device");
+    assert!(
+        fleet_a.last().unwrap().0.is_empty(),
+        "a quarantined device is excluded, not re-abandoned"
+    );
+
+    // Property 2: the survivors never noticed. A run whose spec blacks
+    // out the same device from round 1 (same roster size, so every
+    // sampler stream lines up) produces a byte-identical history.
+    let survivors = FaultSpec {
+        name: "survivors".into(),
+        blackout: vec![2],
+        ..FaultSpec::default()
+    };
+    let (csv_survivors, fleet_survivors) = run_faulted(&cfg, &survivors, true);
+    assert_eq!(
+        csv_a, csv_survivors,
+        "survivor histories diverged from the run without the killed device"
+    );
+    assert!(
+        fleet_survivors.iter().all(|(a, q)| a.is_empty() && q.is_empty()),
+        "a blackout is structural exclusion, not a fault"
+    );
+}
+
+#[test]
+fn torn_checkpoints_fail_loud_and_good_ones_resume_bit_identical() {
+    let dir = temp_dir("torn");
+    let cfg = quick_config(77, 6);
+    // Tears every checkpoint written in rounds 1..=3, with transient step
+    // noise on top; rounds 4+ write clean.
+    let spec = FaultSpec {
+        name: "torn".into(),
+        error_rate: 0.15,
+        max_retries: 2,
+        backoff_ms: 0,
+        torn_checkpoint_rate: 1.0,
+        until_round: 3,
+        ..FaultSpec::default()
+    };
+
+    let build = || {
+        Experiment::builder()
+            .config(cfg.clone())
+            .faults(spec.clone())
+            .artifacts(artifacts_dir())
+            .build()
+            .expect("session")
+    };
+
+    // The straight run, with a torn write at round 2 and a good one at
+    // round 4 along the way.
+    let mut session = build();
+    let torn = dir.join("torn.hckpt");
+    let good = dir.join("good.hckpt");
+    while !session.is_done() {
+        let report = session.step().expect("step");
+        if report.round == 2 {
+            session.checkpoint(&torn).expect("torn write itself reports success");
+        }
+        if report.round == 4 {
+            session.checkpoint(&good).expect("good write");
+        }
+    }
+    let straight = session.finish().expect("finish").to_csv_string();
+
+    // The torn file is detected as corrupt, not silently half-loaded.
+    let err = CheckpointState::load(&torn).expect_err("torn checkpoint must not load");
+    assert!(
+        err.to_string().contains("corrupt") || err.to_string().contains("truncated"),
+        "unexpected torn-load error: {err:#}"
+    );
+
+    // The good one resumes — fault state included — to a byte-identical
+    // finish.
+    let mut resumed = Experiment::builder()
+        .resume_from(&good)
+        .artifacts(artifacts_dir())
+        .build()
+        .expect("resume from the good checkpoint");
+    assert_eq!(resumed.round(), 4);
+    while !resumed.is_done() {
+        resumed.step().expect("resumed step");
+    }
+    let resumed_csv = resumed.finish().expect("finish resumed").to_csv_string();
+    assert_eq!(straight, resumed_csv, "resume through chaos diverged from the straight run");
+}
+
+// ---------------------------------------------------------------------------
+// Daemon-side chaos
+// ---------------------------------------------------------------------------
+
+fn start_daemon(state_dir: &std::path::Path, cfg: ServeConfig) -> Daemon {
+    Daemon::start(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        state_dir: state_dir.to_path_buf(),
+        artifacts: artifacts_dir(),
+        ..cfg
+    })
+    .expect("daemon start")
+}
+
+/// One-shot HTTP request; returns (status, body).
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).expect("send");
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).expect("recv");
+    let text = String::from_utf8_lossy(&raw).into_owned();
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .unwrap_or_else(|| panic!("no status line in: {text}"))
+        .parse()
+        .expect("status code");
+    let body_at = text.find("\r\n\r\n").expect("header/body separator") + 4;
+    (status, text[body_at..].to_string())
+}
+
+fn http_json(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Json) {
+    let (status, text) = http(addr, method, path, body);
+    let json = Json::parse(&text).unwrap_or_else(|e| panic!("bad JSON ({e}) in: {text}"));
+    (status, json)
+}
+
+/// Fire a request and hang up without reading the response (a client
+/// that crashed mid-call). The command must still take effect.
+fn http_and_drop(addr: SocketAddr, method: &str, path: &str, body: &str) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).expect("send");
+    // Dropped here: no read, immediate close.
+}
+
+fn assert_healthy(addr: SocketAddr) {
+    let (status, j) = http_json(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200, "healthz failed: {}", j.dump());
+    assert_eq!(j.get("status").unwrap().as_str().unwrap(), "ok");
+}
+
+#[test]
+fn daemon_sheds_hostile_clients_and_stays_responsive() {
+    let state = temp_dir("hostile");
+    let daemon = start_daemon(
+        &state,
+        ServeConfig {
+            workers: 1,
+            max_conns: 2,
+            io_timeout: Duration::from_millis(250),
+            ..ServeConfig::default()
+        },
+    );
+    let addr = daemon.addr();
+
+    // Mid-body disconnect: the header promises 64 bytes, 9 arrive, then
+    // the client vanishes. The read fails server-side; nothing panics.
+    {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.write_all(b"POST /sessions HTTP/1.1\r\nHost: x\r\nContent-Length: 64\r\n\r\n{\"name\": ")
+            .expect("partial send");
+    }
+    std::thread::sleep(Duration::from_millis(50));
+    assert_healthy(addr);
+
+    // Slow-loris: a connection that sends a few bytes and stalls. The
+    // read timeout reclaims its thread; meanwhile the remaining slot
+    // still serves real traffic.
+    let mut loris = TcpStream::connect(addr).expect("loris connect");
+    loris.write_all(b"GET /hea").expect("loris trickle");
+    assert_healthy(addr);
+
+    // Connection flood: with both slots held (the loris plus one idle
+    // connection), the next connection is answered 503 at the door.
+    let mut idle = TcpStream::connect(addr).expect("idle connect");
+    idle.write_all(b"GET /hea").expect("idle trickle");
+    std::thread::sleep(Duration::from_millis(30)); // let both handlers claim slots
+    let mut flood = TcpStream::connect(addr).expect("flood connect");
+    let mut reply = String::new();
+    flood.read_to_string(&mut reply).expect("read 503");
+    assert!(reply.starts_with("HTTP/1.1 503"), "expected shed at the door, got: {reply}");
+
+    // Once the stalled connections time out, capacity returns.
+    std::thread::sleep(Duration::from_millis(400));
+    drop(loris);
+    drop(idle);
+    assert_healthy(addr);
+    let (_, j) = http_json(addr, "GET", "/healthz", "");
+    assert_eq!(j.get("max_conns").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(j.get("jobs").unwrap().as_usize().unwrap(), 0);
+
+    daemon.stop().expect("stop");
+}
+
+#[test]
+fn churn_with_disconnecting_clients_never_loses_a_kick() {
+    let state = temp_dir("churn");
+    let daemon = start_daemon(
+        &state,
+        ServeConfig {
+            workers: 2,
+            io_timeout: Duration::from_millis(500),
+            ..ServeConfig::default()
+        },
+    );
+    let addr = daemon.addr();
+
+    // Four tenants created concurrently; every run kick arrives from a
+    // client that hangs up before reading its response.
+    let mut ids = Vec::new();
+    for i in 0..4u64 {
+        let mut cfg = quick_config(100 + i, 2);
+        cfg.fleet.n_devices = 2;
+        cfg.train.train_samples = 128;
+        let mut body = Json::obj();
+        body.set("config", cfg.to_json()).set("engine_pool", Json::Num(1.0));
+        let (status, j) = http_json(addr, "POST", "/sessions", &body.dump());
+        assert_eq!(status, 201, "create failed: {}", j.dump());
+        ids.push(j.get("id").unwrap().as_usize().unwrap() as u64);
+    }
+    for &id in &ids {
+        http_and_drop(addr, "POST", &format!("/sessions/{id}/run"), r#"{"rounds": 2}"#);
+    }
+    // Interleave hostile noise with the running sessions.
+    {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.write_all(b"POST /sessions/1/step HTTP/1.1\r\nContent-Length: 32\r\n\r\n{").expect("torn");
+    }
+
+    // Every kick landed despite the disconnects: all sessions finish.
+    for &id in &ids {
+        let (status, j) = http_json(
+            addr,
+            "GET",
+            &format!("/sessions/{id}/wait?round=2&timeout_ms=300000"),
+            "",
+        );
+        assert_eq!(status, 200, "session {id} never finished: {}", j.dump());
+        assert_eq!(j.get("round").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("last_error").unwrap(), &Json::Null, "session {id}: {}", j.dump());
+    }
+
+    // Churn the registry: delete two sessions from clients that hang up
+    // mid-delete. The close still completes and the slots disappear.
+    for &id in &ids[..2] {
+        http_and_drop(addr, "DELETE", &format!("/sessions/{id}"), "");
+    }
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        let (_, list) = http_json(addr, "GET", "/sessions", "");
+        if list.get("sessions").unwrap().as_arr().unwrap().len() == 2 {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "deletes never landed: {}", list.dump());
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // The queue drained and the daemon is still healthy.
+    let (_, j) = http_json(addr, "GET", "/healthz", "");
+    assert_eq!(j.get("status").unwrap().as_str().unwrap(), "ok");
+    assert_eq!(j.get("jobs").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(j.get("sessions").unwrap().as_usize().unwrap(), 2);
+    daemon.stop().expect("stop");
+}

@@ -15,6 +15,7 @@ use hasfl::checkpoint::{CheckpointObserver, CheckpointState, FORMAT_VERSION, MAG
 use hasfl::config::{Config, Device, StrategyKind};
 use hasfl::convergence::EstimatorState;
 use hasfl::experiment::{Experiment, RoundReport};
+use hasfl::fault::FaultState;
 use hasfl::latency::Decisions;
 use hasfl::metrics::{History, Record};
 use hasfl::model::{Params, Tensor};
@@ -314,7 +315,27 @@ fn synthetic_state() -> CheckpointState {
             reference: vec![device()],
             reference_active: vec![true],
         }),
+        fault: Some(FaultState { strikes: vec![0, 2], quarantined: vec![false, true] }),
     }
+}
+
+#[test]
+fn faultless_state_omits_the_trailing_fault_field() {
+    // A run without a fault spec must serialize byte-identically to the
+    // pre-fault format: no trailing marker, and the roundtrip restores
+    // `fault: None`.
+    let mut state = synthetic_state();
+    state.fault = None;
+    let with = {
+        let mut s = state.clone();
+        s.fault = Some(FaultState::new(2));
+        s.to_bytes()
+    };
+    let without = state.to_bytes();
+    assert!(without.len() < with.len());
+    let back = CheckpointState::from_bytes(&without).unwrap();
+    assert!(back.fault.is_none());
+    assert_eq!(back, state);
 }
 
 #[test]

@@ -42,6 +42,7 @@ fn start_daemon(state_dir: &std::path::Path, workers: usize) -> Daemon {
         state_dir: state_dir.to_path_buf(),
         workers,
         artifacts: artifacts_dir(),
+        ..ServeConfig::default()
     })
     .expect("daemon start")
 }
@@ -216,11 +217,34 @@ fn restart_adoption_resumes_bit_identical_and_prunes_checkpoints() {
     assert_eq!(adopted.get("round").unwrap().as_usize().unwrap(), 5);
     assert!(!adopted.get("closed").unwrap().as_bool().unwrap());
 
+    // The report backlog survives the restart: full RoundReports are not
+    // checkpointed, so the daemon rebuilds `reports?from=K` entries from
+    // the restored history (marked `"restored": true`) instead of
+    // serving an empty list for rounds a client already saw.
+    let (status, j) = http_json(addr, "GET", &format!("/sessions/{id}/reports"), "");
+    assert_eq!(status, 200);
+    let restored = j.get("reports").unwrap().as_arr().unwrap().clone();
+    assert_eq!(restored.len(), 5, "restored backlog covers rounds 1..=5");
+    for (i, r) in restored.iter().enumerate() {
+        assert_eq!(r.get("round").unwrap().as_usize().unwrap(), i + 1);
+        assert!(r.get("restored").unwrap().as_bool().unwrap(), "{}", r.dump());
+    }
+
     // No body: run defaults to the remaining budget (8 - 5 = 3).
     let (status, j) = http_json(addr, "POST", &format!("/sessions/{id}/run"), "");
     assert_eq!(status, 202);
     assert_eq!(j.get("enqueued_rounds").unwrap().as_usize().unwrap(), 3);
     wait_for_round(addr, id, 8);
+
+    // Restored + live reports stay index-aligned with history.csv: one
+    // report per round, `from=K` slices exactly the unseen tail.
+    let (_, j) = http_json(addr, "GET", &format!("/sessions/{id}/reports?from=5"), "");
+    let live = j.get("reports").unwrap().as_arr().unwrap().clone();
+    assert_eq!(live.len(), 3, "live tail covers rounds 6..=8");
+    for (i, r) in live.iter().enumerate() {
+        assert_eq!(r.get("round").unwrap().as_usize().unwrap(), i + 6);
+        assert!(r.get("restored").is_none(), "live reports are full reports: {}", r.dump());
+    }
 
     // The acceptance bar: the interrupted-and-adopted history is
     // byte-identical to the uninterrupted solo run.
