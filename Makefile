@@ -2,7 +2,7 @@
 # hosted CI (.github/workflows/ci.yml) runs the same ./ci.sh battery on
 # the native backend with HASFL_REQUIRE_ENGINE=1 (no skip paths).
 
-.PHONY: check check-native check-pjrt check-deps artifacts artifacts100 test bench-smoke bench-diff serve
+.PHONY: check check-native check-pjrt check-deps artifacts artifacts100 test bench-smoke bench-diff doc serve
 
 # Full battery on the locally-sensible backend: pjrt when AOT artifacts
 # exist, the artifact-free native backend otherwise (so a fresh checkout
@@ -52,6 +52,12 @@ bench-diff:
 		{ echo "usage: make bench-diff BASE=a.json HEAD=b.json [MAX_REGRESS=25]"; exit 2; }
 	cd rust && cargo run --release --bin hasfl -- bench-diff \
 		--base "$(abspath $(BASE))" --head "$(abspath $(HEAD))" --max-regress "$(MAX_REGRESS)"
+
+# API docs with the same strictness ci.sh enforces: every public item
+# documented (lib.rs carries #![warn(missing_docs)]) and no broken
+# intra-doc links, with rustdoc warnings denied.
+doc:
+	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 # Run the training daemon on its defaults (127.0.0.1:4780, ./serve-state).
 serve:

@@ -22,23 +22,28 @@
 #                            scenario-determinism + backend-parity suites)
 #   3. formatting           (cargo fmt --check)
 #   4. lints                (cargo clippy -D warnings)
-#   5. dependency gate      (cargo deny check; skipped if not installed)
-#   6. bench smoke          (1 iteration: e2e_round + mega-fleet scenario;
+#   5. rustdoc gate         (cargo doc --no-deps with warnings denied:
+#                            every public item documented, no broken
+#                            intra-doc links)
+#   6. dependency gate      (cargo deny check; skipped if not installed)
+#   7. bench smoke          (1 iteration: e2e_round + mega-fleet scenario;
 #                            BENCH_e2e.json and BENCH_scenario.json must
 #                            both be emitted — the perf trajectory is
-#                            never silently empty)
-#   7. example smoke        (churn_fleet end-to-end under HASFL_BENCH_SMOKE)
-#   8. resume smoke         (train 3 rounds -> checkpoint -> resume 2 more;
+#                            never silently empty — and the kernel_native
+#                            series must show the blocked/tiled GEMM >= 2x
+#                            over the naive reference, DESIGN.md §14)
+#   8. example smoke        (churn_fleet end-to-end under HASFL_BENCH_SMOKE)
+#   9. resume smoke         (train 3 rounds -> checkpoint -> resume 2 more;
 #                            history must be byte-identical to 5 straight
 #                            rounds; runs on every backend)
-#   9. serve smoke          (hasfl serve: create a session over HTTP, run 3
+#  10. serve smoke          (hasfl serve: create a session over HTTP, run 3
 #                            rounds, SIGTERM the daemon, restart it on the
 #                            same state dir, run the rest; the served
 #                            history.csv must be byte-identical to a solo
 #                            run — DESIGN.md §12)
-#  10. json/bench-diff smoke (hasfl info --json parses; hasfl bench-diff
+#  11. json/bench-diff smoke (hasfl info --json parses; hasfl bench-diff
 #                            gates BENCH_*.json tail-latency regressions)
-#  11. chaos smoke          (the same seeded --faults chaos run twice must
+#  12. chaos smoke          (the same seeded --faults chaos run twice must
 #                            be byte-identical; then slow-loris + mid-body
 #                            disconnect probes against a tightly-capped
 #                            daemon must leave /healthz responsive —
@@ -76,6 +81,9 @@ cargo fmt --check
 echo "== cargo clippy -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
 
+echo "== rustdoc gate (cargo doc --no-deps, warnings denied) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 echo "== dependency gate (make check-deps) =="
 make -C .. check-deps
 
@@ -86,6 +94,17 @@ rm -f "$HASFL_BENCH_JSON" "$HASFL_SCENARIO_BENCH_JSON"
 make -C .. bench-smoke
 test -f "$HASFL_BENCH_JSON" || { echo "FAIL: e2e bench emitted no BENCH_e2e.json"; exit 1; }
 test -f "$HASFL_SCENARIO_BENCH_JSON" || { echo "FAIL: scenario bench emitted no BENCH_scenario.json"; exit 1; }
+# The kernel-level series must show the blocked/tiled GEMM beating the
+# naive reference by at least 2x (typical: 3-8x; the conservative floor
+# absorbs shared-runner noise while still catching a scalar fallback).
+python3 - "$HASFL_BENCH_JSON" <<'PY'
+import json, sys
+kn = json.load(open(sys.argv[1]))["kernel_native"]
+s = kn["speedup_p50"]
+print("kernel_native: naive p50 %.2f ms -> tiled p50 %.2f ms (%.2fx, %d threads)"
+      % (kn["naive"]["p50_ms"], kn["tiled"]["p50_ms"], s, kn["threads"]))
+assert s >= 2.0, "tiled GEMM speedup %.2fx is under the 2.0x floor" % s
+PY
 echo "perf trajectory OK: BENCH_e2e.json + BENCH_scenario.json"
 
 echo "== churn_fleet example smoke (determinism + liveness asserts) =="

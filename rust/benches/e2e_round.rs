@@ -64,6 +64,48 @@ fn marshal_json(stats: &EngineStats, rounds: usize) -> Json {
     j
 }
 
+/// Kernel-level native series: the conv3 GEMM triple (`mm` forward,
+/// `mm_at_b` weight grad, `mm_a_bt` input grad) at batch-16 shapes,
+/// naive reference vs the blocked/tiled kernels of DESIGN.md §14. Pure
+/// Rust with no engine, so this series flows from every runner — even
+/// PJRT-backed ones — and `ci.sh` gates on its `speedup_p50`.
+fn kernel_series() -> Json {
+    use hasfl::backend::ops;
+    // conv3 at batch 16: m = 16·16·16 patch rows, k = 9·16 taps, n = 32 filters.
+    const M: usize = 16 * 16 * 16;
+    const K: usize = 144;
+    const N: usize = 32;
+    let mut rng = hasfl::rng::Pcg32::seeded(14);
+    let a: Vec<f32> = (0..M * K).map(|_| rng.normal() as f32 * 0.1).collect();
+    let w: Vec<f32> = (0..K * N).map(|_| rng.normal() as f32 * 0.1).collect();
+    let dz: Vec<f32> = (0..M * N).map(|_| rng.normal() as f32 * 0.1).collect();
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+
+    // Enough samples for a stable p50 even in smoke mode: the CI perf
+    // gate reads this series, and a single smoke sample would flake.
+    let (wu, it) = if common::smoke() { (1, 5) } else { (3, 20) };
+    let r_naive = common::bench_raw("kernel_gemm_naive_conv3_b16", wu, it, || {
+        std::hint::black_box(ops::mm_ref(&a, &w, M, K, N));
+        std::hint::black_box(ops::mm_at_b_ref(&a, &dz, M, K, N));
+        std::hint::black_box(ops::mm_a_bt_ref(&dz, &w, M, N, K));
+    });
+    let r_tiled = common::bench_raw("kernel_gemm_tiled_conv3_b16", wu, it, || {
+        std::hint::black_box(ops::mm(&a, &w, M, K, N, threads));
+        std::hint::black_box(ops::mm_at_b(&a, &dz, M, K, N, threads));
+        std::hint::black_box(ops::mm_a_bt(&dz, &w, M, N, K, threads));
+    });
+
+    let mut j = Json::obj();
+    j.set("m", Json::Num(M as f64))
+        .set("k", Json::Num(K as f64))
+        .set("n", Json::Num(N as f64))
+        .set("threads", Json::Num(threads as f64))
+        .set("naive", r_naive.to_json_ms())
+        .set("tiled", r_tiled.to_json_ms())
+        .set("speedup_p50", Json::Num(r_naive.summary.p50 / r_tiled.summary.p50));
+    j
+}
+
 fn bench_json_path() -> std::path::PathBuf {
     if let Ok(p) = std::env::var("HASFL_BENCH_JSON") {
         return p.into();
@@ -77,6 +119,9 @@ fn bench_json_path() -> std::path::PathBuf {
 fn main() {
     let dir = common::artifacts_dir();
     println!("backend: {}", common::backend().as_str());
+
+    // Kernel series first: pure CPU, no engine or session state to perturb.
+    let kernels = kernel_series();
 
     // Sequential baseline (single lane, the seed data path).
     let mut seq = build_session(&dir, 1);
@@ -124,6 +169,7 @@ fn main() {
         .set("step_concurrent_pool1", r_conc1.to_json_ms())
         .set("step_concurrent_pooled", r_pool.to_json_ms())
         .set("evaluate", r_eval.to_json_ms())
+        .set("kernel_native", kernels)
         .set(
             "speedup_pool1_vs_sequential",
             Json::Num(r_seq.summary.p50 / r_conc1.summary.p50),

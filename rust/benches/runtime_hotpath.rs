@@ -13,6 +13,33 @@ use hasfl::rng::Pcg32;
 use hasfl::runtime::{tensor_to_shared, BufKey, ExecInput, HostTensor, StepArtifacts};
 
 fn main() {
+    // Native kernel microbenches (print-only; the JSON trajectory series
+    // lives in e2e_round.rs): naive reference vs blocked/tiled GEMM at
+    // two hot conv shapes, plus the row-parallel im2col at 1..N threads.
+    {
+        use hasfl::backend::ops;
+        let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        let mut krng = Pcg32::seeded(77);
+        let shapes = [("conv1_b32", 32 * 32 * 32, 27, 16), ("conv3_b16", 16 * 16 * 16, 144, 32)];
+        for &(name, m, k, n) in &shapes {
+            let a: Vec<f32> = (0..m * k).map(|_| krng.normal() as f32 * 0.1).collect();
+            let w: Vec<f32> = (0..k * n).map(|_| krng.normal() as f32 * 0.1).collect();
+            common::bench(&format!("kernel_mm_naive_{name}"), 2, 15, || {
+                std::hint::black_box(ops::mm_ref(&a, &w, m, k, n));
+            });
+            common::bench(&format!("kernel_mm_tiled_{name}"), 2, 15, || {
+                std::hint::black_box(ops::mm(&a, &w, m, k, n, threads));
+            });
+        }
+        let x: Vec<f32> = (0..16 * 32 * 32 * 16).map(|_| krng.normal() as f32).collect();
+        common::bench("kernel_im2col3x3_b16_t1", 2, 15, || {
+            std::hint::black_box(ops::im2col3x3(&x, 16, 32, 32, 16, 1));
+        });
+        common::bench(&format!("kernel_im2col3x3_b16_t{threads}"), 2, 15, || {
+            std::hint::black_box(ops::im2col3x3(&x, 16, 32, 32, 16, threads));
+        });
+    }
+
     let (engine, manifest) = common::engine_setup();
     println!("backend: {}", engine.backend().as_str());
     let params = Params::init(&manifest, 1);

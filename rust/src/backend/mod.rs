@@ -8,11 +8,12 @@
 //! - **PJRT** ([`crate::runtime::Engine`]) — compiles the AOT-lowered HLO
 //!   artifacts (`make artifacts`, needs Python/JAX once at build time)
 //!   and executes them through the XLA PJRT CPU client.
-//! - **Native** ([`NativeEngine`]) — plain-Rust conv/pool/dense/softmax-CE
-//!   forward+backward kernels over an in-Rust [`ModelSpec`] that
-//!   synthesizes the manifest. No artifacts, no Python, no XLA toolchain;
-//!   runs anywhere the crate compiles, which is what lets hosted CI run
-//!   the full engine-backed battery unconditionally.
+//! - **Native** ([`NativeEngine`]) — Rust conv/pool/dense/softmax-CE
+//!   forward+backward over the blocked, SIMD-friendly, row-parallel
+//!   kernels in [`ops`] (DESIGN.md §14), with an in-Rust [`ModelSpec`]
+//!   that synthesizes the manifest. No artifacts, no Python, no XLA
+//!   toolchain; runs anywhere the crate compiles, which is what lets
+//!   hosted CI run the full engine-backed battery unconditionally.
 //!
 //! Selection: [`BackendKind::Auto`] resolves to PJRT when
 //! `<artifacts>/manifest.json` exists and to native otherwise. Sessions
@@ -25,7 +26,7 @@
 //! `rust/tests/backend_parity.rs`.
 
 mod native;
-mod ops;
+pub mod ops;
 mod spec;
 
 pub use native::NativeEngine;
@@ -46,6 +47,8 @@ pub enum BackendKind {
 }
 
 impl BackendKind {
+    /// Canonical lowercase name (`auto`/`native`/`pjrt`) — the inverse of
+    /// [`BackendKind::parse`], used for CLI flags and thread names.
     pub fn as_str(&self) -> &'static str {
         match self {
             BackendKind::Auto => "auto",
@@ -54,6 +57,7 @@ impl BackendKind {
         }
     }
 
+    /// Parse a backend name as accepted by `--backend` (auto|native|pjrt).
     pub fn parse(s: &str) -> crate::Result<BackendKind> {
         Ok(match s {
             "auto" => BackendKind::Auto,

@@ -10,6 +10,12 @@
 //! native backend all reductions run in a fixed sequential order, making
 //! results bit-deterministic across runs, engine lanes, and resumes;
 //! against PJRT the agreement is within float tolerance (DESIGN.md §11).
+//!
+//! Each engine carries a worker-thread budget for the blocked kernels in
+//! [`super::ops`] (DESIGN.md §14). The budget is a wall-clock knob only:
+//! parallel kernels partition work over independent output rows, so a
+//! 1-thread and an N-thread engine produce bit-identical outputs
+//! (pinned by tests here and in `rust/tests/backend_parity.rs`).
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -60,6 +66,10 @@ struct Act {
 pub struct NativeEngine {
     spec: ModelSpec,
     manifest: Manifest,
+    /// Worker-thread budget for the blocked kernels in [`super::ops`]
+    /// (1 = fully sequential). A wall-clock knob, not state: thread count
+    /// never changes a bit of output (DESIGN.md §14).
+    threads: usize,
     /// Buffer-cache bookkeeping: the native backend has no device literals
     /// to pack, but it tracks `(version, shape)` per [`BufKey`] so the
     /// hit/miss/byte statistics — and their invalidation semantics — stay
@@ -69,21 +79,40 @@ pub struct NativeEngine {
 }
 
 impl NativeEngine {
-    /// Build a native engine for `classes`-way SplitCNN-8.
+    /// Build a single-threaded native engine for `classes`-way SplitCNN-8
+    /// (tests and micro-drivers; pool lanes get their budget through
+    /// [`NativeEngine::with_threads`]).
     pub fn new(spec: ModelSpec) -> NativeEngine {
+        NativeEngine::with_threads(spec, 1)
+    }
+
+    /// Build a native engine whose kernels may fan work out over up to
+    /// `threads` scoped worker threads (clamped to >= 1). The lane
+    /// architecture resolves this per-lane so pooled lanes never
+    /// oversubscribe the machine ([`crate::runtime::EngineSpec`]).
+    pub fn with_threads(spec: ModelSpec, threads: usize) -> NativeEngine {
         let manifest = spec.manifest();
         NativeEngine {
             spec,
             manifest,
+            threads: threads.max(1),
             buffers: HashMap::new(),
             stats: EngineStats { pool_width: 1, ..EngineStats::default() },
         }
     }
 
+    /// The kernel worker-thread budget this engine runs with.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The manifest of artifacts this engine serves (synthesized from the
+    /// model spec — same names and specs as the PJRT manifest on disk).
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// Per-engine execution statistics (executions, cache traffic, time).
     pub fn stats(&self) -> &EngineStats {
         &self.stats
     }
@@ -172,12 +201,13 @@ impl NativeEngine {
         inputs: &[ExecInput],
     ) -> crate::Result<Vec<HostTensor>> {
         let l = self.spec.n_blocks();
+        let t = self.threads;
         match func {
             "client_fwd" => {
                 let x = inputs[0].tensor();
                 let params = tensors(&inputs[1..]);
                 let blocks = &self.spec.blocks[..cut];
-                let (act, _) = forward(blocks, &params, x.data.clone(), x.shape.clone(), false);
+                let (act, _) = forward(blocks, &params, x.data.clone(), x.shape.clone(), false, t);
                 Ok(vec![HostTensor { shape: act.shape, data: act.data }])
             }
             "server_step" => {
@@ -187,15 +217,16 @@ impl NativeEngine {
                 let params = tensors(&inputs[3..]);
                 let blocks = &self.spec.blocks[cut..];
                 let (logits, caches) =
-                    forward(blocks, &params, a.data.clone(), a.shape.clone(), true);
+                    forward(blocks, &params, a.data.clone(), a.shape.clone(), true, t);
                 let (loss, correct, dlogits) = ops::softmax_xent(
                     &logits.data,
                     &onehot.data,
                     &weights.data,
                     bucket,
                     self.spec.classes,
+                    t,
                 );
-                let (dx, grads) = backward(blocks, &params, &caches, dlogits);
+                let (dx, grads) = backward(blocks, &params, &caches, dlogits, t);
                 let mut out = vec![
                     HostTensor::scalar(loss),
                     HostTensor::scalar(correct),
@@ -209,8 +240,9 @@ impl NativeEngine {
                 let ga = inputs[1].tensor();
                 let params = tensors(&inputs[2..]);
                 let blocks = &self.spec.blocks[..cut];
-                let (_, caches) = forward(blocks, &params, x.data.clone(), x.shape.clone(), true);
-                let (_, grads) = backward(blocks, &params, &caches, ga.data.clone());
+                let (_, caches) =
+                    forward(blocks, &params, x.data.clone(), x.shape.clone(), true, t);
+                let (_, grads) = backward(blocks, &params, &caches, ga.data.clone(), t);
                 Ok(grads)
             }
             "full_step" => {
@@ -220,15 +252,16 @@ impl NativeEngine {
                 let params = tensors(&inputs[3..]);
                 let blocks = &self.spec.blocks[..l];
                 let (logits, caches) =
-                    forward(blocks, &params, x.data.clone(), x.shape.clone(), true);
+                    forward(blocks, &params, x.data.clone(), x.shape.clone(), true, t);
                 let (loss, correct, dlogits) = ops::softmax_xent(
                     &logits.data,
                     &onehot.data,
                     &weights.data,
                     bucket,
                     self.spec.classes,
+                    t,
                 );
-                let (_, grads) = backward(blocks, &params, &caches, dlogits);
+                let (_, grads) = backward(blocks, &params, &caches, dlogits, t);
                 let mut out = vec![HostTensor::scalar(loss), HostTensor::scalar(correct)];
                 out.extend(grads);
                 Ok(out)
@@ -237,7 +270,7 @@ impl NativeEngine {
                 let x = inputs[0].tensor();
                 let params = tensors(&inputs[1..]);
                 let blocks = &self.spec.blocks[..l];
-                let (act, _) = forward(blocks, &params, x.data.clone(), x.shape.clone(), false);
+                let (act, _) = forward(blocks, &params, x.data.clone(), x.shape.clone(), false, t);
                 Ok(vec![HostTensor { shape: act.shape, data: act.data }])
             }
             other => anyhow::bail!("native backend: unknown function '{other}'"),
@@ -251,13 +284,15 @@ fn tensors(inputs: &[ExecInput]) -> Vec<&HostTensor> {
 }
 
 /// Run `blocks` forward from activation `(data, shape)`. With `keep`, the
-/// per-block residuals for the backward pass are retained.
+/// per-block residuals for the backward pass are retained. `threads` is
+/// the kernel worker budget (bit-neutral; DESIGN.md §14).
 fn forward(
     blocks: &[BlockSpec],
     params: &[&HostTensor],
     data: Vec<f32>,
     shape: Vec<usize>,
     keep: bool,
+    threads: usize,
 ) -> (Act, Vec<Cache>) {
     debug_assert_eq!(params.len(), 2 * blocks.len());
     let mut act = Act { data, shape };
@@ -269,8 +304,8 @@ fn forward(
                 let (b, hw) = (act.shape[0], act.shape[1]);
                 debug_assert_eq!(act.shape, vec![b, hw, hw, blk.cin]);
                 let m = b * hw * hw;
-                let cols = ops::im2col3x3(&act.data, b, hw, hw, blk.cin);
-                let mut z = ops::mm(&cols, &w.data, m, 9 * blk.cin, blk.cout);
+                let cols = ops::im2col3x3(&act.data, b, hw, hw, blk.cin, threads);
+                let mut z = ops::mm(&cols, &w.data, m, 9 * blk.cin, blk.cout, threads);
                 ops::add_bias_act(&mut z, &bias.data, blk.cout, blk.relu);
                 let cache = |z: Vec<f32>, pool_idx: Vec<u32>| Cache::Conv {
                     cols,
@@ -284,7 +319,7 @@ fn forward(
                 };
                 let ohw = if pool { hw / 2 } else { hw };
                 let out = if pool {
-                    let (p, idx) = ops::maxpool2(&z, b, hw, hw, blk.cout);
+                    let (p, idx) = ops::maxpool2(&z, b, hw, hw, blk.cout, threads);
                     if keep {
                         caches.push(cache(z, idx));
                     }
@@ -302,7 +337,7 @@ fn forward(
                 let in_shape = act.shape.clone();
                 debug_assert_eq!(act.data.len(), b * blk.cin);
                 let x2d = act.data;
-                let mut z = ops::mm(&x2d, &w.data, b, blk.cin, blk.cout);
+                let mut z = ops::mm(&x2d, &w.data, b, blk.cin, blk.cout, threads);
                 ops::add_bias_act(&mut z, &bias.data, blk.cout, blk.relu);
                 if keep {
                     caches.push(Cache::Dense {
@@ -323,12 +358,14 @@ fn forward(
 
 /// Pull `dout` (gradient at the final activation of `blocks`) back through
 /// the cached forward pass. Returns the gradient at the block-range input
-/// and the parameter gradients `[dw1, db1, ...]` in block order.
+/// and the parameter gradients `[dw1, db1, ...]` in block order. `threads`
+/// is the kernel worker budget (bit-neutral; DESIGN.md §14).
 fn backward(
     blocks: &[BlockSpec],
     params: &[&HostTensor],
     caches: &[Cache],
     dout: Vec<f32>,
+    threads: usize,
 ) -> (Vec<f32>, Vec<HostTensor>) {
     debug_assert_eq!(caches.len(), blocks.len());
     let mut grads: Vec<HostTensor> = Vec::with_capacity(2 * blocks.len());
@@ -348,9 +385,9 @@ fn backward(
                     }
                 }
                 let db = ops::col_sum(&dz, *cout);
-                let dw = ops::mm_at_b(cols, &dz, m, 9 * cin, *cout);
-                let dcols = ops::mm_a_bt(&dz, &w.data, m, *cout, 9 * cin);
-                d = ops::col2im3x3_add(&dcols, b, *hw, *hw, *cin);
+                let dw = ops::mm_at_b(cols, &dz, m, 9 * cin, *cout, threads);
+                let dcols = ops::mm_a_bt(&dz, &w.data, m, *cout, 9 * cin, threads);
+                d = ops::col2im3x3_add(&dcols, b, *hw, *hw, *cin, threads);
                 grads.push(HostTensor { shape: vec![*cout], data: db });
                 grads.push(HostTensor { shape: vec![3, 3, *cin, *cout], data: dw });
             }
@@ -365,8 +402,8 @@ fn backward(
                     }
                 }
                 let db = ops::col_sum(&dz, *cout);
-                let dw = ops::mm_at_b(x2d, &dz, b, *cin, *cout);
-                d = ops::mm_a_bt(&dz, &w.data, b, *cout, *cin);
+                let dw = ops::mm_at_b(x2d, &dz, b, *cin, *cout, threads);
+                d = ops::mm_a_bt(&dz, &w.data, b, *cout, *cin, threads);
                 debug_assert_eq!(d.len(), in_shape.iter().product::<usize>());
                 grads.push(HostTensor { shape: vec![*cout], data: db });
                 grads.push(HostTensor { shape: vec![*cin, *cout], data: dw });
@@ -614,5 +651,27 @@ mod tests {
         assert_eq!(e.buffer_len(), n as usize);
         assert_eq!(e.stats().executions, 3);
         assert_eq!(e.stats().compiles, 0);
+    }
+
+    #[test]
+    fn thread_budget_is_bit_neutral() {
+        // A 1-thread engine and an N-thread engine must produce
+        // bit-identical outputs for the full step path: parallel kernels
+        // partition only independent output rows and never reorder a
+        // reduction (DESIGN.md §14). Bucket 32 pushes the big conv GEMMs
+        // past the parallel work thresholds, so the split really engages.
+        let mut e1 = engine();
+        let mut e4 = NativeEngine::with_threads(ModelSpec::splitcnn8(10), 4);
+        assert_eq!(e1.threads(), 1);
+        assert_eq!(e4.threads(), 4);
+        let params = Params::init(e1.manifest(), 8);
+        let (x, y, w) = fake_batch(32, 10, 32);
+        let mut inputs = fresh(&[x, y, w]);
+        inputs.extend(param_inputs(&params));
+        let a = e1.execute("full_step_b32", &inputs).unwrap();
+        let b = e4.execute("full_step_b32", &inputs).unwrap();
+        for (ta, tb) in a.iter().zip(&b) {
+            assert_eq!(ta.data, tb.data, "thread budget changed native numerics");
+        }
     }
 }

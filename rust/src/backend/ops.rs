@@ -1,17 +1,269 @@
-//! Numeric kernels for the native backend: row-major f32 GEMMs, SAME-padded
-//! im2col/col2im, 2x2 maxpool, and weighted softmax cross-entropy — the
-//! same building blocks the L1 Pallas kernels provide to the JAX model.
+//! Numeric kernels for the native backend: cache-blocked, register-tiled
+//! row-major f32 GEMMs, SAME-padded im2col/col2im, 2x2 maxpool, and
+//! weighted softmax cross-entropy — the same building blocks the L1
+//! Pallas kernels provide to the JAX model.
 //!
-//! Every reduction runs in a fixed sequential order, so the native backend
-//! is bit-deterministic across runs, engine lanes, and resume boundaries
-//! (`rust/tests/backend_parity.rs`). Agreement with the PJRT backend is
-//! within float tolerance only: XLA fuses and reorders f32 reductions, so
-//! the two backends accumulate in different orders (DESIGN.md §11).
+//! The GEMM kernels are hand-tiled ([`GEMM_MR`] x [`GEMM_NR`] register
+//! tiles over packed B panels) so the autovectorizer turns the inner
+//! loops into SIMD, and the heavy kernels fan independent output rows out
+//! across a scoped thread pool. Neither changes a single bit of output:
+//! every per-element reduction keeps one accumulator and a fixed
+//! ascending reduction order, and parallel chunks never share an output
+//! row, so the native backend stays bit-deterministic across runs, engine
+//! lanes, thread budgets, and resume boundaries
+//! (`rust/tests/backend_parity.rs`; DESIGN.md §14). Agreement with the
+//! PJRT backend is within float tolerance only: XLA fuses and reorders
+//! f32 reductions, so the two backends accumulate in different orders
+//! (DESIGN.md §11).
+//!
+//! The naive kernels are retained as `*_ref`: they are the bit-identity
+//! oracles for the tiled paths and the baseline of the `kernel_native`
+//! bench series in `BENCH_e2e.json` (docs/PERFORMANCE.md).
 
-/// `C[m,n] = A[m,k] · B[k,n]` (row-major). i-k-j loop order: the inner
-/// loop is a contiguous axpy over a row of B, which the compiler
-/// vectorizes, and the k-accumulation order is fixed.
-pub fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+/// Row height of the GEMM register tile: each micro-kernel invocation
+/// accumulates this many rows of `C` at once. 4 rows x [`GEMM_NR`] lanes
+/// keeps the whole accumulator tile plus one packed-B row inside the
+/// vector register file on AVX2-class cores (DESIGN.md §14 documents how
+/// to re-tune these constants).
+pub const GEMM_MR: usize = 4;
+
+/// Column width of the GEMM register tile and of the packed-B panels:
+/// two AVX2 (one AVX-512) f32 vectors per accumulator row. Panels are
+/// zero-padded to this width so the inner loop is always full-width and
+/// branch-free; only the final writeback is clipped to the true width.
+pub const GEMM_NR: usize = 16;
+
+/// Below this many multiply-accumulates (`m·k·n`) a GEMM call runs the
+/// naive reference directly: panel packing would cost more than it
+/// saves, and both paths are bit-identical so the switch is invisible.
+pub const GEMM_SMALL_MACS: usize = 1 << 14;
+
+/// Minimum multiply-accumulates before a GEMM fans row-blocks out across
+/// worker threads; below it the scoped-thread spawn overhead outweighs
+/// the kernel itself.
+pub const GEMM_PAR_MIN_MACS: usize = 1 << 21;
+
+/// Minimum output elements before an im2col/col2im/pool/softmax kernel
+/// fans rows out across worker threads.
+pub const PAR_MIN_ELEMS: usize = 1 << 15;
+
+/// Run `f(first_row, chunk)` over disjoint, contiguous row chunks of
+/// `out` (each row `row_len` elements long) on up to `threads` scoped
+/// worker threads. Chunk boundaries land on multiples of `granule` rows
+/// so a blocked kernel's row tiles never straddle a split. Every output
+/// row is written by exactly one worker and no reduction crosses a
+/// chunk, so the result is bit-identical at every thread count
+/// (DESIGN.md §14).
+fn par_rows<F>(threads: usize, out: &mut [f32], row_len: usize, granule: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let rows = if row_len == 0 { 0 } else { out.len() / row_len };
+    debug_assert_eq!(rows * row_len, out.len());
+    let granule = granule.max(1);
+    let granules = rows.div_ceil(granule);
+    let workers = threads.clamp(1, granules.max(1));
+    if workers <= 1 {
+        f(0, out);
+        return;
+    }
+    let chunk_rows = granules.div_ceil(workers) * granule;
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut rest = out;
+        let mut row0 = 0usize;
+        while !rest.is_empty() {
+            let take = chunk_rows.min(rest.len() / row_len);
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take * row_len);
+            rest = tail;
+            if rest.is_empty() {
+                // The final chunk runs on the calling thread.
+                f(row0, head);
+            } else {
+                s.spawn(move || f(row0, head));
+            }
+            row0 += take;
+        }
+    });
+}
+
+/// Two-slice sibling of [`par_rows`] for kernels with paired outputs
+/// (pooled values + routing indices, gradients + per-row stats): both
+/// slices split at the same row boundaries, so each worker owns the same
+/// rows of each.
+fn par_rows2<T, U, F>(threads: usize, a: &mut [T], alen: usize, b: &mut [U], blen: usize, f: F)
+where
+    T: Send,
+    U: Send,
+    F: Fn(usize, &mut [T], &mut [U]) + Sync,
+{
+    let rows = if alen == 0 { 0 } else { a.len() / alen };
+    debug_assert_eq!(rows * alen, a.len());
+    debug_assert_eq!(rows * blen, b.len());
+    let workers = threads.clamp(1, rows.max(1));
+    if workers <= 1 {
+        f(0, a, b);
+        return;
+    }
+    let chunk_rows = rows.div_ceil(workers);
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut arest = a;
+        let mut brest = b;
+        let mut row0 = 0usize;
+        while !arest.is_empty() {
+            let take = chunk_rows.min(arest.len() / alen);
+            let (ahead, atail) = std::mem::take(&mut arest).split_at_mut(take * alen);
+            let (bhead, btail) = std::mem::take(&mut brest).split_at_mut(take * blen);
+            arest = atail;
+            brest = btail;
+            if arest.is_empty() {
+                f(row0, ahead, bhead);
+            } else {
+                s.spawn(move || f(row0, ahead, bhead));
+            }
+            row0 += take;
+        }
+    });
+}
+
+/// Row-major transpose: `dst[cols, rows]` from `src[rows, cols]`.
+fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    debug_assert_eq!(src.len(), rows * cols);
+    let mut dst = vec![0.0f32; src.len()];
+    for r in 0..rows {
+        for (cc, &v) in src[r * cols..(r + 1) * cols].iter().enumerate() {
+            dst[cc * rows + r] = v;
+        }
+    }
+    dst
+}
+
+/// Cache-blocked, register-tiled GEMM core: `C[m,n] = A[m,k] · B[k,n]`,
+/// all row-major. `B` is packed once into [`GEMM_NR`]-wide, zero-padded
+/// column panels the micro-kernel streams contiguously; each
+/// [`GEMM_MR`] x [`GEMM_NR`] output tile keeps one accumulator per
+/// element and sweeps the *full* `k` range in ascending order — the
+/// exact reduction order of [`mm_ref`], which is what keeps the fast
+/// kernels bit-identical to the reference while the fixed-width inner
+/// loops autovectorize. Row-blocks of `C` are farmed out over `threads`
+/// workers ([`par_rows`]); rows are independent, so the split cannot
+/// reorder any reduction.
+fn gemm_blocked(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * n];
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    let np = n.div_ceil(GEMM_NR);
+    let mut packed = vec![0.0f32; np * k * GEMM_NR];
+    for p in 0..np {
+        let j0 = p * GEMM_NR;
+        let w = GEMM_NR.min(n - j0);
+        let panel = &mut packed[p * k * GEMM_NR..(p + 1) * k * GEMM_NR];
+        for kk in 0..k {
+            let src = &b[kk * n + j0..kk * n + j0 + w];
+            panel[kk * GEMM_NR..kk * GEMM_NR + w].copy_from_slice(src);
+        }
+    }
+    let packed = &packed[..];
+    let t = if m * k * n >= GEMM_PAR_MIN_MACS { threads } else { 1 };
+    par_rows(t, &mut c, n, GEMM_MR, move |row0, csub| {
+        let rows = csub.len() / n;
+        let mut i = 0usize;
+        while i < rows {
+            let mr = GEMM_MR.min(rows - i);
+            let arows = &a[(row0 + i) * k..(row0 + i + mr) * k];
+            for p in 0..np {
+                let j0 = p * GEMM_NR;
+                let w = GEMM_NR.min(n - j0);
+                let panel = &packed[p * k * GEMM_NR..(p + 1) * k * GEMM_NR];
+                let mut acc = [[0.0f32; GEMM_NR]; GEMM_MR];
+                if mr == GEMM_MR {
+                    // Hot path: splitting A's rows up front lets the
+                    // bounds checks hoist out of the k-loop, so the body
+                    // is GEMM_MR broadcasts against one packed row.
+                    let (a0, r1) = arows.split_at(k);
+                    let (a1, r2) = r1.split_at(k);
+                    let (a2, a3) = r2.split_at(k);
+                    for (kk, prow) in panel.chunks_exact(GEMM_NR).enumerate() {
+                        let av = [a0[kk], a1[kk], a2[kk], a3[kk]];
+                        for (accr, &avr) in acc.iter_mut().zip(&av) {
+                            for (cv, &pv) in accr.iter_mut().zip(prow) {
+                                *cv += avr * pv;
+                            }
+                        }
+                    }
+                } else {
+                    // Remainder rows (m % GEMM_MR) take the generic path.
+                    for (kk, prow) in panel.chunks_exact(GEMM_NR).enumerate() {
+                        for (r, accr) in acc.iter_mut().take(mr).enumerate() {
+                            let avr = arows[r * k + kk];
+                            for (cv, &pv) in accr.iter_mut().zip(prow) {
+                                *cv += avr * pv;
+                            }
+                        }
+                    }
+                }
+                for (r, accr) in acc.iter().take(mr).enumerate() {
+                    let dst = (i + r) * n + j0;
+                    csub[dst..dst + w].copy_from_slice(&accr[..w]);
+                }
+            }
+            i += mr;
+        }
+    });
+    c
+}
+
+/// `C[m,n] = A[m,k] · B[k,n]` (row-major), cache-blocked and
+/// register-tiled, with row-blocks parallelized over up to `threads`
+/// scoped workers. Bit-identical to [`mm_ref`] at every thread count:
+/// the tiled kernel keeps one accumulator per output element and the
+/// full ascending-`k` reduction order (DESIGN.md §14). Shapes below
+/// [`GEMM_SMALL_MACS`] multiply-accumulates run the reference directly.
+pub fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize) -> Vec<f32> {
+    if m * k * n < GEMM_SMALL_MACS {
+        return mm_ref(a, b, m, k, n);
+    }
+    gemm_blocked(a, b, m, k, n, threads)
+}
+
+/// `C[k,n] = A[m,k]ᵀ · B[m,n]` (row-major) — the `dW = Xᵀ·dY` shape —
+/// tiled and parallelized like [`mm`], bit-identical to
+/// [`mm_at_b_ref`]: transposing `A` turns the over-`m` reduction into
+/// `gemm_blocked`'s ascending over-`k` form without changing a single
+/// product or its accumulation order.
+pub fn mm_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize) -> Vec<f32> {
+    if m * k * n < GEMM_SMALL_MACS {
+        return mm_at_b_ref(a, b, m, k, n);
+    }
+    let at = transpose(a, m, k);
+    gemm_blocked(&at, b, k, m, n, threads)
+}
+
+/// `C[m,k] = A[m,n] · B[k,n]ᵀ` (row-major) — the `dX = dY·Wᵀ` shape —
+/// tiled and parallelized like [`mm`], bit-identical to
+/// [`mm_a_bt_ref`]: packing `Bᵀ` turns each reference dot product into
+/// `gemm_blocked`'s axpy form; per output element the products and
+/// their order are unchanged. (The reference's inner dot never
+/// autovectorizes — f32 reduction order is not associative — so this
+/// shape gains the most from tiling.)
+pub fn mm_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, threads: usize) -> Vec<f32> {
+    if m * n * k < GEMM_SMALL_MACS {
+        return mm_a_bt_ref(a, b, m, n, k);
+    }
+    let bt = transpose(b, k, n);
+    gemm_blocked(a, &bt, m, n, k, threads)
+}
+
+/// Naive reference `C[m,n] = A[m,k] · B[k,n]` (row-major). i-k-j loop
+/// order: the inner loop is a contiguous axpy over a row of B, and the
+/// k-accumulation order is fixed. Retained as the bit-identity oracle
+/// for [`mm`] and as the pre-tiling baseline the `kernel_native` bench
+/// series measures against (docs/PERFORMANCE.md).
+pub fn mm_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     let mut c = vec![0.0f32; m * n];
@@ -28,8 +280,9 @@ pub fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     c
 }
 
-/// `C[k,n] = A[m,k]ᵀ · B[m,n]` (row-major) — the `dW = Xᵀ·dY` shape.
-pub fn mm_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+/// Naive reference `C[k,n] = A[m,k]ᵀ · B[m,n]` (row-major) — the
+/// bit-identity oracle for [`mm_at_b`].
+pub fn mm_at_b_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), m * n);
     let mut c = vec![0.0f32; k * n];
@@ -46,8 +299,9 @@ pub fn mm_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     c
 }
 
-/// `C[m,k] = A[m,n] · B[k,n]ᵀ` (row-major) — the `dX = dY·Wᵀ` shape.
-pub fn mm_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+/// Naive reference `C[m,k] = A[m,n] · B[k,n]ᵀ` (row-major) — the
+/// bit-identity oracle for [`mm_a_bt`].
+pub fn mm_a_bt_ref(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * n);
     debug_assert_eq!(b.len(), k * n);
     let mut c = vec![0.0f32; m * k];
@@ -83,14 +337,20 @@ pub fn add_bias_act(z: &mut [f32], bias: &[f32], n: usize, relu: bool) {
 /// SAME-padded 3x3 im2col over NHWC input: output `[b*h*w, 9*c]` with
 /// feature order `(i, j, c)` — matching `model._im2col` in Python, so the
 /// `[3,3,cin,cout] -> [9*cin, cout]` weight reshape lines up row-major.
-pub fn im2col3x3(x: &[f32], b: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+/// Output rows (one per input row of one image) are gathered in parallel
+/// across up to `threads` workers; each output element is written exactly
+/// once, so the result is bit-identical at every thread count.
+pub fn im2col3x3(x: &[f32], b: usize, h: usize, w: usize, c: usize, threads: usize) -> Vec<f32> {
     debug_assert_eq!(x.len(), b * h * w * c);
     let kdim = 9 * c;
-    let mut cols = vec![0.0f32; b * h * w * kdim];
-    for bi in 0..b {
-        for y in 0..h {
+    let row_len = w * kdim;
+    let mut cols = vec![0.0f32; b * h * row_len];
+    let t = if cols.len() >= PAR_MIN_ELEMS { threads } else { 1 };
+    par_rows(t, &mut cols, row_len, 1, |row0, sub| {
+        for (rr, orow) in sub.chunks_mut(row_len).enumerate() {
+            let (bi, y) = ((row0 + rr) / h, (row0 + rr) % h);
             for xx in 0..w {
-                let out_base = ((bi * h + y) * w + xx) * kdim;
+                let out_base = xx * kdim;
                 for i in 0..3usize {
                     let sy = y + i;
                     if sy < 1 || sy > h {
@@ -103,61 +363,89 @@ pub fn im2col3x3(x: &[f32], b: usize, h: usize, w: usize, c: usize) -> Vec<f32> 
                         }
                         let src = ((bi * h + (sy - 1)) * w + (sx - 1)) * c;
                         let dst = out_base + (i * 3 + j) * c;
-                        cols[dst..dst + c].copy_from_slice(&x[src..src + c]);
+                        orow[dst..dst + c].copy_from_slice(&x[src..src + c]);
                     }
                 }
             }
         }
-    }
+    });
     cols
 }
 
 /// Scatter-add transpose of [`im2col3x3`]: fold `dcols[b*h*w, 9*c]` back
-/// into an NHWC gradient `[b,h,w,c]`.
-pub fn col2im3x3_add(dcols: &[f32], b: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+/// into an NHWC gradient `[b,h,w,c]`. Parallelized per image — the
+/// scatter-add is confined to one image, so per-element accumulation
+/// order (ascending `y`, `x`, tap) is identical at every thread count.
+pub fn col2im3x3_add(
+    dcols: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    threads: usize,
+) -> Vec<f32> {
     let kdim = 9 * c;
     debug_assert_eq!(dcols.len(), b * h * w * kdim);
-    let mut dx = vec![0.0f32; b * h * w * c];
-    for bi in 0..b {
-        for y in 0..h {
-            for xx in 0..w {
-                let col_base = ((bi * h + y) * w + xx) * kdim;
-                for i in 0..3usize {
-                    let sy = y + i;
-                    if sy < 1 || sy > h {
-                        continue;
-                    }
-                    for j in 0..3usize {
-                        let sx = xx + j;
-                        if sx < 1 || sx > w {
+    let img = h * w * c;
+    let mut dx = vec![0.0f32; b * img];
+    let t = if dx.len() >= PAR_MIN_ELEMS { threads } else { 1 };
+    par_rows(t, &mut dx, img, 1, |img0, sub| {
+        for (ii, dimg) in sub.chunks_mut(img).enumerate() {
+            let bi = img0 + ii;
+            for y in 0..h {
+                for xx in 0..w {
+                    let col_base = ((bi * h + y) * w + xx) * kdim;
+                    for i in 0..3usize {
+                        let sy = y + i;
+                        if sy < 1 || sy > h {
                             continue;
                         }
-                        let dst = ((bi * h + (sy - 1)) * w + (sx - 1)) * c;
-                        let src = col_base + (i * 3 + j) * c;
-                        for (dv, &gv) in dx[dst..dst + c].iter_mut().zip(&dcols[src..src + c]) {
-                            *dv += gv;
+                        for j in 0..3usize {
+                            let sx = xx + j;
+                            if sx < 1 || sx > w {
+                                continue;
+                            }
+                            let dst = ((sy - 1) * w + (sx - 1)) * c;
+                            let src = col_base + (i * 3 + j) * c;
+                            let taps = dimg[dst..dst + c].iter_mut();
+                            for (dv, &gv) in taps.zip(&dcols[src..src + c]) {
+                                *dv += gv;
+                            }
                         }
                     }
                 }
             }
         }
-    }
+    });
     dx
 }
 
-/// 2x2 maxpool over NHWC input `[b,h,w,c]` (h, w even): returns the pooled
-/// tensor `[b,h/2,w/2,c]` and, per pooled element, the flat index of the
-/// winning input element (first maximum in row-major window order — the
-/// tie-break only matters on exactly-equal activations).
-pub fn maxpool2(x: &[f32], b: usize, h: usize, w: usize, c: usize) -> (Vec<f32>, Vec<u32>) {
+/// 2x2 maxpool over NHWC input `[b,h,w,c]` (h, w even): returns the
+/// pooled tensor `[b,h/2,w/2,c]` and, per pooled element, the flat index
+/// of the winning input element (first maximum in row-major window order
+/// — the tie-break only matters on exactly-equal activations). Pooled
+/// rows are scanned in parallel across up to `threads` workers; windows
+/// never span a pooled row, so results are bit-identical at every thread
+/// count.
+pub fn maxpool2(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    threads: usize,
+) -> (Vec<f32>, Vec<u32>) {
     debug_assert_eq!(x.len(), b * h * w * c);
     let (oh, ow) = (h / 2, w / 2);
-    let mut out = vec![0.0f32; b * oh * ow * c];
-    let mut idx = vec![0u32; b * oh * ow * c];
-    for bi in 0..b {
-        for oy in 0..oh {
+    let row_len = ow * c;
+    let mut out = vec![0.0f32; b * oh * row_len];
+    let mut idx = vec![0u32; b * oh * row_len];
+    let t = if x.len() >= PAR_MIN_ELEMS { threads } else { 1 };
+    par_rows2(t, &mut out, row_len, &mut idx, row_len, |row0, osub, isub| {
+        let pairs = osub.chunks_mut(row_len).zip(isub.chunks_mut(row_len));
+        for (rr, (orow, irow)) in pairs.enumerate() {
+            let (bi, oy) = ((row0 + rr) / oh, (row0 + rr) % oh);
             for ox in 0..ow {
-                let out_base = ((bi * oh + oy) * ow + ox) * c;
                 for ch in 0..c {
                     // Seed from the window's first element (not -inf/0):
                     // an all-NaN window then propagates NaN and routes its
@@ -175,12 +463,12 @@ pub fn maxpool2(x: &[f32], b: usize, h: usize, w: usize, c: usize) -> (Vec<f32>,
                             }
                         }
                     }
-                    out[out_base + ch] = best;
-                    idx[out_base + ch] = best_at;
+                    orow[ox * c + ch] = best;
+                    irow[ox * c + ch] = best_at;
                 }
             }
         }
-    }
+    });
     (out, idx)
 }
 
@@ -202,45 +490,60 @@ pub fn maxpool2_bwd(dout: &[f32], idx: &[u32], in_len: usize) -> Vec<f32> {
 /// `dlogits[r] = (w_r / max(Σ w, 1)) · (softmax(logits_r) - onehot_r)` —
 /// the exact forward/VJP pair of the Pallas `softmax_xent` kernel under
 /// the model's weighted-mean reduction.
+///
+/// The per-row work (log-sum-exp, gradient row, hit flag) fans out over
+/// up to `threads` workers; the loss/correct totals are then reduced
+/// sequentially in ascending row order, so both scalars and the gradient
+/// are bit-identical at every thread count.
 pub fn softmax_xent(
     logits: &[f32],
     onehot: &[f32],
     weights: &[f32],
     b: usize,
     classes: usize,
+    threads: usize,
 ) -> (f32, f32, Vec<f32>) {
     debug_assert_eq!(logits.len(), b * classes);
     debug_assert_eq!(onehot.len(), b * classes);
     debug_assert_eq!(weights.len(), b);
     let wsum: f32 = weights.iter().sum();
     let denom = wsum.max(1.0);
+    let mut dlogits = vec![0.0f32; b * classes];
+    // Per-row `(lse, logit·onehot, hit)` triples, filled in parallel.
+    let mut stats = vec![0.0f32; 3 * b];
+    let t = if dlogits.len() >= PAR_MIN_ELEMS { threads } else { 1 };
+    par_rows2(t, &mut dlogits, classes, &mut stats, 3, |row0, dsub, ssub| {
+        let pairs = dsub.chunks_mut(classes).zip(ssub.chunks_mut(3));
+        for (rr, (drow, srow)) in pairs.enumerate() {
+            let r = row0 + rr;
+            let lrow = &logits[r * classes..(r + 1) * classes];
+            let yrow = &onehot[r * classes..(r + 1) * classes];
+            let wr = weights[r];
+
+            let maxv = lrow.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut expsum = 0.0f32;
+            for &v in lrow {
+                expsum += (v - maxv).exp();
+            }
+            srow[0] = maxv + expsum.ln();
+            srow[1] = lrow.iter().zip(yrow).map(|(&l, &y)| l * y).sum();
+            srow[2] = if argmax(lrow) == argmax(yrow) { 1.0 } else { 0.0 };
+
+            let scale = wr / denom;
+            for ((dv, &lv), &yv) in drow.iter_mut().zip(lrow).zip(yrow) {
+                let p = (lv - maxv).exp() / expsum;
+                *dv = scale * (p - yv);
+            }
+        }
+    });
+    // Sequential ascending-row reduction: the same accumulation the naive
+    // kernel performed inline, so totals are thread-count-invariant.
     let mut loss = 0.0f32;
     let mut correct = 0.0f32;
-    let mut dlogits = vec![0.0f32; b * classes];
-    for r in 0..b {
-        let lrow = &logits[r * classes..(r + 1) * classes];
-        let yrow = &onehot[r * classes..(r + 1) * classes];
+    for (r, srow) in stats.chunks(3).enumerate() {
         let wr = weights[r];
-
-        let maxv = lrow.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-        let mut expsum = 0.0f32;
-        for &v in lrow {
-            expsum += (v - maxv).exp();
-        }
-        let lse = maxv + expsum.ln();
-        let dot: f32 = lrow.iter().zip(yrow).map(|(&l, &y)| l * y).sum();
-        loss += wr * (lse - dot);
-
-        let scale = wr / denom;
-        let drow = &mut dlogits[r * classes..(r + 1) * classes];
-        for ((dv, &lv), &yv) in drow.iter_mut().zip(lrow).zip(yrow) {
-            let p = (lv - maxv).exp() / expsum;
-            *dv = scale * (p - yv);
-        }
-
-        let pred = argmax(lrow);
-        let truth = argmax(yrow);
-        if pred == truth {
+        loss += wr * (srow[0] - srow[1]);
+        if srow[2] != 0.0 {
             correct += wr;
         }
     }
@@ -279,7 +582,7 @@ mod tests {
         // [2,3] x [3,2]
         let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
         let b = [7.0, 8.0, 9.0, 10.0, 11.0, 12.0];
-        let c = mm(&a, &b, 2, 3, 2);
+        let c = mm(&a, &b, 2, 3, 2, 1);
         assert_eq!(c, vec![58.0, 64.0, 139.0, 154.0]);
     }
 
@@ -290,30 +593,103 @@ mod tests {
         let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
         let b: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
         // A^T B via explicit transpose + mm.
-        let mut at = vec![0.0f32; k * m];
-        for i in 0..m {
-            for j in 0..k {
-                at[j * m + i] = a[i * k + j];
-            }
-        }
-        let want = mm(&at, &b, k, m, n);
-        let got = mm_at_b(&a, &b, m, k, n);
+        let at = transpose(&a, m, k);
+        let want = mm(&at, &b, k, m, n, 1);
+        let got = mm_at_b(&a, &b, m, k, n, 1);
         for (x, y) in got.iter().zip(&want) {
             assert!((x - y).abs() < 1e-5);
         }
         // A B^T via explicit transpose + mm.
         let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
-        let mut wt = vec![0.0f32; n * k];
-        for i in 0..k {
-            for j in 0..n {
-                wt[j * k + i] = w[i * n + j];
-            }
-        }
-        let want = mm(&b, &wt, m, n, k);
-        let got = mm_a_bt(&b, &w, m, n, k);
+        let wt = transpose(&w, k, n);
+        let want = mm(&b, &wt, m, n, k, 1);
+        let got = mm_a_bt(&b, &w, m, n, k, 1);
         for (x, y) in got.iter().zip(&want) {
             assert!((x - y).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn tiled_gemms_bit_match_the_naive_reference() {
+        // Odd/remainder shapes (not multiples of GEMM_MR/GEMM_NR), shapes
+        // large enough to take the blocked and parallel paths, and 1 vs N
+        // threads: every combination must be *bit*-identical to the naive
+        // reference, not merely close.
+        let mut rng = crate::rng::Pcg32::seeded(42);
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (GEMM_MR - 1, 3, GEMM_NR - 1),
+            (GEMM_MR + 1, 7, GEMM_NR + 1),
+            (2 * GEMM_MR + 3, 31, 2 * GEMM_NR + 5),
+            (37, 129, 65),
+            (64, 80, 48),
+            // Above GEMM_PAR_MIN_MACS: the scoped-thread split engages.
+            (129, 65, 257),
+        ];
+        for &(m, k, n) in &shapes {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let want = mm_ref(&a, &b, m, k, n);
+            for threads in [1, 3] {
+                assert_eq!(gemm_blocked(&a, &b, m, k, n, threads), want, "mm {m}x{k}x{n}");
+                assert_eq!(mm(&a, &b, m, k, n, threads), want, "mm wrap {m}x{k}x{n}");
+            }
+
+            // dW shape: A[m,k] (as X) against G[m,n] (as dY).
+            let g: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
+            let want = mm_at_b_ref(&a, &g, m, k, n);
+            let at = transpose(&a, m, k);
+            for threads in [1, 3] {
+                assert_eq!(gemm_blocked(&at, &g, k, m, n, threads), want, "at_b {m}x{k}x{n}");
+                assert_eq!(mm_at_b(&a, &g, m, k, n, threads), want, "at_b wrap {m}x{k}x{n}");
+            }
+
+            // dX shape: G[m,n] (as dY) against B[k,n] (as W).
+            let want = mm_a_bt_ref(&g, &b, m, n, k);
+            let bt = transpose(&b, k, n);
+            for threads in [1, 3] {
+                assert_eq!(gemm_blocked(&g, &bt, m, n, k, threads), want, "a_bt {m}x{k}x{n}");
+                assert_eq!(mm_a_bt(&g, &b, m, n, k, threads), want, "a_bt wrap {m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_dims_yield_empty_or_zero_results() {
+        assert!(mm(&[], &[], 0, 3, 4, 2).is_empty());
+        assert!(mm(&[0.0; 6], &[], 2, 3, 0, 2).is_empty());
+        assert_eq!(mm(&[], &[], 2, 0, 3, 2), vec![0.0; 6]);
+        assert!(gemm_blocked(&[], &[], 0, 0, 0, 4).is_empty());
+        assert_eq!(mm_at_b(&[], &[], 0, 2, 3, 1), vec![0.0; 6]);
+        assert!(mm_a_bt(&[], &[], 0, 3, 2, 1).is_empty());
+    }
+
+    #[test]
+    fn thread_count_never_changes_bits_for_window_kernels() {
+        // Shapes at/above PAR_MIN_ELEMS so the parallel paths engage.
+        let mut rng = crate::rng::Pcg32::seeded(13);
+        let (b, h, w, c) = (4, 16, 16, 32);
+        let x: Vec<f32> = (0..b * h * w * c).map(|_| rng.normal() as f32).collect();
+        assert_eq!(im2col3x3(&x, b, h, w, c, 5), im2col3x3(&x, b, h, w, c, 1));
+        let g: Vec<f32> = (0..b * h * w * 9 * c).map(|_| rng.normal() as f32).collect();
+        assert_eq!(col2im3x3_add(&g, b, h, w, c, 5), col2im3x3_add(&g, b, h, w, c, 1));
+        let (o5, i5) = maxpool2(&x, b, h, w, c, 5);
+        let (o1, i1) = maxpool2(&x, b, h, w, c, 1);
+        assert_eq!(o5, o1);
+        assert_eq!(i5, i1);
+
+        let (rows, classes) = (256, 128);
+        let logits: Vec<f32> = (0..rows * classes).map(|_| rng.normal() as f32).collect();
+        let mut onehot = vec![0.0f32; rows * classes];
+        for r in 0..rows {
+            onehot[r * classes + (r * 7) % classes] = 1.0;
+        }
+        let weights: Vec<f32> = (0..rows).map(|r| if r % 3 == 0 { 0.0 } else { 1.0 }).collect();
+        let many = softmax_xent(&logits, &onehot, &weights, rows, classes, 5);
+        let one = softmax_xent(&logits, &onehot, &weights, rows, classes, 1);
+        assert_eq!(many.0.to_bits(), one.0.to_bits());
+        assert_eq!(many.1.to_bits(), one.1.to_bits());
+        assert_eq!(many.2, one.2);
     }
 
     #[test]
@@ -322,7 +698,7 @@ mod tests {
         // row is the input pixel itself.
         let (b, h, w, c) = (1, 4, 4, 1);
         let x: Vec<f32> = (0..16).map(|v| v as f32).collect();
-        let cols = im2col3x3(&x, b, h, w, c);
+        let cols = im2col3x3(&x, b, h, w, c, 1);
         for p in 0..16 {
             assert_eq!(cols[p * 9 + 4], x[p]);
         }
@@ -342,8 +718,8 @@ mod tests {
         let (b, h, w, c) = (2, 4, 4, 3);
         let x: Vec<f32> = (0..b * h * w * c).map(|_| rng.normal() as f32).collect();
         let g: Vec<f32> = (0..b * h * w * 9 * c).map(|_| rng.normal() as f32).collect();
-        let cols = im2col3x3(&x, b, h, w, c);
-        let folded = col2im3x3_add(&g, b, h, w, c);
+        let cols = im2col3x3(&x, b, h, w, c, 1);
+        let folded = col2im3x3_add(&g, b, h, w, c, 1);
         let lhs: f64 = cols.iter().zip(&g).map(|(&a, &b)| a as f64 * b as f64).sum();
         let rhs: f64 = x.iter().zip(&folded).map(|(&a, &b)| a as f64 * b as f64).sum();
         assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
@@ -353,7 +729,7 @@ mod tests {
     fn maxpool_picks_window_maxima_and_routes_gradients() {
         let (b, h, w, c) = (1, 2, 2, 1);
         let x = [1.0, 3.0, 2.0, 0.5];
-        let (out, idx) = maxpool2(&x, b, h, w, c);
+        let (out, idx) = maxpool2(&x, b, h, w, c, 1);
         assert_eq!(out, vec![3.0]);
         assert_eq!(idx, vec![1]);
         let dx = maxpool2_bwd(&[2.5], &idx, 4);
@@ -368,7 +744,7 @@ mod tests {
         onehot[3] = 1.0;
         onehot[classes + 7] = 1.0;
         let weights = vec![1.0f32; b];
-        let (loss, _, dlogits) = softmax_xent(&logits, &onehot, &weights, b, classes);
+        let (loss, _, dlogits) = softmax_xent(&logits, &onehot, &weights, b, classes, 1);
         assert!((loss - (10.0f32).ln()).abs() < 1e-5);
         // Gradient sums to zero per row (softmax minus onehot).
         let s: f32 = dlogits[..classes].iter().sum();
@@ -384,9 +760,9 @@ mod tests {
         onehot[1] = 1.0;
         onehot[classes + 2] = 1.0;
         let (loss_pad, correct_pad, d_pad) =
-            softmax_xent(&logits, &onehot, &[1.0, 0.0], b, classes);
+            softmax_xent(&logits, &onehot, &[1.0, 0.0], b, classes, 1);
         let (loss_solo, correct_solo, d_solo) =
-            softmax_xent(&logits[..classes], &onehot[..classes], &[1.0], 1, classes);
+            softmax_xent(&logits[..classes], &onehot[..classes], &[1.0], 1, classes, 1);
         assert!((loss_pad - loss_solo).abs() < 1e-6);
         assert!((correct_pad - correct_solo).abs() < 1e-6);
         for (a, b) in d_pad[..classes].iter().zip(&d_solo) {

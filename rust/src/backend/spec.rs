@@ -38,10 +38,15 @@ pub enum BlockKind {
 /// One cuttable block of SplitCNN-8 (mirrors `model.Block` in Python).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BlockSpec {
+    /// Block name as it appears in the manifest (`conv1`, `fc2`, ...).
     pub name: &'static str,
+    /// Conv-vs-dense shape of the block.
     pub kind: BlockKind,
+    /// Input channels (conv) or input features (dense).
     pub cin: usize,
+    /// Output channels (conv) or output features (dense).
     pub cout: usize,
+    /// Whether a ReLU follows the bias add.
     pub relu: bool,
     /// Spatial side of the *output* feature map (1 for dense blocks).
     pub out_hw: usize,
@@ -112,7 +117,9 @@ impl BlockSpec {
 /// The executable SplitCNN-8 architecture, parameterized by class count.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ModelSpec {
+    /// Output class count (width of the final dense block).
     pub classes: usize,
+    /// The eight cuttable blocks, input to output.
     pub blocks: Vec<BlockSpec>,
 }
 

@@ -25,47 +25,58 @@ pub struct ByteWriter {
 }
 
 impl ByteWriter {
+    /// Empty writer.
     pub fn new() -> ByteWriter {
         ByteWriter::default()
     }
 
+    /// Consume the writer, yielding the encoded bytes.
     pub fn into_bytes(self) -> Vec<u8> {
         self.buf
     }
 
+    /// Append one byte.
     pub fn u8(&mut self, v: u8) {
         self.buf.push(v);
     }
 
+    /// Append a bool as one byte (0/1).
     pub fn bool(&mut self, v: bool) {
         self.u8(v as u8);
     }
 
+    /// Append a `u32`, little-endian.
     pub fn u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    /// Append a `u64`, little-endian.
     pub fn u64(&mut self, v: u64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    /// Append a `usize` as a `u64`.
     pub fn usize(&mut self, v: usize) {
         self.u64(v as u64);
     }
 
+    /// Append an `f32` as its raw bit pattern.
     pub fn f32(&mut self, v: f32) {
         self.u32(v.to_bits());
     }
 
+    /// Append an `f64` as its raw bit pattern.
     pub fn f64(&mut self, v: f64) {
         self.u64(v.to_bits());
     }
 
+    /// Append a length-prefixed UTF-8 string.
     pub fn str(&mut self, s: &str) {
         self.usize(s.len());
         self.buf.extend_from_slice(s.as_bytes());
     }
 
+    /// Append a length-prefixed `f32` slice.
     pub fn f32s(&mut self, vs: &[f32]) {
         self.usize(vs.len());
         for &v in vs {
@@ -73,6 +84,7 @@ impl ByteWriter {
         }
     }
 
+    /// Append a length-prefixed `f64` slice.
     pub fn f64s(&mut self, vs: &[f64]) {
         self.usize(vs.len());
         for &v in vs {
@@ -80,6 +92,7 @@ impl ByteWriter {
         }
     }
 
+    /// Append a length-prefixed `u32` slice.
     pub fn u32s(&mut self, vs: &[u32]) {
         self.usize(vs.len());
         for &v in vs {
@@ -87,6 +100,7 @@ impl ByteWriter {
         }
     }
 
+    /// Append a length-prefixed `usize` slice.
     pub fn usizes(&mut self, vs: &[usize]) {
         self.usize(vs.len());
         for &v in vs {
@@ -94,6 +108,7 @@ impl ByteWriter {
         }
     }
 
+    /// Append a length-prefixed bool slice.
     pub fn bools(&mut self, vs: &[bool]) {
         self.usize(vs.len());
         for &v in vs {
@@ -101,6 +116,7 @@ impl ByteWriter {
         }
     }
 
+    /// Append a presence byte, then the `f64` slice if present.
     pub fn opt_f64s(&mut self, vs: &Option<Vec<f64>>) {
         match vs {
             Some(v) => {
@@ -119,10 +135,12 @@ pub struct ByteReader<'a> {
 }
 
 impl<'a> ByteReader<'a> {
+    /// Reader positioned at the start of `buf`.
     pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
         ByteReader { buf, pos: 0 }
     }
 
+    /// Bytes not yet consumed.
     pub fn remaining(&self) -> usize {
         self.buf.len() - self.pos
     }
@@ -143,10 +161,12 @@ impl<'a> ByteReader<'a> {
         Ok(s)
     }
 
+    /// Read one byte.
     pub fn u8(&mut self) -> crate::Result<u8> {
         Ok(self.take(1)?[0])
     }
 
+    /// Read a bool byte (rejects anything but 0/1).
     pub fn bool(&mut self) -> crate::Result<bool> {
         match self.u8()? {
             0 => Ok(false),
@@ -155,14 +175,17 @@ impl<'a> ByteReader<'a> {
         }
     }
 
+    /// Read a little-endian `u32`.
     pub fn u32(&mut self) -> crate::Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
+    /// Read a little-endian `u64`.
     pub fn u64(&mut self) -> crate::Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    /// Read a `u64` and narrow it to `usize`.
     pub fn usize(&mut self) -> crate::Result<usize> {
         let v = self.u64()?;
         usize::try_from(v).map_err(|_| anyhow::anyhow!("corrupt checkpoint: count {v} overflows"))
@@ -182,14 +205,17 @@ impl<'a> ByteReader<'a> {
         Ok(n)
     }
 
+    /// Read an `f32` from its raw bit pattern.
     pub fn f32(&mut self) -> crate::Result<f32> {
         Ok(f32::from_bits(self.u32()?))
     }
 
+    /// Read an `f64` from its raw bit pattern.
     pub fn f64(&mut self) -> crate::Result<f64> {
         Ok(f64::from_bits(self.u64()?))
     }
 
+    /// Read a length-prefixed UTF-8 string.
     pub fn str(&mut self) -> crate::Result<String> {
         let n = self.len(1)?;
         let bytes = self.take(n)?;
@@ -198,31 +224,37 @@ impl<'a> ByteReader<'a> {
             .to_string())
     }
 
+    /// Read a length-prefixed `f32` vector.
     pub fn f32s(&mut self) -> crate::Result<Vec<f32>> {
         let n = self.len(4)?;
         (0..n).map(|_| self.f32()).collect()
     }
 
+    /// Read a length-prefixed `f64` vector.
     pub fn f64s(&mut self) -> crate::Result<Vec<f64>> {
         let n = self.len(8)?;
         (0..n).map(|_| self.f64()).collect()
     }
 
+    /// Read a length-prefixed `u32` vector.
     pub fn u32s(&mut self) -> crate::Result<Vec<u32>> {
         let n = self.len(4)?;
         (0..n).map(|_| self.u32()).collect()
     }
 
+    /// Read a length-prefixed `usize` vector.
     pub fn usizes(&mut self) -> crate::Result<Vec<usize>> {
         let n = self.len(8)?;
         (0..n).map(|_| self.usize()).collect()
     }
 
+    /// Read a length-prefixed bool vector.
     pub fn bools(&mut self) -> crate::Result<Vec<bool>> {
         let n = self.len(1)?;
         (0..n).map(|_| self.bool()).collect()
     }
 
+    /// Read a presence byte, then the `f64` vector if present.
     pub fn opt_f64s(&mut self) -> crate::Result<Option<Vec<f64>>> {
         Ok(if self.bool()? { Some(self.f64s()?) } else { None })
     }

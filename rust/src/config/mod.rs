@@ -15,24 +15,30 @@ use crate::util::Json;
 /// A closed interval used for uniform sampling of heterogeneous resources.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Range {
+    /// Inclusive lower bound.
     pub lo: f64,
+    /// Inclusive upper bound.
     pub hi: f64,
 }
 
 impl Range {
+    /// `[lo, hi]` (panics when `hi < lo`).
     pub fn new(lo: f64, hi: f64) -> Self {
         assert!(hi >= lo, "bad range [{lo}, {hi}]");
         Range { lo, hi }
     }
 
+    /// Uniform draw from the interval.
     pub fn sample(&self, rng: &mut Pcg32) -> f64 {
         rng.uniform(self.lo, self.hi)
     }
 
+    /// Both bounds multiplied by `k`.
     pub fn scale(&self, k: f64) -> Range {
         Range::new(self.lo * k, self.hi * k)
     }
 
+    /// Interval midpoint.
     pub fn mid(&self) -> f64 {
         0.5 * (self.lo + self.hi)
     }
@@ -106,6 +112,7 @@ impl Server {
 /// Fleet sampling configuration (Table I ranges by default).
 #[derive(Debug, Clone, PartialEq)]
 pub struct FleetConfig {
+    /// Number of simulated edge devices N.
     pub n_devices: usize,
     /// Device compute range in FLOPS.
     pub flops: Range,
@@ -115,6 +122,7 @@ pub struct FleetConfig {
     pub down_bps: Range,
     /// Device<->fed-server rates (paper: same distribution as device<->edge).
     pub fed_up_bps: Range,
+    /// Fed-server -> device downlink range in bit/s.
     pub fed_down_bps: Range,
     /// Per-device memory limit in bytes.
     pub mem_bytes: f64,
@@ -179,6 +187,7 @@ pub enum ModelKind {
 }
 
 impl ModelKind {
+    /// Canonical lowercase name — the inverse of [`ModelKind::parse`].
     pub fn as_str(&self) -> &'static str {
         match self {
             ModelKind::Splitcnn8 => "splitcnn8",
@@ -187,6 +196,7 @@ impl ModelKind {
         }
     }
 
+    /// Parse a model name (splitcnn8|vgg16|resnet18).
     pub fn parse(s: &str) -> crate::Result<ModelKind> {
         Ok(match s {
             "splitcnn8" => ModelKind::Splitcnn8,
@@ -200,6 +210,7 @@ impl ModelKind {
 /// Data distribution across devices.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Partition {
+    /// Independent and identically distributed: shuffled uniform split.
     Iid,
     /// Paper non-IID: sort by label, split into `2N` shards, deal 2 random
     /// shards to each device (paper: 40 shards across 20 devices).
@@ -207,6 +218,7 @@ pub enum Partition {
 }
 
 impl Partition {
+    /// Canonical name — the inverse of [`Partition::parse`].
     pub fn as_str(&self) -> &'static str {
         match self {
             Partition::Iid => "iid",
@@ -214,6 +226,7 @@ impl Partition {
         }
     }
 
+    /// Parse a partition name (iid|non_iid_shards).
     pub fn parse(s: &str) -> crate::Result<Partition> {
         Ok(match s {
             "iid" => Partition::Iid,
@@ -243,6 +256,7 @@ pub struct TrainConfig {
     pub classes: usize,
     /// Synthetic dataset size (train / test).
     pub train_samples: usize,
+    /// Synthetic test-set size.
     pub test_samples: usize,
 }
 
@@ -268,6 +282,7 @@ pub enum StrategyKind {
 }
 
 impl StrategyKind {
+    /// Canonical lowercase name — the inverse of [`StrategyKind::parse`].
     pub fn as_str(&self) -> &'static str {
         match self {
             StrategyKind::Hasfl => "hasfl",
@@ -281,6 +296,7 @@ impl StrategyKind {
         }
     }
 
+    /// Parse a strategy name as accepted by `--strategy`.
     pub fn parse(s: &str) -> crate::Result<StrategyKind> {
         Ok(match s {
             "hasfl" => StrategyKind::Hasfl,
@@ -299,15 +315,23 @@ impl StrategyKind {
 /// Top-level experiment configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Config {
+    /// Root seed every deterministic stream derives from.
     pub seed: u64,
+    /// Fleet sampling ranges.
     pub fleet: FleetConfig,
+    /// Edge/fed server resources.
     pub server: Server,
+    /// Training hyper-parameters.
     pub train: TrainConfig,
+    /// Model the experiment drives.
     pub model: ModelKind,
+    /// Data distribution across devices.
     pub partition: Partition,
+    /// BS/MS control strategy.
     pub strategy: StrategyKind,
-    /// Fixed decisions used when `strategy` is one of the fixed variants.
+    /// Fixed batch size used when `strategy` is one of the fixed variants.
     pub fixed_batch: u32,
+    /// Fixed cut layer used when `strategy` is one of the fixed variants.
     pub fixed_cut: usize,
     /// Engine-pool width: lanes that execute devices concurrently.
     /// 0 = auto (min of fleet size, host parallelism, and 8). Numerics are
@@ -330,6 +354,7 @@ pub struct Config {
 }
 
 impl Config {
+    /// Serialize to the JSON form accepted by [`Config::from_json`].
     pub fn to_json(&self) -> Json {
         let mut fleet = Json::obj();
         fleet
@@ -378,6 +403,7 @@ impl Config {
         root
     }
 
+    /// Decode a config, tolerating fields added after the file was saved.
     pub fn from_json(j: &Json) -> crate::Result<Config> {
         // Every decode error names the offending JSON path ('fleet.flops',
         // 'train.lr', ...): the serve daemon surfaces these verbatim as
@@ -479,11 +505,13 @@ impl Config {
         })
     }
 
+    /// Read and decode a JSON config file.
     pub fn load(path: &std::path::Path) -> crate::Result<Config> {
         let text = std::fs::read_to_string(path)?;
         Config::from_json(&Json::parse(&text)?)
     }
 
+    /// Write the config as JSON to `path`.
     pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
         std::fs::write(path, self.to_json().dump())?;
         Ok(())

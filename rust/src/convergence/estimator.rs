@@ -18,13 +18,21 @@ use crate::model::Tensor;
 /// estimated Assumption-2 constants as the uninterrupted run).
 #[derive(Debug, Clone, PartialEq)]
 pub struct EstimatorState {
+    /// Number of per-layer blocks tracked.
     pub n_blocks: usize,
+    /// EMA smoothing factor.
     pub alpha: f64,
+    /// Per-block gradient second moments (G_k^2).
     pub gsq: Vec<f64>,
+    /// Per-block gradient variances (sigma_k^2).
     pub sigma_sq: Vec<f64>,
+    /// Secant smoothness estimate (0 before enough data).
     pub beta: f64,
+    /// Observations folded in so far.
     pub rounds_seen: usize,
+    /// Previous flattened gradient, for the secant estimate.
     pub prev_flat_grad: Option<Vec<f64>>,
+    /// Previous flattened parameters, for the secant estimate.
     pub prev_flat_param: Option<Vec<f64>>,
 }
 
@@ -43,6 +51,7 @@ pub struct GradStatsEstimator {
 }
 
 impl GradStatsEstimator {
+    /// Fresh estimator over `n_blocks` per-layer blocks.
     pub fn new(n_blocks: usize) -> Self {
         GradStatsEstimator {
             n_blocks,
@@ -143,10 +152,12 @@ impl GradStatsEstimator {
         self.prev_flat_param = Some(flat_param);
     }
 
+    /// Estimated per-block gradient second moments (G_k^2).
     pub fn gsq(&self) -> &[f64] {
         &self.gsq
     }
 
+    /// Estimated per-block gradient variances (sigma_k^2).
     pub fn sigma_sq(&self) -> &[f64] {
         &self.sigma_sq
     }
@@ -160,6 +171,7 @@ impl GradStatsEstimator {
         }
     }
 
+    /// Observations folded in so far.
     pub fn rounds_seen(&self) -> usize {
         self.rounds_seen
     }

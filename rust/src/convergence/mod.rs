@@ -64,6 +64,7 @@ impl BoundParams {
         self.gsq[..j].iter().sum()
     }
 
+    /// Number of per-layer blocks in the bound.
     pub fn n_layers(&self) -> usize {
         self.sigma_sq.len()
     }

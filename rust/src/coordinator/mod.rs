@@ -5,9 +5,9 @@
 //! [`Trainer`] owns the per-round primitives; the driving loop lives in
 //! [`crate::experiment::Session`], which steps the trainer one round at a
 //! time. Two execution modes with identical numerics:
-//! - [`Trainer::run_round`] — sequential round (single caller thread,
+//! - `Trainer::run_round` — sequential round (single caller thread,
 //!   engine lane 0).
-//! - [`Trainer::run_round_concurrent`] — actor round: a bounded pool of
+//! - `Trainer::run_round_concurrent` — actor round: a bounded pool of
 //!   at most `pool_width` worker threads pulls device work off a shared
 //!   queue (a 1000-device round costs `pool_width` threads, not 1000),
 //!   each device routed to engine lane `i % pool_width` so device legs
@@ -683,6 +683,7 @@ impl Trainer {
         Ok(PostRound { latency, aggregated, reoptimized: aggregated })
     }
 
+    /// Number of devices currently in the fleet roster.
     pub fn n_devices(&self) -> usize {
         self.devices.len()
     }

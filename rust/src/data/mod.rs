@@ -16,28 +16,37 @@ pub use sampler::BatchSampler;
 
 use crate::rng::Pcg32;
 
+/// Image side length (CIFAR-shaped 32x32 inputs).
 pub const IMG: usize = 32;
+/// Input channels (RGB).
 pub const CH: usize = 3;
+/// Floats per image (`IMG * IMG * CH`).
 pub const PIXELS: usize = IMG * IMG * CH;
 const LATENT: usize = 64;
 
 /// A dataset of images (row-major `[n, 32, 32, 3]`) with integer labels.
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// Row-major `[n, 32, 32, 3]` pixel data.
     pub images: Vec<f32>,
+    /// Integer class labels, one per image.
     pub labels: Vec<u16>,
+    /// Number of distinct classes.
     pub n_classes: usize,
 }
 
 impl Dataset {
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.labels.len()
     }
 
+    /// True when the dataset has no samples.
     pub fn is_empty(&self) -> bool {
         self.labels.is_empty()
     }
 
+    /// Pixel slice of sample `i`.
     pub fn image(&self, i: usize) -> &[f32] {
         &self.images[i * PIXELS..(i + 1) * PIXELS]
     }

@@ -16,8 +16,11 @@ pub struct BatchSampler {
 /// labels `[b,C]`, per-row weights `[b]` (1/0 after bucket padding).
 #[derive(Debug, Clone)]
 pub struct HostBatch {
+    /// Images, row-major `[b, 32, 32, 3]` (zero rows beyond `true_batch`).
     pub x: Vec<f32>,
+    /// One-hot labels `[b, C]`.
     pub onehot: Vec<f32>,
+    /// Per-row loss weights `[b]`: 1 for real rows, 0 for padding.
     pub weights: Vec<f32>,
     /// True (unpadded) batch size.
     pub true_batch: u32,
@@ -26,11 +29,13 @@ pub struct HostBatch {
 }
 
 impl BatchSampler {
+    /// Sampler over a device's partition `indices` with its own RNG stream.
     pub fn new(indices: Vec<usize>, rng: Pcg32) -> BatchSampler {
         assert!(!indices.is_empty(), "device has an empty partition");
         BatchSampler { indices, rng }
     }
 
+    /// Size of the device's data partition.
     pub fn partition_len(&self) -> usize {
         self.indices.len()
     }

@@ -84,6 +84,7 @@ pub struct EventBridge {
 }
 
 impl EventBridge {
+    /// Wrap an event sink as an observer.
     pub fn new(sink: EventSink) -> EventBridge {
         EventBridge { sink }
     }

@@ -77,6 +77,7 @@ pub enum Preset {
 }
 
 impl Preset {
+    /// Canonical name — the inverse of [`Preset::parse`].
     pub fn as_str(&self) -> &'static str {
         match self {
             Preset::Small => "small",
@@ -85,6 +86,7 @@ impl Preset {
         }
     }
 
+    /// Parse a preset name (small|figure|table1).
     pub fn parse(s: &str) -> crate::Result<Preset> {
         Ok(match s {
             "small" => Preset::Small,

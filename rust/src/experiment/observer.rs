@@ -19,12 +19,16 @@ use super::RoundReport;
 /// booked round). `on_complete` fires once from
 /// [`super::Session::finish`].
 pub trait Observer {
+    /// A training round completed (fires every round).
     fn on_round(&mut self, _report: &RoundReport) {}
     /// The round's fleet snapshot; fires only when the session runs under
     /// a dynamic scenario.
     fn on_fleet(&mut self, _report: &RoundReport, _snapshot: &FleetSnapshot) {}
+    /// The round ended in a client-model aggregation event.
     fn on_aggregation(&mut self, _report: &RoundReport) {}
+    /// Fresh BS/MS decisions were solved and took effect.
     fn on_reoptimize(&mut self, _report: &RoundReport, _decisions: &Decisions) {}
+    /// The round included a test-set evaluation.
     fn on_eval(&mut self, _report: &RoundReport, _test_acc: f64) {}
     /// Ask the session to checkpoint the just-completed round: return the
     /// file to write. The session captures the complete training state and
@@ -62,10 +66,12 @@ pub struct CsvHistory {
 }
 
 impl CsvHistory {
+    /// Write the history CSV to `path` on completion.
     pub fn new(path: impl Into<PathBuf>) -> CsvHistory {
         CsvHistory { path: path.into() }
     }
 
+    /// Destination path of the CSV.
     pub fn path(&self) -> &std::path::Path {
         &self.path
     }
@@ -91,10 +97,12 @@ pub struct FleetTraceCsv {
 }
 
 impl FleetTraceCsv {
+    /// Write the fleet-trace CSV to `path` on completion.
     pub fn new(path: impl Into<PathBuf>) -> FleetTraceCsv {
         FleetTraceCsv { path: path.into(), trace: FleetTrace::default() }
     }
 
+    /// Trace collected so far.
     pub fn trace(&self) -> &FleetTrace {
         &self.trace
     }
@@ -155,6 +163,8 @@ pub struct EarlyStop {
 }
 
 impl EarlyStop {
+    /// Stop once accuracy improves by less than `threshold` for `window`
+    /// consecutive evaluation rounds.
     pub fn new(threshold: f64, window: usize) -> EarlyStop {
         EarlyStop { threshold, window, running_max: None, stagnant: 0, triggered_at: None }
     }

@@ -68,6 +68,7 @@ pub enum AttemptFault {
 /// is independent of participation.
 #[derive(Debug, Clone)]
 pub struct RoundPlan {
+    /// Per-device, per-attempt fault outcomes, indexed `[device][attempt]`.
     pub attempts: Vec<Vec<AttemptFault>>,
 }
 
@@ -77,6 +78,8 @@ pub struct RoundPlan {
 /// (the first executed round is round 1, matching `Trainer::rounds_run`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct FaultSpec {
+    /// Human-readable spec name (a preset name or `custom`), carried into
+    /// checkpoints and logs.
     pub name: String,
     /// Devices that never participate in any round — the clean baseline
     /// the survivor-equivalence tests compare against. Excluded at
@@ -182,6 +185,7 @@ impl FaultSpec {
         self.blackout.contains(&device)
     }
 
+    /// Serialize to the JSON form accepted by [`FaultSpec::from_json`].
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("name", Json::Str(self.name.clone()))
@@ -241,11 +245,13 @@ impl FaultSpec {
         })
     }
 
+    /// Load a spec from a JSON file (see [`FaultSpec::from_json`]).
     pub fn load(path: &std::path::Path) -> crate::Result<FaultSpec> {
         let text = std::fs::read_to_string(path)?;
         FaultSpec::from_json(&Json::parse(&text)?)
     }
 
+    /// Write the spec to `path` as JSON — the inverse of [`FaultSpec::load`].
     pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
         std::fs::write(path, self.to_json().dump())?;
         Ok(())
@@ -266,8 +272,10 @@ pub enum FaultPreset {
 }
 
 impl FaultPreset {
+    /// Every preset, for CLI help text and exhaustive tests.
     pub const ALL: [FaultPreset; 2] = [FaultPreset::Flaky, FaultPreset::Chaos];
 
+    /// Canonical lowercase name — the inverse of [`FaultPreset::parse`].
     pub fn as_str(&self) -> &'static str {
         match self {
             FaultPreset::Flaky => "flaky",
@@ -275,6 +283,7 @@ impl FaultPreset {
         }
     }
 
+    /// Parse a preset name as accepted by `--faults` (flaky|chaos).
     pub fn parse(s: &str) -> crate::Result<FaultPreset> {
         Ok(match s {
             "flaky" => FaultPreset::Flaky,
@@ -283,6 +292,7 @@ impl FaultPreset {
         })
     }
 
+    /// Materialize the preset's concrete [`FaultSpec`].
     pub fn spec(&self) -> FaultSpec {
         let name = self.as_str().to_string();
         match self {
@@ -328,6 +338,7 @@ pub struct FaultState {
 }
 
 impl FaultState {
+    /// Fresh state for a roster of `n_devices`: no strikes, no quarantine.
     pub fn new(n_devices: usize) -> FaultState {
         FaultState { strikes: vec![0; n_devices], quarantined: vec![false; n_devices] }
     }
@@ -366,10 +377,12 @@ pub struct FaultInjector {
 }
 
 impl FaultInjector {
+    /// Bind a spec to the experiment seed all draws derive from.
     pub fn new(spec: FaultSpec, seed: u64) -> FaultInjector {
         FaultInjector { spec, seed }
     }
 
+    /// The spec this injector draws from.
     pub fn spec(&self) -> &FaultSpec {
         &self.spec
     }

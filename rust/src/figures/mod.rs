@@ -23,12 +23,15 @@ use crate::rng::Pcg32;
 /// Options shared by all generators.
 #[derive(Debug, Clone)]
 pub struct FigureOpts {
+    /// Directory CSVs are written into.
     pub out_dir: PathBuf,
+    /// Compiled-artifact cache directory for the engine.
     pub artifacts: PathBuf,
     /// Override the real-training round budget (None = preset default).
     pub rounds: Option<usize>,
     /// Override the fleet size for real-training figures.
     pub devices: Option<usize>,
+    /// Root seed for every figure's deterministic streams.
     pub seed: u64,
 }
 
@@ -68,6 +71,7 @@ fn strategy_tag(kind: StrategyKind) -> &'static str {
     kind.as_str()
 }
 
+/// The paper's benchmark suite: HASFL plus its four ablations.
 pub const BENCHMARKS: [StrategyKind; 5] = [
     StrategyKind::Hasfl,
     StrategyKind::RbsHams,

@@ -18,10 +18,12 @@ pub struct Decisions {
 }
 
 impl Decisions {
+    /// The same `(batch, cut)` for all `n` devices.
     pub fn uniform(n: usize, batch: u32, cut: usize) -> Decisions {
         Decisions { batch: vec![batch; n], cut: vec![cut; n] }
     }
 
+    /// Number of devices the decisions cover.
     pub fn n(&self) -> usize {
         debug_assert_eq!(self.batch.len(), self.cut.len());
         self.batch.len()
@@ -58,6 +60,7 @@ pub struct DeviceLatency {
 /// Full latency breakdown of one round (+ aggregation stage).
 #[derive(Debug, Clone)]
 pub struct RoundLatency {
+    /// Per-device client-side breakdowns.
     pub per_device: Vec<DeviceLatency>,
     /// T_s^F — server-side forward (Eqn 30).
     pub server_fwd: f64,

@@ -31,6 +31,8 @@
 //! adoption (DESIGN.md §12). See `DESIGN.md` (repo root) for the
 //! paper-to-module map and the experiment index (§6).
 
+#![warn(missing_docs)]
+
 pub mod aggregation;
 pub mod backend;
 pub mod checkpoint;

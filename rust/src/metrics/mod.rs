@@ -17,11 +17,17 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
 /// in whatever unit the samples were.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LatencySummary {
+    /// Median (nearest-rank 50th percentile).
     pub p50: f64,
+    /// Nearest-rank 95th percentile.
     pub p95: f64,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Sample count.
     pub n: usize,
 }
 
@@ -80,6 +86,7 @@ pub const CONVERGENCE_WINDOW: usize = 5;
 /// One training-round record.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Record {
+    /// Training round index (0-based).
     pub round: usize,
     /// Simulated wall-clock (seconds) accumulated from the latency model.
     pub sim_time: f64,
@@ -92,14 +99,17 @@ pub struct Record {
 /// Run history + derived statistics.
 #[derive(Debug, Clone, Default)]
 pub struct History {
+    /// Per-round records in round order.
     pub records: Vec<Record>,
 }
 
 impl History {
+    /// Append a round record.
     pub fn push(&mut self, rec: Record) {
         self.records.push(rec);
     }
 
+    /// Loss of the most recent round, if any.
     pub fn last_loss(&self) -> Option<f64> {
         self.records.last().map(|r| r.loss)
     }
@@ -112,6 +122,7 @@ impl History {
             .collect()
     }
 
+    /// Best test accuracy seen so far, if any evaluation ran.
     pub fn best_acc(&self) -> Option<f64> {
         self.eval_points()
             .iter()
@@ -121,7 +132,7 @@ impl History {
 
     /// The paper's convergence rule: "the test accuracy increases by less
     /// than `threshold` (0.02%) across `window` (five) consecutive
-    /// [evaluation] rounds". Returns (round, sim_time, accuracy) of the
+    /// \[evaluation\] rounds". Returns (round, sim_time, accuracy) of the
     /// convergence point, if reached.
     pub fn converged(&self, threshold: f64, window: usize) -> Option<(usize, f64, f64)> {
         let evals = self.eval_points();
@@ -188,12 +199,15 @@ impl History {
 /// the latency-vs-drift record that figures and benches plot.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FleetRound {
+    /// Training round index (0-based).
     pub round: usize,
     /// Fleet members online this round.
     pub n_active: usize,
     /// Members that failed mid-round (completed no work).
     pub n_dropped: usize,
+    /// Devices that joined the fleet at this round boundary.
     pub n_joined: usize,
+    /// Devices that left the fleet at this round boundary.
     pub n_left: usize,
     /// Mean relative fleet deviation since the last BS/MS re-solve.
     pub drift: f64,
@@ -204,6 +218,7 @@ pub struct FleetRound {
     /// Aggregation latency charged this round (0 outside aggregation
     /// events, Eqn 39).
     pub t_agg: f64,
+    /// Simulated wall-clock (seconds) at the end of the round.
     pub sim_time: f64,
 }
 
@@ -211,18 +226,22 @@ pub struct FleetRound {
 /// is bit-exact, which is what the scenario determinism suite asserts.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct FleetTrace {
+    /// Per-round records in round order.
     pub rounds: Vec<FleetRound>,
 }
 
 impl FleetTrace {
+    /// Append a round record.
     pub fn push(&mut self, r: FleetRound) {
         self.rounds.push(r);
     }
 
+    /// Number of recorded rounds.
     pub fn len(&self) -> usize {
         self.rounds.len()
     }
 
+    /// True when no rounds have been recorded.
     pub fn is_empty(&self) -> bool {
         self.rounds.is_empty()
     }
@@ -286,19 +305,23 @@ pub struct CsvTable {
 }
 
 impl CsvTable {
+    /// Empty table with the given column headers.
     pub fn new(header: &[&str]) -> CsvTable {
         CsvTable { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
     }
 
+    /// Append a row (must match the header width).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.header.len());
         self.rows.push(cells.to_vec());
     }
 
+    /// Append a numeric row, formatted to six decimals.
     pub fn rowf(&mut self, cells: &[f64]) {
         self.row(&cells.iter().map(|v| format!("{v:.6}")).collect::<Vec<_>>());
     }
 
+    /// Write header + rows as CSV, creating parent directories.
     pub fn write(&self, path: &std::path::Path) -> crate::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -311,6 +334,7 @@ impl CsvTable {
         Ok(())
     }
 
+    /// Number of data rows appended so far.
     pub fn n_rows(&self) -> usize {
         self.rows.len()
     }
@@ -322,7 +346,9 @@ impl CsvTable {
 pub struct BenchDelta {
     /// Dotted path of the leaf, e.g. `latency.p95_ms`.
     pub path: String,
+    /// Value in the base (older) document.
     pub base: f64,
+    /// Value in the head (newer) document.
     pub head: f64,
     /// Relative change in percent; 0 when the base is 0 (no meaningful
     /// relative measure).

@@ -10,12 +10,16 @@ use crate::util::Json;
 /// Tensor argument/output spec.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSpec {
+    /// Argument/output name as exported by the AOT lowering.
     pub name: String,
+    /// Row-major tensor shape.
     pub shape: Vec<usize>,
+    /// Element dtype name (always `f32` for SplitCNN-8).
     pub dtype: String,
 }
 
 impl TensorSpec {
+    /// Element count of the tensor (scalars count as 1).
     pub fn numel(&self) -> usize {
         self.shape.iter().product::<usize>().max(1)
     }
@@ -32,14 +36,21 @@ impl TensorSpec {
 /// One AOT artifact (a shape-specialised HLO module).
 #[derive(Debug, Clone)]
 pub struct ArtifactEntry {
+    /// Canonical artifact name (see [`Manifest::split_name`]).
     pub name: String,
+    /// HLO file path relative to the manifest directory.
     pub path: String,
+    /// Input tensor specs, in call order.
     pub args: Vec<TensorSpec>,
+    /// Output tensor specs, in return order.
     pub outputs: Vec<TensorSpec>,
+    /// SHA-256 of the HLO text, for artifact integrity checks.
     pub sha256: String,
     /// Which model function this artifact implements (e.g. "client_fwd").
     pub func: String,
+    /// Split point the artifact was specialised for (0 for monolithic).
     pub cut: usize,
+    /// Batch bucket the artifact was specialised for.
     pub bucket: u32,
 }
 
@@ -71,7 +82,9 @@ impl ArtifactEntry {
 /// Per-block cost row (exported by `model.block_table`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct BlockRow {
+    /// Block name (e.g. `conv1`).
     pub name: String,
+    /// Block kind (`conv` or `dense`).
     pub kind: String,
     /// Forward FLOPs per sample added by this block (rho_j increment).
     pub fwd_flops: f64,
@@ -81,6 +94,7 @@ pub struct BlockRow {
     pub act_bytes: f64,
     /// Parameter bytes of this block (delta_j increment).
     pub param_bytes: f64,
+    /// Trainable parameter count of this block.
     pub n_params: usize,
 }
 
@@ -101,23 +115,37 @@ impl BlockRow {
 /// Parameter tensor shapes for one block.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParamShape {
+    /// Weight tensor shape.
     pub w: Vec<usize>,
+    /// Bias tensor shape.
     pub b: Vec<usize>,
 }
 
 /// The full manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Model name (`splitcnn8`).
     pub model: String,
+    /// Classifier output width.
     pub num_classes: usize,
+    /// Input image side length in pixels.
     pub img: usize,
+    /// Input channel count.
     pub in_ch: usize,
+    /// Number of splittable blocks.
     pub num_blocks: usize,
+    /// Cut points the exporter specialised artifacts for.
     pub valid_cuts: Vec<usize>,
+    /// Batch buckets the exporter specialised artifacts for.
     pub buckets: Vec<u32>,
+    /// Per-block parameter tensor shapes, in block order.
     pub param_shapes: Vec<ParamShape>,
+    /// Per-block cost rows feeding the latency/convergence models.
     pub block_table: Vec<BlockRow>,
+    /// Every exported artifact.
     pub artifacts: Vec<ArtifactEntry>,
+    /// Directory the manifest was loaded from (artifact paths are
+    /// relative to it).
     pub dir: PathBuf,
     pub(crate) index: HashMap<String, usize>,
 }
@@ -170,6 +198,7 @@ impl Manifest {
         Ok(m)
     }
 
+    /// Rebuild the name -> artifact index after mutating `artifacts`.
     pub fn reindex(&mut self) {
         self.index = self
             .artifacts
@@ -179,10 +208,12 @@ impl Manifest {
             .collect();
     }
 
+    /// Look up an artifact by canonical name.
     pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
         self.index.get(name).map(|&i| &self.artifacts[i])
     }
 
+    /// Absolute path of a named artifact's HLO file, if present.
     pub fn artifact_path(&self, name: &str) -> Option<PathBuf> {
         self.get(name).map(|a| self.dir.join(&a.path))
     }

@@ -7,16 +7,20 @@ use crate::rng::Pcg32;
 /// A host tensor (f32, row-major).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Row-major tensor shape.
     pub shape: Vec<usize>,
+    /// Flat element storage, `shape.iter().product()` long.
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// All-zero tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Tensor {
         let n = shape.iter().product::<usize>().max(1);
         Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
     }
 
+    /// Element count.
     pub fn numel(&self) -> usize {
         self.data.len()
     }
@@ -34,6 +38,7 @@ impl Tensor {
         Tensor { shape: shape.to_vec(), data }
     }
 
+    /// Squared L2 norm, accumulated in f64.
     pub fn l2_sq(&self) -> f64 {
         self.data.iter().map(|&v| (v as f64) * (v as f64)).sum()
     }
@@ -42,6 +47,7 @@ impl Tensor {
 /// Full model parameters: 2 tensors per block `[w1, b1, w2, b2, ...]`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Params {
+    /// Flat tensor list, `[w1, b1, w2, b2, ...]` in block order.
     pub tensors: Vec<Tensor>,
     /// Blocks in the model (tensors.len() == 2 * n_blocks).
     pub n_blocks: usize,
@@ -63,6 +69,7 @@ impl Params {
         Params { tensors, n_blocks: manifest.param_shapes.len(), version: 0 }
     }
 
+    /// Same shapes, all elements zero, version reset.
     pub fn zeros_like(&self) -> Params {
         Params {
             tensors: self.tensors.iter().map(|t| Tensor::zeros(&t.shape)).collect(),
@@ -114,6 +121,7 @@ impl Params {
             .collect()
     }
 
+    /// Total trainable element count across all tensors.
     pub fn total_numel(&self) -> usize {
         self.tensors.iter().map(|t| t.numel()).sum()
     }

@@ -13,6 +13,7 @@ use super::manifest::Manifest;
 /// Cost of one cuttable layer (per data sample where applicable).
 #[derive(Debug, Clone, PartialEq)]
 pub struct LayerCost {
+    /// Layer name (e.g. `conv1`).
     pub name: String,
     /// Forward FLOPs per sample added by this layer.
     pub fwd_flops: f64,
@@ -23,13 +24,16 @@ pub struct LayerCost {
     pub act_bytes: f64,
     /// Parameter bytes of this layer.
     pub param_bytes: f64,
+    /// Trainable parameter count of this layer.
     pub n_params: usize,
 }
 
 /// A model as seen by the latency/convergence machinery.
 #[derive(Debug, Clone)]
 pub struct ModelProfile {
+    /// Profile name (`splitcnn8`, `vgg16`, `resnet18`).
     pub name: String,
+    /// Per-layer cost rows, in execution order.
     pub layers: Vec<LayerCost>,
     /// Cut layers the system may choose (1-based; cut c => client keeps 1..=c).
     pub valid_cuts: Vec<usize>,
@@ -41,6 +45,7 @@ pub struct ModelProfile {
 }
 
 impl ModelProfile {
+    /// Build a profile and precompute its cumulative cost tables.
     pub fn new(name: &str, layers: Vec<LayerCost>, valid_cuts: Vec<usize>) -> Self {
         let l = layers.len();
         assert!(!layers.is_empty());
@@ -80,6 +85,7 @@ impl ModelProfile {
         self.varpi_cum[j]
     }
 
+    /// varpi_L — full backward cost per sample.
     pub fn varpi_total(&self) -> f64 {
         *self.varpi_cum.last().unwrap()
     }
@@ -100,6 +106,7 @@ impl ModelProfile {
         self.delta_cum[j]
     }
 
+    /// delta_L — full model bytes.
     pub fn delta_total(&self) -> f64 {
         *self.delta_cum.last().unwrap()
     }

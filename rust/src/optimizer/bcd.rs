@@ -9,6 +9,7 @@ use crate::rng::Pcg32;
 /// Result of the joint optimization.
 #[derive(Debug, Clone)]
 pub struct JointSolution {
+    /// Optimized per-device batch sizes and the shared cut layer.
     pub decisions: Decisions,
     /// Final Θ′ value (estimated seconds to epsilon-convergence).
     pub theta: f64,

@@ -101,6 +101,7 @@ impl BsSubproblem {
         BsSubproblem { a, b_const, c, d, kappa }
     }
 
+    /// Number of devices in the subproblem.
     pub fn n(&self) -> usize {
         self.c.len()
     }

@@ -19,9 +19,13 @@ use crate::model::ModelProfile;
 
 /// Everything the optimizers need to evaluate the Θ′ objective exactly.
 pub struct OptContext<'a> {
+    /// Per-layer cost profile of the model being split.
     pub profile: &'a ModelProfile,
+    /// Sampled device fleet.
     pub devices: &'a [Device],
+    /// Edge-server resources.
     pub server: &'a Server,
+    /// Convergence-bound parameters (Theorem 1 constants).
     pub bound: &'a BoundParams,
     /// Client-side aggregation interval I.
     pub interval: usize,
@@ -32,6 +36,7 @@ pub struct OptContext<'a> {
 }
 
 impl<'a> OptContext<'a> {
+    /// Number of devices in the fleet.
     pub fn n(&self) -> usize {
         self.devices.len()
     }

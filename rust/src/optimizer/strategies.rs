@@ -11,7 +11,9 @@ use crate::rng::Pcg32;
 /// Extra inputs for strategies with fixed decisions.
 #[derive(Debug, Clone, Copy)]
 pub struct StrategyInputs {
+    /// Batch size used by the fixed-batch strategies.
     pub fixed_batch: u32,
+    /// Cut layer used by the fixed-cut strategies.
     pub fixed_cut: usize,
 }
 

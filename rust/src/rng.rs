@@ -48,6 +48,7 @@ impl Pcg32 {
         Pcg32::new(seed, stream)
     }
 
+    /// Next raw 32-bit draw (the PCG-XSH-RR output function).
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
         self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
@@ -56,6 +57,7 @@ impl Pcg32 {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next raw 64-bit draw (two 32-bit draws, high word first).
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64
     }

@@ -12,15 +12,19 @@ use crate::model::Manifest;
 /// A host-side tensor (f32, row-major) crossing the engine boundary.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HostTensor {
+    /// Row-major tensor shape (empty for scalars).
     pub shape: Vec<usize>,
+    /// Flat element storage.
     pub data: Vec<f32>,
 }
 
 impl HostTensor {
+    /// A rank-0 tensor holding one value.
     pub fn scalar(v: f32) -> HostTensor {
         HostTensor { shape: vec![], data: vec![v] }
     }
 
+    /// Element count of the declared shape (scalars count as 1).
     pub fn numel(&self) -> usize {
         self.shape.iter().product::<usize>().max(1)
     }
@@ -34,7 +38,10 @@ impl HostTensor {
 /// (invalidation rules: DESIGN.md §8).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct BufKey {
+    /// Parameter-set id (device index or a reserved shared-set id).
     pub set: u64,
+    /// Tensor slot within the set (global tensor index, or
+    /// [`BufKey::SLOT_X`] for the input batch).
     pub slot: u32,
 }
 
@@ -80,6 +87,7 @@ pub enum ExecInput {
 }
 
 impl ExecInput {
+    /// A versioned, buffer-cacheable input.
     pub fn cached(key: BufKey, version: u64, tensor: Arc<HostTensor>) -> ExecInput {
         ExecInput::Cached { key, version, tensor }
     }
@@ -97,7 +105,9 @@ impl ExecInput {
 /// [`EngineStats::merge`] folds lanes into pool-wide totals.
 #[derive(Debug, Clone, Default)]
 pub struct EngineStats {
+    /// Executable invocations.
     pub executions: u64,
+    /// Artifact compilations (cold executable-cache misses).
     pub compiles: u64,
     /// Seconds spent inside PJRT execute calls.
     pub exec_secs: f64,
@@ -202,10 +212,12 @@ impl Engine {
         })
     }
 
+    /// The manifest this engine serves artifacts from.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// Execution statistics accumulated so far.
     pub fn stats(&self) -> &EngineStats {
         &self.stats
     }
@@ -346,6 +358,7 @@ impl Engine {
         Ok(outputs)
     }
 
+    /// Number of compiled executables in the cache.
     pub fn cached_len(&self) -> usize {
         self.cache.len()
     }

@@ -24,14 +24,26 @@ use crate::model::Manifest;
 #[derive(Debug, Clone)]
 pub enum EngineSpec {
     /// PJRT over an AOT artifacts directory.
-    Pjrt { artifacts_dir: PathBuf },
+    Pjrt {
+        /// Directory holding the AOT-compiled artifacts + manifest.json.
+        artifacts_dir: PathBuf,
+    },
     /// Pure-Rust engine for `classes`-way SplitCNN-8.
-    Native { classes: usize },
+    Native {
+        /// Number of classifier classes the synthesized model serves.
+        classes: usize,
+        /// Per-lane worker-thread budget for the blocked native kernels
+        /// (DESIGN.md §14). `0` means auto: resolved at pool spawn to
+        /// `max(1, cores / width)` so pooled lanes never oversubscribe
+        /// the machine. Bit-neutral — thread count never changes output.
+        threads: usize,
+    },
 }
 
 impl EngineSpec {
     /// Resolve a backend kind into a lane spec (`Auto` resolves against
-    /// the artifacts directory).
+    /// the artifacts directory). Native specs start with the auto thread
+    /// budget; [`EngineHandle::spawn_backend`] pins it per lane.
     pub fn resolve(
         kind: BackendKind,
         artifacts_dir: &std::path::Path,
@@ -39,7 +51,7 @@ impl EngineSpec {
     ) -> EngineSpec {
         match kind.resolve(artifacts_dir) {
             BackendKind::Pjrt => EngineSpec::Pjrt { artifacts_dir: artifacts_dir.to_path_buf() },
-            _ => EngineSpec::Native { classes },
+            _ => EngineSpec::Native { classes, threads: 0 },
         }
     }
 
@@ -57,7 +69,31 @@ impl EngineSpec {
     pub fn manifest(&self) -> crate::Result<Manifest> {
         match self {
             EngineSpec::Pjrt { artifacts_dir } => Manifest::load(artifacts_dir),
-            EngineSpec::Native { classes } => Ok(ModelSpec::splitcnn8(*classes).manifest()),
+            EngineSpec::Native { classes, .. } => Ok(ModelSpec::splitcnn8(*classes).manifest()),
+        }
+    }
+
+    /// Pin the per-lane kernel thread budget for a pool of `width` lanes.
+    /// A native spec with `threads == 0` (auto) gets `max(1, cores /
+    /// width)` so the lanes of a pool collectively never oversubscribe
+    /// the machine; the `HASFL_NATIVE_THREADS` environment variable
+    /// overrides the computed per-lane budget. Explicit budgets and PJRT
+    /// specs pass through unchanged. Purely a wall-clock decision: the
+    /// budget never affects numerics (DESIGN.md §14).
+    fn with_thread_budget(self, width: usize) -> EngineSpec {
+        match self {
+            EngineSpec::Native { classes, threads: 0 } => {
+                let env = std::env::var("HASFL_NATIVE_THREADS")
+                    .ok()
+                    .and_then(|v| v.parse::<usize>().ok())
+                    .filter(|&t| t >= 1);
+                let threads = env.unwrap_or_else(|| {
+                    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+                    (cores / width.max(1)).max(1)
+                });
+                EngineSpec::Native { classes, threads }
+            }
+            pinned => pinned,
         }
     }
 }
@@ -75,8 +111,9 @@ impl LaneEngine {
             EngineSpec::Pjrt { artifacts_dir } => {
                 LaneEngine::Pjrt(Box::new(Engine::load(artifacts_dir)?))
             }
-            EngineSpec::Native { classes } => {
-                LaneEngine::Native(Box::new(NativeEngine::new(ModelSpec::splitcnn8(*classes))))
+            EngineSpec::Native { classes, threads } => {
+                let model = ModelSpec::splitcnn8(*classes);
+                LaneEngine::Native(Box::new(NativeEngine::with_threads(model, (*threads).max(1))))
             }
         })
     }
@@ -210,17 +247,21 @@ impl EngineHandle {
         EngineHandle::spawn_backend(EngineSpec::Pjrt { artifacts_dir }, width)
     }
 
-    /// Spawn a single-lane native engine (no artifacts needed).
+    /// Spawn a single-lane native engine (no artifacts needed) with the
+    /// auto kernel thread budget.
     pub fn spawn_native(classes: usize) -> crate::Result<EngineHandle> {
-        EngineHandle::spawn_backend(EngineSpec::Native { classes }, 1)
+        EngineHandle::spawn_backend(EngineSpec::Native { classes, threads: 0 }, 1)
     }
 
     /// Spawn an engine pool of `width` lanes (clamped to >= 1) over the
     /// given backend spec. Each lane owns its own engine and compiles (or,
     /// natively, dispatches) lazily, so lanes only pay for the artifacts
-    /// they actually execute.
+    /// they actually execute. Native specs with the auto thread budget get
+    /// it pinned here to `max(1, cores / width)` per lane
+    /// ([`EngineSpec::Native`]), so wider pools run leaner lanes.
     pub fn spawn_backend(spec: EngineSpec, width: usize) -> crate::Result<EngineHandle> {
         let width = width.max(1);
+        let spec = spec.with_thread_budget(width);
         let backend = spec.kind();
         let mut lanes = Vec::with_capacity(width);
         for lane in 0..width {
@@ -274,7 +315,7 @@ impl EngineHandle {
     /// Execute with lane supervision and an optional reply deadline.
     ///
     /// Supervision: a dead lane (crashed thread, injected or genuine) is
-    /// respawned from the retained spec — at most [`LANE_RESPAWN_ATTEMPTS`]
+    /// respawned from the retained spec — at most `LANE_RESPAWN_ATTEMPTS`
     /// times per call — and the in-flight job replayed from its
     /// `Arc`-shared inputs. The fresh lane starts with cold caches;
     /// numerics are unaffected (the buffer cache is a packing
@@ -389,6 +430,8 @@ impl EngineHandle {
         Ok(total)
     }
 
+    /// Ask every lane thread to exit (best-effort; lanes drain their queue
+    /// first).
     pub fn shutdown(&self) {
         for slot in self.lanes.iter() {
             let _ = lock_slot(slot).tx.send(Request::Shutdown);

@@ -60,13 +60,18 @@ pub fn padded_gradient_is_exact() -> bool {
 /// Resolve artifact names for one split step at a (cut, true-batch) pair.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StepArtifacts {
+    /// Artifact name of the client forward pass (step a1).
     pub client_fwd: String,
+    /// Artifact name of the server step (loss + grads, step a3).
     pub server_step: String,
+    /// Artifact name of the client backward pass (step a5).
     pub client_bwd: String,
+    /// Batch bucket the three artifacts are specialised for.
     pub bucket: u32,
 }
 
 impl StepArtifacts {
+    /// Pick the bucket for `batch` and derive the three artifact names.
     pub fn resolve(manifest: &Manifest, cut: usize, batch: u32) -> crate::Result<StepArtifacts> {
         let bucket = manifest
             .bucket_for(batch)

@@ -29,10 +29,15 @@ struct DeviceState {
 /// the exact fleet trajectory of the uninterrupted one).
 #[derive(Debug, Clone, PartialEq)]
 pub struct DeviceEvoState {
+    /// The device as originally sampled (multipliers apply on top).
     pub base: Device,
+    /// Current multiplier on all four link rates.
     pub channel_mult: f64,
+    /// Current multiplier on device compute (`f_i`).
     pub compute_mult: f64,
+    /// Whether the device is currently in the fleet.
     pub active: bool,
+    /// Per-device phase offset for cyclic (diurnal) drift.
     pub phase: f64,
 }
 
@@ -43,10 +48,15 @@ pub struct DeviceEvoState {
 pub struct ScenarioEngineState {
     /// Raw PCG state `(state, inc)`.
     pub rng: (u64, u64),
+    /// Rounds evolved so far.
     pub round: usize,
+    /// Evolution state of every device ever rostered.
     pub roster: Vec<DeviceEvoState>,
+    /// Devices with multipliers applied, as of the last evolve.
     pub effective: Vec<Device>,
+    /// Effective fleet at the last BS/MS re-solve (drift baseline).
     pub reference: Vec<Device>,
+    /// Activity flags captured alongside `reference`.
     pub reference_active: Vec<bool>,
 }
 
@@ -169,10 +179,12 @@ impl ScenarioEngine {
         })
     }
 
+    /// The scenario this engine is evolving.
     pub fn spec(&self) -> &Scenario {
         &self.spec
     }
 
+    /// Devices ever rostered (active or not).
     pub fn roster_len(&self) -> usize {
         self.roster.len()
     }

@@ -182,7 +182,9 @@ impl ChurnModel {
 /// and compute divided by it) for that round only.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct StragglerModel {
+    /// Per-round probability that a straggler event fires.
     pub prob: f64,
+    /// Slowdown-factor range the event draws from.
     pub slowdown: Range,
 }
 
@@ -220,12 +222,15 @@ impl StragglerModel {
 /// in-repo JSON codec ([`Scenario::to_json`] / [`Scenario::from_json`]).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Scenario {
+    /// Human-readable scenario name (reported in traces and benches).
     pub name: String,
     /// Evolution of the per-device channel multiplier (all four link rates).
     pub channel: Drift,
     /// Evolution of the per-device compute multiplier (`f_i`).
     pub compute: Drift,
+    /// Device join/leave dynamics, if any.
     pub churn: Option<ChurnModel>,
+    /// Transient straggler injection, if any.
     pub straggler: Option<StragglerModel>,
     /// Mean relative fleet drift (vs the state at the last re-solve) that
     /// triggers an *early* aggregation + BS/MS re-solve. `None` = re-solve
@@ -262,6 +267,7 @@ impl Scenario {
         Ok(())
     }
 
+    /// Serialize to the JSON form accepted by [`Scenario::from_json`].
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("name", Json::Str(self.name.clone()))
@@ -279,6 +285,7 @@ impl Scenario {
         j
     }
 
+    /// Decode and validate a scenario.
     pub fn from_json(j: &Json) -> crate::Result<Scenario> {
         Ok(Scenario {
             name: j.req("name")?.as_str()?.to_string(),
@@ -299,11 +306,13 @@ impl Scenario {
         })
     }
 
+    /// Read and decode a JSON scenario file.
     pub fn load(path: &std::path::Path) -> crate::Result<Scenario> {
         let text = std::fs::read_to_string(path)?;
         Scenario::from_json(&Json::parse(&text)?)
     }
 
+    /// Write the scenario as JSON to `path`.
     pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
         std::fs::write(path, self.to_json().dump())?;
         Ok(())
@@ -329,6 +338,7 @@ pub enum ScenarioPreset {
 }
 
 impl ScenarioPreset {
+    /// Every preset, in CLI listing order.
     pub const ALL: [ScenarioPreset; 5] = [
         ScenarioPreset::Static,
         ScenarioPreset::DriftingChannels,
@@ -337,6 +347,7 @@ impl ScenarioPreset {
         ScenarioPreset::MegaFleet,
     ];
 
+    /// Canonical kebab-case name — the inverse of [`ScenarioPreset::parse`].
     pub fn as_str(&self) -> &'static str {
         match self {
             ScenarioPreset::Static => "static",
@@ -347,6 +358,7 @@ impl ScenarioPreset {
         }
     }
 
+    /// Parse a preset name (kebab- or snake-case accepted).
     pub fn parse(s: &str) -> crate::Result<ScenarioPreset> {
         Ok(match s {
             "static" => ScenarioPreset::Static,

@@ -196,14 +196,17 @@ impl ScenarioSim {
         &self.trace
     }
 
+    /// Trace of every round stepped so far.
     pub fn trace(&self) -> &FleetTrace {
         &self.trace
     }
 
+    /// Rounds stepped so far.
     pub fn round(&self) -> usize {
         self.round
     }
 
+    /// Accumulated simulated wall-clock (seconds).
     pub fn sim_time(&self) -> f64 {
         self.sim_time
     }
@@ -219,10 +222,12 @@ impl ScenarioSim {
         &self.dec
     }
 
+    /// The underlying scenario engine.
     pub fn engine(&self) -> &ScenarioEngine {
         &self.engine
     }
 
+    /// The config the simulation was built from.
     pub fn config(&self) -> &Config {
         &self.cfg
     }

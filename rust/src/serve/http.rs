@@ -20,11 +20,13 @@ const MAX_BODY: usize = 4 * 1024 * 1024;
 /// A parsed HTTP request.
 #[derive(Debug)]
 pub struct Request {
+    /// Uppercase HTTP method (`GET`, `POST`, ...).
     pub method: String,
     /// Decoded path without the query string, e.g. `/sessions/3/run`.
     pub path: String,
     /// Query parameters (`?from=4&follow=1`).
     pub query: BTreeMap<String, String>,
+    /// Raw request body (at most `MAX_BODY` bytes).
     pub body: Vec<u8>,
 }
 

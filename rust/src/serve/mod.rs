@@ -18,11 +18,11 @@
 //!        readers ◀──tail by offset── [EventLog] ◀──events───┘
 //! ```
 //!
-//! Every session lives in a [`SessionSlot`]: the driver sits in a mutexed
+//! Every session lives in a `SessionSlot`: the driver sits in a mutexed
 //! `Option` that exactly one worker takes while pumping; commands enqueue
 //! onto the session's channel and *kick* the job queue, so an idle session
 //! costs nothing and a busy one absorbs new commands between rounds. The
-//! kick counter ([`SessionSlot::kicks`]) closes the classic lost-wakeup
+//! kick counter (`SessionSlot::kicks`) closes the classic lost-wakeup
 //! race: a worker about to park the driver re-checks it and re-enqueues
 //! the job if a command slipped in after its final drain.
 //!
@@ -45,7 +45,7 @@
 //! and run/step kicks shed with `503` once the job queue reaches
 //! [`ServeConfig::queue_cap`]. Request handling never unwraps: the whole
 //! module denies `clippy::unwrap_used`, and lock poisoning (a panicking
-//! holder) is recovered via [`lock`] instead of cascading.
+//! holder) is recovered via `lock` instead of cascading.
 
 // A panicking connection thread must never take the daemon with it, and a
 // poisoned mutex must not cascade: every fallible path returns an HTTP

@@ -182,6 +182,7 @@ pub struct JobQueue {
 }
 
 impl JobQueue {
+    /// Empty queue.
     pub fn new() -> JobQueue {
         let (tx, rx) = std::sync::mpsc::channel();
         JobQueue { tx, rx: Mutex::new(rx), depth: AtomicUsize::new(0) }

@@ -7,6 +7,7 @@ use std::str::FromStr;
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// First positional argument (the subcommand), if any.
     pub subcommand: Option<String>,
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
@@ -35,14 +36,17 @@ impl Args {
         Ok(out)
     }
 
+    /// Parse the process's own arguments (skipping argv[0]).
     pub fn from_env() -> anyhow::Result<Args> {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Raw string value of `--key value` / `--key=value`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.opts.get(key).map(|s| s.as_str())
     }
 
+    /// Whether the bare flag `--key` was given.
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }

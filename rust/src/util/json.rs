@@ -11,21 +11,29 @@ use std::fmt::Write as _;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (all numbers are f64, as in JavaScript).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Json>),
+    /// JSON object (sorted keys, so serialization is deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
     // ---- constructors -----------------------------------------------------
 
+    /// Empty JSON object.
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
 
+    /// Insert `key: val` (panics on non-objects); chainable.
     pub fn set(&mut self, key: &str, val: Json) -> &mut Json {
         if let Json::Obj(m) = self {
             m.insert(key.to_string(), val);
@@ -35,16 +43,19 @@ impl Json {
         self
     }
 
+    /// Numeric array from a slice of f64s.
     pub fn from_f64s(vals: &[f64]) -> Json {
         Json::Arr(vals.iter().map(|&v| Json::Num(v)).collect())
     }
 
+    /// Numeric array from a slice of usizes.
     pub fn from_usizes(vals: &[usize]) -> Json {
         Json::Arr(vals.iter().map(|&v| Json::Num(v as f64)).collect())
     }
 
     // ---- accessors --------------------------------------------------------
 
+    /// Object field lookup (`None` on non-objects or missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -59,6 +70,7 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("missing JSON field '{key}'"))
     }
 
+    /// The value as a number.
     pub fn as_f64(&self) -> anyhow::Result<f64> {
         match self {
             Json::Num(v) => Ok(*v),
@@ -66,18 +78,22 @@ impl Json {
         }
     }
 
+    /// The value as a number, truncated to usize.
     pub fn as_usize(&self) -> anyhow::Result<usize> {
         Ok(self.as_f64()? as usize)
     }
 
+    /// The value as a number, truncated to u32.
     pub fn as_u32(&self) -> anyhow::Result<u32> {
         Ok(self.as_f64()? as u32)
     }
 
+    /// The value as a number, truncated to u64.
     pub fn as_u64(&self) -> anyhow::Result<u64> {
         Ok(self.as_f64()? as u64)
     }
 
+    /// The value as a bool.
     pub fn as_bool(&self) -> anyhow::Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -85,6 +101,7 @@ impl Json {
         }
     }
 
+    /// The value as a string slice.
     pub fn as_str(&self) -> anyhow::Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -92,6 +109,7 @@ impl Json {
         }
     }
 
+    /// The value as an array slice.
     pub fn as_arr(&self) -> anyhow::Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -99,20 +117,24 @@ impl Json {
         }
     }
 
+    /// A numeric array as a `Vec<usize>`.
     pub fn usize_vec(&self) -> anyhow::Result<Vec<usize>> {
         self.as_arr()?.iter().map(|j| j.as_usize()).collect()
     }
 
+    /// A numeric array as a `Vec<u32>`.
     pub fn u32_vec(&self) -> anyhow::Result<Vec<u32>> {
         self.as_arr()?.iter().map(|j| j.as_u32()).collect()
     }
 
+    /// A numeric array as a `Vec<f64>`.
     pub fn f64_vec(&self) -> anyhow::Result<Vec<f64>> {
         self.as_arr()?.iter().map(|j| j.as_f64()).collect()
     }
 
     // ---- serialization ----------------------------------------------------
 
+    /// Serialize to compact JSON text (deterministic: object keys sorted).
     pub fn dump(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);
@@ -158,6 +180,7 @@ impl Json {
 
     // ---- parsing ----------------------------------------------------------
 
+    /// Parse a complete JSON document (trailing bytes are an error).
     pub fn parse(text: &str) -> anyhow::Result<Json> {
         let bytes = text.as_bytes();
         let mut pos = 0usize;

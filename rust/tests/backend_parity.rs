@@ -15,7 +15,7 @@ use hasfl::backend::{skip_pjrt_only, BackendKind, ModelSpec};
 use hasfl::config::{Config, StrategyKind};
 use hasfl::experiment::Experiment;
 use hasfl::model::{Manifest, Params};
-use hasfl::runtime::{tensor_to_host, EngineHandle, HostTensor, StepArtifacts};
+use hasfl::runtime::{tensor_to_host, EngineHandle, EngineSpec, HostTensor, StepArtifacts};
 
 fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -157,6 +157,39 @@ fn native_is_bit_identical_across_sequential_pooled_and_resumed() {
     assert_eq!(seq_hist.records, resumed_hist.records, "resumed history");
 
     let _ = std::fs::remove_dir_all(&ckpt_dir);
+}
+
+#[test]
+fn native_thread_budget_is_bit_neutral_at_the_engine_boundary() {
+    // The per-lane thread budget (DESIGN.md §14) may only change speed,
+    // never bits: the kernels partition work over independent output rows
+    // and keep every per-element reduction sequential, so a 1-thread and
+    // a 4-thread engine must produce identical f32 bit patterns. Bucket
+    // 32 pushes the conv GEMMs past GEMM_PAR_MIN_MACS, so the 4-thread
+    // run genuinely exercises the parallel paths.
+    let manifest = ModelSpec::splitcnn8(10).manifest();
+    let params = Params::init(&manifest, 9);
+    let (x, y, w) = fake_batch(32, 10, 29);
+    let name = Manifest::full_name("full_step", 32);
+    let mut inputs = vec![x, y, w];
+    inputs.extend(params.tensors.iter().map(tensor_to_host));
+
+    let run = |threads: usize| {
+        let spec = EngineSpec::Native { classes: 10, threads };
+        let engine = EngineHandle::spawn_backend(spec, 1).expect("engine");
+        let out = engine.execute_blocking(&name, inputs.clone()).expect("full_step");
+        engine.shutdown();
+        out
+    };
+    let one = run(1);
+    let four = run(4);
+    assert_eq!(one.len(), four.len());
+    for (k, (a, b)) in one.iter().zip(&four).enumerate() {
+        assert_eq!(a.shape, b.shape, "out {k}: shape");
+        let ab: Vec<u32> = a.data.iter().map(|v| v.to_bits()).collect();
+        let bb: Vec<u32> = b.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ab, bb, "out {k}: 1-thread vs 4-thread bits differ");
+    }
 }
 
 // ---- PJRT halves (standardized skip without artifacts) -------------------
