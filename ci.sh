@@ -48,6 +48,11 @@
 #                            disconnect probes against a tightly-capped
 #                            daemon must leave /healthz responsive —
 #                            DESIGN.md §13)
+#  13. sharded 10k smoke    (a 10,000-device engine-backed round on the
+#                            native backend, flat vs an 8-cell topology;
+#                            the two histories must be byte-identical —
+#                            hierarchical aggregation is bit-neutral,
+#                            DESIGN.md §15)
 set -euo pipefail
 
 BACKEND=auto
@@ -227,5 +232,34 @@ PY
 kill -TERM "$CHAOS_PID"; wait "$CHAOS_PID"
 rm -rf "$CHAOS_TMP"
 echo "chaos smoke OK (deterministic faults; daemon survived hostile clients)"
+
+echo "== sharded 10k smoke (cells=1 vs cells=8, byte-identical histories) =="
+SHARD_TMP=$(mktemp -d)
+# 10,000 devices through the real engine in one round, at the cheapest
+# executable shape (Fixed strategy, batch 1, cut 1, no scheduled eval).
+# Always on the native backend: the shard smoke is about coordinator
+# scale, not AOT artifacts.
+./target/release/hasfl config --preset small --out "$SHARD_TMP/wide.json"
+python3 - "$SHARD_TMP/wide.json" <<'PY'
+import json, sys
+p = sys.argv[1]
+cfg = json.load(open(p))
+cfg["fleet"]["n_devices"] = 10000
+cfg["strategy"] = "fixed"
+cfg["fixed_batch"] = 1
+cfg["fixed_cut"] = 1
+cfg["train"]["rounds"] = 1
+cfg["train"]["eval_every"] = 1000      # skip scheduled eval
+cfg["train"]["agg_interval"] = 1000    # no forged-aggregation round
+cfg["train"]["train_samples"] = 10000  # >= n_devices (one sample each)
+json.dump(cfg, open(p, "w"))
+PY
+HASFL_BACKEND=native ./target/release/hasfl train --config "$SHARD_TMP/wide.json" \
+  --backend native --cells 1 --concurrent --out "$SHARD_TMP/cells1.csv"
+HASFL_BACKEND=native ./target/release/hasfl train --config "$SHARD_TMP/wide.json" \
+  --backend native --cells 8 --concurrent --out "$SHARD_TMP/cells8.csv"
+cmp "$SHARD_TMP/cells1.csv" "$SHARD_TMP/cells8.csv"
+rm -rf "$SHARD_TMP"
+echo "sharded 10k smoke OK (flat and 8-cell histories byte-identical)"
 
 echo "CI OK (backend: $BACKEND)"

@@ -89,6 +89,18 @@ pub fn bench_raw<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) 
     res
 }
 
+/// Bench-environment metadata (the `meta` block of `BENCH_*.json`): the
+/// facts that must match for two reports to compare like-for-like.
+/// `hasfl bench-diff` warns on any mismatch here and never gates on it.
+#[allow(dead_code)]
+pub fn meta_json(pool_width: usize) -> hasfl::util::Json {
+    use hasfl::util::Json;
+    let mut j = Json::obj();
+    j.set("pool_width", Json::Num(pool_width as f64))
+        .set("host_cores", Json::Num(hasfl::util::host_cores() as f64));
+    j
+}
+
 /// The artifacts directory (may or may not hold an AOT manifest).
 #[allow(dead_code)] // not every bench needs an engine
 pub fn artifacts_dir() -> std::path::PathBuf {

@@ -160,6 +160,7 @@ fn main() {
     let mut j = Json::obj();
     j.set("bench", Json::Str("e2e_round".into()))
         .set("backend", Json::Str(common::backend().as_str().into()))
+        .set("meta", common::meta_json(width))
         .set("smoke", Json::Bool(common::smoke()))
         .set("fleet", Json::Num(FLEET as f64))
         .set("fixed_batch", Json::Num(BATCH as f64))

@@ -7,11 +7,17 @@
 //! In CI smoke mode (`HASFL_BENCH_SMOKE=1`, `make bench-smoke`) the
 //! headline number is exactly one 5-round mega-fleet run — the acceptance
 //! smoke for the scenario engine at scale.
+//!
+//! The `sharded_round` series is the one *engine-backed* number here: a
+//! wide concurrent training round, flat roster vs a cell-sharded topology
+//! (DESIGN.md §15). Cells are bit-neutral (`rust/tests/cells_parity.rs`),
+//! so the series tracks pure wall-clock shape.
 
 #[path = "common/mod.rs"]
 mod common;
 
-use hasfl::config::Config;
+use hasfl::config::{Config, StrategyKind};
+use hasfl::experiment::{Experiment, Preset, Session};
 use hasfl::scenario::{ScenarioEngine, ScenarioPreset, ScenarioSim};
 use hasfl::util::Json;
 
@@ -31,6 +37,60 @@ fn bench_json_path() -> std::path::PathBuf {
         return std::env::temp_dir().join("BENCH_scenario.json");
     }
     std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_scenario.json")
+}
+
+/// Build a wide engine-backed session for the `sharded_round` series:
+/// Fixed strategy at the cheapest shape (batch 1, cut 1), no scheduled
+/// evals or aggregation windows, concurrent rounds.
+fn sharded_session(devices: usize, cells: Option<usize>) -> Session {
+    let mut b = Experiment::builder()
+        .preset(Preset::Small)
+        .devices(devices)
+        .strategy(StrategyKind::Fixed)
+        .fixed_batch(1)
+        .fixed_cut(1)
+        .rounds(1_000_000)
+        .eval_every(1_000_000)
+        .agg_interval(1_000_000)
+        .engine_pool(0)
+        .tune(move |c| {
+            c.train.train_samples = devices.max(1024);
+            c.train.test_samples = 64;
+        })
+        .artifacts(common::artifacts_dir())
+        .concurrent(true);
+    if let Some(n) = cells {
+        b = b.cells(n);
+    }
+    b.build().expect("session")
+}
+
+/// Engine-backed concurrent round, flat roster vs an 8-cell topology.
+/// Returns the series JSON and the engine-pool width it ran at.
+fn sharded_round_series() -> (Json, usize) {
+    let devices = if common::smoke() { 32 } else { 128 };
+    const CELLS: usize = 8;
+
+    let mut flat = sharded_session(devices, None);
+    let width = flat.engine_width();
+    let r_flat = common::bench(&format!("sharded_round_flat_n{devices}"), 1, 5, || {
+        std::hint::black_box(flat.step().expect("round"));
+    });
+    flat.finish().expect("finish");
+
+    let mut sharded = sharded_session(devices, Some(CELLS));
+    let r_cells = common::bench(&format!("sharded_round_cells{CELLS}_n{devices}"), 1, 5, || {
+        std::hint::black_box(sharded.step().expect("round"));
+    });
+    sharded.finish().expect("finish");
+
+    let mut j = Json::obj();
+    j.set("devices", Json::Num(devices as f64))
+        .set("cells", Json::Num(CELLS as f64))
+        .set("flat", r_flat.to_json_ms())
+        .set("sharded", r_cells.to_json_ms())
+        .set("speedup_p50", Json::Num(r_flat.summary.p50 / r_cells.summary.p50));
+    (j, width)
 }
 
 fn main() {
@@ -68,9 +128,14 @@ fn main() {
         trace.resolves()
     );
 
+    // Engine-backed cell-sharded round (last: it spawns engine pools).
+    let (sharded, pool_width) = sharded_round_series();
+
     let mut j = Json::obj();
     j.set("bench", Json::Str("scenario_fleet".into()))
+        .set("meta", common::meta_json(pool_width))
         .set("smoke", Json::Bool(common::smoke()))
+        .set("sharded_round", sharded)
         .set("fleet", Json::Num(n as f64))
         .set("rounds_run", Json::Num(trace.len() as f64))
         .set("engine_advance", r_advance.to_json_ms())

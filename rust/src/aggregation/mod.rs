@@ -77,6 +77,98 @@ pub fn aggregate_forged_partial(
     weighted_average_in_place(params, Params::block_range(0, l_c), participants, weights);
 }
 
+/// One cell's contribution to a round under hierarchical aggregation
+/// (DESIGN.md §15): the participants of a contiguous device-id range with
+/// their Eqn-39 sample weights and per-participant round statistics.
+///
+/// The per-participant `losses`/`corrects`/`batches` stay vectors rather
+/// than pre-summed scalars on purpose: f64 addition is not associative,
+/// so the root must form the global sums in exactly the flat path's
+/// ascending-id order. Keeping the terms lets
+/// [`merge_cell_aggregates`] reproduce that order bit-for-bit instead of
+/// re-associating per-cell partial sums.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CellAggregate {
+    /// Cell index (position in the topology's fixed cell order).
+    pub cell: usize,
+    /// Ascending ids of the cell's devices that completed the round.
+    pub participants: Vec<usize>,
+    /// Eqn-39 sample weights, aligned with `participants`.
+    pub weights: Vec<f64>,
+    /// Per-participant training loss, aligned with `participants`.
+    pub losses: Vec<f64>,
+    /// Per-participant correct-prediction count, aligned.
+    pub corrects: Vec<f64>,
+    /// Per-participant processed sample count, aligned.
+    pub batches: Vec<u32>,
+}
+
+/// Root-side merge of a round's cell aggregates: the global participant
+/// roster, Eqn-39 weights, and round-statistic sums, in canonical
+/// (globally ascending) order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MergedRound {
+    /// Ascending ids of every device that completed the round.
+    pub participants: Vec<usize>,
+    /// Eqn-39 sample weights, aligned with `participants`.
+    pub weights: Vec<f64>,
+    /// Sum of per-participant losses, accumulated in ascending-id order.
+    pub loss_sum: f64,
+    /// Sum of per-participant correct counts, ascending-id order.
+    pub correct_sum: f64,
+    /// Total samples processed by the round.
+    pub batch_sum: u32,
+}
+
+/// Merge cell aggregates in the given (fixed) cell order.
+///
+/// Merge-order contract: cells hold contiguous ascending id ranges, so
+/// concatenating their participant lists in cell order *is* the global
+/// ascending order — the list the flat path builds directly. The f64
+/// statistic sums run left-to-right over the concatenation, making the
+/// merged result bit-identical to the flat path at any cell count
+/// (`cells = 1` trivially, `cells = N` by contiguity), and the merge
+/// associative: merging merges of sub-sequences equals merging the
+/// flattened sequence. Empty cells (no participants, or no devices at
+/// all) contribute nothing and are handled uniformly.
+pub fn merge_cell_aggregates(cells: &[CellAggregate]) -> MergedRound {
+    let n: usize = cells.iter().map(|c| c.participants.len()).sum();
+    let mut out = MergedRound {
+        participants: Vec::with_capacity(n),
+        weights: Vec::with_capacity(n),
+        loss_sum: 0.0,
+        correct_sum: 0.0,
+        batch_sum: 0,
+    };
+    for cell in cells {
+        debug_assert!(
+            cell.participants.windows(2).all(|w| w[0] < w[1]),
+            "cell {} participants not ascending",
+            cell.cell
+        );
+        debug_assert!(
+            cell.participants
+                .first()
+                .zip(out.participants.last())
+                .map_or(true, |(first, last)| last < first),
+            "cell {} overlaps an earlier cell's id range",
+            cell.cell
+        );
+        out.participants.extend_from_slice(&cell.participants);
+        out.weights.extend_from_slice(&cell.weights);
+        for &l in &cell.losses {
+            out.loss_sum += l;
+        }
+        for &c in &cell.corrects {
+            out.correct_sum += c;
+        }
+        for &b in &cell.batches {
+            out.batch_sum += b;
+        }
+    }
+    out
+}
+
 /// Global model = average of every device's full model (used for
 /// evaluation; matches the paper's analysis object w^t = mean_i w_i^t).
 ///
@@ -231,6 +323,132 @@ mod tests {
         for (g, w) in got.tensors.iter().zip(&want.tensors) {
             for (&a, &b) in g.data.iter().zip(&w.data) {
                 assert!((a - b).abs() <= 1e-6 + 1e-6 * b.abs(), "{a} vs {b}");
+            }
+        }
+    }
+
+    fn cell(id: usize, participants: Vec<usize>, weights: Vec<f64>) -> CellAggregate {
+        let n = participants.len();
+        CellAggregate {
+            cell: id,
+            participants,
+            weights,
+            losses: (0..n).map(|k| 0.1 + k as f64).collect(),
+            corrects: vec![1.0; n],
+            batches: vec![4; n],
+        }
+    }
+
+    #[test]
+    fn merge_concatenates_in_cell_order() {
+        let cells = [cell(0, vec![0, 2], vec![8.0, 4.0]), cell(1, vec![3, 5], vec![2.0, 6.0])];
+        let m = merge_cell_aggregates(&cells);
+        assert_eq!(m.participants, vec![0, 2, 3, 5]);
+        assert_eq!(m.weights, vec![8.0, 4.0, 2.0, 6.0]);
+        assert_eq!(m.batch_sum, 16);
+        // Left-to-right over the concatenation: bit-identical to the flat
+        // path's ascending-id sum.
+        let want = ((0.1 + 1.1) + 0.1) + 1.1;
+        assert_eq!(m.loss_sum.to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn merge_handles_empty_and_single_device_cells() {
+        // An entirely-empty cell (no devices), a cell whose every device
+        // sat the round out (all quarantined/abandoned), and single-device
+        // cells — the shard path's edge shapes.
+        let cells = [
+            cell(0, vec![], vec![]),       // cell exists, zero devices
+            cell(1, vec![1], vec![8.0]),   // single-device cell
+            cell(2, vec![], vec![]),       // every device quarantined
+            cell(3, vec![7], vec![16.0]),  // single-device cell
+        ];
+        let m = merge_cell_aggregates(&cells);
+        assert_eq!(m.participants, vec![1, 7]);
+        assert_eq!(m.weights, vec![8.0, 16.0]);
+        assert_eq!(m.batch_sum, 8);
+
+        // All cells empty = the explicitly empty round.
+        let none = merge_cell_aggregates(&[cell(0, vec![], vec![]), cell(1, vec![], vec![])]);
+        assert!(none.participants.is_empty());
+        assert_eq!(none.batch_sum, 0);
+    }
+
+    #[test]
+    fn merge_is_associative_over_cell_groups() {
+        // Merging merges of sub-sequences equals merging the flattened
+        // sequence (the root may combine cells in fixed-order groups).
+        let a = cell(0, vec![0], vec![3.0]);
+        let b = cell(1, vec![2, 3], vec![5.0, 7.0]);
+        let c = cell(2, vec![4], vec![9.0]);
+        let flat = merge_cell_aggregates(&[a.clone(), b.clone(), c.clone()]);
+        let left = merge_cell_aggregates(&[a.clone(), b.clone()]);
+        let grouped = CellAggregate {
+            cell: 0,
+            participants: left.participants,
+            weights: left.weights,
+            losses: a.losses.iter().chain(&b.losses).copied().collect(),
+            corrects: a.corrects.iter().chain(&b.corrects).copied().collect(),
+            batches: a.batches.iter().chain(&b.batches).copied().collect(),
+        };
+        let two_level = merge_cell_aggregates(&[grouped, c]);
+        assert_eq!(two_level.participants, flat.participants);
+        assert_eq!(two_level.weights, flat.weights);
+        assert_eq!(two_level.loss_sum.to_bits(), flat.loss_sum.to_bits());
+        assert_eq!(two_level.correct_sum.to_bits(), flat.correct_sum.to_bits());
+    }
+
+    #[test]
+    fn merged_partial_aggregation_is_bitwise_flat() {
+        // The tentpole contract end-to-end at the aggregation layer: the
+        // participant/weight lists a cell merge produces drive
+        // aggregate_{common,forged}_partial to parameters bit-for-bit
+        // equal to the flat path's, including empty, all-quarantined, and
+        // single-device cells.
+        let mut rng = crate::rng::Pcg32::seeded(99);
+        let build = |rng: &mut crate::rng::Pcg32| -> Vec<Params> {
+            (0..6)
+                .map(|_| Params {
+                    tensors: (0..8)
+                        .map(|_| Tensor {
+                            shape: vec![3],
+                            data: (0..3).map(|_| rng.normal() as f32).collect(),
+                        })
+                        .collect(),
+                    n_blocks: 4,
+                    version: 0,
+                })
+                .collect()
+        };
+        let fleet = build(&mut rng);
+        let dec = Decisions { batch: vec![8; 6], cut: vec![2; 6] };
+
+        // Flat path: participants 1, 2, 4 (0 abandoned, 3 quarantined, 5
+        // dropped), ascending, with their sample weights.
+        let mut flat = fleet.clone();
+        let (fp, fw) = (vec![1, 2, 4], vec![8.0, 6.0, 8.0]);
+        aggregate_common_partial(&mut flat, &dec, &fp, &fw);
+        aggregate_forged_partial(&mut flat, &dec, &fp, &fw);
+
+        // Sharded path: cells [0..2], [2..3], [3..5], [5..6] — a
+        // one-participant cell, a single-device cell, an all-quarantined
+        // survivor-free cell, and an empty-participation cell.
+        let cells = [
+            cell(0, vec![1], vec![8.0]),
+            cell(1, vec![2], vec![6.0]),
+            cell(2, vec![4], vec![8.0]),
+            cell(3, vec![], vec![]),
+        ];
+        let merged = merge_cell_aggregates(&cells);
+        let mut sharded = fleet.clone();
+        aggregate_common_partial(&mut sharded, &dec, &merged.participants, &merged.weights);
+        aggregate_forged_partial(&mut sharded, &dec, &merged.participants, &merged.weights);
+
+        for (a, b) in flat.iter().zip(&sharded) {
+            for (ta, tb) in a.tensors.iter().zip(&b.tensors) {
+                for (&x, &y) in ta.data.iter().zip(&tb.data) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "merged path diverged bitwise");
+                }
             }
         }
     }

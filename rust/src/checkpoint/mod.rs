@@ -573,6 +573,7 @@ mod tests {
             fleet: None,
             abandoned: vec![],
             quarantined: vec![],
+            cells: vec![],
         }
     }
 

@@ -351,6 +351,11 @@ pub struct Config {
     /// tolerance: a device error fails the round, exactly the historical
     /// behaviour). See [`crate::fault`] and DESIGN.md §13.
     pub faults: Option<crate::fault::FaultSpec>,
+    /// Hierarchical-aggregation topology: the fleet partitioned into
+    /// cells, each owning a coordinator shard (`None` = the historical
+    /// flat roster; numerics are bit-identical either way — see
+    /// [`crate::topology`] and DESIGN.md §15).
+    pub topology: Option<crate::topology::Topology>,
 }
 
 impl Config {
@@ -399,6 +404,9 @@ impl Config {
         }
         if let Some(f) = &self.faults {
             root.set("faults", f.to_json());
+        }
+        if let Some(t) = &self.topology {
+            root.set("topology", t.to_json());
         }
         root
     }
@@ -500,6 +508,12 @@ impl Config {
             // injection, no tolerance.
             faults: match j.get("faults") {
                 Some(v) => Some(at("faults", crate::fault::FaultSpec::from_json(v))?),
+                None => None,
+            },
+            // Absent in configs saved before hierarchical aggregation
+            // existed: the flat roster.
+            topology: match j.get("topology") {
+                Some(v) => Some(at("topology", crate::topology::Topology::from_json(v))?),
                 None => None,
             },
         })
@@ -694,6 +708,31 @@ mod tests {
         cfg.faults = Some(crate::fault::FaultPreset::Chaos.spec());
         let back = Config::from_json(&Json::parse(&cfg.to_json().dump()).unwrap()).unwrap();
         assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn topology_field_roundtrips_and_defaults_to_none() {
+        // Configs saved before hierarchical aggregation existed have no
+        // "topology" key; they must load as None (flat roster).
+        let cfg = Config::table1();
+        assert!(cfg.topology.is_none());
+        let back = Config::from_json(&Json::parse(&cfg.to_json().dump()).unwrap()).unwrap();
+        assert!(back.topology.is_none());
+
+        let mut cfg = Config::table1();
+        cfg.topology = Some(crate::topology::Topology::with_cells(8));
+        let back = Config::from_json(&Json::parse(&cfg.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+
+        // Errors inside the topology block name the field path.
+        let mut j = cfg.to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(t)) = m.get_mut("topology") {
+                t.insert("cells".into(), Json::Str("lots".into()));
+            }
+        }
+        let err = Config::from_json(&j).unwrap_err();
+        assert!(err.to_string().contains("topology"), "{err}");
     }
 
     #[test]

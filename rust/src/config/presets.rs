@@ -46,6 +46,7 @@ impl Config {
             backend: BackendKind::Auto,
             scenario: None,
             faults: None,
+            topology: None,
         }
     }
 

@@ -8,16 +8,27 @@
 //! - `Trainer::run_round` — sequential round (single caller thread,
 //!   engine lane 0).
 //! - `Trainer::run_round_concurrent` — actor round: a bounded pool of
-//!   at most `pool_width` worker threads pulls device work off a shared
-//!   queue (a 1000-device round costs `pool_width` threads, not 1000),
-//!   each device routed to engine lane `i % pool_width` so device legs
-//!   genuinely overlap when the pool has width > 1. Results are applied
-//!   in device order, so numerics are bit-identical to sequential mode
-//!   (`tests/parity_modes`).
+//!   at most `pool_width` worker threads pulls device work off per-cell
+//!   queues (a 10k-device round costs `pool_width` threads, not 10k),
+//!   each cell routed to its own engine-lane slice so device legs
+//!   genuinely overlap when the pool has width > 1. Results stream into
+//!   the root collector in completion order (SGD updates are per-device
+//!   disjoint, so order cannot change a bit), and the per-round
+//!   statistics are canonicalised to ascending id order, so numerics are
+//!   bit-identical to sequential mode (`tests/parity_modes`) and to any
+//!   cell count (`tests/cells_parity`, DESIGN.md §15).
+
+// Shard workers must have no panic path outside injected faults: the
+// whole coordinator denies `clippy::unwrap_used`, and queue-lock
+// poisoning is recovered (`shard::lock`) instead of cascading.
+#![deny(clippy::unwrap_used)]
 
 mod round;
+mod shard;
 
 pub use round::RoundOutcome;
+
+use shard::{plan_cells, CellPlan};
 
 use std::path::Path;
 use std::sync::Arc;
@@ -32,7 +43,7 @@ use crate::convergence::{BoundParams, GradStatsEstimator};
 use crate::data::{partition, BatchSampler, Dataset};
 use crate::fault::{FaultInjector, FaultState};
 use crate::latency::{round_latency, round_latency_subset, Decisions, RoundLatency};
-use crate::metrics::{History, Record};
+use crate::metrics::{CellStats, History, Record};
 use crate::model::{profile_for, Manifest, ModelProfile, Params};
 use crate::optimizer::{decide, OptContext, StrategyInputs};
 use crate::rng::Pcg32;
@@ -49,6 +60,9 @@ pub(crate) struct PostRound {
     pub latency: RoundLatency,
     pub aggregated: bool,
     pub reoptimized: bool,
+    /// Per-cell execution stats (hierarchical-topology runs only; empty
+    /// on flat rosters so flat reports are byte-identical to before).
+    pub cells: Vec<CellStats>,
 }
 
 /// The full training system state.
@@ -111,6 +125,11 @@ pub struct Trainer {
     /// Devices abandoned by the round that just executed (ascending ids;
     /// transient, rebuilt every round).
     pub(crate) round_abandoned: Vec<usize>,
+    /// The round execution plan: one [`CellPlan`] per topology cell, or
+    /// a single flat cell spanning the roster and the whole pool when no
+    /// topology is configured. Replanned by [`Trainer::begin_round`]
+    /// when scenario churn resizes the roster.
+    cells: Vec<CellPlan>,
 }
 
 /// Resolve the configured engine-pool width: 0 = auto (fleet size capped by
@@ -212,7 +231,9 @@ impl Trainer {
             faults,
             fault_state: FaultState::new(n),
             round_abandoned: Vec::new(),
+            cells: Vec::new(),
         };
+        t.cells = plan_cells(t.cfg.topology.as_ref(), n, t.engine.width());
         t.dec = t.next_decisions();
         t.refresh_step_artifacts()?;
         Ok(t)
@@ -313,6 +334,13 @@ impl Trainer {
             }
         }
         self.round_abandoned.clear();
+        // Scenario churn can resize the roster: keep the cell plan's
+        // contiguous ranges covering it (a pure function of
+        // (topology, n, width) — no RNG, so replanning is deterministic).
+        if self.cells.last().map_or(0, |c| c.devices.end) != self.devices.len() {
+            self.cells =
+                plan_cells(self.cfg.topology.as_ref(), self.devices.len(), self.engine.width());
+        }
     }
 
     /// Hand the current round's fleet snapshot to the round report.
@@ -580,12 +608,14 @@ impl Trainer {
             let logits = &out[0];
             for r in 0..take {
                 let row = &logits.data[r * classes..(r + 1) * classes];
+                // total_cmp: identical ordering to partial_cmp on the
+                // non-NaN logits the engine produces, with no panic path
+                // (the coordinator-wide unwrap deny).
                 let pred = row
                     .iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap()
-                    .0;
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map_or(0, |(k, _)| k);
                 if pred == self.test_set.labels[i + r] as usize {
                     correct += 1;
                 }
@@ -610,6 +640,10 @@ impl Trainer {
     pub(crate) fn post_round(&mut self, t: usize) -> crate::Result<PostRound> {
         let latency = self.current_round_latency();
         self.sim_time += latency.t_split;
+        // Per-cell fleet trace (topology runs only): derived at the root
+        // from the canonical participant/abandoned lists + cell ranges,
+        // so sequential and concurrent modes report identical stats.
+        let cells = if self.cfg.topology.is_some() { self.cell_stats() } else { Vec::new() };
 
         // Per-round server-side common aggregation (Eqn 4). After it, the
         // common region is identical on every device, which is what lets
@@ -680,7 +714,70 @@ impl Trainer {
                 engine.mark_resolved();
             }
         }
-        Ok(PostRound { latency, aggregated, reoptimized: aggregated })
+        Ok(PostRound { latency, aggregated, reoptimized: aggregated, cells })
+    }
+
+    /// Per-cell stats of the round that just executed: membership,
+    /// participant/abandoned counts from the canonical ascending lists,
+    /// and the cell's own straggler-gated split-training latency.
+    fn cell_stats(&self) -> Vec<CellStats> {
+        self.cells
+            .iter()
+            .map(|plan| {
+                let in_range = |ids: &[usize]| {
+                    ids.iter().filter(|&&i| plan.devices.contains(&i)).count()
+                };
+                CellStats {
+                    cell: plan.cell,
+                    devices: plan.devices.len(),
+                    participants: in_range(&self.round_participants),
+                    abandoned: in_range(&self.round_abandoned),
+                    t_split: self.cell_split_latency(&plan.devices),
+                }
+            })
+            .collect()
+    }
+
+    /// Split-training latency (Eqn 38's maxima) of one cell's surviving
+    /// participants — the same pricing as [`Trainer::current_round_latency`]
+    /// restricted to the cell's id range. `0.0` for a cell with no
+    /// survivors (it gated nothing).
+    fn cell_split_latency(&self, range: &std::ops::Range<usize>) -> f64 {
+        match &self.last_snapshot {
+            Some(snap) => {
+                let mut devices = Vec::new();
+                let mut batch = Vec::new();
+                let mut cut = Vec::new();
+                for (k, &id) in snap.active.iter().enumerate() {
+                    if !range.contains(&id) || !self.participation[id] {
+                        continue;
+                    }
+                    devices.push(snap.devices[k].clone());
+                    batch.push(self.dec.batch[id]);
+                    cut.push(self.dec.cut[id]);
+                }
+                if devices.is_empty() {
+                    return 0.0;
+                }
+                let sub = Decisions { batch, cut };
+                round_latency(&self.profile, &devices, &self.cfg.server, &sub).t_split
+            }
+            None => {
+                let mut mask = vec![false; self.devices.len()];
+                let mut any = false;
+                for i in range.clone() {
+                    if self.participation[i] {
+                        mask[i] = true;
+                        any = true;
+                    }
+                }
+                if !any {
+                    return 0.0;
+                }
+                round_latency_subset(&self.profile, &self.devices, &self.cfg.server, &self.dec, &mask)
+                    .t_split
+            }
+        }
     }
 
     /// Number of devices currently in the fleet roster.

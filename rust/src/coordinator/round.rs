@@ -8,6 +8,17 @@
 //! data. The engine's buffer cache then packs each versioned tensor into a
 //! PJRT literal at most once per lane per version (DESIGN.md §8).
 //!
+//! Shard/root split (DESIGN.md §15): devices execute under their cell's
+//! [`super::shard::CellPlan`] — per-cell work queues over cell-affine
+//! lane slices — while the root coordinator streams results through a
+//! [`super::shard::RoundCollector`], applying each device's SGD update
+//! the moment it completes (order-irrelevant: updates are per-device
+//! disjoint) instead of buffering every gradient until round end. A
+//! failed round can therefore leave some devices already stepped; the
+//! round errors out and the session is not continuable past it, exactly
+//! as before — only the parameters left behind differ, never a completed
+//! round's numerics.
+//!
 //! Fault tolerance (DESIGN.md §13): with [`crate::fault`] armed, each
 //! device's step runs under `catch_unwind` with a per-round deadline and
 //! bounded retry-with-backoff; a device that exhausts its attempts is
@@ -20,7 +31,9 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use super::shard::{lock, RoundCollector, ESTIMATOR_SAMPLE_CAP};
 use super::Trainer;
+use crate::aggregation::merge_cell_aggregates;
 use crate::fault::{AttemptFault, RoundPlan};
 use crate::model::Tensor;
 use crate::runtime::{
@@ -73,12 +86,12 @@ struct DeviceWork {
 }
 
 /// Result of one device's round: full-model gradient + stats.
-struct DeviceResult {
-    idx: usize,
-    grads: Vec<Tensor>,
-    loss: f64,
-    correct: f64,
-    true_batch: u32,
+pub(super) struct DeviceResult {
+    pub idx: usize,
+    pub grads: Vec<Tensor>,
+    pub loss: f64,
+    pub correct: f64,
+    pub true_batch: u32,
 }
 
 /// Outcome of one device's round under fault tolerance.
@@ -201,12 +214,15 @@ impl Trainer {
         let common_lo = 2 * self.dec.l_c().min(params.n_blocks);
         let pv = params.version;
         let (common_version, sync_version) = (self.common_version, self.sync_version);
+        // The shared arcs snapshot the *round-start* fleet-identical
+        // values; the sequential path may have already streamed earlier
+        // devices' SGD updates into `self.params`, so the invariant is
+        // checked against the snapshot, not against device 0's live state.
         #[cfg(debug_assertions)]
         for (slot, t) in params.tensors.iter().enumerate() {
-            if shared[slot].is_some() {
+            if let Some(arc) = &shared[slot] {
                 debug_assert_eq!(
-                    t,
-                    &self.params[0].tensors[slot],
+                    t.data, arc.data,
                     "shared-set keying requires fleet-identical tensors (slot {slot})"
                 );
             }
@@ -348,52 +364,32 @@ impl Trainer {
         })
     }
 
-    fn apply_results(&mut self, results: Vec<DeviceResult>) -> RoundOutcome {
-        // Who completed this round and how many samples each processed —
-        // the participant set and Eqn-39 weights for partial aggregation
-        // under churn (full roster with uniform decisions otherwise).
-        self.round_participants.clear();
-        self.round_weights.clear();
-
-        if results.is_empty() {
+    /// Root phase of a round: split the collector's results along the
+    /// cell plan, merge the cell aggregates in fixed cell order
+    /// (bit-identical to the flat path by the merge-order contract,
+    /// DESIGN.md §15), install the round's participant set + Eqn-39
+    /// weights, and feed the estimator its bounded gradient sample.
+    fn finalize_round(&mut self, collector: RoundCollector) -> RoundOutcome {
+        let (cell_aggs, sample_grads, sample_batches) = collector.finish(&self.cells);
+        let merged = merge_cell_aggregates(&cell_aggs);
+        self.round_participants = merged.participants;
+        self.round_weights = merged.weights;
+        let n = self.round_participants.len();
+        if n == 0 {
             // Every participant dropped (churn-heavy rounds): nothing to
             // update, nothing to estimate — report the round explicitly
             // empty instead of a fake 0.0 loss. `fleet_synced` is left
             // untouched: no parameters moved, so nothing diverged.
             return RoundOutcome::empty();
         }
-
-        let n = results.len();
-        let lr = self.cfg.train.lr;
-        let mut loss_sum = 0.0;
-        let mut correct_sum = 0.0;
-        let mut batch_sum = 0u32;
-
-        let mut per_device_grads: Vec<Vec<Tensor>> = Vec::with_capacity(n);
-        let mut batches: Vec<u32> = Vec::with_capacity(n);
-        let mut sorted = results;
-        sorted.sort_by_key(|r| r.idx);
-
-        for r in sorted {
-            loss_sum += r.loss;
-            correct_sum += r.correct;
-            batch_sum += r.true_batch;
-            let nt = self.params[r.idx].tensors.len();
-            debug_assert_eq!(r.grads.len(), nt);
-            self.params[r.idx].sgd_update_range(0..nt, &r.grads, lr);
-            self.round_participants.push(r.idx);
-            self.round_weights.push(r.true_batch as f64);
-            batches.push(r.true_batch);
-            per_device_grads.push(r.grads);
-        }
         // Devices just diverged: per-device buffer keys from here on.
         self.fleet_synced = false;
         // Feed the Assumption-2 constants estimator (approach of [24]).
-        self.estimator.observe_round(&per_device_grads, &batches);
+        self.estimator.observe_round(&sample_grads, &sample_batches);
 
         RoundOutcome {
-            mean_loss: loss_sum / n as f64,
-            train_acc: correct_sum / batch_sum.max(1) as f64,
+            mean_loss: merged.loss_sum / n as f64,
+            train_acc: merged.correct_sum / merged.batch_sum.max(1) as f64,
             participants: n,
         }
     }
@@ -431,8 +427,9 @@ impl Trainer {
         self.round_abandoned = abandoned;
     }
 
-    /// Sequential round: steps a1–a5 for every participating device, then
-    /// SGD updates. All traffic routes to engine lane 0 — extra pool lanes
+    /// Sequential round: steps a1–a5 for every participating device in
+    /// ascending id order, each result streamed into the collector as it
+    /// lands. All traffic routes to engine lane 0 — extra pool lanes
     /// stay cold (no compiles, no buffer copies) for sequential sessions.
     /// With a scenario attached, offline members and mid-round dropouts
     /// are skipped; partial aggregation handles them in `post_round`.
@@ -443,7 +440,7 @@ impl Trainer {
         let (deadline_ms, backoff_ms) = self.fault_knobs();
         let n = self.n_devices();
         let shared = self.shared_param_arcs();
-        let mut results = Vec::with_capacity(n);
+        let mut collector = RoundCollector::new(self.cfg.train.lr, ESTIMATOR_SAMPLE_CAP);
         let mut abandoned = Vec::new();
         for i in 0..n {
             if !self.participation()[i] {
@@ -451,7 +448,10 @@ impl Trainer {
             }
             let work = self.prepare_device(i, 0, &shared)?;
             match &plan {
-                None => results.push(Self::exec_device_blocking(&self.engine, &work, None)?),
+                None => {
+                    let r = Self::exec_device_blocking(&self.engine, &work, None)?;
+                    collector.absorb(&mut self.params, r);
+                }
                 Some(p) => match run_device_with_faults(
                     &self.engine,
                     &work,
@@ -459,88 +459,133 @@ impl Trainer {
                     deadline_ms,
                     backoff_ms,
                 ) {
-                    DeviceRound::Done(r) => results.push(r),
+                    DeviceRound::Done(r) => collector.absorb(&mut self.params, r),
                     DeviceRound::Abandoned { idx } => abandoned.push(idx),
                 },
             }
         }
         self.finish_abandoned(abandoned);
-        Ok(self.apply_results(results))
+        Ok(self.finalize_round(collector))
     }
 
-    /// Actor round over a bounded worker pool: at most `engine.width()`
-    /// OS threads pull device work off a shared queue, so a 1000-device
-    /// round costs `width` threads, not 1000. Devices route to engine
-    /// lane `idx % width` (assigned at prepare time, so lane routing is
-    /// independent of which worker picks the work up), and results are
-    /// applied in device order, so numerics match the sequential mode
-    /// exactly (verified by `rust/tests/parity_modes.rs`).
+    /// Actor round over the cell plan: each cell's participating devices
+    /// queue in ascending order on the cell's own work queue, pulled by
+    /// one worker per lane of the cell's lane slice — at most
+    /// `engine.width()` OS threads in total at any cell count (excess
+    /// cells share lanes round-robin through one combined queue per
+    /// lane). The calling thread is the root coordinator: it streams
+    /// completed results off an mpsc channel into the round collector,
+    /// applying SGD in completion order (bitwise order-irrelevant — the
+    /// updates are per-device disjoint) so a 10k-device round never
+    /// buffers the fleet's gradients. Numerics match the sequential mode
+    /// exactly (`rust/tests/parity_modes.rs`,
+    /// `rust/tests/cells_parity.rs`).
     pub(crate) fn run_round_concurrent(&mut self) -> crate::Result<RoundOutcome> {
         self.begin_round();
         self.rounds_run += 1;
         let plan = self.inject_round_faults(self.rounds_run);
         let (deadline_ms, backoff_ms) = self.fault_knobs();
-        let n = self.n_devices();
-        let width = self.engine.width();
         let shared = self.shared_param_arcs();
-        let mut works = std::collections::VecDeque::with_capacity(n);
-        for i in 0..n {
-            if !self.participation()[i] {
-                continue;
+        let lr = self.cfg.train.lr;
+
+        // Per-cell work queues in fixed cell order. Cells sharing a lane
+        // (more cells than lanes) share one queue, their devices enqueued
+        // in cell order; `workers[q]` is the lane count of the queue's
+        // slice, so total worker threads never exceed the pool width.
+        let plans = self.cells.clone();
+        let mut queues: Vec<std::collections::VecDeque<DeviceWork>> = Vec::new();
+        let mut workers: Vec<usize> = Vec::new();
+        let mut queue_of_lane: std::collections::HashMap<usize, usize> = Default::default();
+        for p in &plans {
+            let qi = match queue_of_lane.get(&p.lanes.start) {
+                Some(&qi) => qi,
+                None => {
+                    queues.push(Default::default());
+                    workers.push(p.lanes.len());
+                    queue_of_lane.insert(p.lanes.start, queues.len() - 1);
+                    queues.len() - 1
+                }
+            };
+            for i in p.devices.clone() {
+                if !self.participation[i] {
+                    continue;
+                }
+                let lane = p.lane_of(i);
+                let work = self.prepare_device(i, lane, &shared)?;
+                queues[qi].push_back(work);
             }
-            works.push_back(self.prepare_device(i, i % width, &shared)?);
         }
-        let n_works = works.len();
-        let workers = width.min(n_works);
+        for (qi, q) in queues.iter().enumerate() {
+            workers[qi] = workers[qi].min(q.len());
+        }
+
         let engine = self.engine.clone();
         let plan_ref = &plan;
-        let queue = std::sync::Mutex::new(works);
-        let done: std::sync::Mutex<Vec<crate::Result<DeviceRound>>> =
-            std::sync::Mutex::new(Vec::with_capacity(n_works));
-        let panicked = std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..workers)
-                .map(|_| {
+        let queue_mutexes: Vec<std::sync::Mutex<std::collections::VecDeque<DeviceWork>>> =
+            queues.into_iter().map(std::sync::Mutex::new).collect();
+        let (tx, rx) = std::sync::mpsc::channel::<crate::Result<DeviceRound>>();
+        let mut collector = RoundCollector::new(lr, ESTIMATOR_SAMPLE_CAP);
+        let mut abandoned: Vec<usize> = Vec::new();
+        let mut round_err: Option<anyhow::Error> = None;
+        let params = &mut self.params;
+        std::thread::scope(|scope| {
+            for (qi, q) in queue_mutexes.iter().enumerate() {
+                for _ in 0..workers[qi] {
+                    let tx = tx.clone();
                     let engine = engine.clone();
-                    let queue = &queue;
-                    let done = &done;
                     scope.spawn(move || loop {
-                        let work = queue.lock().unwrap().pop_front();
+                        let work = lock(q).pop_front();
                         let Some(work) = work else { break };
-                        let res = match plan_ref {
-                            None => Self::exec_device_blocking(&engine, &work, None)
-                                .map(DeviceRound::Done),
-                            Some(p) => Ok(run_device_with_faults(
-                                &engine,
-                                &work,
-                                &p.attempts[work.idx],
-                                deadline_ms,
-                                backoff_ms,
-                            )),
-                        };
-                        done.lock().unwrap().push(res);
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join()).filter(|r| r.is_err()).count()
-        });
-        anyhow::ensure!(panicked == 0, "{panicked} device worker thread(s) panicked");
-        let mut results = Vec::with_capacity(n_works);
-        let mut abandoned = Vec::new();
-        for res in done
-            .into_inner()
-            .map_err(|_| anyhow::anyhow!("device result store poisoned"))?
-        {
-            match res? {
-                DeviceRound::Done(r) => results.push(r),
-                DeviceRound::Abandoned { idx } => abandoned.push(idx),
+                        // A genuine engine-path panic must not take the
+                        // whole process down mid-scope: surface it as the
+                        // round's error through the result channel (the
+                        // historical behaviour, minus the thread count).
+                        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || match plan_ref {
+                                None => Trainer::exec_device_blocking(&engine, &work, None)
+                                    .map(DeviceRound::Done),
+                                Some(p) => Ok(run_device_with_faults(
+                                    &engine,
+                                    &work,
+                                    &p.attempts[work.idx],
+                                    deadline_ms,
+                                    backoff_ms,
+                                )),
+                            },
+                        ))
+                        .unwrap_or_else(|_| {
+                            Err(anyhow::anyhow!("device worker panicked (device {})", work.idx))
+                        });
+                        if tx.send(res).is_err() {
+                            break;
+                        }
+                    });
+                }
             }
+            drop(tx);
+            // Root phase: stream results in completion order. On a device
+            // error, keep draining so the workers run to completion, then
+            // fail the round with the first error.
+            for res in rx {
+                match res {
+                    Ok(DeviceRound::Done(r)) => collector.absorb(params, r),
+                    Ok(DeviceRound::Abandoned { idx }) => abandoned.push(idx),
+                    Err(e) => {
+                        round_err.get_or_insert(e);
+                    }
+                }
+            }
+        });
+        if let Some(e) = round_err {
+            return Err(e);
         }
         self.finish_abandoned(abandoned);
-        Ok(self.apply_results(results))
+        Ok(self.finalize_round(collector))
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests may unwrap; the deny covers the round path
 mod tests {
     use super::RoundOutcome;
 

@@ -1,0 +1,269 @@
+//! Cell shards: the execution plan and streaming result collector behind
+//! hierarchical aggregation (DESIGN.md §15).
+//!
+//! A [`CellPlan`] binds one topology cell (a contiguous device-id range)
+//! to a dedicated slice of the engine-lane/worker pool. The concurrent
+//! round gives each cell its own work queue, so cells stop contending on
+//! one shared queue and a lane only ever packs buffers for one cell's
+//! devices (cell-affine COMMON/SYNC buffer scoping falls out of the lane
+//! partition — caches are per-lane).
+//!
+//! [`RoundCollector`] is the root coordinator's streaming sink: device
+//! results are absorbed in *completion* order — the SGD update touches
+//! only the finishing device's own parameters, so application order is
+//! bitwise-irrelevant — while the per-round statistics are re-ordered
+//! into canonical ascending-id form at [`RoundCollector::finish`]. That
+//! is what lets a 10k-device round run in bounded memory: gradients are
+//! dropped as they are applied instead of being buffered for the whole
+//! round, except for the bounded estimator sample below.
+
+use std::collections::BTreeMap;
+use std::ops::Range;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+use super::round::DeviceResult;
+use crate::aggregation::CellAggregate;
+use crate::model::{Params, Tensor};
+use crate::topology::{balanced_ranges, Topology};
+
+/// How many participants feed the Assumption-2 gradient-statistics
+/// estimator per round: the `ESTIMATOR_SAMPLE_CAP` smallest-id
+/// participants (a deterministic sample — independent of completion
+/// order). The estimator's cross-device variance needs all sampled
+/// gradients simultaneously, so an uncapped fleet would hold every
+/// gradient in memory (~700 KB/device: 7 GB at 10k devices). For fleets
+/// at or under the cap the sample is the full participant set and the
+/// estimate is bit-identical to the unsampled historical path.
+pub(crate) const ESTIMATOR_SAMPLE_CAP: usize = 256;
+
+/// One cell's execution plan: its device-id range and the engine-lane
+/// slice its workers drive. With `cells <= width` the lanes partition
+/// among cells (one worker per lane); with more cells than lanes, cells
+/// wrap onto lanes round-robin and each lane runs its cells' devices in
+/// cell order through a single worker — total worker threads never
+/// exceed the pool width either way.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) struct CellPlan {
+    /// Cell index (position in the topology's fixed cell order).
+    pub cell: usize,
+    /// Contiguous device-id range this cell owns.
+    pub devices: Range<usize>,
+    /// Engine-lane slice this cell's devices route to.
+    pub lanes: Range<usize>,
+}
+
+impl CellPlan {
+    /// Engine lane device `i` routes to. For the flat single-cell plan
+    /// this is exactly the historical `i % width`.
+    pub fn lane_of(&self, i: usize) -> usize {
+        debug_assert!(self.devices.contains(&i));
+        self.lanes.start + (i - self.devices.start) % self.lanes.len().max(1)
+    }
+}
+
+/// Build the round execution plan: no topology = one flat cell over the
+/// whole roster and the whole pool (bit- and thread-identical to the
+/// historical path); a topology partitions devices into balanced
+/// contiguous cells and lanes into cell-affine slices.
+pub(crate) fn plan_cells(
+    topology: Option<&Topology>,
+    n_devices: usize,
+    width: usize,
+) -> Vec<CellPlan> {
+    let width = width.max(1);
+    let Some(t) = topology else {
+        return vec![CellPlan { cell: 0, devices: 0..n_devices, lanes: 0..width }];
+    };
+    let c = t.resolve_cells(width);
+    let lane_slices: Vec<Range<usize>> = if c <= width {
+        balanced_ranges(width, c)
+    } else {
+        (0..c).map(|k| (k % width)..(k % width + 1)).collect()
+    };
+    Topology::cell_ranges(c, n_devices)
+        .into_iter()
+        .zip(lane_slices)
+        .enumerate()
+        .map(|(k, (devices, lanes))| CellPlan { cell: k, devices, lanes })
+        .collect()
+}
+
+/// Lock a round queue, recovering from poison: a worker that panicked
+/// mid-pop leaves the queue structurally intact (pop completed or not),
+/// and the round surfaces the failure through its own result channel —
+/// the same survivable-poison stance as `crate::serve::lock`.
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Streaming sink for a round's device results (the root coordinator's
+/// half of the shard/root split; see module docs for the memory
+/// contract).
+pub(crate) struct RoundCollector {
+    lr: f64,
+    cap: usize,
+    /// `(idx, loss, correct, true_batch)` per completed device, in
+    /// completion order; sorted ascending at `finish`.
+    meta: Vec<(usize, f64, f64, u32)>,
+    /// Gradients + batch of the `cap` smallest-id participants seen so
+    /// far (the estimator sample). Bounded: an insert past the cap evicts
+    /// the largest id, so the final content is independent of completion
+    /// order.
+    retained: BTreeMap<usize, (Vec<Tensor>, u32)>,
+}
+
+impl RoundCollector {
+    pub fn new(lr: f64, cap: usize) -> RoundCollector {
+        RoundCollector { lr, cap, meta: Vec::new(), retained: BTreeMap::new() }
+    }
+
+    /// Absorb one device's result: apply its SGD update immediately (the
+    /// update touches only `params[r.idx]`, so absorption order cannot
+    /// change any bit of the outcome) and keep the small per-device
+    /// statistics + the bounded estimator sample.
+    pub fn absorb(&mut self, params: &mut [Params], r: DeviceResult) {
+        let nt = params[r.idx].tensors.len();
+        debug_assert_eq!(r.grads.len(), nt);
+        params[r.idx].sgd_update_range(0..nt, &r.grads, self.lr);
+        self.meta.push((r.idx, r.loss, r.correct, r.true_batch));
+        if self.retained.len() < self.cap
+            || self.retained.last_key_value().map_or(false, |(&k, _)| k > r.idx)
+        {
+            self.retained.insert(r.idx, (r.grads, r.true_batch));
+            if self.retained.len() > self.cap {
+                self.retained.pop_last();
+            }
+        }
+    }
+
+    /// Close the round: per-cell aggregates in fixed cell order (each
+    /// cell's participants ascending) plus the estimator sample
+    /// `(per-device gradients, batches)` in ascending-id order.
+    #[allow(clippy::type_complexity)]
+    pub fn finish(self, plans: &[CellPlan]) -> (Vec<CellAggregate>, Vec<Vec<Tensor>>, Vec<u32>) {
+        let mut meta = self.meta;
+        meta.sort_by_key(|m| m.0);
+        let mut cells = Vec::with_capacity(plans.len());
+        let mut pos = 0usize;
+        for p in plans {
+            let mut agg = CellAggregate { cell: p.cell, ..CellAggregate::default() };
+            while pos < meta.len() && meta[pos].0 < p.devices.end {
+                let (idx, loss, correct, tb) = meta[pos];
+                debug_assert!(p.devices.contains(&idx), "result {idx} outside cell {}", p.cell);
+                agg.participants.push(idx);
+                agg.weights.push(tb as f64);
+                agg.losses.push(loss);
+                agg.corrects.push(correct);
+                agg.batches.push(tb);
+                pos += 1;
+            }
+            cells.push(agg);
+        }
+        debug_assert_eq!(pos, meta.len(), "results outside every cell range");
+        let mut grads = Vec::with_capacity(self.retained.len());
+        let mut batches = Vec::with_capacity(self.retained.len());
+        for (_, (g, b)) in self.retained {
+            grads.push(g);
+            batches.push(b);
+        }
+        (cells, grads, batches)
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests may unwrap; the deny covers the round path
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_plan_reproduces_historical_lane_routing() {
+        let plans = plan_cells(None, 10, 4);
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].devices, 0..10);
+        assert_eq!(plans[0].lanes, 0..4);
+        for i in 0..10 {
+            assert_eq!(plans[0].lane_of(i), i % 4);
+        }
+        // cells=1 is the same single-cell plan.
+        let one = plan_cells(Some(&Topology::with_cells(1)), 10, 4);
+        assert_eq!(one, plans);
+    }
+
+    #[test]
+    fn cells_partition_lanes_when_they_fit() {
+        let plans = plan_cells(Some(&Topology::with_cells(2)), 10, 4);
+        assert_eq!(plans[0].devices, 0..5);
+        assert_eq!(plans[1].devices, 5..10);
+        assert_eq!(plans[0].lanes, 0..2);
+        assert_eq!(plans[1].lanes, 2..4);
+        // Lane routing stays inside the cell's slice.
+        assert_eq!(plans[1].lane_of(5), 2);
+        assert_eq!(plans[1].lane_of(6), 3);
+        assert_eq!(plans[1].lane_of(7), 2);
+    }
+
+    #[test]
+    fn excess_cells_wrap_lanes_round_robin() {
+        let plans = plan_cells(Some(&Topology::with_cells(5)), 10, 2);
+        let total_workers: usize = {
+            // One worker per distinct lane slice start: must not exceed
+            // the pool width.
+            let mut starts: Vec<usize> = plans.iter().map(|p| p.lanes.start).collect();
+            starts.sort_unstable();
+            starts.dedup();
+            starts.len()
+        };
+        assert_eq!(total_workers, 2);
+        assert_eq!(plans[0].lanes, 0..1);
+        assert_eq!(plans[1].lanes, 1..2);
+        assert_eq!(plans[2].lanes, 0..1);
+        // Auto sizing: one cell per lane.
+        let auto = plan_cells(Some(&Topology::auto()), 10, 2);
+        assert_eq!(auto.len(), 2);
+    }
+
+    #[test]
+    fn collector_sample_is_completion_order_independent() {
+        use crate::model::Tensor;
+        let mk_params = |n: usize| -> Vec<Params> {
+            (0..n)
+                .map(|_| Params {
+                    tensors: vec![Tensor { shape: vec![2], data: vec![1.0, 2.0] }],
+                    n_blocks: 1,
+                    version: 0,
+                })
+                .collect()
+        };
+        let result = |idx: usize| DeviceResult {
+            idx,
+            grads: vec![Tensor { shape: vec![2], data: vec![0.5, 0.5] }],
+            loss: idx as f64,
+            correct: 1.0,
+            true_batch: 2,
+        };
+        let run = |order: &[usize]| {
+            let mut params = mk_params(6);
+            let mut c = RoundCollector::new(0.1, 3);
+            for &i in order {
+                c.absorb(&mut params, result(i));
+            }
+            let plans = plan_cells(Some(&Topology::with_cells(2)), 6, 2);
+            let (cells, grads, batches) = c.finish(&plans);
+            (params, cells, grads, batches)
+        };
+        let (pa, ca, ga, ba) = run(&[0, 1, 2, 3, 4, 5]);
+        let (pb, cb, gb, bb) = run(&[5, 2, 4, 0, 3, 1]);
+        assert_eq!(ca, cb);
+        assert_eq!(ga, gb);
+        assert_eq!(ba, bb);
+        // The sample is the 3 smallest ids regardless of arrival order.
+        assert_eq!(ga.len(), 3);
+        assert_eq!(ba, vec![2, 2, 2]);
+        for (x, y) in pa.iter().zip(&pb) {
+            assert_eq!(x.tensors[0].data, y.tensors[0].data);
+        }
+        // Per-cell split respects the fixed cell order.
+        assert_eq!(ca[0].participants, vec![0, 1, 2]);
+        assert_eq!(ca[1].participants, vec![3, 4, 5]);
+    }
+}

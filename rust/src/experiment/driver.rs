@@ -313,6 +313,7 @@ mod tests {
             fleet: None,
             abandoned: vec![],
             quarantined: vec![],
+            cells: vec![],
         }
     }
 

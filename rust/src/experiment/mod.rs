@@ -58,6 +58,7 @@ use crate::coordinator::Trainer;
 use crate::fault::{FaultPreset, FaultSpec};
 use crate::model::Manifest;
 use crate::scenario::{Scenario, ScenarioPreset};
+use crate::topology::Topology;
 
 /// Named experiment presets (the validated entry points into [`Config`]).
 ///
@@ -125,6 +126,7 @@ impl Experiment {
             rounds_override: None,
             pool_override: None,
             backend_override: None,
+            topology_override: None,
         }
     }
 }
@@ -151,6 +153,12 @@ pub struct ExperimentBuilder {
     /// only), so it conflicts with [`ExperimentBuilder::resume_from`] —
     /// the checkpoint's embedded backend is authoritative there.
     backend_override: Option<BackendKind>,
+    /// Explicit `.topology(..)` / `.cells(..)` value. Topology is
+    /// bit-neutral (`rust/tests/cells_parity.rs`), but it reshapes
+    /// per-cell reporting and lane affinity mid-run, so it conflicts with
+    /// [`ExperimentBuilder::resume_from`] — the checkpoint's embedded
+    /// topology is authoritative there.
+    topology_override: Option<Topology>,
 }
 
 impl ExperimentBuilder {
@@ -289,6 +297,27 @@ impl ExperimentBuilder {
         self.cfg.backend = kind;
         self.backend_override = Some(kind);
         self
+    }
+
+    /// Hierarchical aggregation topology (DESIGN.md §15): partition the
+    /// fleet into cells, each running on its own engine-lane slice and
+    /// producing a weighted partial aggregate that the root merges in
+    /// fixed cell order. Numerics are bit-identical to the flat roster at
+    /// any cell count (`rust/tests/cells_parity.rs`); cells change
+    /// wall-clock shape and per-cell reporting only.
+    pub fn topology(mut self, t: Topology) -> Self {
+        self.cfg.topology = Some(t);
+        self.topology_override = Some(t);
+        self
+    }
+
+    /// [`ExperimentBuilder::topology`] shorthand: `n` contiguous cells
+    /// (0 = auto: one cell per engine lane).
+    pub fn cells(self, n: usize) -> Self {
+        if n == 0 {
+            return self.topology(Topology::auto());
+        }
+        self.topology(Topology::with_cells(n))
     }
 
     /// Attach a dynamic-fleet scenario (channel drift, churn, stragglers;
@@ -496,6 +525,14 @@ impl ExperimentBuilder {
                  backend '{}' is authoritative; numerics differ across backends)",
                 cfg.backend.as_str()
             );
+            // Likewise the embedded topology: mid-run cell reshapes would
+            // change per-cell reporting and lane affinity under the same
+            // session id, so a resume keeps the producing topology.
+            anyhow::ensure!(
+                self.topology_override.is_none(),
+                "topology()/cells() conflicts with resume_from() (the checkpoint's \
+                 embedded topology is authoritative; resume, then reshape in a fresh run)"
+            );
             // New checkpoints embed a concrete backend. Pre-backend
             // checkpoints load as `Auto` and all ran PJRT, so pin them to
             // PJRT outright — auto-resolving by artifact presence could
@@ -646,6 +683,7 @@ mod tests {
             .eval_every(2)
             .agg_interval(3)
             .engine_pool(2)
+            .cells(3)
             .tune(|c| c.train.epsilon = 0.4)
             .build_config()
             .unwrap();
@@ -659,6 +697,15 @@ mod tests {
         assert_eq!(cfg.train.eval_every, 2);
         assert_eq!(cfg.train.agg_interval, 3);
         assert_eq!(cfg.engine_pool, 2);
+        assert_eq!(cfg.topology, Some(Topology::with_cells(3)));
         assert!((cfg.train.epsilon - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cells_zero_is_auto_topology() {
+        let cfg = Experiment::builder().cells(0).build_config().unwrap();
+        assert_eq!(cfg.topology, Some(Topology::auto()));
+        // resolve_cells then tracks the pool width at session build time.
+        assert_eq!(cfg.topology.unwrap().resolve_cells(4), 4);
     }
 }

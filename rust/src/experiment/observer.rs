@@ -240,6 +240,7 @@ mod tests {
             fleet: None,
             abandoned: vec![],
             quarantined: vec![],
+            cells: vec![],
         }
     }
 

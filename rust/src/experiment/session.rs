@@ -4,7 +4,7 @@ use std::path::{Path, PathBuf};
 
 use crate::coordinator::{RoundOutcome, Trainer};
 use crate::latency::{Decisions, RoundLatency};
-use crate::metrics::{History, Record};
+use crate::metrics::{CellStats, History, Record};
 use crate::runtime::EngineStats;
 use crate::scenario::FleetSnapshot;
 
@@ -40,6 +40,9 @@ pub struct RoundReport {
     /// Devices quarantined by the fault layer as of this round
     /// (cumulative; empty without fault injection).
     pub quarantined: Vec<usize>,
+    /// Per-cell round stats under a hierarchical topology, in fixed cell
+    /// order (DESIGN.md §15). Empty on flat-roster runs.
+    pub cells: Vec<CellStats>,
 }
 
 impl RoundReport {
@@ -95,6 +98,11 @@ impl RoundReport {
                     .set("quarantined", Json::from_usizes(&self.quarantined));
             }
             j.set("fleet", f);
+        }
+        // The cells block appears only under a hierarchical topology, so
+        // flat-roster reports keep their historical byte layout.
+        if !self.cells.is_empty() {
+            j.set("cells", Json::Arr(self.cells.iter().map(CellStats::to_json).collect()));
         }
         j
     }
@@ -257,6 +265,7 @@ impl Session {
             fleet: self.trainer.take_snapshot(),
             abandoned: self.trainer.last_abandoned().to_vec(),
             quarantined: self.trainer.quarantined_devices(),
+            cells: post.cells,
         };
         for obs in &mut self.observers {
             obs.on_round(&report);

@@ -51,6 +51,7 @@ pub mod rng;
 pub mod runtime;
 pub mod scenario;
 pub mod serve;
+pub mod topology;
 pub mod util;
 
 pub use config::Config;

@@ -6,7 +6,7 @@
 //!                [--rounds N] [--devices N] [--seed S] [--non-iid]
 //!                [--backend auto|native|pjrt]
 //!                [--scenario static|drifting-channels|diurnal|churn-heavy|mega-fleet|spec.json]
-//!                [--faults flaky|chaos|spec.json]
+//!                [--faults flaky|chaos|spec.json] [--cells N]
 //!                [--artifacts DIR] [--out history.csv] [--fleet-out trace.csv]
 //!                [--concurrent] [--pool N] [--early-stop] [--progress]
 //!                [--checkpoint-every N] [--checkpoint-dir D] [--checkpoint-keep K]
@@ -105,9 +105,10 @@ fn cmd_train(args: &Args) -> hasfl::Result<()> {
     // (`--rounds`) and runtime-only knobs (`--pool`, `--concurrent`,
     // observers) apply on top.
     if args.get("resume").is_some() {
-        for flag in
-            ["config", "preset", "strategy", "devices", "seed", "scenario", "faults", "backend"]
-        {
+        for flag in [
+            "config", "preset", "strategy", "devices", "seed", "scenario", "faults", "backend",
+            "cells",
+        ] {
             anyhow::ensure!(
                 args.get(flag).is_none(),
                 "--{flag} conflicts with --resume (the checkpoint's embedded config is \
@@ -147,6 +148,12 @@ fn cmd_train(args: &Args) -> hasfl::Result<()> {
     }
     if let Some(s) = args.get("scenario") {
         builder = builder.scenario(scenario_arg(s)?);
+    }
+    // Hierarchical cell topology (DESIGN.md §15): bit-identical numerics
+    // at any cell count, per-cell reporting and lane affinity on top.
+    // `--cells 0` = auto (one cell per engine lane).
+    if let Some(c) = args.get_opt::<usize>("cells")? {
+        builder = builder.cells(c);
     }
     // Seeded fault injection + graceful degradation (DESIGN.md §13).
     if let Some(f) = args.get("faults") {
@@ -195,8 +202,12 @@ fn cmd_train(args: &Args) -> hasfl::Result<()> {
     let mut session = builder.build()?;
     {
         let cfg = session.config();
+        let cells = match &cfg.topology {
+            Some(t) => format!(" cells={}", t.resolve_cells(session.engine_width())),
+            None => String::new(),
+        };
         eprintln!(
-            "training: N={} rounds={} strategy={} partition={} backend={}",
+            "training: N={} rounds={} strategy={} partition={} backend={}{cells}",
             cfg.fleet.n_devices,
             cfg.train.rounds,
             cfg.strategy.as_str(),
@@ -204,7 +215,18 @@ fn cmd_train(args: &Args) -> hasfl::Result<()> {
             cfg.backend.as_str()
         );
     }
-    session.run_to_completion()?;
+    // The run_to_completion loop, kept inline so the last round's per-cell
+    // stats stay in hand for the end-of-run summary below.
+    let mut last_cells = Vec::new();
+    while !session.is_done() {
+        let report = session.step()?;
+        if !report.cells.is_empty() {
+            last_cells = report.cells;
+        }
+        if session.stop_requested() {
+            break;
+        }
+    }
 
     if let Some(&(round, time, acc)) = session.history().eval_points().last() {
         eprintln!(
@@ -217,6 +239,15 @@ fn cmd_train(args: &Args) -> hasfl::Result<()> {
         session.history().converged(CONVERGENCE_ACC_THRESHOLD, CONVERGENCE_WINDOW)
     {
         eprintln!("converged @ round {round}: {:.2}% after {time:.1}s", acc * 100.0);
+    }
+    if !last_cells.is_empty() {
+        eprintln!("cells (final round):");
+        for c in &last_cells {
+            eprintln!(
+                "  cell {}: {}/{} participants, {} abandoned, t_split {:.4}s",
+                c.cell, c.participants, c.devices, c.abandoned, c.t_split
+            );
+        }
     }
     let stats = session.engine_stats()?;
     eprintln!("engine: {}", stats.summary());
@@ -496,6 +527,11 @@ fn cmd_bench_diff(args: &Args) -> hasfl::Result<()> {
     };
     let base = load(base_path)?;
     let head = load(head_path)?;
+    // Environment skew (different pool width, core count, backend, ...)
+    // makes latency deltas apples-to-oranges: warn loudly, never gate.
+    for w in hasfl::metrics::bench_meta_mismatches(&base, &head) {
+        eprintln!("WARNING: bench environments differ — {w}");
+    }
     let deltas = hasfl::metrics::bench_diff(&base, &head);
     anyhow::ensure!(
         !deltas.is_empty(),

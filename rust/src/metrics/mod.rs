@@ -340,6 +340,38 @@ impl CsvTable {
     }
 }
 
+/// Per-cell execution stats of one engine-backed round under a
+/// hierarchical topology (`Config::topology`, DESIGN.md §15): the cell's
+/// membership, how many of its devices completed/were abandoned, and the
+/// split-training latency its own stragglers gated. Carried by
+/// `RoundReport::cells` (empty on flat-roster runs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellStats {
+    /// Cell index in the topology's fixed cell order.
+    pub cell: usize,
+    /// Devices in the cell's contiguous id range this round.
+    pub devices: usize,
+    /// Cell devices that completed the round.
+    pub participants: usize,
+    /// Cell devices abandoned by the fault layer this round.
+    pub abandoned: usize,
+    /// Eqn-38 split-training latency over the cell's survivors (seconds).
+    pub t_split: f64,
+}
+
+impl CellStats {
+    /// JSON form used by `RoundReport::to_json` and the serve layer.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("cell", Json::Num(self.cell as f64))
+            .set("devices", Json::Num(self.devices as f64))
+            .set("participants", Json::Num(self.participants as f64))
+            .set("abandoned", Json::Num(self.abandoned as f64))
+            .set("t_split", Json::Num(self.t_split));
+        j
+    }
+}
+
 /// One numeric leaf shared by two benchmark JSON documents (see
 /// [`bench_diff`]).
 #[derive(Debug, Clone, PartialEq)]
@@ -399,6 +431,51 @@ pub fn bench_regressions(deltas: &[BenchDelta], max_regress_pct: f64) -> Vec<&Be
             (leaf.starts_with("p50") || leaf.starts_with("p95")) && d.delta_pct > max_regress_pct
         })
         .collect()
+}
+
+/// Compare the `meta` blocks of two benchmark JSON documents and report
+/// every leaf where the two runs disagree (plus leaves present on only
+/// one side). Bench numbers are only comparable like-for-like: a p95
+/// regression measured on a different `pool_width` or `host_cores` is a
+/// hardware delta, not a code delta, so `hasfl bench-diff` prints these
+/// as warnings instead of gating on them.
+pub fn bench_meta_mismatches(base: &Json, head: &Json) -> Vec<String> {
+    fn leaf(j: &Json) -> Option<String> {
+        match j {
+            Json::Num(n) => Some(format!("{n}")),
+            Json::Str(s) => Some(s.clone()),
+            Json::Bool(b) => Some(format!("{b}")),
+            _ => None,
+        }
+    }
+    let mut out = Vec::new();
+    let (Some(Json::Obj(b)), Some(Json::Obj(h))) = (base.get("meta"), head.get("meta")) else {
+        // One side predates bench metadata (or neither records it):
+        // nothing to compare, and bench-diff must keep working across
+        // that skew.
+        if base.get("meta").is_some() != head.get("meta").is_some() {
+            out.push("meta: recorded on only one side".to_string());
+        }
+        return out;
+    };
+    for (key, bv) in b {
+        match h.get(key) {
+            None => out.push(format!("meta.{key}: base {} vs head <absent>", leaf(bv).unwrap_or_default())),
+            Some(hv) => {
+                if let (Some(bs), Some(hs)) = (leaf(bv), leaf(hv)) {
+                    if bs != hs {
+                        out.push(format!("meta.{key}: base {bs} vs head {hs}"));
+                    }
+                }
+            }
+        }
+    }
+    for (key, hv) in h {
+        if !b.contains_key(key) {
+            out.push(format!("meta.{key}: base <absent> vs head {}", leaf(hv).unwrap_or_default()));
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -549,5 +626,51 @@ mod tests {
         let head = Json::parse(r#"{"p95_ms": 5.0}"#).unwrap();
         let deltas = bench_diff(&base, &head);
         assert_eq!(deltas[0].delta_pct, 0.0);
+    }
+
+    #[test]
+    fn bench_meta_mismatches_flag_environment_skew() {
+        let base = Json::parse(
+            r#"{"meta": {"pool_width": 4, "host_cores": 8, "backend": "native"},
+                "latency": {"p95_ms": 20.0}}"#,
+        )
+        .unwrap();
+        let same = bench_meta_mismatches(&base, &base);
+        assert!(same.is_empty(), "{same:?}");
+
+        let head = Json::parse(
+            r#"{"meta": {"pool_width": 2, "host_cores": 8, "os": "linux"},
+                "latency": {"p95_ms": 20.0}}"#,
+        )
+        .unwrap();
+        let mismatches = bench_meta_mismatches(&base, &head);
+        assert!(mismatches.iter().any(|m| m.contains("meta.pool_width") && m.contains("4") && m.contains("2")), "{mismatches:?}");
+        assert!(mismatches.iter().any(|m| m.contains("meta.backend") && m.contains("<absent>")), "{mismatches:?}");
+        assert!(mismatches.iter().any(|m| m.contains("meta.os") && m.contains("<absent>")), "{mismatches:?}");
+        assert!(!mismatches.iter().any(|m| m.contains("host_cores")), "{mismatches:?}");
+
+        // Never gates: meta leaves are not p50/p95 leaves.
+        let deltas = bench_diff(&base, &head);
+        assert!(bench_regressions(&deltas, 0.0).is_empty());
+    }
+
+    #[test]
+    fn bench_meta_mismatches_tolerate_pre_metadata_documents() {
+        let old = Json::parse(r#"{"latency": {"p95_ms": 20.0}}"#).unwrap();
+        let new = Json::parse(r#"{"meta": {"pool_width": 4}, "latency": {"p95_ms": 20.0}}"#).unwrap();
+        assert!(bench_meta_mismatches(&old, &old).is_empty());
+        let skew = bench_meta_mismatches(&old, &new);
+        assert_eq!(skew, vec!["meta: recorded on only one side".to_string()]);
+    }
+
+    #[test]
+    fn cell_stats_json_shape() {
+        let c = CellStats { cell: 2, devices: 5, participants: 4, abandoned: 1, t_split: 0.75 };
+        let j = c.to_json();
+        assert_eq!(j.get("cell"), Some(&Json::Num(2.0)));
+        assert_eq!(j.get("devices"), Some(&Json::Num(5.0)));
+        assert_eq!(j.get("participants"), Some(&Json::Num(4.0)));
+        assert_eq!(j.get("abandoned"), Some(&Json::Num(1.0)));
+        assert_eq!(j.get("t_split"), Some(&Json::Num(0.75)));
     }
 }

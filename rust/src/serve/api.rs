@@ -46,9 +46,15 @@ pub fn info_json(kind: BackendKind, artifacts: &Path) -> crate::Result<Json> {
         .set("artifacts", Json::Num(m.artifacts.len() as f64))
         .set("hlo_bytes", Json::Num(hlo_bytes as f64));
 
+    // Host block: environment facts probes and bench tooling compare
+    // across machines (bench-diff flags skew on these).
+    let mut host = Json::obj();
+    host.set("host_cores", Json::Num(crate::util::host_cores() as f64));
+
     let mut j = Json::obj();
     j.set("service", Json::Str("hasfl".into()))
         .set("backend", Json::Str(kind.as_str().into()))
+        .set("host", host)
         .set("model", model);
     match engine_smoke(kind, artifacts, &m) {
         Ok(stats) => {
@@ -107,6 +113,9 @@ mod tests {
         assert_eq!(model.get("name").unwrap().as_str().unwrap(), "splitcnn8");
         assert_eq!(model.get("classes").unwrap().as_usize().unwrap(), 10);
         assert!(!model.get("cuts").unwrap().as_arr().unwrap().is_empty());
+        // Host facts for like-for-like bench comparisons.
+        let host = j.get("host").unwrap();
+        assert!(host.get("host_cores").unwrap().as_usize().unwrap() >= 1);
         // The native backend always initializes, so the engine block is
         // present with one warmed lane.
         let engine = j.get("engine").unwrap();

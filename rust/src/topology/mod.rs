@@ -1,0 +1,200 @@
+//! Fleet topology: deterministic partition of the roster into cells.
+//!
+//! A [`Topology`] splits the device roster into `cells` contiguous,
+//! balanced id ranges. Each cell owns a coordinator shard (see
+//! `crate::coordinator`): its devices run on a dedicated slice of the
+//! engine-lane/worker pool and produce one weighted partial aggregate,
+//! which the root coordinator merges in fixed cell order. Because the
+//! ranges are contiguous and ascending, concatenating the per-cell
+//! participant lists in cell order reproduces the flat path's globally
+//! ascending participant order exactly — the merged parameters are
+//! bit-identical to the single-roster path at any cell count
+//! (`rust/tests/cells_parity.rs`, DESIGN.md §15).
+//!
+//! The partition is a pure function of `(cells, n_devices)`: no RNG, no
+//! host state. `cells = 0` means auto — one cell per engine-pool lane,
+//! so the sharding matches the execution parallelism actually available.
+
+use crate::util::Json;
+
+/// How device ids map to cells. Only contiguous assignment exists today;
+/// the enum keeps the config format open for hashed/affinity assignments
+/// without a format break.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Assignment {
+    /// Balanced contiguous id ranges: cell `k` of `C` over `N` devices
+    /// holds `N/C` devices, the first `N mod C` cells one extra.
+    #[default]
+    Contiguous,
+}
+
+impl Assignment {
+    /// Canonical lowercase name — the inverse of [`Assignment::parse`].
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Assignment::Contiguous => "contiguous",
+        }
+    }
+
+    /// Parse an assignment name (contiguous).
+    pub fn parse(s: &str) -> crate::Result<Assignment> {
+        match s {
+            "contiguous" => Ok(Assignment::Contiguous),
+            _ => anyhow::bail!("unknown cell assignment '{s}'"),
+        }
+    }
+}
+
+/// Hierarchical-aggregation topology carried by
+/// [`crate::config::Config::topology`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    /// Number of cells. `0` = auto: one cell per engine-pool lane
+    /// (resolved against the pool width at session build time).
+    pub cells: usize,
+    /// Device-id → cell mapping scheme.
+    pub assignment: Assignment,
+}
+
+impl Topology {
+    /// A fixed cell count under contiguous assignment.
+    pub fn with_cells(cells: usize) -> Topology {
+        Topology { cells, assignment: Assignment::Contiguous }
+    }
+
+    /// Auto-sized topology: cell count tracks the engine-pool width.
+    pub fn auto() -> Topology {
+        Topology::with_cells(0)
+    }
+
+    /// Resolve the configured cell count against the engine pool.
+    /// `0` (auto) becomes one cell per pool lane; explicit counts pass
+    /// through unclamped (cells beyond the roster are simply empty — the
+    /// merge handles them, `crate::aggregation::merge_cell_aggregates`).
+    pub fn resolve_cells(&self, pool_width: usize) -> usize {
+        if self.cells > 0 {
+            self.cells
+        } else {
+            pool_width.max(1)
+        }
+    }
+
+    /// Contiguous device-id ranges of each cell, in cell order.
+    pub fn cell_ranges(cells: usize, n_devices: usize) -> Vec<std::ops::Range<usize>> {
+        balanced_ranges(n_devices, cells)
+    }
+
+    /// The cell owning device `i` under `cells` cells over `n_devices`.
+    pub fn cell_of(i: usize, cells: usize, n_devices: usize) -> usize {
+        debug_assert!(i < n_devices);
+        let c = cells.max(1);
+        let base = n_devices / c;
+        let rem = n_devices % c;
+        let boundary = rem * (base + 1);
+        if i < boundary {
+            i / (base + 1)
+        } else {
+            rem + (i - boundary) / base.max(1)
+        }
+    }
+
+    /// Serialize to the JSON form accepted by [`Topology::from_json`].
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("cells", Json::Num(self.cells as f64))
+            .set("assignment", Json::Str(self.assignment.as_str().into()));
+        j
+    }
+
+    /// Decode a topology. `assignment` is optional (defaults to
+    /// contiguous) so hand-written configs can say just `{"cells": 8}`.
+    pub fn from_json(j: &Json) -> crate::Result<Topology> {
+        let cells = j.req("cells").and_then(|v| v.as_usize())?;
+        let assignment = match j.get("assignment") {
+            Some(v) => Assignment::parse(v.as_str()?)?,
+            None => Assignment::Contiguous,
+        };
+        Ok(Topology { cells, assignment })
+    }
+}
+
+/// Split `0..n` into `k` balanced contiguous ranges (the first `n mod k`
+/// ranges get one extra element; ranges beyond `n` come out empty). The
+/// shared partition primitive for device→cell and lane→cell slicing.
+pub fn balanced_ranges(n: usize, k: usize) -> Vec<std::ops::Range<usize>> {
+    let k = k.max(1);
+    let base = n / k;
+    let rem = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0usize;
+    for i in 0..k {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_ranges_cover_and_are_contiguous() {
+        for n in [0usize, 1, 4, 7, 10, 100] {
+            for k in [1usize, 2, 3, 8, 17] {
+                let ranges = balanced_ranges(n, k);
+                assert_eq!(ranges.len(), k);
+                let mut next = 0usize;
+                for r in &ranges {
+                    assert_eq!(r.start, next, "contiguous over n={n} k={k}");
+                    next = r.end;
+                }
+                assert_eq!(next, n, "covering over n={n} k={k}");
+                // Balanced: sizes differ by at most one.
+                let sizes: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+                let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(hi - lo <= 1, "balanced over n={n} k={k}: {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn cell_of_matches_cell_ranges() {
+        for n in [1usize, 5, 12, 37] {
+            for c in [1usize, 2, 3, 5, 40] {
+                let ranges = Topology::cell_ranges(c, n);
+                for i in 0..n {
+                    let k = Topology::cell_of(i, c, n);
+                    assert!(ranges[k].contains(&i), "device {i} n={n} c={c} -> cell {k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn auto_resolves_to_pool_width() {
+        assert_eq!(Topology::auto().resolve_cells(4), 4);
+        assert_eq!(Topology::auto().resolve_cells(0), 1);
+        assert_eq!(Topology::with_cells(3).resolve_cells(8), 3);
+        // Explicit counts beyond the pool pass through unclamped.
+        assert_eq!(Topology::with_cells(12).resolve_cells(2), 12);
+    }
+
+    #[test]
+    fn topology_roundtrips_through_json() {
+        for t in [Topology::auto(), Topology::with_cells(1), Topology::with_cells(8)] {
+            let back = Topology::from_json(&Json::parse(&t.to_json().dump()).unwrap()).unwrap();
+            assert_eq!(back, t);
+        }
+    }
+
+    #[test]
+    fn assignment_defaults_to_contiguous() {
+        let j = Json::parse("{\"cells\": 4}").unwrap();
+        let t = Topology::from_json(&j).unwrap();
+        assert_eq!(t, Topology::with_cells(4));
+        assert!(Assignment::parse("ring").is_err());
+        assert_eq!(Assignment::parse("contiguous").unwrap(), Assignment::Contiguous);
+    }
+}

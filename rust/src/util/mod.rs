@@ -7,3 +7,11 @@ pub mod json;
 
 pub use cli::Args;
 pub use json::Json;
+
+/// Logical CPU cores visible to this process (1 when the platform cannot
+/// say). Recorded in bench metadata (`BENCH_*.json: meta.host_cores`) and
+/// `info --json` so `hasfl bench-diff` can flag cross-machine comparisons
+/// as environment skew rather than code regressions.
+pub fn host_cores() -> usize {
+    std::thread::available_parallelism().map_or(1, |n| n.get())
+}

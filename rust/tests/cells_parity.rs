@@ -1,0 +1,284 @@
+//! Bit-identity guarantee for hierarchical (cell-sharded) aggregation
+//! (DESIGN.md §15): a fleet partitioned into cells — each cell training
+//! on its own engine-lane slice and producing a weighted partial
+//! aggregate that the root merges in fixed cell order — must produce
+//! bit-identical `Params`, `RoundReport` streams, and history to the
+//! historical flat roster, at every cell count, in sequential and
+//! concurrent modes, under churn/dropout scenarios, under fault
+//! injection, and across a checkpoint/resume boundary.
+//!
+//! Runs on the resolved backend (PJRT with artifacts, native without) and
+//! never skips.
+
+use std::path::{Path, PathBuf};
+
+use hasfl::checkpoint::CheckpointObserver;
+use hasfl::config::{Config, StrategyKind};
+use hasfl::experiment::{Experiment, RoundReport};
+use hasfl::fault::FaultPreset;
+use hasfl::metrics::History;
+use hasfl::model::Params;
+use hasfl::scenario::{Scenario, ScenarioPreset};
+use hasfl::topology::Topology;
+
+/// Artifacts directory handed to the builder. The session resolves its
+/// backend from `HASFL_BACKEND` / auto, and the native backend keeps this
+/// suite fully runnable with no artifacts on disk — engine-backed tests
+/// never skip (`HASFL_REQUIRE_ENGINE=1` turns any regression of that into
+/// a hard failure, see `hasfl::backend::skip_engine_test`).
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hasfl_cells_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Six devices so cell counts 1/3/6/8 exercise multi-device cells,
+/// single-device cells, and structurally empty cells (8 cells over 6
+/// devices) in one fleet.
+fn cells_config(seed: u64) -> Config {
+    let mut cfg = Config::small();
+    cfg.fleet.n_devices = 6;
+    cfg.seed = seed;
+    cfg.train.rounds = 6;
+    cfg.train.agg_interval = 3;
+    cfg.train.eval_every = 3;
+    cfg.train.train_samples = 256;
+    cfg.train.test_samples = 64;
+    cfg.train.batch_cap = 16;
+    cfg.strategy = StrategyKind::Fixed;
+    cfg.fixed_batch = 8;
+    cfg.fixed_cut = 3;
+    cfg
+}
+
+type RunResult = (Vec<RoundReport>, History, Vec<Params>);
+
+/// Run one (topology, pool, mode) combination to completion.
+fn run_with(
+    dir: &Path,
+    cfg: Config,
+    cells: Option<usize>,
+    pool: usize,
+    concurrent: bool,
+    scenario: Option<Scenario>,
+    faults: Option<FaultPreset>,
+) -> RunResult {
+    let mut builder = Experiment::builder()
+        .config(cfg)
+        .engine_pool(pool)
+        .concurrent(concurrent)
+        .artifacts(dir);
+    if let Some(n) = cells {
+        builder = builder.cells(n);
+    }
+    if let Some(s) = scenario {
+        builder = builder.scenario(s);
+    }
+    if let Some(f) = faults {
+        builder = builder.faults_preset(f);
+    }
+    let mut session = builder.build().expect("session");
+    let mut reports = Vec::new();
+    while !session.is_done() {
+        reports.push(session.step().expect("step"));
+    }
+    let params = session.trainer().params().to_vec();
+    let history = session.finish().expect("finish");
+    (reports, history, params)
+}
+
+/// Everything except the per-cell stats block must be bit-identical (the
+/// cells block legitimately differs across topologies: a flat run has no
+/// cells, a 3-cell run has three).
+fn assert_reports_identical(a: &[RoundReport], b: &[RoundReport], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: round count");
+    for (ra, rb) in a.iter().zip(b) {
+        assert_eq!(ra.round, rb.round, "{what}");
+        assert_eq!(ra.outcome.mean_loss, rb.outcome.mean_loss, "{what}: round {}", ra.round);
+        assert_eq!(ra.outcome.train_acc, rb.outcome.train_acc, "{what}: round {}", ra.round);
+        assert_eq!(
+            ra.outcome.participants,
+            rb.outcome.participants,
+            "{what}: round {}",
+            ra.round
+        );
+        assert_eq!(ra.sim_time, rb.sim_time, "{what}: round {}", ra.round);
+        assert_eq!(ra.aggregated, rb.aggregated, "{what}: round {}", ra.round);
+        assert_eq!(ra.reoptimized, rb.reoptimized, "{what}: round {}", ra.round);
+        assert_eq!(ra.test_acc, rb.test_acc, "{what}: round {}", ra.round);
+        assert_eq!(ra.decisions.batch, rb.decisions.batch, "{what}: round {}", ra.round);
+        assert_eq!(ra.decisions.cut, rb.decisions.cut, "{what}: round {}", ra.round);
+        assert_eq!(ra.fleet, rb.fleet, "{what}: round {}", ra.round);
+        assert_eq!(ra.abandoned, rb.abandoned, "{what}: round {}", ra.round);
+        assert_eq!(ra.quarantined, rb.quarantined, "{what}: round {}", ra.round);
+    }
+}
+
+#[test]
+fn flat_and_sharded_rounds_are_bit_identical() {
+    let dir = artifacts_dir();
+    let mk = || cells_config(101);
+
+    // The historical flat reference: sequential, single lane, no topology.
+    let (rep_flat, hist_flat, params_flat) = run_with(&dir, mk(), None, 1, false, None, None);
+
+    let variants: [(&str, Option<usize>, usize, bool); 5] = [
+        // cells=1 is the flat plan by construction.
+        ("cells=1 concurrent pool=2", Some(1), 2, true),
+        // 3 cells over 6 devices, sequential: streaming-apply path.
+        ("cells=3 sequential pool=1", Some(3), 1, false),
+        // 3 cells, concurrent over a lane partition: per-cell queues.
+        ("cells=3 concurrent pool=2", Some(3), 2, true),
+        // One device per cell.
+        ("cells=6 concurrent pool=2", Some(6), 2, true),
+        // More cells than devices: the trailing cells are structurally
+        // empty every round (and more cells than lanes: round-robin wrap).
+        ("cells=8 concurrent pool=2", Some(8), 2, true),
+    ];
+    for (what, cells, pool, concurrent) in variants {
+        let (rep, hist, params) = run_with(&dir, mk(), cells, pool, concurrent, None, None);
+        assert_reports_identical(&rep_flat, &rep, what);
+        assert_eq!(hist_flat.records, hist.records, "{what}: history");
+        // Bit-identical final model state on every device (Params derives
+        // PartialEq over raw f32 data — no tolerance).
+        assert_eq!(params_flat, params, "{what}: params");
+    }
+}
+
+#[test]
+fn sharded_rounds_survive_churn_and_dropout() {
+    // Churn + dropout + stragglers: partial aggregation over a moving
+    // roster must stay bit-identical however the fleet is sharded, in
+    // both execution modes.
+    let dir = artifacts_dir();
+    let scenario = || Some(ScenarioPreset::ChurnHeavy.scenario());
+    let (rep_flat, hist_flat, params_flat) =
+        run_with(&dir, cells_config(23), None, 1, false, scenario(), None);
+    let (rep_seq, hist_seq, params_seq) =
+        run_with(&dir, cells_config(23), Some(3), 1, false, scenario(), None);
+    let (rep_conc, hist_conc, params_conc) =
+        run_with(&dir, cells_config(23), Some(3), 2, true, scenario(), None);
+
+    assert_reports_identical(&rep_flat, &rep_seq, "churn: flat vs cells=3 sequential");
+    assert_reports_identical(&rep_flat, &rep_conc, "churn: flat vs cells=3 concurrent");
+    assert_eq!(hist_flat.records, hist_seq.records);
+    assert_eq!(hist_flat.records, hist_conc.records);
+    assert_eq!(params_flat, params_seq);
+    assert_eq!(params_flat, params_conc);
+}
+
+#[test]
+fn sharded_rounds_survive_fault_injection() {
+    // Seeded chaos faults (transient failures, abandonment, quarantine):
+    // with one device per cell, an abandoned device empties its whole
+    // cell for the round — the all-quarantined/empty-cell path end to end.
+    let dir = artifacts_dir();
+    let (rep_flat, hist_flat, params_flat) =
+        run_with(&dir, cells_config(77), None, 1, false, None, Some(FaultPreset::Chaos));
+    let (rep_cells, hist_cells, params_cells) =
+        run_with(&dir, cells_config(77), Some(6), 2, true, None, Some(FaultPreset::Chaos));
+
+    assert_reports_identical(&rep_flat, &rep_cells, "chaos: flat vs cells=6 concurrent");
+    assert_eq!(hist_flat.records, hist_cells.records);
+    assert_eq!(params_flat, params_cells);
+}
+
+#[test]
+fn per_cell_stats_partition_the_round() {
+    let dir = artifacts_dir();
+    // Flat runs report no cells block at all.
+    let (rep_flat, _, _) = run_with(&dir, cells_config(5), None, 1, false, None, None);
+    assert!(rep_flat.iter().all(|r| r.cells.is_empty()));
+
+    // Sharded runs report one entry per cell, in fixed cell order,
+    // partitioning the roster and the participant count; sequential and
+    // concurrent modes must agree on every field.
+    let (rep_seq, _, _) = run_with(&dir, cells_config(5), Some(3), 1, false, None, None);
+    let (rep_conc, _, _) = run_with(&dir, cells_config(5), Some(3), 2, true, None, None);
+    for (rs, rc) in rep_seq.iter().zip(&rep_conc) {
+        assert_eq!(rs.cells, rc.cells, "round {}: cell stats across modes", rs.round);
+        assert_eq!(rs.cells.len(), 3, "round {}", rs.round);
+        let devices: usize = rs.cells.iter().map(|c| c.devices).sum();
+        let participants: usize = rs.cells.iter().map(|c| c.participants).sum();
+        assert_eq!(devices, 6, "round {}: cells partition the roster", rs.round);
+        assert_eq!(
+            participants,
+            rs.outcome.participants,
+            "round {}: cell participants sum to the round's",
+            rs.round
+        );
+        for (k, c) in rs.cells.iter().enumerate() {
+            assert_eq!(c.cell, k, "fixed cell order");
+            assert!(c.t_split >= 0.0 && c.t_split.is_finite());
+            // Each cell is gated by its own stragglers only, so no cell
+            // can be slower than the whole round.
+            assert!(c.t_split <= rs.latency.t_split + 1e-12, "round {}", rs.round);
+        }
+    }
+}
+
+#[test]
+fn checkpoint_resume_preserves_topology() {
+    let dir = artifacts_dir();
+    let ckpt_dir = temp_dir("resume");
+    let mut cfg = cells_config(42);
+    cfg.train.rounds = 8;
+    cfg.topology = Some(Topology::with_cells(3));
+
+    // Straight 8-round sharded run, checkpointing at round 4.
+    let mut session = Experiment::builder()
+        .config(cfg)
+        .artifacts(&dir)
+        .observe(CheckpointObserver::new(&ckpt_dir, 4))
+        .build()
+        .expect("straight session");
+    let mut straight = Vec::new();
+    while !session.is_done() {
+        straight.push(session.step().expect("step"));
+    }
+    let straight_params = session.trainer().params().to_vec();
+    let straight_hist = session.finish().expect("finish");
+
+    let ckpt = ckpt_dir.join("ckpt_round_000004.hckpt");
+    assert!(ckpt.exists(), "checkpoint at round 4 missing");
+
+    // The embedded topology travels with the checkpoint: the resumed
+    // session is sharded without re-stating --cells, and replays rounds
+    // 5..=8 bit-identically.
+    let mut resumed = Experiment::builder()
+        .resume_from(&ckpt)
+        .artifacts(&dir)
+        .build()
+        .expect("resumed session");
+    assert_eq!(resumed.config().topology, Some(Topology::with_cells(3)));
+    let mut reports = Vec::new();
+    while !resumed.is_done() {
+        reports.push(resumed.step().expect("step"));
+    }
+    let resumed_params = resumed.trainer().params().to_vec();
+    let resumed_hist = resumed.finish().expect("finish");
+
+    assert_reports_identical(&straight[4..], &reports, "resume");
+    for (rs, rr) in straight[4..].iter().zip(&reports) {
+        assert_eq!(rs.cells, rr.cells, "round {}: per-cell stats across resume", rs.round);
+    }
+    assert_eq!(straight_hist.records, resumed_hist.records);
+    assert_eq!(straight_params, resumed_params);
+
+    // Reshaping the topology mid-run is rejected loudly: the checkpoint's
+    // embedded topology is authoritative.
+    let err = Experiment::builder()
+        .resume_from(&ckpt)
+        .cells(2)
+        .artifacts(&dir)
+        .build()
+        .unwrap_err();
+    assert!(err.to_string().contains("conflicts with resume_from"), "{err}");
+
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+}
