@@ -53,6 +53,13 @@
 #                            the two histories must be byte-identical —
 #                            hierarchical aggregation is bit-neutral,
 #                            DESIGN.md §15)
+#  14. async smoke          (the same seeded --async-buffer run twice must
+#                            be byte-identical; the BENCH_scenario.json
+#                            async_round series must show buffered-async
+#                            beating the synchronous barrier on a
+#                            straggler fleet in simulated time; and every
+#                            CLI flag in main.rs must be documented in
+#                            README.md — DESIGN.md §16)
 set -euo pipefail
 
 BACKEND=auto
@@ -261,5 +268,41 @@ HASFL_BACKEND=native ./target/release/hasfl train --config "$SHARD_TMP/wide.json
 cmp "$SHARD_TMP/cells1.csv" "$SHARD_TMP/cells8.csv"
 rm -rf "$SHARD_TMP"
 echo "sharded 10k smoke OK (flat and 8-cell histories byte-identical)"
+
+echo "== async smoke (deterministic buffered rounds + straggler speedup + docs drift) =="
+ASYNC_TMP=$(mktemp -d)
+# The same seeded buffered-async run twice must be byte-identical: the
+# completion schedule is simulated from the config seed, never measured
+# off the wall clock — DESIGN.md §16.
+./target/release/hasfl train --preset small --rounds 4 --seed 88 \
+  --backend "$BACKEND" --async-buffer 2 --out "$ASYNC_TMP/a.csv"
+./target/release/hasfl train --preset small --rounds 4 --seed 88 \
+  --backend "$BACKEND" --async-buffer 2 --out "$ASYNC_TMP/b.csv"
+cmp "$ASYNC_TMP/a.csv" "$ASYNC_TMP/b.csv"
+rm -rf "$ASYNC_TMP"
+# The scenario bench (step 7) ran sync vs buffered-async over the same
+# straggler-heavy fleet; its headline is simulated time, so the gate is
+# deterministic. A flush waits on its K-th completion, never the slowest
+# device, so the speedup must clear 1x on any machine.
+python3 - "$HASFL_SCENARIO_BENCH_JSON" <<'PY'
+import json, sys
+ar = json.load(open(sys.argv[1]))["async_round"]
+s = ar["sim_speedup"]
+print("async_round: sync %.3f s/round -> async %.3f s/round (%.2fx simulated speedup, "
+      "%d flushed, %d stale drops)"
+      % (ar["sim_s_per_round_sync"], ar["sim_s_per_round_async"], s,
+         ar["flushed_total"], ar["stale_drops_total"]))
+assert s > 1.0, "buffered-async did not beat the synchronous barrier (%.2fx)" % s
+PY
+# Docs drift gate: every CLI flag the binary actually reads must appear in
+# README.md. Flag names are extracted from the argument accessors in
+# main.rs, so adding a flag without documenting it fails CI.
+DOC_DRIFT=0
+for f in $(grep -o 'args\.\(get\|flag\|get_or\|get_opt::<[a-zA-Z0-9]*>\)("[a-z-]*"' src/main.rs \
+  | sed 's/.*("\([a-z-]*\)".*/\1/' | sort -u); do
+  grep -q -- "--$f" ../README.md || { echo "FAIL: --$f is undocumented in README.md"; DOC_DRIFT=1; }
+done
+[ "$DOC_DRIFT" -eq 0 ] || exit 1
+echo "async smoke OK (deterministic buffer; straggler speedup; README covers every flag)"
 
 echo "CI OK (backend: $BACKEND)"

@@ -12,11 +12,18 @@
 //! wide concurrent training round, flat roster vs a cell-sharded topology
 //! (DESIGN.md §15). Cells are bit-neutral (`rust/tests/cells_parity.rs`),
 //! so the series tracks pure wall-clock shape.
+//!
+//! The `async_round` series compares the synchronous barrier against
+//! buffered-asynchronous rounds (DESIGN.md §16, `docs/ASYNC.md`) on a
+//! straggler-heavy fleet. Its headline `sim_speedup` is *simulated* time —
+//! a deterministic number, byte-stable across machines — so it gates
+//! cleanly without wall-clock noise.
 
 #[path = "common/mod.rs"]
 mod common;
 
-use hasfl::config::{Config, StrategyKind};
+use hasfl::asynch::AsyncSpec;
+use hasfl::config::{Config, Range, StrategyKind};
 use hasfl::experiment::{Experiment, Preset, Session};
 use hasfl::scenario::{ScenarioEngine, ScenarioPreset, ScenarioSim};
 use hasfl::util::Json;
@@ -93,6 +100,94 @@ fn sharded_round_series() -> (Json, usize) {
     (j, width)
 }
 
+/// A session over a straggler-heavy fleet: two orders of magnitude of
+/// compute spread, so the synchronous barrier waits on the tail every
+/// round. `buffered` switches the buffered-asynchronous mode on with a
+/// buffer of 4 — the sync arm runs the exact same seeded fleet.
+fn straggler_session(devices: usize, rounds: usize, buffered: bool) -> Session {
+    let mut b = Experiment::builder()
+        .preset(Preset::Small)
+        .devices(devices)
+        .strategy(StrategyKind::Fixed)
+        .fixed_batch(1)
+        .fixed_cut(1)
+        .rounds(rounds)
+        .eval_every(1_000_000)
+        .agg_interval(2)
+        .seed(404)
+        .tune(move |c| {
+            c.train.train_samples = devices.max(256);
+            c.train.test_samples = 64;
+            c.fleet.flops = Range::new(2e10, 2e12);
+        })
+        .artifacts(common::artifacts_dir());
+    if buffered {
+        b = b.async_spec(AsyncSpec { buffer_k: 4, max_staleness: 8, decay: 0.5 });
+    }
+    b.build().expect("session")
+}
+
+/// Synchronous barrier vs buffered-async flushes on the straggler fleet.
+/// Tracks simulated seconds per round for both arms (plus the wall clock
+/// each arm took end to end, as context — not gated). The async arm must
+/// beat the barrier: a flush waits on its 4th completion, never the
+/// slowest device.
+fn async_round_series() -> Json {
+    let (devices, rounds) = if common::smoke() { (8, 4) } else { (16, 12) };
+
+    let mut sync = straggler_session(devices, rounds, false);
+    let t0 = std::time::Instant::now();
+    let mut sync_sim = 0.0;
+    while !sync.is_done() {
+        sync_sim = sync.step().expect("sync round").sim_time;
+    }
+    let sync_wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    sync.finish().expect("finish");
+
+    let mut buffered = straggler_session(devices, rounds, true);
+    let t0 = std::time::Instant::now();
+    let (mut async_sim, mut flushed, mut drops) = (0.0, 0usize, 0usize);
+    let mut stale_mean_sum = 0.0;
+    while !buffered.is_done() {
+        let r = buffered.step().expect("async round");
+        async_sim = r.sim_time;
+        if let Some(a) = r.asynchrony {
+            flushed += a.flushed;
+            drops += a.dropped_stale;
+            stale_mean_sum += a.staleness_mean;
+        }
+    }
+    let async_wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    buffered.finish().expect("finish");
+
+    let sync_per_round = sync_sim / rounds as f64;
+    let async_per_round = async_sim / rounds as f64;
+    let speedup = sync_per_round / async_per_round;
+    assert!(
+        speedup > 1.0,
+        "buffered-async must beat the synchronous barrier on a straggler fleet \
+         (sync {sync_per_round:.3} s/round vs async {async_per_round:.3} s/round)"
+    );
+    println!(
+        "async_round: sync {sync_per_round:.3} s/round | async {async_per_round:.3} s/round | \
+         sim speedup {speedup:.2}x | flushed {flushed} | stale drops {drops}"
+    );
+
+    let mut j = Json::obj();
+    j.set("devices", Json::Num(devices as f64))
+        .set("rounds", Json::Num(rounds as f64))
+        .set("buffer_k", Json::Num(4.0))
+        .set("sim_s_per_round_sync", Json::Num(sync_per_round))
+        .set("sim_s_per_round_async", Json::Num(async_per_round))
+        .set("sim_speedup", Json::Num(speedup))
+        .set("flushed_total", Json::Num(flushed as f64))
+        .set("stale_drops_total", Json::Num(drops as f64))
+        .set("staleness_mean_per_round", Json::Num(stale_mean_sum / rounds as f64))
+        .set("wall_ms_sync", Json::Num(sync_wall_ms))
+        .set("wall_ms_async", Json::Num(async_wall_ms));
+    j
+}
+
 fn main() {
     let cfg = mega_config(2025);
     let n = cfg.fleet.n_devices;
@@ -128,7 +223,8 @@ fn main() {
         trace.resolves()
     );
 
-    // Engine-backed cell-sharded round (last: it spawns engine pools).
+    // Engine-backed series last: they spawn engine pools.
+    let async_round = async_round_series();
     let (sharded, pool_width) = sharded_round_series();
 
     let mut j = Json::obj();
@@ -136,6 +232,7 @@ fn main() {
         .set("meta", common::meta_json(pool_width))
         .set("smoke", Json::Bool(common::smoke()))
         .set("sharded_round", sharded)
+        .set("async_round", async_round)
         .set("fleet", Json::Num(n as f64))
         .set("rounds_run", Json::Num(trace.len() as f64))
         .set("engine_advance", r_advance.to_json_ms())

@@ -169,6 +169,25 @@ pub fn merge_cell_aggregates(cells: &[CellAggregate]) -> MergedRound {
     out
 }
 
+/// Fold polynomial staleness decay into a round's Eqn-39 sample weights
+/// (buffered-asynchronous aggregation, DESIGN.md §16): each participant's
+/// weight is scaled by `(1 + lag)^-decay`, where `lag` is the number of
+/// buffer flushes applied since the participant's base model was
+/// dispatched. `weights` and `lags` are aligned per participant; fresh
+/// updates (`lag == 0`) keep their weight exactly. The scaled weights
+/// feed [`aggregate_common_partial`]/[`aggregate_forged_partial`]
+/// unchanged — those normalise by the weight sum, so the decay shifts
+/// relative influence toward fresh updates rather than shrinking the
+/// aggregate.
+pub fn staleness_decayed_weights(weights: &[f64], lags: &[u64], decay: f64) -> Vec<f64> {
+    assert_eq!(weights.len(), lags.len(), "weights and lags must align per participant");
+    weights
+        .iter()
+        .zip(lags)
+        .map(|(&w, &lag)| w * crate::asynch::staleness_weight(lag, decay))
+        .collect()
+}
+
 /// Global model = average of every device's full model (used for
 /// evaluation; matches the paper's analysis object w^t = mean_i w_i^t).
 ///
@@ -255,6 +274,18 @@ mod tests {
         aggregate_common(&mut params, &dec);
         aggregate_forged(&mut params, &dec);
         assert_eq!(divergence(&params[0], &params[1], 0..8), 0.0);
+    }
+
+    #[test]
+    fn staleness_decay_scales_weights_per_lag() {
+        let weights = vec![8.0, 16.0, 4.0];
+        let scaled = staleness_decayed_weights(&weights, &[0, 1, 3], 1.0);
+        // lag 0 keeps its weight exactly; lag k shrinks by (1 + k)^-1.
+        assert_eq!(scaled[0], 8.0);
+        assert!((scaled[1] - 8.0).abs() < 1e-12);
+        assert!((scaled[2] - 1.0).abs() < 1e-12);
+        // decay 0 is the synchronous identity at any lag.
+        assert_eq!(staleness_decayed_weights(&weights, &[0, 5, 9], 0.0), weights);
     }
 
     #[test]

@@ -1,0 +1,389 @@
+//! Buffered-asynchronous training: specs, staleness weighting, and the
+//! online (EMA) completion-time model.
+//!
+//! In synchronous HASFL every round waits for its slowest participant —
+//! the round barrier prices the straggler tail into `t_split` (Eqn 34).
+//! The buffered-asynchronous mode (DESIGN.md §16, docs/ASYNC.md) removes
+//! the barrier: devices submit split-training updates as they finish, and
+//! the coordinator flushes a buffer of `buffer_k` completions per global
+//! version. Each buffered update is weighted by a polynomial decay on its
+//! *version lag* (how many global versions elapsed since the update's
+//! weights were dispatched), and the decayed weights are folded through
+//! the existing Eqn-39 weighted partial-aggregation path.
+//!
+//! This module holds the pure data types and math:
+//!
+//! - [`AsyncSpec`] — the config knobs (`buffer_k`, `max_staleness`,
+//!   `decay`), JSON round-trippable like every other config section.
+//! - [`staleness_weight`] — the `(1 + lag)^(-decay)` weight.
+//! - [`AsyncState`] — the checkpointable runtime state: per-device
+//!   in-flight dispatch versions and completion times, the global model
+//!   version, and the per-device EMA latency model that replaces the
+//!   analytic completion-time estimate once observations exist.
+//! - [`AsyncRoundStats`] — per-flush observability threaded through
+//!   `RoundReport`, the serve JSON, and the fleet trace CSV.
+//!
+//! The scheduler that consumes these types lives in
+//! `coordinator/async_round.rs`; determinism of the completion order is
+//! its contract (seeded jitter, total order on `(ready_at, device)`).
+
+use crate::util::Json;
+
+/// Smoothing factor for the per-device EMA completion-time model
+/// ([`AsyncState::observe_latency`]). 0.3 tracks drifting channels within
+/// a few observations while still damping single-round noise.
+pub const EMA_ALPHA: f64 = 0.3;
+
+/// When re-solving BS/MS against observed completion times, the
+/// observed/analytic ratio is clamped to `[1/EMA_CLAMP, EMA_CLAMP]` so a
+/// single wild observation cannot push the optimizer off a cliff.
+pub const EMA_CLAMP: f64 = 4.0;
+
+/// Configuration for buffered-asynchronous rounds.
+///
+/// `None` on `Config.async_spec` (the default) keeps the synchronous
+/// round barrier byte-identical to previous releases; `Some` switches the
+/// coordinator to buffered flushes. Serialized under the `"async"` key of
+/// the config JSON.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AsyncSpec {
+    /// Updates per buffer flush: the coordinator aggregates exactly this
+    /// many completions per global version (FedBuff's K).
+    pub buffer_k: usize,
+    /// Maximum tolerated version lag. An update whose lag exceeds this is
+    /// dropped (counted in [`AsyncRoundStats::dropped_stale`]) and the
+    /// device is re-dispatched from the current model.
+    pub max_staleness: usize,
+    /// Polynomial staleness-decay exponent: an update with version lag
+    /// `s` carries weight `(1 + s)^(-decay)`. `0.0` disables decay
+    /// (pure FedBuff averaging); larger values trust stale updates less.
+    pub decay: f64,
+}
+
+impl Default for AsyncSpec {
+    fn default() -> Self {
+        AsyncSpec { buffer_k: 4, max_staleness: 8, decay: 0.5 }
+    }
+}
+
+impl AsyncSpec {
+    /// Validate against a fleet of `n_devices`. Errors name the field.
+    pub fn validate(&self, n_devices: usize) -> crate::Result<()> {
+        anyhow::ensure!(self.buffer_k >= 1, "buffer_k must be >= 1, got {}", self.buffer_k);
+        anyhow::ensure!(
+            self.buffer_k <= n_devices,
+            "buffer_k ({}) must not exceed the fleet size ({n_devices})",
+            self.buffer_k
+        );
+        anyhow::ensure!(
+            self.max_staleness >= 1,
+            "max_staleness must be >= 1, got {}",
+            self.max_staleness
+        );
+        anyhow::ensure!(
+            self.decay.is_finite() && self.decay >= 0.0,
+            "decay must be finite and >= 0, got {}",
+            self.decay
+        );
+        Ok(())
+    }
+
+    /// Serialize to a JSON object (sparse: always writes all three knobs
+    /// so a config file documents its own effective values).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("buffer_k", Json::Num(self.buffer_k as f64))
+            .set("max_staleness", Json::Num(self.max_staleness as f64))
+            .set("decay", Json::Num(self.decay));
+        j
+    }
+
+    /// Parse from JSON; absent fields take [`AsyncSpec::default`] values.
+    pub fn from_json(j: &Json) -> crate::Result<AsyncSpec> {
+        let d = AsyncSpec::default();
+        let opt_usize = |key: &str, dv: usize| -> crate::Result<usize> {
+            match j.get(key) {
+                Some(v) => v.as_usize(),
+                None => Ok(dv),
+            }
+        };
+        let opt_f64 = |key: &str, dv: f64| -> crate::Result<f64> {
+            match j.get(key) {
+                Some(v) => v.as_f64(),
+                None => Ok(dv),
+            }
+        };
+        Ok(AsyncSpec {
+            buffer_k: opt_usize("buffer_k", d.buffer_k)?,
+            max_staleness: opt_usize("max_staleness", d.max_staleness)?,
+            decay: opt_f64("decay", d.decay)?,
+        })
+    }
+}
+
+/// The Eqn-39 staleness weight: `(1 + lag)^(-decay)`.
+///
+/// `lag` is the version lag of a buffered update (global model version at
+/// flush minus the version its weights were dispatched from). A fresh
+/// update (`lag == 0`) always weighs `1.0`; `decay == 0.0` makes every
+/// update weigh `1.0` regardless of lag.
+pub fn staleness_weight(lag: u64, decay: f64) -> f64 {
+    (1.0 + lag as f64).powf(-decay)
+}
+
+/// Per-flush asynchrony statistics, reported on `RoundReport.asynchrony`
+/// and (flattened) in the fleet trace CSV.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AsyncRoundStats {
+    /// Updates aggregated in this flush (== `buffer_k` unless the active
+    /// roster shrank below it).
+    pub flushed: usize,
+    /// Updates discarded for exceeding `max_staleness` before this flush
+    /// filled.
+    pub dropped_stale: usize,
+    /// Mean version lag over the flushed updates.
+    pub staleness_mean: f64,
+    /// Maximum version lag over the flushed updates.
+    pub staleness_max: u64,
+    /// Global model version *after* this flush.
+    pub model_version: u64,
+    /// Simulated wall-clock this flush spanned (seconds): time from the
+    /// previous flush until the K-th completion landed. The sync-barrier
+    /// comparison point is `t_split` of the same scenario round.
+    pub flush_span_s: f64,
+}
+
+impl AsyncRoundStats {
+    /// Serialize for the round report / serve JSON (`"async"` block).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("flushed", Json::Num(self.flushed as f64))
+            .set("dropped_stale", Json::Num(self.dropped_stale as f64))
+            .set("staleness_mean", Json::Num(self.staleness_mean))
+            .set("staleness_max", Json::Num(self.staleness_max as f64))
+            .set("model_version", Json::Num(self.model_version as f64))
+            .set("flush_span_s", Json::Num(self.flush_span_s));
+        j
+    }
+}
+
+/// Checkpointable runtime state of the buffered-asynchronous scheduler.
+///
+/// All vectors are indexed by device id (fleet order, length fixed at
+/// `n_devices`). The in-flight "buffer" is the set of devices with
+/// `in_flight[i] == true`: each carries the model version its work was
+/// dispatched from (`dispatch_version[i]`) and the simulated absolute
+/// time its result lands (`ready_at[i]`). Checkpointing this struct and
+/// restoring it resumes the flush schedule bit-identically (pinned by
+/// `tests/async_rounds.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AsyncState {
+    /// Global model version: the number of buffer flushes applied so far.
+    pub model_version: u64,
+    /// Simulated absolute time of the most recent flush (seconds).
+    pub now: f64,
+    /// Per device: model version its in-flight work was dispatched from.
+    pub dispatch_version: Vec<u64>,
+    /// Per device: simulated absolute time its in-flight work was
+    /// dispatched (start of the completion interval; the EMA model
+    /// observes `ready_at - dispatch_at`).
+    pub dispatch_at: Vec<f64>,
+    /// Per device: simulated absolute completion time of in-flight work.
+    pub ready_at: Vec<f64>,
+    /// Per device: whether the device currently has in-flight work.
+    pub in_flight: Vec<bool>,
+    /// Per device: dispatch counter (keys the seeded completion-time
+    /// jitter so a resumed run replays the same schedule).
+    pub dispatch_seq: Vec<u64>,
+    /// Per device: EMA of observed completion times (seconds); only
+    /// meaningful where `ema_seen[i]`.
+    pub ema_latency: Vec<f64>,
+    /// Per device: whether `ema_latency[i]` has absorbed an observation.
+    pub ema_seen: Vec<bool>,
+}
+
+impl AsyncState {
+    /// Fresh state for a fleet of `n` devices: version 0, empty buffer.
+    pub fn new(n: usize) -> AsyncState {
+        AsyncState {
+            model_version: 0,
+            now: 0.0,
+            dispatch_version: vec![0; n],
+            dispatch_at: vec![0.0; n],
+            ready_at: vec![0.0; n],
+            in_flight: vec![false; n],
+            dispatch_seq: vec![0; n],
+            ema_latency: vec![0.0; n],
+            ema_seen: vec![false; n],
+        }
+    }
+
+    /// Defensive roster-resize: scenario rosters are fixed-size (churn
+    /// toggles membership, never length), but if a future fleet source
+    /// resizes, new entries join idle at the current version and excess
+    /// entries are dropped.
+    pub fn ensure_len(&mut self, n: usize) {
+        let v = self.model_version;
+        self.dispatch_version.resize(n, v);
+        self.dispatch_at.resize(n, self.now);
+        self.ready_at.resize(n, self.now);
+        self.in_flight.resize(n, false);
+        self.dispatch_seq.resize(n, 0);
+        self.ema_latency.resize(n, 0.0);
+        self.ema_seen.resize(n, false);
+    }
+
+    /// Number of devices this state tracks.
+    pub fn n_devices(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// Fold an observed completion time for device `i` into the EMA
+    /// latency model (the "observed distribution" the optimizer re-solves
+    /// against; [`EMA_ALPHA`] smoothing, first observation seeds the EMA).
+    pub fn observe_latency(&mut self, i: usize, seconds: f64) {
+        if self.ema_seen[i] {
+            self.ema_latency[i] = (1.0 - EMA_ALPHA) * self.ema_latency[i] + EMA_ALPHA * seconds;
+        } else {
+            self.ema_latency[i] = seconds;
+            self.ema_seen[i] = true;
+        }
+    }
+
+    /// Observed EMA completion time for device `i`, if any observation
+    /// has been folded in.
+    pub fn ema(&self, i: usize) -> Option<f64> {
+        if self.ema_seen[i] {
+            Some(self.ema_latency[i])
+        } else {
+            None
+        }
+    }
+
+    /// The observed/analytic slowdown ratio for device `i`, clamped to
+    /// `[1/EMA_CLAMP, EMA_CLAMP]`; `1.0` before any observation or when
+    /// the analytic estimate is degenerate.
+    pub fn slowdown(&self, i: usize, analytic_seconds: f64) -> f64 {
+        match self.ema(i) {
+            Some(obs) if analytic_seconds > 0.0 && obs.is_finite() => {
+                (obs / analytic_seconds).clamp(1.0 / EMA_CLAMP, EMA_CLAMP)
+            }
+            _ => 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn staleness_weight_is_one_for_fresh_updates() {
+        assert!((staleness_weight(0, 0.5) - 1.0).abs() < 1e-12);
+        assert!((staleness_weight(0, 3.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn staleness_weight_decays_monotonically() {
+        let d = 0.5;
+        let mut prev = staleness_weight(0, d);
+        for lag in 1..10 {
+            let w = staleness_weight(lag, d);
+            assert!(w < prev, "weight must strictly decay with lag");
+            assert!(w > 0.0);
+            prev = w;
+        }
+    }
+
+    #[test]
+    fn zero_decay_disables_staleness_weighting() {
+        for lag in 0..20 {
+            assert!((staleness_weight(lag, 0.0) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn spec_default_validates() {
+        AsyncSpec::default().validate(20).expect("default spec valid");
+    }
+
+    #[test]
+    fn spec_validation_names_bad_fields() {
+        let mut s = AsyncSpec::default();
+        s.buffer_k = 0;
+        assert!(s.validate(4).unwrap_err().to_string().contains("buffer_k"));
+        let mut s = AsyncSpec::default();
+        s.buffer_k = 8;
+        assert!(s.validate(4).unwrap_err().to_string().contains("fleet size"));
+        let mut s = AsyncSpec::default();
+        s.max_staleness = 0;
+        assert!(s.validate(4).unwrap_err().to_string().contains("max_staleness"));
+        let mut s = AsyncSpec::default();
+        s.decay = f64::NAN;
+        assert!(s.validate(4).unwrap_err().to_string().contains("decay"));
+    }
+
+    #[test]
+    fn spec_json_roundtrip() {
+        let s = AsyncSpec { buffer_k: 3, max_staleness: 12, decay: 1.25 };
+        let back = AsyncSpec::from_json(&s.to_json()).expect("parse");
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn spec_sparse_json_takes_defaults() {
+        let j = Json::parse("{\"buffer_k\": 2}").expect("json");
+        let s = AsyncSpec::from_json(&j).expect("parse");
+        assert_eq!(s.buffer_k, 2);
+        assert_eq!(s.max_staleness, AsyncSpec::default().max_staleness);
+        assert!((s.decay - AsyncSpec::default().decay).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ema_seeds_then_smooths() {
+        let mut st = AsyncState::new(2);
+        assert_eq!(st.ema(0), None);
+        st.observe_latency(0, 10.0);
+        assert!((st.ema(0).unwrap() - 10.0).abs() < 1e-12);
+        st.observe_latency(0, 20.0);
+        let expect = (1.0 - EMA_ALPHA) * 10.0 + EMA_ALPHA * 20.0;
+        assert!((st.ema(0).unwrap() - expect).abs() < 1e-12);
+        assert_eq!(st.ema(1), None);
+    }
+
+    #[test]
+    fn slowdown_is_clamped_and_neutral_without_observations() {
+        let mut st = AsyncState::new(1);
+        assert!((st.slowdown(0, 5.0) - 1.0).abs() < 1e-12);
+        st.observe_latency(0, 100.0);
+        assert!((st.slowdown(0, 1.0) - EMA_CLAMP).abs() < 1e-12);
+        assert!((st.slowdown(0, 1e9) - 1.0 / EMA_CLAMP).abs() < 1e-12);
+        assert!((st.slowdown(0, 0.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fresh_state_has_empty_buffer() {
+        let st = AsyncState::new(3);
+        assert_eq!(st.n_devices(), 3);
+        assert_eq!(st.model_version, 0);
+        assert!(st.in_flight.iter().all(|f| !f));
+    }
+
+    #[test]
+    fn stats_json_carries_all_fields() {
+        let s = AsyncRoundStats {
+            flushed: 4,
+            dropped_stale: 1,
+            staleness_mean: 0.75,
+            staleness_max: 3,
+            model_version: 9,
+            flush_span_s: 1.5,
+        };
+        let j = s.to_json();
+        assert_eq!(j.get("flushed").and_then(|v| v.as_usize().ok()), Some(4));
+        assert_eq!(j.get("dropped_stale").and_then(|v| v.as_usize().ok()), Some(1));
+        assert_eq!(j.get("staleness_max").and_then(|v| v.as_usize().ok()), Some(3));
+        assert_eq!(j.get("model_version").and_then(|v| v.as_usize().ok()), Some(9));
+        assert!(j.get("staleness_mean").is_some() && j.get("flush_span_s").is_some());
+    }
+}

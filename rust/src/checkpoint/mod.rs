@@ -94,6 +94,12 @@ pub struct CheckpointState {
     /// optional field, so fault-less checkpoints stay byte-identical to
     /// the pre-fault format and still load.
     pub fault: Option<crate::fault::FaultState>,
+    /// Buffered-asynchronous scheduler state — the in-flight buffer,
+    /// per-device version lags, and the EMA latency model (`None` on
+    /// synchronous-barrier runs; DESIGN.md §16). Serialized after the
+    /// fault trailer, so sync checkpoints stay byte-identical to the
+    /// pre-async format and legacy fault-only files still load.
+    pub async_state: Option<crate::asynch::AsyncState>,
 }
 
 fn write_device(w: &mut ByteWriter, d: &Device) {
@@ -241,6 +247,48 @@ fn read_scenario(r: &mut ByteReader) -> crate::Result<ScenarioEngineState> {
     })
 }
 
+fn write_u64s(w: &mut ByteWriter, vs: &[u64]) {
+    w.usize(vs.len());
+    for &v in vs {
+        w.u64(v);
+    }
+}
+
+fn read_u64s(r: &mut ByteReader) -> crate::Result<Vec<u64>> {
+    let n = r.usize()?;
+    let mut out = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        out.push(r.u64()?);
+    }
+    Ok(out)
+}
+
+fn write_async(w: &mut ByteWriter, a: &crate::asynch::AsyncState) {
+    w.u64(a.model_version);
+    w.f64(a.now);
+    write_u64s(w, &a.dispatch_version);
+    w.f64s(&a.dispatch_at);
+    w.f64s(&a.ready_at);
+    w.bools(&a.in_flight);
+    write_u64s(w, &a.dispatch_seq);
+    w.f64s(&a.ema_latency);
+    w.bools(&a.ema_seen);
+}
+
+fn read_async(r: &mut ByteReader) -> crate::Result<crate::asynch::AsyncState> {
+    Ok(crate::asynch::AsyncState {
+        model_version: r.u64()?,
+        now: r.f64()?,
+        dispatch_version: read_u64s(r)?,
+        dispatch_at: r.f64s()?,
+        ready_at: r.f64s()?,
+        in_flight: r.bools()?,
+        dispatch_seq: read_u64s(r)?,
+        ema_latency: r.f64s()?,
+        ema_seen: r.bools()?,
+    })
+}
+
 fn write_state(w: &mut ByteWriter, s: &CheckpointState) {
     w.str(&s.config_json);
     w.u64(s.round);
@@ -275,14 +323,26 @@ fn write_state(w: &mut ByteWriter, s: &CheckpointState) {
         }
         None => w.bool(false),
     }
-    // Trailing optional field, present only when the run has a fault
-    // spec: readers consume it iff payload bytes remain, so fault-less
-    // checkpoints (and ones written before the fault layer existed)
-    // parse unchanged under the same FORMAT_VERSION.
-    if let Some(f) = &s.fault {
-        w.bool(true);
-        w.u32s(&f.strikes);
-        w.bools(&f.quarantined);
+    // Trailing optional fields, written only when at least one is
+    // present: readers consume them iff payload bytes remain, so plain
+    // sync checkpoints (and ones written before the fault/async layers
+    // existed) parse unchanged under the same FORMAT_VERSION. A run with
+    // only a fault spec emits exactly the legacy fault-only byte layout
+    // (true marker + payload, nothing after); a run with only an async
+    // spec emits a false fault marker followed by the async trailer.
+    if s.fault.is_some() || s.async_state.is_some() {
+        match &s.fault {
+            Some(f) => {
+                w.bool(true);
+                w.u32s(&f.strikes);
+                w.bools(&f.quarantined);
+            }
+            None => w.bool(false),
+        }
+        if let Some(a) = &s.async_state {
+            w.bool(true);
+            write_async(w, a);
+        }
     }
 }
 
@@ -307,12 +367,24 @@ fn read_state(r: &mut ByteReader) -> crate::Result<CheckpointState> {
         .map(|_| -> crate::Result<(u64, u64)> { Ok((r.u64()?, r.u64()?)) })
         .collect::<crate::Result<Vec<_>>>()?;
     let scenario = if r.bool()? { Some(read_scenario(r)?) } else { None };
+    // Trailing optional fields in fixed order: fault, then async. Legacy
+    // fault-only files end right after the fault payload; legacy
+    // fault-less files end at the scenario marker; both parse here.
     let fault = if r.remaining() > 0 {
+        if r.bool()? {
+            Some(crate::fault::FaultState { strikes: r.u32s()?, quarantined: r.bools()? })
+        } else {
+            None
+        }
+    } else {
+        None
+    };
+    let async_state = if r.remaining() > 0 {
         anyhow::ensure!(
             r.bool()?,
             "corrupt checkpoint: unexpected trailing field marker"
         );
-        Some(crate::fault::FaultState { strikes: r.u32s()?, quarantined: r.bools()? })
+        Some(read_async(r)?)
     } else {
         None
     };
@@ -333,6 +405,7 @@ fn read_state(r: &mut ByteReader) -> crate::Result<CheckpointState> {
         sampler_rngs,
         scenario,
         fault,
+        async_state,
     })
 }
 
@@ -574,6 +647,7 @@ mod tests {
             abandoned: vec![],
             quarantined: vec![],
             cells: vec![],
+            asynchrony: None,
         }
     }
 

@@ -356,6 +356,11 @@ pub struct Config {
     /// flat roster; numerics are bit-identical either way — see
     /// [`crate::topology`] and DESIGN.md §15).
     pub topology: Option<crate::topology::Topology>,
+    /// Buffered-asynchronous round spec (`None` = the historical
+    /// synchronous barrier, byte-identical to previous releases; `Some`
+    /// switches to staleness-weighted buffer flushes — see
+    /// [`crate::asynch`] and DESIGN.md §16).
+    pub async_spec: Option<crate::asynch::AsyncSpec>,
 }
 
 impl Config {
@@ -407,6 +412,9 @@ impl Config {
         }
         if let Some(t) = &self.topology {
             root.set("topology", t.to_json());
+        }
+        if let Some(a) = &self.async_spec {
+            root.set("async", a.to_json());
         }
         root
     }
@@ -514,6 +522,12 @@ impl Config {
             // existed: the flat roster.
             topology: match j.get("topology") {
                 Some(v) => Some(at("topology", crate::topology::Topology::from_json(v))?),
+                None => None,
+            },
+            // Absent in configs saved before buffered asynchrony existed:
+            // the synchronous barrier.
+            async_spec: match j.get("async") {
+                Some(v) => Some(at("async", crate::asynch::AsyncSpec::from_json(v))?),
                 None => None,
             },
         })
@@ -733,6 +747,35 @@ mod tests {
         }
         let err = Config::from_json(&j).unwrap_err();
         assert!(err.to_string().contains("topology"), "{err}");
+    }
+
+    #[test]
+    fn async_field_roundtrips_and_defaults_to_none() {
+        // Configs saved before buffered asynchrony existed have no
+        // "async" key; they must load as None (synchronous barrier).
+        let cfg = Config::table1();
+        assert!(cfg.async_spec.is_none());
+        let back = Config::from_json(&Json::parse(&cfg.to_json().dump()).unwrap()).unwrap();
+        assert!(back.async_spec.is_none());
+
+        let mut cfg = Config::table1();
+        cfg.async_spec = Some(crate::asynch::AsyncSpec {
+            buffer_k: 3,
+            max_staleness: 6,
+            decay: 0.75,
+        });
+        let back = Config::from_json(&Json::parse(&cfg.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+
+        // Errors inside the async block name the field path.
+        let mut j = cfg.to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(a)) = m.get_mut("async") {
+                a.insert("buffer_k".into(), Json::Str("many".into()));
+            }
+        }
+        let err = Config::from_json(&j).unwrap_err();
+        assert!(err.to_string().contains("async"), "{err}");
     }
 
     #[test]

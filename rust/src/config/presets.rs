@@ -47,6 +47,7 @@ impl Config {
             scenario: None,
             faults: None,
             topology: None,
+            async_spec: None,
         }
     }
 

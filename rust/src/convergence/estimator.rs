@@ -217,6 +217,29 @@ impl GradStatsEstimator {
     }
 }
 
+/// Assumption-2 variance-inflation factor of a staleness-weighted buffer
+/// flush (DESIGN.md §16): with normalised staleness weights
+/// `w_k ∝ (1 + lag_k)^-decay` over the `K` flushed updates, the
+/// stochastic gradient-noise term of the convergence bound scales by
+/// `K · Σ_k w_k²` relative to the uniform synchronous average — the
+/// factor is exactly `1.0` at equal weights (any lag under `decay == 0`,
+/// or equal lags at any decay) and grows as staleness skews the weights,
+/// so uneven lag *inflates* the effective `sigma²` the optimizer prices.
+/// Returns `1.0` for an empty flush.
+pub fn staleness_variance_inflation(lags: &[u64], decay: f64) -> f64 {
+    if lags.is_empty() {
+        return 1.0;
+    }
+    let weights: Vec<f64> =
+        lags.iter().map(|&l| crate::asynch::staleness_weight(l, decay)).collect();
+    let sum: f64 = weights.iter().sum();
+    if !(sum.is_finite() && sum > 0.0) {
+        return 1.0;
+    }
+    let norm_sq: f64 = weights.iter().map(|w| (w / sum) * (w / sum)).sum();
+    lags.len() as f64 * norm_sq
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -236,6 +259,21 @@ mod tests {
         assert_eq!(back.to_state(), est.to_state());
         assert_eq!(back.gsq(), est.gsq());
         assert_eq!(back.rounds_seen(), est.rounds_seen());
+    }
+
+    #[test]
+    fn staleness_inflation_is_one_at_uniform_weights_and_grows_with_skew() {
+        // Equal lags (any decay) and zero decay (any lags) are the
+        // uniform synchronous average: inflation exactly 1.
+        assert!((staleness_variance_inflation(&[2, 2, 2, 2], 0.8) - 1.0).abs() < 1e-12);
+        assert!((staleness_variance_inflation(&[0, 3, 7], 0.0) - 1.0).abs() < 1e-12);
+        assert_eq!(staleness_variance_inflation(&[], 0.5), 1.0);
+        // Skewed lags concentrate weight on the fresh update: Σw² of the
+        // normalised weights exceeds the 1/K uniform minimum.
+        let skewed = staleness_variance_inflation(&[0, 8, 8, 8], 1.0);
+        assert!(skewed > 1.0, "{skewed}");
+        // More skew (stronger decay) inflates more.
+        assert!(staleness_variance_inflation(&[0, 8, 8, 8], 2.0) > skewed);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 
 mod estimator;
 
-pub use estimator::{EstimatorState, GradStatsEstimator};
+pub use estimator::{staleness_variance_inflation, EstimatorState, GradStatsEstimator};
 
 use crate::latency::{round_latency, Decisions};
 use crate::model::ModelProfile;

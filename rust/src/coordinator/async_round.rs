@@ -1,0 +1,315 @@
+//! Buffered-asynchronous rounds (DESIGN.md §16, docs/ASYNC.md): the
+//! FedBuff-style flush loop that replaces the synchronous round barrier
+//! when `Config.async_spec` is set.
+//!
+//! One "round" of the async mode is one *buffer flush*: the coordinator
+//! pops simulated device completions in `(ready_at, device id)` order
+//! until `buffer_k` updates have landed, executes each popped device's
+//! split-training step through the engine at that moment (client
+//! sub-model = the device's own — possibly stale — parameters; server
+//! sub-model = the current common aggregate, exactly the split-learning
+//! topology), and folds the buffered updates through the existing Eqn-39
+//! weighted partial-aggregation path with each weight multiplied by the
+//! polynomial staleness decay `(1 + lag)^(-decay)`.
+//!
+//! # Determinism contract
+//!
+//! The completion schedule is simulated, never wall-clock: each dispatch
+//! draws its completion interval from the analytic per-device latency
+//! legs (Eqns 28/29/32/33, at the scenario's realized rates when one is
+//! attached) times a jitter factor seeded by
+//! `(config seed, device id, per-device dispatch counter)` under the
+//! dedicated `0xA57C0` stream salt. Pops follow the total order
+//! `(ready_at, device id)` and execute sequentially on engine lane 0, so
+//! async histories are bit-identical across runs, pool widths, and
+//! checkpoint resumes (`tests/async_rounds.rs`). No RNG stream used by
+//! the synchronous path is ever advanced differently.
+
+use crate::asynch::{staleness_weight, AsyncRoundStats, AsyncState};
+use crate::config::Device;
+use crate::latency::{
+    act_upload_latency, client_bwd_latency, client_fwd_latency, grad_download_latency,
+    RoundLatency,
+};
+use crate::rng::Pcg32;
+
+use super::round::{run_device_with_faults, DeviceRound};
+use super::shard::{RoundCollector, ESTIMATOR_SAMPLE_CAP};
+use super::{PostRound, RoundOutcome, Trainer};
+
+/// Stream salt for the completion-time jitter RNG (one fresh salt per
+/// subsystem: data 0xDA7A0, strategy 0x57A7, faults 0xFA17_*, …).
+const ASYNC_SALT: u64 = 0xA57C0;
+
+/// Jitter band: a dispatch's completion interval is the analytic
+/// per-device time scaled by a uniform draw in `[LO, LO + SPAN)`.
+const JITTER_LO: f64 = 0.75;
+const JITTER_SPAN: f64 = 0.5;
+
+impl Trainer {
+    /// Analytic completion interval for device `i` under the decisions in
+    /// force: the four per-device legs of Eqn 38 (client forward +
+    /// activation upload + gradient download + client backward) priced at
+    /// `d`'s rates. The server-side sums are shared pipeline cost and are
+    /// deliberately excluded — they cancel in the observed/analytic ratio.
+    fn analytic_device_seconds(&self, d: &Device, i: usize) -> f64 {
+        let b = self.dec.batch[i];
+        let c = self.dec.cut[i];
+        client_fwd_latency(&self.profile, d, b, c)
+            + act_upload_latency(&self.profile, d, b, c)
+            + grad_download_latency(&self.profile, d, b, c)
+            + client_bwd_latency(&self.profile, d, b, c)
+    }
+
+    /// The optimizer's fleet view for async re-solves: every device's
+    /// analytic rates scaled down by its clamped observed/analytic EMA
+    /// slowdown ratio, so BS/MS decisions track the *observed*
+    /// completion-time distribution instead of the synchronous latency
+    /// model. `None` when the async mode is off (the synchronous path
+    /// must not even clone the roster).
+    pub(super) fn observed_devices(&self) -> Option<Vec<Device>> {
+        let st = self.async_state.as_ref()?;
+        let mut scaled = self.devices.clone();
+        let n = scaled.len().min(st.n_devices()).min(self.dec.n());
+        for (i, d) in scaled.iter_mut().enumerate().take(n) {
+            let analytic = self.analytic_device_seconds(d, i);
+            let slow = st.slowdown(i, analytic);
+            d.flops /= slow;
+            d.up_bps /= slow;
+            d.down_bps /= slow;
+        }
+        Some(scaled)
+    }
+
+    /// Seeded completion-interval jitter for the `seq`-th dispatch of
+    /// device `i`: a pure function of `(config seed, i, seq)`, so a
+    /// resumed run replays the identical schedule.
+    fn dispatch_jitter(&self, i: usize, seq: u64) -> f64 {
+        let mut rng = Pcg32::new(
+            self.cfg.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            ASYNC_SALT ^ seq,
+        );
+        JITTER_LO + JITTER_SPAN * rng.next_f64()
+    }
+
+    /// Dispatch device `i` from the current model at simulated time `at`:
+    /// record the dispatch version (for the staleness lag at pop time)
+    /// and draw its seeded completion time from the realized rates.
+    fn dispatch(&mut self, st: &mut AsyncState, i: usize, at: f64, realized: &Device) {
+        let seq = st.dispatch_seq[i];
+        let jitter = self.dispatch_jitter(i, seq);
+        let dur = self.analytic_device_seconds(realized, i) * jitter;
+        st.dispatch_seq[i] = seq + 1;
+        st.dispatch_version[i] = st.model_version;
+        st.dispatch_at[i] = at;
+        st.ready_at[i] = at + dur;
+        st.in_flight[i] = true;
+    }
+
+    /// Realized per-device rates for completion-time pricing: the
+    /// scenario snapshot's devices (transient straggler slowdowns
+    /// included) where one is attached, else the persistent roster.
+    fn realized_device(&self, i: usize) -> Device {
+        if let Some(snap) = &self.last_snapshot {
+            for (k, &id) in snap.active.iter().enumerate() {
+                if id == i {
+                    return snap.devices[k].clone();
+                }
+            }
+        }
+        self.devices[i].clone()
+    }
+
+    /// One buffered-asynchronous flush (the async mode's "round"):
+    /// advance the scenario/fault layers exactly like a synchronous
+    /// round, keep every participating device dispatched, pop completions
+    /// in `(ready_at, id)` order, drop updates staler than
+    /// `max_staleness`, execute and absorb the rest until `buffer_k`
+    /// have landed, then fold the staleness-decayed Eqn-39 weights into
+    /// the round's partial-aggregation weights.
+    pub(crate) fn run_round_async(&mut self) -> crate::Result<(RoundOutcome, AsyncRoundStats)> {
+        let spec = match &self.cfg.async_spec {
+            Some(s) => s.clone(),
+            None => anyhow::bail!("run_round_async without Config.async_spec"),
+        };
+        self.begin_round();
+        self.rounds_run += 1;
+        let plan = self.inject_round_faults(self.rounds_run);
+        let (deadline_ms, backoff_ms) = self.fault_knobs();
+        let n = self.n_devices();
+
+        let mut st = match self.async_state.take() {
+            Some(st) => st,
+            None => anyhow::bail!("async spec configured but the trainer carries no async state"),
+        };
+        st.ensure_len(n);
+        let flush_start = st.now;
+
+        // Keep the whole participating roster in flight: idle (or newly
+        // participating) devices dispatch from the current model at the
+        // current simulated time.
+        for i in 0..n {
+            if self.participation[i] && !st.in_flight[i] {
+                let realized = self.realized_device(i);
+                self.dispatch(&mut st, i, st.now, &realized);
+            }
+        }
+
+        let shared = self.shared_param_arcs();
+        let mut collector = RoundCollector::new(self.cfg.train.lr, ESTIMATOR_SAMPLE_CAP);
+        let mut abandoned: Vec<usize> = Vec::new();
+        // Version lag of each flushed update, keyed by device id; folded
+        // into the Eqn-39 weights after `finalize_round` canonicalises
+        // the participant order.
+        let mut lags: Vec<(usize, u64)> = Vec::new();
+        let mut dropped_stale = 0usize;
+        let mut flushed = 0usize;
+
+        while flushed < spec.buffer_k {
+            // Next completion: total order on (ready_at, device id).
+            let mut next: Option<usize> = None;
+            for i in 0..n {
+                if !st.in_flight[i] {
+                    continue;
+                }
+                next = match next {
+                    None => Some(i),
+                    Some(j) if st.ready_at[i] < st.ready_at[j] => Some(i),
+                    keep => keep,
+                };
+            }
+            let Some(i) = next else {
+                break; // nothing in flight (heavy churn / blackout)
+            };
+
+            st.in_flight[i] = false;
+            st.now = st.now.max(st.ready_at[i]);
+            st.observe_latency(i, st.ready_at[i] - st.dispatch_at[i]);
+
+            if !self.participation[i] {
+                // Left / dropped / quarantined since dispatch: its update
+                // evaporates with it; the device re-enters the schedule
+                // when a later round's participation mask readmits it.
+                continue;
+            }
+
+            let lag = st.model_version - st.dispatch_version[i];
+            if lag > spec.max_staleness as u64 {
+                // Too stale to fold in: discard and re-dispatch from the
+                // current model (lag resets to 0 for the next pop).
+                dropped_stale += 1;
+                let realized = self.realized_device(i);
+                self.dispatch(&mut st, i, st.now, &realized);
+                continue;
+            }
+
+            // Execute the popped device's split-training step now: its
+            // client sub-model is its own (stale) parameter copy, the
+            // server sub-model is the current common aggregate. Lane 0,
+            // sequential — pool width cannot move a bit.
+            let work = self.prepare_device(i, 0, &shared)?;
+            match &plan {
+                None => {
+                    let r = Self::exec_device_blocking(&self.engine, &work, None)?;
+                    collector.absorb(&mut self.params, r);
+                }
+                Some(p) => match run_device_with_faults(
+                    &self.engine,
+                    &work,
+                    &p.attempts[i],
+                    deadline_ms,
+                    backoff_ms,
+                ) {
+                    DeviceRound::Done(r) => collector.absorb(&mut self.params, r),
+                    DeviceRound::Abandoned { idx } => {
+                        abandoned.push(idx);
+                        continue; // participation cleared in finish_abandoned
+                    }
+                },
+            }
+            lags.push((i, lag));
+            flushed += 1;
+            // The device is NOT re-dispatched yet: FedBuff devices wait
+            // for the flush that incorporates their update before pulling
+            // the new model — re-dispatch happens after the version bump
+            // below (and guarantees each device contributes at most once
+            // per flush, so the collector never sees a duplicate id).
+        }
+
+        self.finish_abandoned(abandoned);
+        let outcome = self.finalize_round(collector);
+
+        // Fold the polynomial staleness decay into the Eqn-39 weights the
+        // partial aggregations will use (`post_round` runs next).
+        for (k, &p) in self.round_participants.iter().enumerate() {
+            if let Some(&(_, lag)) = lags.iter().find(|&&(id, _)| id == p) {
+                self.round_weights[k] *= staleness_weight(lag, spec.decay);
+            }
+        }
+
+        let stats = self.async_stats(&mut st, flushed, dropped_stale, &lags, flush_start);
+        // The flushed devices re-enter the schedule from the freshly
+        // flushed model (dispatch_version = the bumped model_version).
+        for &(i, _) in &lags {
+            if self.participation[i] && !st.in_flight[i] {
+                let realized = self.realized_device(i);
+                self.dispatch(&mut st, i, st.now, &realized);
+            }
+        }
+        self.async_state = Some(st);
+        Ok((outcome, stats))
+    }
+
+    /// Per-flush bookkeeping: bump the global model version (a flush that
+    /// aggregated nothing leaves it — and the clock — untouched, exactly
+    /// like an empty synchronous round) and assemble the report stats.
+    fn async_stats(
+        &self,
+        st: &mut AsyncState,
+        flushed: usize,
+        dropped_stale: usize,
+        lags: &[(usize, u64)],
+        flush_start: f64,
+    ) -> AsyncRoundStats {
+        if flushed > 0 {
+            st.model_version += 1;
+        } else {
+            st.now = flush_start;
+        }
+        let lag_sum: u64 = lags.iter().map(|&(_, l)| l).sum();
+        AsyncRoundStats {
+            flushed,
+            dropped_stale,
+            staleness_mean: if lags.is_empty() {
+                0.0
+            } else {
+                lag_sum as f64 / lags.len() as f64
+            },
+            staleness_max: lags.iter().map(|&(_, l)| l).max().unwrap_or(0),
+            model_version: st.model_version,
+            flush_span_s: st.now - flush_start,
+        }
+    }
+
+    /// Post-round bookkeeping for a flush: the synchronous
+    /// [`Trainer::post_round`] pipeline (Eqn-4 / Eqn-7 aggregation,
+    /// drift-triggered re-solve, cell stats) priced at the flush's
+    /// simulated span instead of the barrier latency. `t_agg` keeps the
+    /// analytic Eqn-39 exchange cost — the aggregation traffic is the
+    /// same either way.
+    pub(crate) fn post_round_async(
+        &mut self,
+        t: usize,
+        stats: &AsyncRoundStats,
+    ) -> crate::Result<PostRound> {
+        let t_agg = self.current_round_latency().t_agg;
+        let latency = RoundLatency {
+            per_device: Vec::new(),
+            server_fwd: 0.0,
+            server_bwd: 0.0,
+            t_split: stats.flush_span_s,
+            t_agg,
+        };
+        self.post_round_with(t, latency)
+    }
+}

@@ -23,6 +23,7 @@
 // poisoning is recovered (`shard::lock`) instead of cascading.
 #![deny(clippy::unwrap_used)]
 
+mod async_round;
 mod round;
 mod shard;
 
@@ -130,6 +131,10 @@ pub struct Trainer {
     /// topology is configured. Replanned by [`Trainer::begin_round`]
     /// when scenario churn resizes the roster.
     cells: Vec<CellPlan>,
+    /// Buffered-asynchronous scheduler state (`None` = the historical
+    /// synchronous barrier; no async code runs on that path). Checkpointed
+    /// so a resume replays the identical flush schedule (DESIGN.md §16).
+    pub(crate) async_state: Option<crate::asynch::AsyncState>,
 }
 
 /// Resolve the configured engine-pool width: 0 = auto (fleet size capped by
@@ -199,6 +204,9 @@ impl Trainer {
         // failure is a pure function of (seed, round), so two runs of the
         // same spec break identically (DESIGN.md §13).
         let faults = cfg.faults.as_ref().map(|s| FaultInjector::new(s.clone(), cfg.seed));
+        // Async scheduler state exists iff the config asks for buffered
+        // asynchrony — the sync path carries (and serializes) nothing.
+        let async_state = cfg.async_spec.as_ref().map(|_| crate::asynch::AsyncState::new(n));
 
         let mut t = Trainer {
             cfg,
@@ -232,6 +240,7 @@ impl Trainer {
             fault_state: FaultState::new(n),
             round_abandoned: Vec::new(),
             cells: Vec::new(),
+            async_state,
         };
         t.cells = plan_cells(t.cfg.topology.as_ref(), n, t.engine.width());
         t.dec = t.next_decisions();
@@ -383,6 +392,7 @@ impl Trainer {
             sampler_rngs: self.samplers.iter().map(|s| s.rng_state()).collect(),
             scenario: self.scenario.as_ref().map(|e| e.to_state()),
             fault: self.faults.as_ref().map(|_| self.fault_state.clone()),
+            async_state: self.async_state.clone(),
         }
     }
 
@@ -453,6 +463,23 @@ impl Trainer {
             }
             (None, Some(_)) => {
                 anyhow::bail!("checkpoint carries fault state but the config has no fault spec")
+            }
+        }
+        match (&self.cfg.async_spec, &state.async_state) {
+            (Some(_), Some(a)) => {
+                anyhow::ensure!(
+                    a.n_devices() == n,
+                    "checkpoint async state covers {} devices, fleet has {n}",
+                    a.n_devices()
+                );
+                self.async_state = Some(a.clone());
+            }
+            (None, None) => {}
+            (Some(_), None) => {
+                anyhow::bail!("config has an async spec but the checkpoint carries no async state")
+            }
+            (None, Some(_)) => {
+                anyhow::bail!("checkpoint carries async state but the config has no async spec")
             }
         }
         self.params = state.params;
@@ -558,9 +585,16 @@ impl Trainer {
         let floor = crate::convergence::variance_term(&bound, &vec![cap; n])
             + crate::convergence::drift_term(&bound, min_cut, self.cfg.train.agg_interval);
         let epsilon = self.cfg.train.epsilon.max(floor * 2.0);
+        // Async runs re-solve against the *observed* completion-time
+        // distribution: the EMA latency model scales each device's
+        // analytic rates by its clamped observed/analytic ratio
+        // (`observed_devices`, DESIGN.md §16). `None` — and therefore the
+        // untouched analytic roster — on every synchronous run.
+        let observed = self.observed_devices();
+        let devices: &[Device] = observed.as_deref().unwrap_or(&self.devices);
         let ctx = OptContext {
             profile: &self.profile,
-            devices: &self.devices,
+            devices,
             server: &self.cfg.server,
             bound: &bound,
             interval: self.cfg.train.agg_interval,
@@ -639,6 +673,19 @@ impl Trainer {
     /// BS/MS re-solve forward instead of waiting for the fixed window.
     pub(crate) fn post_round(&mut self, t: usize) -> crate::Result<PostRound> {
         let latency = self.current_round_latency();
+        self.post_round_with(t, latency)
+    }
+
+    /// [`Trainer::post_round`] with the round latency supplied by the
+    /// caller: the synchronous path prices the barrier
+    /// ([`Trainer::current_round_latency`]); the buffered-asynchronous
+    /// path prices the flush span (`async_round.rs`). Everything else —
+    /// aggregation, drift triggers, re-solve — is the same pipeline.
+    pub(crate) fn post_round_with(
+        &mut self,
+        t: usize,
+        latency: RoundLatency,
+    ) -> crate::Result<PostRound> {
         self.sim_time += latency.t_split;
         // Per-cell fleet trace (topology runs only): derived at the root
         // from the canonical participant/abandoned lists + cell ranges,

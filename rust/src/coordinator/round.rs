@@ -70,7 +70,7 @@ impl RoundOutcome {
 
 /// Everything one device needs for its round, detached from the trainer so
 /// async tasks can own it. Parameter inputs are `Arc`-backed handles.
-struct DeviceWork {
+pub(super) struct DeviceWork {
     idx: usize,
     #[allow(dead_code)] // kept for tracing/debug parity with the paper notation
     cut: usize,
@@ -95,7 +95,7 @@ pub(super) struct DeviceResult {
 }
 
 /// Outcome of one device's round under fault tolerance.
-enum DeviceRound {
+pub(super) enum DeviceRound {
     Done(DeviceResult),
     /// Every attempt failed: the device sits this round out. The round
     /// carries on without it (Eqn-39 partial aggregation).
@@ -111,7 +111,7 @@ enum DeviceRound {
 /// exercise this machinery without ever abandoning a healthy device —
 /// only `kill` membership, genuine engine errors, and real deadline
 /// overruns reach [`DeviceRound::Abandoned`].
-fn run_device_with_faults(
+pub(super) fn run_device_with_faults(
     engine: &EngineHandle,
     work: &DeviceWork,
     plan: &[AttemptFault],
@@ -174,7 +174,7 @@ impl Trainer {
     /// One shared `Arc` per fleet-identical tensor slot for this round
     /// (`None` where the slot is device-specific), built from device 0 so
     /// the identical bytes are host-copied once per round, not per device.
-    fn shared_param_arcs(&self) -> Vec<Option<Arc<HostTensor>>> {
+    pub(super) fn shared_param_arcs(&self) -> Vec<Option<Arc<HostTensor>>> {
         let p0 = &self.params[0];
         let common_lo = 2 * self.dec.l_c().min(p0.n_blocks);
         let mut shared = Vec::with_capacity(p0.tensors.len());
@@ -188,7 +188,7 @@ impl Trainer {
         shared
     }
 
-    fn prepare_device(
+    pub(super) fn prepare_device(
         &mut self,
         i: usize,
         lane: usize,
@@ -288,7 +288,7 @@ impl Trainer {
     /// the small fresh label/weight tensors. `deadline`, when set, is the
     /// budget for the whole three-call step; each engine call gets what
     /// remains of it.
-    fn exec_device_blocking(
+    pub(super) fn exec_device_blocking(
         engine: &EngineHandle,
         work: &DeviceWork,
         deadline: Option<Duration>,
@@ -369,7 +369,7 @@ impl Trainer {
     /// (bit-identical to the flat path by the merge-order contract,
     /// DESIGN.md §15), install the round's participant set + Eqn-39
     /// weights, and feed the estimator its bounded gradient sample.
-    fn finalize_round(&mut self, collector: RoundCollector) -> RoundOutcome {
+    pub(super) fn finalize_round(&mut self, collector: RoundCollector) -> RoundOutcome {
         let (cell_aggs, sample_grads, sample_batches) = collector.finish(&self.cells);
         let merged = merge_cell_aggregates(&cell_aggs);
         self.round_participants = merged.participants;
@@ -397,7 +397,7 @@ impl Trainer {
     /// Fault hook at the top of a round: deliver the round's lane crash
     /// (if any) and pre-draw the whole roster's device fault plan. `None`
     /// when faults are off.
-    fn inject_round_faults(&self, round: u64) -> Option<RoundPlan> {
+    pub(super) fn inject_round_faults(&self, round: u64) -> Option<RoundPlan> {
         let inj = self.faults.as_ref()?;
         if let Some(lane) = inj.lane_crash(round, self.engine.width()) {
             self.engine.inject_lane_crash(lane);
@@ -406,7 +406,7 @@ impl Trainer {
     }
 
     /// The retry knobs from the armed fault spec: (deadline_ms, backoff_ms).
-    fn fault_knobs(&self) -> (u64, u64) {
+    pub(super) fn fault_knobs(&self) -> (u64, u64) {
         match &self.faults {
             Some(inj) => (inj.spec().deadline_ms, inj.spec().backoff_ms),
             None => (0, 0),
@@ -417,7 +417,7 @@ impl Trainer {
     /// the round's participation mask (so latency pricing matches a run
     /// where they never took part), count strikes, and quarantine repeat
     /// offenders.
-    fn finish_abandoned(&mut self, mut abandoned: Vec<usize>) {
+    pub(super) fn finish_abandoned(&mut self, mut abandoned: Vec<usize>) {
         abandoned.sort_unstable();
         let quarantine_after = self.faults.as_ref().map_or(0, |i| i.spec().quarantine_after);
         for &idx in &abandoned {

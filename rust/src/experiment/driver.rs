@@ -314,6 +314,7 @@ mod tests {
             abandoned: vec![],
             quarantined: vec![],
             cells: vec![],
+            asynchrony: None,
         }
     }
 

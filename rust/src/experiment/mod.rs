@@ -52,6 +52,7 @@ pub use session::{RoundReport, Session};
 
 use std::path::{Path, PathBuf};
 
+use crate::asynch::AsyncSpec;
 use crate::backend::{BackendKind, ModelSpec};
 use crate::config::{Config, ModelKind, Partition, StrategyKind};
 use crate::coordinator::Trainer;
@@ -127,6 +128,7 @@ impl Experiment {
             pool_override: None,
             backend_override: None,
             topology_override: None,
+            async_override: None,
         }
     }
 }
@@ -159,6 +161,12 @@ pub struct ExperimentBuilder {
     /// [`ExperimentBuilder::resume_from`] — the checkpoint's embedded
     /// topology is authoritative there.
     topology_override: Option<Topology>,
+    /// Explicit `.async_buffer(..)` / `.async_spec(..)` value. The async
+    /// schedule reshapes the whole round structure, so it conflicts with
+    /// [`ExperimentBuilder::resume_from`] — the checkpoint's embedded
+    /// async spec (and its restored in-flight buffer) is authoritative
+    /// there.
+    async_override: Option<AsyncSpec>,
 }
 
 impl ExperimentBuilder {
@@ -349,6 +357,24 @@ impl ExperimentBuilder {
         self.faults(preset.spec())
     }
 
+    /// Buffered-asynchronous training (DESIGN.md §16, `docs/ASYNC.md`):
+    /// devices submit split-training updates as they finish, and each
+    /// "round" aggregates a staleness-weighted buffer of `k` updates
+    /// instead of waiting for the synchronous barrier. The remaining
+    /// knobs (`max_staleness`, `decay`) keep their defaults; use
+    /// [`ExperimentBuilder::async_spec`] to set everything.
+    pub fn async_buffer(self, k: usize) -> Self {
+        self.async_spec(AsyncSpec { buffer_k: k, ..AsyncSpec::default() })
+    }
+
+    /// Full buffered-asynchrony spec: buffer size, staleness cap, and the
+    /// polynomial staleness-decay exponent.
+    pub fn async_spec(mut self, spec: AsyncSpec) -> Self {
+        self.cfg.async_spec = Some(spec.clone());
+        self.async_override = Some(spec);
+        self
+    }
+
     /// Attach a boxed observer. Observers are `Send` so a built
     /// [`Session`] can move into a worker thread (the serve daemon's
     /// session-worker pool does exactly that).
@@ -428,6 +454,10 @@ impl ExperimentBuilder {
         if let Some(f) = &cfg.faults {
             f.validate(cfg.fleet.n_devices)
                 .map_err(|e| anyhow::anyhow!("config section 'faults': {e}"))?;
+        }
+        if let Some(a) = &cfg.async_spec {
+            a.validate(cfg.fleet.n_devices)
+                .map_err(|e| anyhow::anyhow!("config section 'async': {e}"))?;
         }
         Ok(())
     }
@@ -532,6 +562,14 @@ impl ExperimentBuilder {
                 self.topology_override.is_none(),
                 "topology()/cells() conflicts with resume_from() (the checkpoint's \
                  embedded topology is authoritative; resume, then reshape in a fresh run)"
+            );
+            // And the embedded async spec: the restored in-flight buffer
+            // only replays bit-identically under the producing schedule.
+            anyhow::ensure!(
+                self.async_override.is_none(),
+                "async_buffer()/async_spec() conflicts with resume_from() (the \
+                 checkpoint's embedded async spec is authoritative; its in-flight \
+                 buffer only replays under the producing schedule)"
             );
             // New checkpoints embed a concrete backend. Pre-backend
             // checkpoints load as `Auto` and all ran PJRT, so pin them to
@@ -667,6 +705,20 @@ mod tests {
         let mut bad = ScenarioPreset::ChurnHeavy.scenario();
         bad.resolve_drift = Some(f64::NAN);
         assert!(Experiment::builder().scenario(bad).build_config().is_err());
+    }
+
+    #[test]
+    fn builder_accepts_and_validates_async_specs() {
+        let cfg = Experiment::builder().async_buffer(3).build_config().unwrap();
+        let spec = cfg.async_spec.as_ref().unwrap();
+        assert_eq!(spec.buffer_k, 3);
+        assert_eq!(spec.max_staleness, AsyncSpec::default().max_staleness);
+
+        // A buffer wider than the fleet can never fill: rejected up front
+        // with the config-section pointer machine clients rely on.
+        let err = Experiment::builder().devices(4).async_buffer(5).build_config().unwrap_err();
+        assert!(err.to_string().contains("config section 'async'"), "{err}");
+        assert!(Experiment::builder().async_buffer(0).build_config().is_err());
     }
 
     #[test]

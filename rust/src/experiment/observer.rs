@@ -121,6 +121,9 @@ impl Observer for FleetTraceCsv {
             t_split: report.latency.t_split,
             t_agg: if report.aggregated { report.latency.t_agg } else { 0.0 },
             sim_time: report.sim_time,
+            flushed: report.asynchrony.as_ref().map_or(0, |a| a.flushed),
+            stale_drops: report.asynchrony.as_ref().map_or(0, |a| a.dropped_stale),
+            staleness_mean: report.asynchrony.as_ref().map_or(0.0, |a| a.staleness_mean),
         });
     }
 
@@ -241,6 +244,7 @@ mod tests {
             abandoned: vec![],
             quarantined: vec![],
             cells: vec![],
+            asynchrony: None,
         }
     }
 

@@ -43,6 +43,10 @@ pub struct RoundReport {
     /// Per-cell round stats under a hierarchical topology, in fixed cell
     /// order (DESIGN.md §15). Empty on flat-roster runs.
     pub cells: Vec<CellStats>,
+    /// Buffer/staleness stats of this flush under buffered-asynchronous
+    /// mode (DESIGN.md §16). `None` on every synchronous run, so sync
+    /// reports keep their historical byte layout.
+    pub asynchrony: Option<crate::asynch::AsyncRoundStats>,
 }
 
 impl RoundReport {
@@ -103,6 +107,11 @@ impl RoundReport {
         // flat-roster reports keep their historical byte layout.
         if !self.cells.is_empty() {
             j.set("cells", Json::Arr(self.cells.iter().map(CellStats::to_json).collect()));
+        }
+        // The async block appears only under buffered-asynchronous mode,
+        // so synchronous reports keep their historical byte layout.
+        if let Some(a) = &self.asynchrony {
+            j.set("async", a.to_json());
         }
         j
     }
@@ -234,12 +243,22 @@ impl Session {
     /// iteration at a time.
     pub fn step(&mut self) -> crate::Result<RoundReport> {
         let t = self.round + 1;
-        let outcome = if self.concurrent {
-            self.trainer.run_round_concurrent()?
+        // Buffered-asynchronous sessions step one buffer *flush* per
+        // round (DESIGN.md §16); the flush executes devices sequentially
+        // in seeded completion order, so `concurrent` changes nothing —
+        // pool-width invariance is part of the determinism contract.
+        let (outcome, asynchrony) = if self.trainer.cfg().async_spec.is_some() {
+            let (outcome, stats) = self.trainer.run_round_async()?;
+            (outcome, Some(stats))
+        } else if self.concurrent {
+            (self.trainer.run_round_concurrent()?, None)
         } else {
-            self.trainer.run_round()?
+            (self.trainer.run_round()?, None)
         };
-        let post = self.trainer.post_round(t)?;
+        let post = match &asynchrony {
+            Some(stats) => self.trainer.post_round_async(t, stats)?,
+            None => self.trainer.post_round(t)?,
+        };
         let test_acc = if t % self.trainer.cfg().train.eval_every == 0 {
             Some(self.trainer.evaluate()?)
         } else {
@@ -266,6 +285,7 @@ impl Session {
             abandoned: self.trainer.last_abandoned().to_vec(),
             quarantined: self.trainer.quarantined_devices(),
             cells: post.cells,
+            asynchrony,
         };
         for obs in &mut self.observers {
             obs.on_round(&report);

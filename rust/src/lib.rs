@@ -34,6 +34,7 @@
 #![warn(missing_docs)]
 
 pub mod aggregation;
+pub mod asynch;
 pub mod backend;
 pub mod checkpoint;
 pub mod config;

@@ -6,7 +6,7 @@
 //!                [--rounds N] [--devices N] [--seed S] [--non-iid]
 //!                [--backend auto|native|pjrt]
 //!                [--scenario static|drifting-channels|diurnal|churn-heavy|mega-fleet|spec.json]
-//!                [--faults flaky|chaos|spec.json] [--cells N]
+//!                [--faults flaky|chaos|spec.json] [--cells N] [--async-buffer K]
 //!                [--artifacts DIR] [--out history.csv] [--fleet-out trace.csv]
 //!                [--concurrent] [--pool N] [--early-stop] [--progress]
 //!                [--checkpoint-every N] [--checkpoint-dir D] [--checkpoint-keep K]
@@ -107,7 +107,7 @@ fn cmd_train(args: &Args) -> hasfl::Result<()> {
     if args.get("resume").is_some() {
         for flag in [
             "config", "preset", "strategy", "devices", "seed", "scenario", "faults", "backend",
-            "cells",
+            "cells", "async-buffer",
         ] {
             anyhow::ensure!(
                 args.get(flag).is_none(),
@@ -158,6 +158,18 @@ fn cmd_train(args: &Args) -> hasfl::Result<()> {
     // Seeded fault injection + graceful degradation (DESIGN.md §13).
     if let Some(f) = args.get("faults") {
         builder = builder.faults(faults_arg(f)?);
+    }
+    // Buffered-asynchronous rounds (DESIGN.md §16, docs/ASYNC.md): each
+    // round flushes a staleness-weighted buffer of K completions instead
+    // of waiting for the slowest device. The flag sets the buffer size
+    // only; a config file's "async" section keeps its max_staleness and
+    // decay (defaults otherwise).
+    if let Some(k) = args.get_opt::<usize>("async-buffer")? {
+        builder = builder.tune(|c| {
+            let mut spec = c.async_spec.clone().unwrap_or_default();
+            spec.buffer_k = k;
+            c.async_spec = Some(spec);
+        });
     }
     // Crash-safe checkpointing (DESIGN.md §10): periodic snapshots of the
     // complete training state, and bit-identical warm restarts from them.

@@ -220,6 +220,15 @@ pub struct FleetRound {
     pub t_agg: f64,
     /// Simulated wall-clock (seconds) at the end of the round.
     pub sim_time: f64,
+    /// Updates flushed from the asynchronous buffer this round (0 on
+    /// synchronous-barrier runs; see DESIGN.md §16).
+    pub flushed: usize,
+    /// Updates dropped for exceeding `max_staleness` this round (0 on
+    /// synchronous-barrier runs).
+    pub stale_drops: usize,
+    /// Mean version lag of the updates flushed this round (0 on
+    /// synchronous-barrier runs, where every update has zero lag).
+    pub staleness_mean: f64,
 }
 
 /// Per-round trace of a dynamic-fleet run + derived statistics. Equality
@@ -276,12 +285,12 @@ impl FleetTrace {
         let mut f = std::fs::File::create(path)?;
         writeln!(
             f,
-            "round,n_active,n_dropped,n_joined,n_left,drift,resolved,t_split,t_agg,sim_time"
+            "round,n_active,n_dropped,n_joined,n_left,drift,resolved,t_split,t_agg,sim_time,flushed,stale_drops,staleness_mean"
         )?;
         for r in &self.rounds {
             writeln!(
                 f,
-                "{},{},{},{},{},{:.6},{},{:.6},{:.6},{:.6}",
+                "{},{},{},{},{},{:.6},{},{:.6},{:.6},{:.6},{},{},{:.6}",
                 r.round,
                 r.n_active,
                 r.n_dropped,
@@ -291,7 +300,10 @@ impl FleetTrace {
                 r.resolved as u8,
                 r.t_split,
                 r.t_agg,
-                r.sim_time
+                r.sim_time,
+                r.flushed,
+                r.stale_drops,
+                r.staleness_mean
             )?;
         }
         Ok(())
@@ -452,8 +464,11 @@ pub fn bench_meta_mismatches(base: &Json, head: &Json) -> Vec<String> {
     let (Some(Json::Obj(b)), Some(Json::Obj(h))) = (base.get("meta"), head.get("meta")) else {
         // One side predates bench metadata (or neither records it):
         // nothing to compare, and bench-diff must keep working across
-        // that skew.
-        if base.get("meta").is_some() != head.get("meta").is_some() {
+        // that skew. A non-object `meta` (e.g. `null` from a hand-edited
+        // document) carries no comparable leaves either, so it counts as
+        // absent rather than tripping a spurious one-sided warning.
+        let has_meta = |j: &Json| matches!(j.get("meta"), Some(Json::Obj(_)));
+        if has_meta(base) != has_meta(head) {
             out.push("meta: recorded on only one side".to_string());
         }
         return out;
@@ -551,6 +566,9 @@ mod tests {
                 t_split: i as f64,
                 t_agg: 0.0,
                 sim_time: i as f64,
+                flushed: 0,
+                stale_drops: 0,
+                staleness_mean: 0.0,
             });
         }
         assert_eq!(t.len(), 4);
@@ -660,6 +678,22 @@ mod tests {
         let new = Json::parse(r#"{"meta": {"pool_width": 4}, "latency": {"p95_ms": 20.0}}"#).unwrap();
         assert!(bench_meta_mismatches(&old, &old).is_empty());
         let skew = bench_meta_mismatches(&old, &new);
+        assert_eq!(skew, vec!["meta: recorded on only one side".to_string()]);
+    }
+
+    #[test]
+    fn bench_meta_non_object_counts_as_absent() {
+        let null_meta = Json::parse(r#"{"meta": null, "latency": {"p95_ms": 20.0}}"#).unwrap();
+        let no_meta = Json::parse(r#"{"latency": {"p95_ms": 20.0}}"#).unwrap();
+        let real_meta =
+            Json::parse(r#"{"meta": {"pool_width": 4}, "latency": {"p95_ms": 20.0}}"#).unwrap();
+        // `"meta": null` vs no meta at all: both carry nothing comparable,
+        // so no warning — this used to print a spurious one-sided WARNING.
+        assert!(bench_meta_mismatches(&null_meta, &no_meta).is_empty());
+        assert!(bench_meta_mismatches(&no_meta, &null_meta).is_empty());
+        assert!(bench_meta_mismatches(&null_meta, &null_meta).is_empty());
+        // But a real meta block against a null one is still one-sided.
+        let skew = bench_meta_mismatches(&null_meta, &real_meta);
         assert_eq!(skew, vec!["meta: recorded on only one side".to_string()]);
     }
 

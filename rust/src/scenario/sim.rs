@@ -183,6 +183,9 @@ impl ScenarioSim {
             t_split: lat.t_split,
             t_agg,
             sim_time: self.sim_time,
+            flushed: 0,
+            stale_drops: 0,
+            staleness_mean: 0.0,
         };
         self.trace.push(rec.clone());
         rec

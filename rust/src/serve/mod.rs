@@ -532,6 +532,16 @@ fn create_session(
     if let Some(n) = opt_usize(body, "rounds")? {
         builder = builder.rounds(n);
     }
+    // Buffered-asynchronous rounds (docs/ASYNC.md): sets the buffer size
+    // only, so a full "async" section in the request's `config` keeps its
+    // max_staleness and decay.
+    if let Some(k) = opt_usize(body, "async_buffer")? {
+        builder = builder.tune(move |c| {
+            let mut spec = c.async_spec.clone().unwrap_or_default();
+            spec.buffer_k = k;
+            c.async_spec = Some(spec);
+        });
+    }
     if let Some(v) = body.get("seed") {
         let seed = match v {
             Json::Str(s) => s

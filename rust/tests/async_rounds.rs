@@ -1,0 +1,248 @@
+//! Buffered-asynchronous round suite (DESIGN.md §16, `docs/ASYNC.md`).
+//!
+//! Acceptance properties:
+//!
+//! 1. **Async runs are deterministic**: the completion schedule is a pure
+//!    function of the config seed, so the same async run twice — and at
+//!    any engine-pool width — produces byte-identical histories and
+//!    identical per-round staleness stats.
+//! 2. **The sync path is untouched**: a config without an async spec
+//!    trains byte-identically to the pinned pre-async snapshot (a
+//!    bootstrap golden on the always-available native backend), and its
+//!    round reports carry no asynchrony block.
+//! 3. **The in-flight buffer survives checkpoint/resume**: resuming an
+//!    async run mid-flight replays the remaining flushes bit-identically.
+//! 4. **Asynchrony composes with fault injection**: async + chaos is as
+//!    deterministic as either alone.
+//!
+//! Engine-backed tests run on the resolved backend (PJRT with artifacts,
+//! native without) and never skip.
+
+use std::path::PathBuf;
+
+use hasfl::asynch::{AsyncRoundStats, AsyncSpec};
+use hasfl::backend::BackendKind;
+use hasfl::config::{Config, StrategyKind};
+use hasfl::experiment::Experiment;
+use hasfl::fault::FaultSpec;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hasfl_async_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A small config whose native-engine run finishes in seconds.
+fn quick_config(seed: u64, rounds: usize) -> Config {
+    let mut cfg = Config::small();
+    cfg.fleet.n_devices = 4;
+    cfg.seed = seed;
+    cfg.train.rounds = rounds;
+    cfg.train.agg_interval = 2;
+    cfg.train.eval_every = 3;
+    cfg.train.train_samples = 256;
+    cfg.train.test_samples = 64;
+    cfg.train.batch_cap = 16;
+    cfg.strategy = StrategyKind::Hasfl;
+    cfg.fixed_batch = 8;
+    cfg.fixed_cut = 3;
+    cfg
+}
+
+fn async_config(seed: u64, rounds: usize) -> Config {
+    let mut cfg = quick_config(seed, rounds);
+    cfg.async_spec = Some(AsyncSpec { buffer_k: 2, max_staleness: 8, decay: 0.5 });
+    cfg
+}
+
+/// Run `cfg` to completion at the given pool width; returns the history
+/// CSV and every round's asynchrony stats.
+fn run_collecting(cfg: &Config, pool: usize) -> (String, Vec<Option<AsyncRoundStats>>) {
+    let mut session = Experiment::builder()
+        .config(cfg.clone())
+        .artifacts(artifacts_dir())
+        .tune(move |c| c.engine_pool = pool)
+        .build()
+        .expect("session");
+    let mut stats = Vec::new();
+    while !session.is_done() {
+        let report = session.step().expect("step");
+        stats.push(report.asynchrony);
+    }
+    (session.finish().expect("finish").to_csv_string(), stats)
+}
+
+#[test]
+fn async_runs_are_deterministic_across_executions_and_pool_widths() {
+    let cfg = async_config(41, 6);
+    let (csv_a, stats_a) = run_collecting(&cfg, 2);
+    let (csv_b, stats_b) = run_collecting(&cfg, 2);
+    assert_eq!(csv_a, csv_b, "two executions of the same async run diverged");
+    assert_eq!(stats_a, stats_b, "staleness bookkeeping diverged between executions");
+
+    // Pool width is a wall-clock knob, never a numerics knob — the async
+    // completion schedule is simulated, not measured.
+    let (csv_w1, stats_w1) = run_collecting(&cfg, 1);
+    assert_eq!(csv_a, csv_w1, "async run diverged across engine-pool widths");
+    assert_eq!(stats_a, stats_w1);
+
+    // The asynchrony actually happened: every round reports a flush, the
+    // buffer bound holds, and version lag shows up once the slow devices'
+    // round-one dispatches land behind the bumped model version.
+    let spec = cfg.async_spec.as_ref().unwrap();
+    assert!(stats_a.iter().all(|s| s.is_some()), "async rounds must report stats");
+    let flushes: Vec<&AsyncRoundStats> = stats_a.iter().flatten().collect();
+    assert!(flushes.iter().all(|s| s.flushed <= spec.buffer_k));
+    assert!(flushes.iter().map(|s| s.flushed).sum::<usize>() > 0, "no update ever flushed");
+    assert!(
+        flushes.iter().any(|s| s.staleness_mean > 0.0),
+        "a buffer of {} over {} devices must observe stale updates",
+        spec.buffer_k,
+        cfg.fleet.n_devices
+    );
+}
+
+#[test]
+fn sync_path_matches_the_pinned_snapshot_and_reports_no_asynchrony() {
+    // Pin the backend: goldens are only comparable like-for-like, and
+    // native is the backend that exists everywhere.
+    let cfg = {
+        let mut c = quick_config(59, 5);
+        c.backend = BackendKind::Native;
+        c
+    };
+    assert!(cfg.async_spec.is_none());
+    let (csv, stats) = run_collecting(&cfg, 2);
+    assert!(
+        stats.iter().all(|s| s.is_none()),
+        "a sync run must not report asynchrony stats"
+    );
+    // ...and its config JSON carries no "async" key at all (historical
+    // byte layout — old configs keep loading, new sync dumps keep diffing
+    // clean against old ones).
+    assert!(cfg.to_json().get("async").is_none());
+
+    // Bootstrap golden: first run on a machine writes the snapshot; every
+    // later run must reproduce it byte-for-byte. Delete the file to
+    // re-baseline after an *intentional* numerics change.
+    let golden = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/data/sync_history_native_seed59.csv");
+    if let Ok(want) = std::fs::read_to_string(&golden) {
+        assert_eq!(
+            csv, want,
+            "sync training history diverged from the pinned pre-async snapshot at {}",
+            golden.display()
+        );
+    } else {
+        std::fs::create_dir_all(golden.parent().unwrap()).unwrap();
+        std::fs::write(&golden, &csv).unwrap();
+        eprintln!("bootstrapped sync golden at {}", golden.display());
+    }
+}
+
+#[test]
+fn async_buffer_survives_checkpoint_and_resume_bit_identically() {
+    let dir = temp_dir("resume");
+    let cfg = async_config(23, 6);
+
+    // Straight run, checkpointing mid-flight at round 3 (in-flight
+    // dispatches from the round-3 flush are still outstanding there).
+    let mut session = Experiment::builder()
+        .config(cfg.clone())
+        .artifacts(artifacts_dir())
+        .build()
+        .expect("straight session");
+    let ckpt = dir.join("mid.hckpt");
+    let mut straight_stats = Vec::new();
+    while !session.is_done() {
+        let report = session.step().expect("step");
+        if report.round == 3 {
+            session.checkpoint(&ckpt).expect("checkpoint");
+        }
+        straight_stats.push(report.asynchrony);
+    }
+    let straight_csv = session.finish().expect("finish").to_csv_string();
+
+    // Resume and replay rounds 4..=6.
+    let mut resumed = Experiment::builder()
+        .resume_from(&ckpt)
+        .artifacts(artifacts_dir())
+        .build()
+        .expect("resumed session");
+    assert_eq!(resumed.round(), 3);
+    let mut resumed_stats = Vec::new();
+    while !resumed.is_done() {
+        resumed_stats.push(resumed.step().expect("step").asynchrony);
+    }
+    let resumed_csv = resumed.finish().expect("finish").to_csv_string();
+
+    assert_eq!(straight_csv, resumed_csv, "resumed async history diverged");
+    assert_eq!(
+        &straight_stats[3..],
+        &resumed_stats[..],
+        "resumed staleness schedule diverged — the in-flight buffer did not survive"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn async_overrides_conflict_with_resume() {
+    let dir = temp_dir("conflict");
+    let cfg = async_config(31, 2);
+    let mut session = Experiment::builder()
+        .config(cfg)
+        .artifacts(artifacts_dir())
+        .build()
+        .expect("session");
+    session.step().expect("step");
+    let ckpt = dir.join("one.hckpt");
+    session.checkpoint(&ckpt).expect("checkpoint");
+    session.finish().expect("finish");
+
+    let err = Experiment::builder()
+        .resume_from(&ckpt)
+        .async_buffer(3)
+        .artifacts(artifacts_dir())
+        .build()
+        .expect_err("async override over resume must be rejected");
+    assert!(err.to_string().contains("conflicts with resume_from"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn async_composes_deterministically_with_fault_injection() {
+    let cfg = async_config(47, 5);
+    let spec = FaultSpec {
+        name: "async-chaos".into(),
+        error_rate: 0.2,
+        panic_rate: 0.1,
+        max_retries: 2,
+        backoff_ms: 0,
+        quarantine_after: 3,
+        ..FaultSpec::default()
+    };
+    let run = || {
+        let mut session = Experiment::builder()
+            .config(cfg.clone())
+            .faults(spec.clone())
+            .artifacts(artifacts_dir())
+            .tune(|c| c.engine_pool = 2)
+            .build()
+            .expect("faulted async session");
+        let mut per_round = Vec::new();
+        while !session.is_done() {
+            let report = session.step().expect("step");
+            per_round.push((report.abandoned.clone(), report.asynchrony.clone()));
+        }
+        (session.finish().expect("finish").to_csv_string(), per_round)
+    };
+    let (csv_a, rounds_a) = run();
+    let (csv_b, rounds_b) = run();
+    assert_eq!(csv_a, csv_b, "async + chaos diverged between executions");
+    assert_eq!(rounds_a, rounds_b, "abandonment/staleness bookkeeping diverged");
+}

@@ -316,7 +316,52 @@ fn synthetic_state() -> CheckpointState {
             reference_active: vec![true],
         }),
         fault: Some(FaultState { strikes: vec![0, 2], quarantined: vec![false, true] }),
+        async_state: None,
     }
+}
+
+fn synthetic_async() -> hasfl::asynch::AsyncState {
+    hasfl::asynch::AsyncState {
+        model_version: 4,
+        now: 9.25,
+        dispatch_version: vec![4, 3],
+        dispatch_at: vec![8.0, 6.5],
+        ready_at: vec![10.0, 11.5],
+        in_flight: vec![true, false],
+        dispatch_seq: vec![5, 4],
+        ema_latency: vec![1.5, 0.0],
+        ema_seen: vec![true, false],
+    }
+}
+
+#[test]
+fn async_state_roundtrips_through_bytes() {
+    // Fault and async trailers together (the full trailing layout)...
+    let mut state = synthetic_state();
+    state.async_state = Some(synthetic_async());
+    assert_eq!(CheckpointState::from_bytes(&state.to_bytes()).unwrap(), state);
+
+    // ...and async without a fault spec, which exercises the
+    // absent-fault marker byte before the async trailer.
+    state.fault = None;
+    assert_eq!(CheckpointState::from_bytes(&state.to_bytes()).unwrap(), state);
+}
+
+#[test]
+fn sync_state_omits_the_async_trailer() {
+    // A synchronous-barrier run serializes byte-identically to the
+    // pre-async format: the async trailer only costs bytes when present.
+    let state = synthetic_state();
+    let with = {
+        let mut s = state.clone();
+        s.async_state = Some(synthetic_async());
+        s.to_bytes()
+    };
+    let without = state.to_bytes();
+    assert!(without.len() < with.len());
+    let back = CheckpointState::from_bytes(&without).unwrap();
+    assert!(back.async_state.is_none());
+    assert_eq!(back, state);
 }
 
 #[test]
